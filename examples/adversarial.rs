@@ -1,0 +1,69 @@
+//! Competitive-ratio demonstration (Theorems 1 & 2).
+//!
+//! ```bash
+//! cargo run --release --example adversarial
+//! ```
+//!
+//! Drives the *actual* AKPC machinery (not the closed form) with the
+//! Theorem-2 adversary: phases of S fresh items, each belonging to a
+//! distinct ω-clique, never re-requested, spaced > Δt apart — and checks
+//! the measured cost ratio against the bound
+//! (2 + (ω−1)·α·S) / (1 + (S−1)·α).
+
+use akpc::algo::PackedCacheCore;
+use akpc::bench::experiments::{
+    adversarial_bound_stated, adversarial_ratio,
+};
+use akpc::cache::CostModel;
+use akpc::config::AkpcConfig;
+use akpc::trace::model::Request;
+
+fn main() {
+    let cfg = AkpcConfig::default();
+    let omega = cfg.omega;
+    let alpha = cfg.alpha;
+    println!("ω = {omega}, α = {alpha}, Δt = {}\n", cfg.delta_t());
+    println!(
+        "{:<4}{:>14}{:>16}{:>16}",
+        "S", "simulated", "derived bound", "paper's stated"
+    );
+
+    for s in 1..=cfg.omega {
+        // ---- simulate the adversary against the real Algorithm 5 core ----
+        let mut core =
+            PackedCacheCore::new(CostModel::from_config(&cfg), cfg.charge_policy);
+        let phases = 50u32;
+        let mut next_item = 0u32;
+        let mut opt_cost = 0.0;
+        for phase in 0..phases {
+            // S fresh items, each in its own ω-clique (adversary fixes the
+            // packing the algorithm has learned).
+            let cliques: Vec<Vec<u32>> = (0..s)
+                .map(|i| {
+                    let base = next_item + i * omega;
+                    (base..base + omega).collect()
+                })
+                .collect();
+            core.set_cliques(cliques.iter().map(|c| c.as_slice()));
+            let items: Vec<u32> = (0..s).map(|i| next_item + i * omega).collect();
+            let t = phase as f64 * (cfg.delta_t() * 10.0); // > Δt apart
+            core.handle_request(&Request::new(items, 0, t));
+            next_item += s * omega;
+
+            // OPT packs the S requested items into one transfer.
+            opt_cost += (1.0 + (s as f64 - 1.0) * alpha) * cfg.lambda;
+        }
+        let measured = core.ledger.total() / opt_cost;
+        let (_, derived) = adversarial_ratio(&cfg, s, phases);
+        let stated = adversarial_bound_stated(&cfg, s);
+        println!("{s:<4}{measured:>14.4}{derived:>16.4}{stated:>16.4}");
+        assert!(
+            measured <= derived + 1e-9,
+            "S={s}: measured ratio exceeds the derived bound!"
+        );
+    }
+    println!("\nAll simulated ratios equal the bound the paper's Case-2.1");
+    println!("derivation yields (tight, Thm. 2). The paper's *stated* closed");
+    println!("form typo-drops the S on the leading 2 and matches only at S=1");
+    println!("(DESIGN.md §6).");
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates a small Netflix-like trace, runs AKPC and the NoPacking
+//! baseline through the simulator, and prints the cost breakdown.
+
+use akpc::algo::{Akpc, NoPacking, Opt};
+use akpc::config::AkpcConfig;
+use akpc::sim;
+use akpc::trace::generator::netflix_like;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configuration — defaults reproduce the paper's Table II.
+    let cfg = AkpcConfig {
+        n_items: 60,
+        n_servers: 100,
+        ..Default::default()
+    };
+    cfg.validate()?;
+    println!("Δt = ρ·λ/μ = {}", cfg.delta_t());
+
+    // 2. Workload — a synthetic co-access-heavy trace (stand-in for the
+    //    paper's Netflix Kaggle trace; see DESIGN.md §2).
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 50_000, 42);
+    println!("trace: {} requests over {} servers\n", trace.len(), trace.n_servers);
+
+    // 3. Run policies through the batched-window simulator (Fig. 3).
+    let mut akpc = Akpc::new(&cfg); // native CRM engine; see e2e_cdn for XLA
+    let rep_akpc = sim::run(&mut akpc, &trace, cfg.batch_size);
+
+    let mut base = NoPacking::new(&cfg);
+    let rep_base = sim::run(&mut base, &trace, cfg.batch_size);
+
+    let mut opt = Opt::new(&cfg);
+    let rep_opt = sim::run(&mut opt, &trace, cfg.batch_size);
+
+    // 4. Inspect.
+    println!("{}", rep_base.row());
+    println!("{}", rep_akpc.row());
+    println!("{}", rep_opt.row());
+    println!(
+        "\nAKPC saves {:.1}% of total cost vs NoPacking; is {:.2}x OPT",
+        100.0 * (1.0 - rep_akpc.total() / rep_base.total()),
+        rep_akpc.total() / rep_opt.total(),
+    );
+    println!(
+        "learned cliques: {} live, mean size {:.2}",
+        akpc.cliques().len(),
+        rep_akpc.clique_hist.mean()
+    );
+    Ok(())
+}

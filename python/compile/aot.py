@@ -1,0 +1,99 @@
+"""AOT export: lower the L2 CRM pipeline to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's runtime
+(xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`).  The text parser
+reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py.
+
+One artifact per (batch, n) shape; the Rust runtime's artifact registry
+picks the smallest n >= the configured item-universe size and pads the
+incidence batch.  `make artifacts` is incremental via mtime (Makefile).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile.model import lower_crm
+
+# (batch, n) shapes exported by default.  batch=1024 holds a sliding
+# Table-II correlation window (10 batches x 200 requests, sessionized to
+# <1024 transactions); n covers the paper's n=60 base up to the
+# Fig. 8(b)/9(b) scalability sweeps.  A small (256, 64) shape is kept for
+# tests and single-batch windows.
+DEFAULT_SHAPES = [
+    (256, 64),
+    (1024, 64),
+    (1024, 128),
+    (1024, 256),
+    (1024, 512),
+    (1024, 1024),
+]
+
+# Pallas block sizes per artifact: interpret=True unrolls every grid step
+# into the HLO, so CPU execution pays per-step overhead. §Perf iteration 2
+# (EXPERIMENTS.md): raising blocks from fixed 128x128 to 512-capped blocks
+# cut grid steps up to 8x and sped the compiled artifact ~3-10x on CPU,
+# while 512x512 f32 tiles (3 MiB VMEM) still fit the 16 MiB TPU budget.
+BLOCK_CAP = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default=None,
+        help="comma list like 256x64,512x512 (batchxN); default = built-ins",
+    )
+    args = ap.parse_args()
+
+    shapes = DEFAULT_SHAPES
+    if args.shapes:
+        shapes = [
+            tuple(int(v) for v in s.split("x")) for s in args.shapes.split(",")
+        ]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for batch, n in shapes:
+        lowered = lower_crm(batch, n)
+        text = to_hlo_text(lowered)
+        name = f"crm_b{batch}_n{n}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append({"file": name, "batch": batch, "n": n})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "artifacts": manifest,
+                "inputs": ["x (batch, n) f32", "theta () f32", "top_frac () f32"],
+                "outputs": ["crm_norm (n, n) f32", "crm_bin (n, n) f32", "freq (n,) f32"],
+            },
+            f,
+            indent=2,
+        )
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

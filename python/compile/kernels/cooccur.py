@@ -1,0 +1,100 @@
+"""L1 — Pallas co-occurrence kernel: CRM = X^T @ X over request incidence.
+
+The Clique Generation Module's numeric hot-spot (Algorithm 2 of the AKPC
+paper) is the accumulation of pairwise co-access counts over a window of
+requests.  With the window encoded as an incidence matrix
+``X in {0,1}^{B x n}`` (row b = multi-hot vector of the items in request b),
+the raw correlation matrix is exactly ``CRM = X^T X`` — including the
+diagonal, which holds per-item frequencies and is masked out downstream.
+
+This is the canonical MXU workload.  The kernel tiles the contraction the
+way a CUDA version would tile threadblocks over shared memory, but for TPU:
+
+  * grid = (n/bn, n/bn, B/bB); each (i, j) output tile of shape (bn, bn)
+    accumulates over the k-axis (batch) in VMEM,
+  * BlockSpec streams (bB, bn) slabs of X from HBM into VMEM twice per
+    step (once as the "row" operand, once as the "column" operand),
+  * the inner product runs on the MXU via jnp.dot with an f32 accumulator.
+
+VMEM footprint per grid step (bB = bn = 128, f32):
+  2 * 128*128*4 B (inputs) + 128*128*4 B (accumulator) = 192 KiB << 16 MiB.
+
+On this image Pallas must run ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls.  Real-TPU efficiency is estimated in
+DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes: 128 is the native MXU tile edge.
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _cooccur_kernel(x_rows_ref, x_cols_ref, o_ref):
+    """One grid step: o[i, j] += x[k, i]^T @ x[k, j].
+
+    x_rows_ref: (bB, bn) slab of X for the output-row items.
+    x_cols_ref: (bB, bn) slab of X for the output-column items.
+    o_ref:      (bn, bn) output tile, accumulated across the k grid axis.
+    """
+    k = pl.program_id(2)
+
+    # Zero the accumulator tile on the first k-step.
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction: (bn, bB) @ (bB, bn) with f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_rows_ref[...].T,
+        x_cols_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def cooccur(
+    x: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jax.Array:
+    """Compute the raw co-occurrence matrix ``X^T X`` with a Pallas kernel.
+
+    Args:
+      x: (B, n) incidence matrix, any float dtype (counts are small enough
+         for exact f32).  B and n must be multiples of the block sizes; the
+         L2 wrapper pads.
+
+    Returns:
+      (n, n) f32 co-occurrence matrix (diagonal = item frequencies).
+    """
+    b, n = x.shape
+    if b % block_b != 0 or n % block_n != 0:
+        raise ValueError(
+            f"cooccur: shape {(b, n)} not divisible by blocks "
+            f"{(block_b, block_n)}; pad in the caller"
+        )
+    x = x.astype(jnp.float32)
+
+    grid = (n // block_n, n // block_n, b // block_b)
+    return pl.pallas_call(
+        _cooccur_kernel,
+        grid=grid,
+        in_specs=[
+            # Row-operand slab: k-th batch block, i-th item block.
+            pl.BlockSpec((block_b, block_n), lambda i, j, k: (k, i)),
+            # Column-operand slab: k-th batch block, j-th item block.
+            pl.BlockSpec((block_b, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, x)

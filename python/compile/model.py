@@ -1,0 +1,96 @@
+"""L2 — the Clique Generation Module's numeric pipeline as one JAX graph.
+
+This is the computation the Rust coordinator executes on every ``T^CG``
+tick (Algorithm 1, Event 1 / Algorithm 2 of the AKPC paper):
+
+    incidence X (B, n)  --cooccur (L1 Pallas)-->  raw CRM (n, n)
+        --> zero diagonal
+        --> top-p% frequency filter         (paper §V-A, "top 10%")
+        --> global min-max normalization    (Algorithm 2 line 5)
+        --> threshold at theta              (Algorithm 2 lines 6-9)
+
+``theta`` and ``top_frac`` are *runtime inputs* (rank-0 arrays), not baked
+constants, so a single AOT artifact serves the full Fig. 7(a) theta sweep.
+
+The whole pipeline lowers into a single HLO module; XLA fuses everything
+after the matmul into a handful of elementwise/reduce kernels.  Python is
+build-time only — the Rust runtime executes the exported artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cooccur import cooccur
+
+
+def _pick_block(dim: int, preferred: int = 512) -> int:
+    """Largest power-of-two block <= preferred that divides dim.
+
+    interpret=True unrolls each grid step into the lowered HLO, so larger
+    blocks mean fewer steps and less per-step overhead on CPU; 512x512 f32
+    tiles (3 MiB) still fit a real TPU's VMEM budget with double buffering
+    (DESIGN.md §7, EXPERIMENTS.md §Perf iteration 2).
+    """
+    b = preferred
+    while b > 1 and dim % b != 0:
+        b //= 2
+    return b
+
+
+def crm_pipeline(
+    x: jax.Array,
+    theta: jax.Array,
+    top_frac: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full CRM pipeline.  Returns (crm_norm, crm_bin, freq).
+
+    Args:
+      x:        (B, n) f32 incidence matrix (rows = requests in the window,
+                multi-hot over items).  Padded rows/cols must be zero.
+      theta:    rank-0 f32, CRM binarization threshold.
+      top_frac: rank-0 f32, fraction of active items kept (0 < f <= 1).
+    """
+    b, n = x.shape
+    raw = cooccur(
+        x,
+        block_b=_pick_block(b),
+        block_n=_pick_block(n),
+    )
+
+    freq = jnp.diagonal(raw)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    off = raw * (1.0 - eye)
+
+    # Top-p% most-frequent active items (shape-static rank threshold).
+    n_active = jnp.sum(freq > 0)
+    k = jnp.maximum(1.0, jnp.ceil(top_frac * n_active))
+    sorted_freq = jnp.sort(jnp.where(freq > 0, freq, -jnp.inf))[::-1]
+    idx = jnp.clip(k.astype(jnp.int32) - 1, 0, n - 1)
+    kth = sorted_freq[idx]
+    keep = (freq >= kth) & (freq > 0)
+    mask = jnp.outer(keep, keep).astype(jnp.float32)
+    off = off * mask
+
+    # Global min-max over the kept off-diagonal support (Alg. 2 line 5).
+    # The minimum is anchored at 0: the raw CRM of any realistic window is
+    # dominated by never-co-accessed (zero) pairs, so min = 0 in practice;
+    # anchoring avoids degenerate all-equal-counts windows collapsing to
+    # zero edges (mirrored by the Rust native engine, crm/native.rs).
+    support = mask * (1.0 - eye)
+    lo = jnp.float32(0.0)
+    hi = jnp.max(jnp.where(support > 0, off, -jnp.float32(3.4e38)))
+    hi = jnp.maximum(hi, 0.0)
+    span = jnp.maximum(hi - lo, 1e-9)
+    crm_norm = jnp.where(support > 0, (off - lo) / span, 0.0)
+
+    crm_bin = (crm_norm > theta).astype(jnp.float32)
+    return crm_norm, crm_bin, freq
+
+
+def lower_crm(batch: int, n_items: int):
+    """jit + lower the pipeline for a concrete (batch, n_items) shape."""
+    x_spec = jax.ShapeDtypeStruct((batch, n_items), jnp.float32)
+    s_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(crm_pipeline).lower(x_spec, s_spec, s_spec)

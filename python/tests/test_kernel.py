@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas cooccur kernel vs pure-jnp oracle.
+
+This is the CORE build-time correctness signal: the AOT artifact embeds
+the kernel, so if these pass, the Rust runtime executes verified numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cooccur import cooccur
+from compile.kernels.ref import cooccur_ref
+
+
+def random_incidence(rng, batch, n, density=0.05):
+    x = (rng.random((batch, n)) < density).astype(np.float32)
+    return jnp.asarray(x)
+
+
+class TestCooccurBasic:
+    def test_zero_input(self):
+        x = jnp.zeros((128, 128), jnp.float32)
+        out = cooccur(x)
+        assert out.shape == (128, 128)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_single_request_pair(self):
+        # One request touching items 3 and 7 -> CRM[3,7]=CRM[7,3]=1,
+        # diagonal counts 1 each.
+        x = np.zeros((128, 128), np.float32)
+        x[0, 3] = 1.0
+        x[0, 7] = 1.0
+        out = np.asarray(cooccur(jnp.asarray(x)))
+        assert out[3, 7] == 1.0 and out[7, 3] == 1.0
+        assert out[3, 3] == 1.0 and out[7, 7] == 1.0
+        assert out.sum() == 4.0
+
+    def test_counts_accumulate(self):
+        # The same pair in k requests counts k.
+        x = np.zeros((256, 64), np.float32)
+        for b in range(10):
+            x[b, 1] = 1.0
+            x[b, 2] = 1.0
+        out = np.asarray(cooccur(jnp.asarray(x), block_b=128, block_n=64))
+        assert out[1, 2] == 10.0
+
+    def test_matches_ref_dense(self):
+        rng = np.random.default_rng(0)
+        x = random_incidence(rng, 256, 128, density=0.3)
+        got = np.asarray(cooccur(x))
+        want = np.asarray(cooccur_ref(x))
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(1)
+        x = random_incidence(rng, 128, 128)
+        out = np.asarray(cooccur(x))
+        np.testing.assert_array_equal(out, out.T)
+
+    def test_rejects_non_divisible(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            cooccur(jnp.zeros((100, 64), jnp.float32), block_b=128, block_n=64)
+
+
+class TestCooccurBlocks:
+    @pytest.mark.parametrize("block_b", [32, 64, 128])
+    @pytest.mark.parametrize("block_n", [32, 64, 128])
+    def test_block_invariance(self, block_b, block_n):
+        # Result must not depend on tiling.
+        rng = np.random.default_rng(2)
+        x = random_incidence(rng, 128, 128, density=0.1)
+        got = np.asarray(cooccur(x, block_b=block_b, block_n=block_n))
+        want = np.asarray(cooccur_ref(x))
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    def test_rectangular(self):
+        rng = np.random.default_rng(3)
+        x = random_incidence(rng, 512, 64, density=0.1)
+        got = np.asarray(cooccur(x, block_b=128, block_n=64))
+        want = np.asarray(cooccur_ref(x))
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch_blocks=st.integers(1, 4),
+    n_blocks=st.integers(1, 2),
+    density=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cooccur_hypothesis(batch_blocks, n_blocks, density, seed):
+    """Property: kernel == X^T X exactly, over random shapes/densities."""
+    bb, bn = 32, 32
+    batch, n = batch_blocks * bb, n_blocks * bn
+    rng = np.random.default_rng(seed)
+    x = (rng.random((batch, n)) < density).astype(np.float32)
+    got = np.asarray(cooccur(jnp.asarray(x), block_b=bb, block_n=bn))
+    want = x.T @ x
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([np.float32, np.float64, np.int32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cooccur_dtypes(dtype, seed):
+    """Kernel casts any input dtype to f32 and still matches the oracle."""
+    rng = np.random.default_rng(seed)
+    x = (rng.random((64, 32)) < 0.2).astype(dtype)
+    got = np.asarray(cooccur(jnp.asarray(x), block_b=32, block_n=32))
+    want = x.astype(np.float32).T @ x.astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)

@@ -1,0 +1,129 @@
+"""L2 correctness: the full CRM pipeline vs the pure-jnp oracle, plus
+behavioural checks mirroring Algorithm 2 of the paper."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import crm_pipeline_ref
+from compile.model import crm_pipeline, lower_crm
+
+
+def make_x(reqs, n, batch=64):
+    """Build an incidence matrix from a list of item-id lists."""
+    x = np.zeros((batch, n), np.float32)
+    for b, items in enumerate(reqs):
+        for d in items:
+            x[b, d] = 1.0
+    return jnp.asarray(x)
+
+
+class TestPipelineMatchesRef:
+    @pytest.mark.parametrize("theta", [0.0, 0.2, 0.5, 0.9])
+    @pytest.mark.parametrize("top_frac", [0.1, 0.3, 1.0])
+    def test_random(self, theta, top_frac):
+        rng = np.random.default_rng(42)
+        x = jnp.asarray((rng.random((64, 32)) < 0.15).astype(np.float32))
+        got = crm_pipeline(x, jnp.float32(theta), jnp.float32(top_frac))
+        want = crm_pipeline_ref(x, theta, top_frac)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+class TestAlgorithm2Semantics:
+    """The paper's worked example (§IV-A-1): r1={d1,d2,d3}, r2={d2,d3}."""
+
+    def test_paper_example(self):
+        x = make_x([[1, 2, 3], [2, 3]], n=32)
+        norm, bin_, freq = crm_pipeline(x, jnp.float32(0.4), jnp.float32(1.0))
+        norm = np.asarray(norm)
+        # (d2,d3) co-accessed twice -> the max pair -> normalizes to 1.0.
+        assert norm[2, 3] == pytest.approx(1.0)
+        assert norm[3, 2] == pytest.approx(1.0)
+        # With theta=0.4 the (d2,d3) edge is retained.
+        assert np.asarray(bin_)[2, 3] == 1.0
+        # Frequencies: d2,d3 appear twice; d1 once.
+        assert np.asarray(freq)[2] == 2.0 and np.asarray(freq)[1] == 1.0
+
+    def test_diagonal_never_edges(self):
+        x = make_x([[4, 5], [4, 5], [4]], n=32)
+        _, bin_, _ = crm_pipeline(x, jnp.float32(0.0), jnp.float32(1.0))
+        assert np.all(np.diagonal(np.asarray(bin_)) == 0.0)
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray((rng.random((64, 64)) < 0.1).astype(np.float32))
+        norm, bin_, _ = crm_pipeline(x, jnp.float32(0.3), jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(norm), np.asarray(norm).T)
+        np.testing.assert_array_equal(np.asarray(bin_), np.asarray(bin_).T)
+
+    def test_norm_in_unit_interval(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray((rng.random((64, 32)) < 0.2).astype(np.float32))
+        norm, _, _ = crm_pipeline(x, jnp.float32(0.5), jnp.float32(1.0))
+        norm = np.asarray(norm)
+        assert norm.min() >= 0.0 and norm.max() <= 1.0 + 1e-6
+
+    def test_top_frac_filters_rare_items(self):
+        # Items 0,1 are hot (appear 10x together); items 30,31 appear once.
+        reqs = [[0, 1]] * 10 + [[30, 31]]
+        x = make_x(reqs, n=32)
+        _, bin_, _ = crm_pipeline(x, jnp.float32(0.0), jnp.float32(0.1))
+        b = np.asarray(bin_)
+        # top 10% of 4 active items = 1 item -> but edges need both ends
+        # kept; the hot pair survives only if both rank in top-k (ties keep
+        # boundary items).  The rare pair must be filtered out.
+        assert b[30, 31] == 0.0
+
+    def test_threshold_monotone(self):
+        # Raising theta can only remove edges.
+        rng = np.random.default_rng(9)
+        x = jnp.asarray((rng.random((64, 32)) < 0.2).astype(np.float32))
+        _, b_lo, _ = crm_pipeline(x, jnp.float32(0.1), jnp.float32(1.0))
+        _, b_hi, _ = crm_pipeline(x, jnp.float32(0.6), jnp.float32(1.0))
+        assert np.all(np.asarray(b_hi) <= np.asarray(b_lo))
+
+    def test_empty_window(self):
+        x = jnp.zeros((64, 32), jnp.float32)
+        norm, bin_, freq = crm_pipeline(x, jnp.float32(0.2), jnp.float32(0.1))
+        assert np.all(np.asarray(norm) == 0.0)
+        assert np.all(np.asarray(bin_) == 0.0)
+        assert np.all(np.asarray(freq) == 0.0)
+
+
+class TestLowering:
+    def test_lower_produces_hlo_text(self):
+        from compile.aot import to_hlo_text
+
+        lowered = lower_crm(64, 32)
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        # The MXU contraction must be in the module.
+        assert "dot(" in text or "dot " in text
+
+    def test_lowered_executes(self):
+        lowered = lower_crm(64, 32)
+        compiled = lowered.compile()
+        rng = np.random.default_rng(10)
+        x = jnp.asarray((rng.random((64, 32)) < 0.2).astype(np.float32))
+        out = compiled(x, jnp.float32(0.2), jnp.float32(1.0))
+        want = crm_pipeline_ref(x, 0.2, 1.0)
+        for g, w in zip(out, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    theta=st.floats(0.0, 0.99),
+    top_frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pipeline_hypothesis(theta, top_frac, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.random((64, 32)) < 0.15).astype(np.float32))
+    got = crm_pipeline(x, jnp.float32(theta), jnp.float32(top_frac))
+    want = crm_pipeline_ref(x, theta, top_frac)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)

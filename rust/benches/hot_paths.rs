@@ -1,0 +1,125 @@
+//! Micro-benches over the L3 hot paths (the §Perf targets):
+//! request handling (Algorithm 5), CRM construction, clique generation,
+//! XLA-vs-native CRM ablation, and trace generation.
+//!
+//! Throughput lines are printed alongside the raw timings so the §Perf
+//! table in EXPERIMENTS.md can quote requests/s directly.
+
+use akpc::algo::{Akpc, CachePolicy, NoPacking};
+use akpc::clique::CliqueSet;
+use akpc::config::AkpcConfig;
+use akpc::crm::{diff_windows, native::build_native, CrmBuilder, CrmWindow};
+use akpc::trace::generator::netflix_like;
+use akpc::util::benchkit::Group;
+
+fn request_path() {
+    let cfg = AkpcConfig {
+        n_servers: 100,
+        ..Default::default()
+    };
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 100_000, 1);
+
+    let g = Group::new("request_path").iters(5);
+    let s = g.bench("akpc_100k_requests", || {
+        let mut p = Akpc::new(&cfg);
+        for batch in trace.batches(cfg.batch_size) {
+            for r in batch {
+                p.handle_request(r);
+            }
+            p.end_batch(batch);
+        }
+        p.ledger().total()
+    });
+    println!(
+        "  -> {:.0} requests/s (AKPC end-to-end incl. window ticks)",
+        trace.len() as f64 / s.median_secs()
+    );
+    let s = g.bench("no_packing_100k_requests", || {
+        let mut p = NoPacking::new(&cfg);
+        for r in &trace.requests {
+            p.handle_request(r);
+        }
+        p.ledger().total()
+    });
+    println!(
+        "  -> {:.0} requests/s (NoPacking)",
+        trace.len() as f64 / s.median_secs()
+    );
+}
+
+fn crm_native() {
+    let g = Group::new("crm_native_build").iters(10);
+    for n in [64u32, 256, 1024] {
+        let trace = netflix_like(n, 10, 256, 1);
+        g.bench(&format!("n_{n}"), || {
+            build_native(&trace.requests, n, 0.2, 0.1)
+        });
+    }
+}
+
+fn crm_xla_vs_native() {
+    // Ablation: the AOT XLA artifact vs the native Rust path, same inputs.
+    let g = Group::new("crm_engine_ablation").iters(10);
+    for n in [64u32, 256] {
+        let trace = netflix_like(n, 10, 256, 1);
+        g.bench(&format!("native_n{n}"), || {
+            build_native(&trace.requests, n, 0.2, 0.1)
+        });
+        match akpc::runtime::XlaCrmBuilder::new("artifacts") {
+            Ok(mut xla) => {
+                g.bench(&format!("xla_n{n}"), || {
+                    xla.build(&trace.requests, n, 0.2, 0.1)
+                });
+            }
+            Err(e) => println!("  (xla_n{n} skipped: {e})"),
+        }
+    }
+}
+
+fn clique_generation() {
+    let g = Group::new("clique_generate").iters(10);
+    for n in [64u32, 256, 1024] {
+        let t1 = netflix_like(n, 10, 256, 1);
+        let t2 = netflix_like(n, 10, 256, 2);
+        let w1 = build_native(&t1.requests, n, 0.2, 1.0);
+        let w2 = build_native(&t2.requests, n, 0.2, 1.0);
+        let prev = CliqueSet::generate(
+            &CliqueSet::new(),
+            &w1,
+            &diff_windows(&CrmWindow::default(), &w1),
+            5,
+            0.85,
+            true,
+            true,
+        );
+        g.bench(&format!("n_{n}"), || {
+            CliqueSet::generate(
+                &prev,
+                &w2,
+                &diff_windows(&w1, &w2),
+                5,
+                0.85,
+                true,
+                true,
+            )
+        });
+    }
+}
+
+fn trace_generation() {
+    let g = Group::new("trace_generate").iters(5);
+    let s = g.bench("netflix_100k", || netflix_like(60, 600, 100_000, 1).len());
+    println!(
+        "  -> {:.0} requests generated/s",
+        100_000.0 / s.median_secs()
+    );
+}
+
+fn main() {
+    println!("== hot_paths bench suite ==");
+    request_path();
+    crm_native();
+    crm_xla_vs_native();
+    clique_generation();
+    trace_generation();
+}

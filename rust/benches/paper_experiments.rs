@@ -1,0 +1,132 @@
+//! `cargo bench` — one group per paper table/figure, exercising the
+//! end-to-end policy runs the experiment harness uses (reduced request
+//! counts so the suite completes in minutes; full-scale numbers come from
+//! `akpc exp <id>` and are recorded in EXPERIMENTS.md).
+//!
+//! Uses the in-tree harness `akpc::util::benchkit` (offline env — no
+//! criterion); output lines are `bench <group>/<name> ... med=...`.
+
+use akpc::algo::CachePolicy;
+use akpc::bench::sweep::{run_policy_set, EngineChoice, PolicyChoice};
+use akpc::config::AkpcConfig;
+use akpc::trace::generator::{netflix_like, spotify_like};
+use akpc::util::benchkit::Group;
+
+fn bench_cfg() -> AkpcConfig {
+    AkpcConfig {
+        n_servers: 100,
+        ..Default::default()
+    }
+}
+
+/// Fig. 5 — full policy-set comparison per dataset.
+fn fig5() {
+    let cfg = bench_cfg();
+    let traces = [
+        ("netflix", netflix_like(cfg.n_items, cfg.n_servers, 20_000, 1)),
+        ("spotify", spotify_like(cfg.n_items, cfg.n_servers, 20_000, 1)),
+    ];
+    let g = Group::new("fig5_cost_comparison").iters(5);
+    for (name, trace) in &traces {
+        g.bench(name, || {
+            run_policy_set(&cfg, trace, PolicyChoice::FIG5, EngineChoice::Native)
+        });
+    }
+}
+
+/// Fig. 6 — α / ρ single-point policy runs (the sweeps repeat these).
+fn fig6() {
+    let base = bench_cfg();
+    let trace = netflix_like(base.n_items, base.n_servers, 20_000, 1);
+    let g = Group::new("fig6_sensitivity_point").iters(5);
+    for alpha in [0.6, 0.8, 1.0] {
+        let cfg = AkpcConfig { alpha, ..base.clone() };
+        g.bench(&format!("alpha_{alpha}"), || {
+            run_policy_set(&cfg, &trace, PolicyChoice::SWEEP, EngineChoice::Native)
+        });
+    }
+    for rho in [1.0, 10.0] {
+        let cfg = AkpcConfig {
+            lambda: rho,
+            rho: 1.0,
+            ..base.clone()
+        };
+        g.bench(&format!("rho_{rho}"), || {
+            run_policy_set(&cfg, &trace, PolicyChoice::SWEEP, EngineChoice::Native)
+        });
+    }
+}
+
+/// Fig. 7 — hyperparameter single-point runs (θ, γ, ω).
+fn fig7() {
+    let base = bench_cfg();
+    let trace = netflix_like(base.n_items, base.n_servers, 20_000, 1);
+    let g = Group::new("fig7_hyperparameters").iters(5);
+    for (name, cfg) in [
+        ("theta_0.2", AkpcConfig { theta: 0.2, ..base.clone() }),
+        ("gamma_0.85", AkpcConfig { gamma_approx: 0.85, ..base.clone() }),
+        ("omega_5", AkpcConfig { omega: 5, ..base.clone() }),
+        ("omega_10", AkpcConfig { omega: 10, ..base.clone() }),
+    ] {
+        g.bench(name, || {
+            let mut p = PolicyChoice::Akpc.build(&cfg, EngineChoice::Native);
+            akpc::sim::run(p.as_mut(), &trace, cfg.batch_size).total()
+        });
+    }
+}
+
+/// Fig. 8 — scalability points (servers / items / batch).
+fn fig8() {
+    let base = bench_cfg();
+    let g = Group::new("fig8_scalability").iters(5);
+    for m in [30u32, 600] {
+        let cfg = AkpcConfig { n_servers: m, ..base.clone() };
+        let trace = netflix_like(cfg.n_items, m, 20_000, 1);
+        g.bench(&format!("servers_{m}"), || {
+            let mut p = PolicyChoice::Akpc.build(&cfg, EngineChoice::Native);
+            akpc::sim::run(p.as_mut(), &trace, cfg.batch_size).total()
+        });
+    }
+    for n in [60u32, 3600] {
+        let cfg = AkpcConfig { n_items: n, ..base.clone() };
+        let trace = netflix_like(n, cfg.n_servers, 20_000, 1);
+        g.bench(&format!("items_{n}"), || {
+            let mut p = PolicyChoice::Akpc.build(&cfg, EngineChoice::Native);
+            akpc::sim::run(p.as_mut(), &trace, cfg.batch_size).total()
+        });
+    }
+    for bs in [50usize, 500] {
+        let cfg = AkpcConfig { batch_size: bs, ..base.clone() };
+        let trace = netflix_like(cfg.n_items, cfg.n_servers, 20_000, 1);
+        g.bench(&format!("batch_{bs}"), || {
+            let mut p = PolicyChoice::Akpc.build(&cfg, EngineChoice::Native);
+            akpc::sim::run(p.as_mut(), &trace, cfg.batch_size).total()
+        });
+    }
+}
+
+/// Fig. 9(b) — clique-generation tick latency vs item-universe size.
+fn fig9b() {
+    let base = bench_cfg();
+    let g = Group::new("fig9b_clique_generation").iters(5);
+    for n in [100u32, 1_000, 10_000] {
+        let cfg = AkpcConfig { n_items: n, ..base.clone() };
+        let trace = netflix_like(n, cfg.n_servers, cfg.batch_size * 4, 1);
+        g.bench(&format!("n_{n}"), || {
+            let mut akpc = akpc::algo::Akpc::new(&cfg);
+            for batch in trace.batches(cfg.batch_size) {
+                akpc.end_batch(batch);
+            }
+            akpc.windows
+        });
+    }
+}
+
+fn main() {
+    println!("== paper_experiments bench suite ==");
+    fig5();
+    fig6();
+    fig7();
+    fig8();
+    fig9b();
+}

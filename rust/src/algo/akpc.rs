@@ -1,0 +1,270 @@
+//! **Adaptive K-PackCache (AKPC)** — the paper's proposed policy
+//! (Algorithm 1), composed from the substrates:
+//!
+//! * *Event 1* (every window / `T^CG`): rebuild the CRM
+//!   ([`CrmBuilder`] — the AOT XLA artifact in production, native in
+//!   fallback), diff against the previous window, and regenerate the
+//!   disjoint clique set via adjust → form → split → approximate-merge
+//!   (Algorithms 2-4);
+//! * *Event 2* (request arrival): Algorithm 5 via [`PackedCacheCore`];
+//! * *Event 3* (copy expiry): Algorithm 6 inside the core's cache state.
+//!
+//! The `clique_splitting` / `approx_merging` flags produce the paper's
+//! ablation variants (*AKPC w/o CS, w/o ACM* and *AKPC w/o ACM*).
+
+use super::{CachePolicy, PackedCacheCore};
+use crate::cache::{CostLedger, CostModel};
+use crate::clique::CliqueSet;
+use crate::config::AkpcConfig;
+use crate::crm::{diff_windows, CrmBuilder, CrmWindow, NativeCrmBuilder};
+use crate::trace::model::Request;
+use crate::util::Histogram;
+
+pub struct Akpc {
+    cfg: AkpcConfig,
+    core: PackedCacheCore,
+    builder: Box<dyn CrmBuilder>,
+    prev_crm: CrmWindow,
+    cliques: CliqueSet,
+    hist: Histogram,
+    /// Sliding CRM window: the last `crm_window_batches` batches, stored
+    /// *pre-sessionized* (perf: sessionizing each batch once on arrival
+    /// instead of re-sessionizing the whole multi-batch window every tick
+    /// cut the tick cost ~2× — EXPERIMENTS.md §Perf. Sessions spanning a
+    /// batch boundary are split; with ~3-request sessions and 200-request
+    /// batches this affects <2% of sessions).
+    recent: std::collections::VecDeque<Vec<Request>>,
+    /// Cumulative time spent in clique generation (Fig. 9b).
+    pub clique_gen_secs: f64,
+    /// Window ticks executed.
+    pub windows: u64,
+}
+
+impl Akpc {
+    /// AKPC with the native CRM engine.
+    pub fn new(cfg: &AkpcConfig) -> Self {
+        Self::with_builder(cfg, Box::new(NativeCrmBuilder))
+    }
+
+    /// AKPC with an explicit CRM engine (the runtime injects the XLA one).
+    pub fn with_builder(cfg: &AkpcConfig, builder: Box<dyn CrmBuilder>) -> Self {
+        Self {
+            core: PackedCacheCore::new(CostModel::from_config(cfg), cfg.charge_policy),
+            cfg: cfg.clone(),
+            builder,
+            prev_crm: CrmWindow::default(),
+            cliques: CliqueSet::new(),
+            hist: Histogram::new(),
+            recent: std::collections::VecDeque::new(),
+            clique_gen_secs: 0.0,
+            windows: 0,
+        }
+    }
+
+    /// Current clique set (inspection / tests).
+    pub fn cliques(&self) -> &CliqueSet {
+        &self.cliques
+    }
+
+    /// CRM engine in use.
+    pub fn engine_name(&self) -> &'static str {
+        self.builder.engine_name()
+    }
+
+    /// Adjust the maximum clique size ω in place (used by the AdaptiveK
+    /// controller — future-work item (i)). Takes effect at the next
+    /// window tick; cache state and ledger carry across.
+    pub fn set_omega(&mut self, omega: u32) {
+        self.cfg.omega = omega.max(1);
+    }
+
+    fn variant_suffix(&self) -> &'static str {
+        match (self.cfg.clique_splitting, self.cfg.approx_merging) {
+            (true, true) => "",
+            (true, false) => " w/o ACM",
+            (false, true) => " w/o CS",
+            (false, false) => " w/o CS, w/o ACM",
+        }
+    }
+}
+
+impl CachePolicy for Akpc {
+    fn name(&self) -> String {
+        format!("AKPC{}", self.variant_suffix())
+    }
+
+    fn handle_request(&mut self, r: &Request) {
+        self.core.handle_request(r);
+    }
+
+    fn end_batch(&mut self, batch: &[Request]) {
+        let t0 = std::time::Instant::now();
+
+        // Slide the correlation window (last `crm_window_batches` T^CG
+        // periods); co-utilization spans consecutive same-server requests
+        // within the session gap (crm::sessionize, applied per batch on
+        // arrival); then run Algorithm 2 (XLA artifact or native engine).
+        let gap = self.cfg.session_gap_frac * self.cfg.delta_t();
+        self.recent.push_back(crate::crm::sessionize(batch, gap));
+        while self.recent.len() > self.cfg.crm_window_batches.max(1) {
+            self.recent.pop_front();
+        }
+        let transactions: Vec<Request> =
+            self.recent.iter().flatten().cloned().collect();
+        let crm = self.builder.build(
+            &transactions,
+            self.cfg.n_items,
+            self.cfg.theta,
+            self.cfg.crm_top_frac,
+        );
+        // Algorithm 4 input — edge diff vs the previous window.
+        let delta = diff_windows(&self.prev_crm, &crm);
+        // Algorithm 3 — adjust, form, split, merge.
+        self.cliques = CliqueSet::generate(
+            &self.cliques,
+            &crm,
+            &delta,
+            self.cfg.omega,
+            self.cfg.gamma_approx,
+            self.cfg.clique_splitting,
+            self.cfg.approx_merging,
+        );
+        self.prev_crm = crm;
+
+        // Install for subsequent requests (Algorithm 1 line 5).
+        self.core.set_cliques(self.cliques.iter());
+        for c in self.cliques.iter() {
+            self.hist.record(c.len() as u32);
+        }
+
+        self.clique_gen_secs += t0.elapsed().as_secs_f64();
+        self.windows += 1;
+    }
+
+    fn ledger(&self) -> &CostLedger {
+        &self.core.ledger
+    }
+
+    fn clique_sizes(&self) -> Histogram {
+        self.hist.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(items: &[u32], server: u32, t: f64) -> Request {
+        Request::new(items.to_vec(), server, t)
+    }
+
+    /// A window that makes {0,1,2} a strong bundle.
+    fn bundle_window(t0: f64) -> Vec<Request> {
+        let mut w = Vec::new();
+        for i in 0..20 {
+            w.push(req(&[0, 1, 2], 0, t0 + i as f64 * 0.01));
+            w.push(req(&[5, 6], 1, t0 + i as f64 * 0.01));
+        }
+        w
+    }
+
+    fn test_cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 16,
+            n_servers: 4,
+            crm_top_frac: 1.0,
+            // Unit tests reason about single windows.
+            crm_window_batches: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn learns_cliques_from_window() {
+        let cfg = test_cfg();
+        let mut p = Akpc::new(&cfg);
+        p.end_batch(&bundle_window(0.0));
+        assert_eq!(p.cliques().clique_of(0).unwrap(), &[0, 1, 2]);
+        assert_eq!(p.cliques().clique_of(5).unwrap(), &[5, 6]);
+    }
+
+    #[test]
+    fn serves_whole_clique_on_single_item_request() {
+        let cfg = test_cfg();
+        let mut p = Akpc::new(&cfg);
+        p.end_batch(&bundle_window(0.0));
+        p.handle_request(&req(&[0], 2, 10.0));
+        // Observation 4: delivered 3 items for 1 requested.
+        assert_eq!(p.ledger().items_delivered, 3);
+        assert_eq!(p.ledger().items_requested, 1);
+        // Packed transfer (1+2α)λ = 2.6.
+        assert!((p.ledger().c_t - 2.6).abs() < 1e-12);
+        // Follow-up for a co-bundled item within Δt is a pure hit.
+        let t_before = p.ledger().c_t;
+        p.handle_request(&req(&[1], 2, 10.5));
+        assert_eq!(p.ledger().c_t, t_before);
+        assert_eq!(p.ledger().full_hits, 1);
+    }
+
+    #[test]
+    fn variant_names() {
+        let cfg = test_cfg();
+        assert_eq!(Akpc::new(&cfg).name(), "AKPC");
+        assert_eq!(
+            Akpc::new(&cfg.without_cs_acm()).name(),
+            "AKPC w/o CS, w/o ACM"
+        );
+        assert_eq!(Akpc::new(&cfg.without_acm()).name(), "AKPC w/o ACM");
+    }
+
+    #[test]
+    fn incremental_update_across_windows() {
+        let cfg = test_cfg();
+        let mut p = Akpc::new(&cfg);
+        p.end_batch(&bundle_window(0.0));
+        let first = p.cliques().clique_of(0).unwrap().to_vec();
+        // Second window: bundle splits — 0 now pairs with 9 only. The two
+        // streams run on different servers so sessionization does not
+        // merge them into one transaction.
+        let mut w2 = Vec::new();
+        for i in 0..20 {
+            w2.push(req(&[0, 9], 0, 100.0 + i as f64 * 0.01));
+            w2.push(req(&[1, 2], 1, 100.0 + i as f64 * 0.01));
+        }
+        p.end_batch(&w2);
+        let second = p.cliques().clique_of(0).unwrap().to_vec();
+        assert_ne!(first, second);
+        assert_eq!(second, vec![0, 9]);
+        p.cliques().check_invariants().unwrap();
+        assert_eq!(p.windows, 2);
+    }
+
+    #[test]
+    fn omega_bounds_clique_size_with_cs() {
+        let cfg = AkpcConfig {
+            omega: 3,
+            ..test_cfg()
+        };
+        let mut p = Akpc::new(&cfg);
+        // One big 6-bundle.
+        let mut w = Vec::new();
+        for i in 0..30 {
+            w.push(req(&[0, 1, 2, 3, 4], 0, i as f64 * 0.01));
+            w.push(req(&[3, 4, 5], 0, i as f64 * 0.01));
+        }
+        p.end_batch(&w);
+        for c in p.cliques().iter() {
+            assert!(c.len() <= 3, "clique {c:?} exceeds ω");
+        }
+    }
+
+    #[test]
+    fn histogram_records_sizes() {
+        let cfg = test_cfg();
+        let mut p = Akpc::new(&cfg);
+        p.end_batch(&bundle_window(0.0));
+        let h = p.clique_sizes();
+        assert!(h.count() >= 2);
+        assert!(h.max() >= 2);
+    }
+}

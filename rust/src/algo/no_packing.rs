@@ -1,0 +1,72 @@
+//! *No Packing* baseline (inspired by Wang et al. [6]): every item is
+//! transferred and cached individually — the cost ceiling every packing
+//! strategy is measured against (Fig. 5, and the α→1 limit of Fig. 6a).
+
+use super::{CachePolicy, PackedCacheCore};
+use crate::cache::{CostLedger, CostModel};
+use crate::config::AkpcConfig;
+use crate::trace::model::Request;
+
+#[derive(Debug)]
+pub struct NoPacking {
+    core: PackedCacheCore,
+}
+
+impl NoPacking {
+    pub fn new(cfg: &AkpcConfig) -> Self {
+        Self {
+            // No cliques are ever installed: every item is a singleton.
+            core: PackedCacheCore::new(CostModel::from_config(cfg), cfg.charge_policy),
+        }
+    }
+}
+
+impl CachePolicy for NoPacking {
+    fn name(&self) -> String {
+        "NoPacking".into()
+    }
+
+    fn handle_request(&mut self, r: &Request) {
+        self.core.handle_request(r);
+    }
+
+    fn ledger(&self) -> &CostLedger {
+        &self.core.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_item_transferred_individually() {
+        let cfg = AkpcConfig::default();
+        let mut p = NoPacking::new(&cfg);
+        p.handle_request(&Request::new(vec![1, 2, 3], 0, 0.0));
+        // 3 singleton transfers at λ each + 3 μΔt caching.
+        assert_eq!(p.ledger().transfers, 3);
+        assert!((p.ledger().c_t - 3.0).abs() < 1e-12);
+        assert!((p.ledger().c_p - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeat_access_hits() {
+        let cfg = AkpcConfig::default();
+        let mut p = NoPacking::new(&cfg);
+        p.handle_request(&Request::new(vec![1], 0, 0.0));
+        p.handle_request(&Request::new(vec![1], 0, 0.5));
+        assert_eq!(p.ledger().transfers, 1);
+        assert_eq!(p.ledger().full_hits, 1);
+    }
+
+    #[test]
+    fn end_batch_is_noop() {
+        let cfg = AkpcConfig::default();
+        let mut p = NoPacking::new(&cfg);
+        let r = Request::new(vec![1, 2], 0, 0.0);
+        p.end_batch(&[r.clone()]);
+        p.handle_request(&r);
+        assert_eq!(p.ledger().transfers, 2); // still unpacked
+    }
+}

@@ -1,0 +1,332 @@
+//! *OPT* — the offline reference with complete future knowledge the paper
+//! normalizes every figure against.
+//!
+//! The paper does not specify OPT's construction beyond "the optimal
+//! strategy that achieves the minimum possible cost using complete future
+//! knowledge", and its Theorem 1 argument grants OPT two abilities:
+//!
+//! * **anticipatory exact packing** — when a transfer to a server is
+//!   needed, OPT may pack *any* items into it, in particular items it
+//!   knows will be requested at that server shortly (this is the ability
+//!   AKPC approximates with cliques — Observation 4);
+//! * **clairvoyant caching** — an item is held only when holding is
+//!   cheaper than refetching (Observation 2).
+//!
+//! We implement both greedily with full lookahead (DESIGN.md §2):
+//!
+//! 1. When a request at server `s`, time `t` misses items, OPT opens one
+//!    packed transfer containing the missed set **plus** every item whose
+//!    next access at `s` falls within `(t, t + Δt]` and is not already
+//!    cached — prefetching it costs a marginal `α·λ` plus holding
+//!    `μ·(t_next − t)`, which is compared against the `λ` a dedicated
+//!    later transfer would cost.
+//! 2. After serving/prefetching, each item is held to its next access iff
+//!    `μ·gap ≤ α·λ` (cheapest conceivable refetch), else dropped.
+//!
+//! This is a strong clairvoyant baseline, not a provable optimum; the
+//! paper's own OPT is equally unspecified, and every figure normalizes to
+//! it the same way.
+
+use std::collections::HashMap;
+
+use super::CachePolicy;
+use crate::cache::{CostLedger, CostModel};
+use crate::config::AkpcConfig;
+use crate::trace::model::{Request, Trace};
+
+#[derive(Debug)]
+pub struct Opt {
+    cost: CostModel,
+    ledger: CostLedger,
+    /// Future access times per (item, server), ascending.
+    accesses: HashMap<(u32, u32), Vec<f64>>,
+    cursor: HashMap<(u32, u32), usize>,
+    /// Items of each server's stream in first-future-access order is
+    /// recovered through `accesses`; `per_server` lists items ever touched
+    /// at a server (for prefetch scanning).
+    per_server: HashMap<u32, Vec<u32>>,
+    /// (item, server) held in cache until the stored time.
+    cached_until: HashMap<(u32, u32), f64>,
+    prepared: bool,
+}
+
+impl Opt {
+    pub fn new(cfg: &AkpcConfig) -> Self {
+        Self {
+            cost: CostModel::from_config(cfg),
+            ledger: CostLedger::default(),
+            accesses: HashMap::new(),
+            cursor: HashMap::new(),
+            per_server: HashMap::new(),
+            cached_until: HashMap::new(),
+            prepared: false,
+        }
+    }
+
+    /// Next access of `item` at `server` strictly after `now`.
+    fn next_access(&mut self, item: u32, server: u32, now: f64) -> Option<f64> {
+        let times = self.accesses.get(&(item, server))?;
+        let cur = self.cursor.entry((item, server)).or_insert(0);
+        while *cur < times.len() && times[*cur] <= now {
+            *cur += 1;
+        }
+        times.get(*cur).copied()
+    }
+
+    /// Hold-vs-drop (ski rental with future knowledge) for an item that is
+    /// present at `server` at `now`.
+    fn decide_hold(&mut self, item: u32, server: u32, now: f64) {
+        if let Some(t_next) = self.next_access(item, server, now) {
+            let gap = t_next - now;
+            if self.cost.mu * gap <= self.cost.alpha * self.cost.lambda {
+                self.ledger.c_p += self.cost.mu * gap;
+                self.cached_until.insert((item, server), t_next);
+                return;
+            }
+        }
+        self.cached_until.remove(&(item, server));
+    }
+}
+
+impl CachePolicy for Opt {
+    fn name(&self) -> String {
+        "OPT".into()
+    }
+
+    fn prepare(&mut self, trace: &Trace) {
+        self.accesses.clear();
+        self.per_server.clear();
+        for r in &trace.requests {
+            for &d in &r.items {
+                let e = self.accesses.entry((d, r.server)).or_default();
+                if e.is_empty() {
+                    self.per_server.entry(r.server).or_default().push(d);
+                }
+                e.push(r.time);
+            }
+        }
+        self.prepared = true;
+    }
+
+    fn handle_request(&mut self, r: &Request) {
+        debug_assert!(self.prepared, "OPT requires prepare(trace)");
+        let now = r.time;
+        let server = r.server;
+
+        let mut pack: Vec<u32> = Vec::new();
+        for &d in &r.items {
+            let hit = self
+                .cached_until
+                .get(&(d, server))
+                .is_some_and(|&u| u >= now);
+            if !hit && !pack.contains(&d) {
+                pack.push(d);
+            }
+        }
+
+        if !pack.is_empty() {
+            // Anticipatory packing: add upcoming items at this server whose
+            // prefetch (marginal αλ + holding) beats a later dedicated
+            // transfer (λ). Scan this server's item universe — small by
+            // construction (items ever requested at s).
+            let candidates: Vec<u32> = self
+                .per_server
+                .get(&server)
+                .map(|v| v.clone())
+                .unwrap_or_default();
+            for d in candidates {
+                if pack.contains(&d) {
+                    continue;
+                }
+                if self
+                    .cached_until
+                    .get(&(d, server))
+                    .is_some_and(|&u| u >= now)
+                {
+                    continue; // already held
+                }
+                if let Some(t_next) = self.next_access(d, server, now) {
+                    let gap = t_next - now;
+                    let prefetch = self.cost.alpha * self.cost.lambda
+                        + self.cost.mu * gap;
+                    if gap <= self.cost.delta_t && prefetch <= self.cost.lambda {
+                        pack.push(d);
+                        // Charge holding up to the prefetched access; the
+                        // marginal transfer α·λ is charged via pack size.
+                        self.ledger.c_p += self.cost.mu * gap;
+                        self.cached_until.insert((d, server), t_next);
+                    }
+                }
+            }
+
+            self.ledger.c_t += self.cost.transfer_packed(pack.len() as u32);
+            self.ledger.transfers += 1;
+            self.ledger.misses += 1;
+            self.ledger.items_delivered += pack.len() as u64;
+        } else {
+            self.ledger.full_hits += 1;
+        }
+        self.ledger.requests += 1;
+        self.ledger.items_requested += r.items.len() as u64;
+        self.ledger.items_delivered += (r.items.len() as u64)
+            .saturating_sub(pack.iter().filter(|d| r.items.contains(d)).count() as u64);
+
+        // Hold-vs-drop for the items just served (requested ones).
+        for &d in &r.items {
+            self.decide_hold(d, server, now);
+        }
+    }
+
+    fn ledger(&self) -> &CostLedger {
+        &self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace_of(reqs: Vec<Request>) -> Trace {
+        Trace {
+            n_items: 64,
+            n_servers: 4,
+            name: "t".into(),
+            requests: reqs,
+        }
+    }
+
+    fn run(reqs: Vec<Request>, alpha: f64) -> CostLedger {
+        let cfg = AkpcConfig {
+            alpha,
+            ..Default::default()
+        };
+        let t = trace_of(reqs.clone());
+        let mut o = Opt::new(&cfg);
+        o.prepare(&t);
+        for r in &reqs {
+            o.handle_request(r);
+        }
+        o.ledger().clone()
+    }
+
+    #[test]
+    fn theorem1_case11_opt_pays_only_transfer() {
+        // Single item, never re-accessed: OPT cost = λ.
+        let l = run(vec![Request::new(vec![1], 0, 0.0)], 0.8);
+        assert!((l.c_t - 1.0).abs() < 1e-12);
+        assert_eq!(l.c_p, 0.0);
+    }
+
+    #[test]
+    fn packs_missed_set_exactly() {
+        // Theorem 1 Case 2.1: S=3 missed -> (1 + 2α)λ in ONE transfer.
+        let l = run(vec![Request::new(vec![1, 2, 3], 0, 0.0)], 0.8);
+        assert_eq!(l.transfers, 1);
+        assert!((l.c_t - 2.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn holds_across_short_gap() {
+        // Gap 0.5: μ·0.5 = 0.5 ≤ αλ = 0.8 -> hold, pay 0.5 caching,
+        // second access is a hit.
+        let l = run(
+            vec![
+                Request::new(vec![1], 0, 0.0),
+                Request::new(vec![1], 0, 0.5),
+            ],
+            0.8,
+        );
+        assert_eq!(l.transfers, 1);
+        assert!((l.c_p - 0.5).abs() < 1e-12);
+        assert_eq!(l.full_hits, 1);
+    }
+
+    #[test]
+    fn refetches_across_long_gap() {
+        // Gap 5: μ·5 > αλ -> drop and refetch.
+        let l = run(
+            vec![
+                Request::new(vec![1], 0, 0.0),
+                Request::new(vec![1], 0, 5.0),
+            ],
+            0.8,
+        );
+        assert_eq!(l.transfers, 2);
+        assert_eq!(l.c_p, 0.0);
+        assert!((l.c_t - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn anticipatory_prefetch_of_sequential_session() {
+        // A session walks items 1,2,3 at server 0 within Δt: OPT packs all
+        // three into the first transfer — one (1+2α)λ = 2.6 transfer plus
+        // tiny holds, instead of 3λ.
+        let l = run(
+            vec![
+                Request::new(vec![1], 0, 0.0),
+                Request::new(vec![2], 0, 0.1),
+                Request::new(vec![3], 0, 0.2),
+            ],
+            0.8,
+        );
+        assert_eq!(l.transfers, 1, "prefetch did not pack the session");
+        assert!((l.c_t - 2.6).abs() < 1e-12);
+        // Holding: item 2 for 0.1 + item 3 for 0.2.
+        assert!((l.c_p - 0.3).abs() < 1e-9);
+        assert_eq!(l.full_hits, 2);
+    }
+
+    #[test]
+    fn no_prefetch_beyond_delta_t() {
+        // Item 2's access is 5Δt away: prefetching would cost αλ + 5μ > λ.
+        let l = run(
+            vec![
+                Request::new(vec![1], 0, 0.0),
+                Request::new(vec![2], 0, 5.0),
+            ],
+            0.8,
+        );
+        assert_eq!(l.transfers, 2);
+        assert!((l.c_t - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opt_beats_naive_on_mixed_workload() {
+        // Sanity: OPT ≤ NoPacking on any trace.
+        use crate::algo::no_packing::NoPacking;
+        let reqs: Vec<Request> = (0..100)
+            .map(|i| {
+                Request::new(
+                    vec![(i % 7) as u32, ((i + 1) % 7) as u32],
+                    (i % 3) as u32,
+                    i as f64 * 0.3,
+                )
+            })
+            .collect();
+        let lo = run(reqs.clone(), 0.8);
+        let cfg = AkpcConfig::default();
+        let mut np = NoPacking::new(&cfg);
+        for r in &reqs {
+            np.handle_request(r);
+        }
+        assert!(
+            lo.total() <= np.ledger().total() + 1e-9,
+            "OPT {} vs NoPacking {}",
+            lo.total(),
+            np.ledger().total()
+        );
+    }
+
+    #[test]
+    fn server_isolation() {
+        // Same item on two servers: no shared cache.
+        let l = run(
+            vec![
+                Request::new(vec![1], 0, 0.0),
+                Request::new(vec![1], 1, 0.1),
+            ],
+            0.8,
+        );
+        assert_eq!(l.transfers, 2);
+    }
+}

@@ -1,0 +1,716 @@
+//! One function per paper table/figure (see DESIGN.md §4).
+//!
+//! Every function prints the same rows/series the paper reports and
+//! returns them as structured data so integration tests can assert the
+//! *shape* of each result (who wins, direction of trends, crossovers).
+
+use crate::algo::{Akpc, CachePolicy};
+use crate::config::AkpcConfig;
+use crate::sim;
+use crate::trace::generator::{netflix_like, spotify_like};
+use crate::trace::model::Trace;
+
+use super::sweep::{run_policy_set, EngineChoice, PolicyChoice, RelativeCosts};
+
+/// Experiment-wide options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpOptions {
+    /// Requests per trace (paper: 1M; quick runs use less).
+    pub n_requests: usize,
+    pub engine: EngineChoice,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            n_requests: 200_000,
+            engine: EngineChoice::Native,
+            seed: 1,
+        }
+    }
+}
+
+/// The two evaluation datasets (paper §V-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    Netflix,
+    Spotify,
+}
+
+impl Dataset {
+    pub const BOTH: &'static [Dataset] = &[Dataset::Netflix, Dataset::Spotify];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dataset::Netflix => "Netflix",
+            Dataset::Spotify => "Spotify",
+        }
+    }
+
+    pub fn trace(&self, cfg: &AkpcConfig, opts: &ExpOptions) -> Trace {
+        match self {
+            Dataset::Netflix => {
+                netflix_like(cfg.n_items, cfg.n_servers, opts.n_requests, opts.seed)
+            }
+            Dataset::Spotify => {
+                spotify_like(cfg.n_items, cfg.n_servers, opts.n_requests, opts.seed)
+            }
+        }
+    }
+}
+
+/// A generic experiment result: one labelled series per dataset.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub id: String,
+    pub param_name: String,
+    pub params: Vec<f64>,
+    /// `series[dataset][policy] = Vec<relative cost per param>`.
+    pub series: Vec<(String, Vec<(String, Vec<f64>)>)>,
+}
+
+impl SweepResult {
+    pub fn print(&self) {
+        println!("== {} — relative total cost vs {} ==", self.id, self.param_name);
+        for (ds, policies) in &self.series {
+            println!("-- {ds} --");
+            print!("{:<24}", self.param_name);
+            for p in &self.params {
+                print!("{p:>10.2}");
+            }
+            println!();
+            for (name, vals) in policies {
+                print!("{name:<24}");
+                for v in vals {
+                    print!("{v:>10.2}");
+                }
+                println!();
+            }
+        }
+    }
+
+    /// JSON export (for plotting tools).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("param", Json::Str(self.param_name.clone())),
+            (
+                "params",
+                Json::Arr(self.params.iter().map(|&p| Json::Num(p)).collect()),
+            ),
+            (
+                "series",
+                Json::Arr(
+                    self.series
+                        .iter()
+                        .map(|(ds, pol)| {
+                            Json::obj(vec![
+                                ("dataset", Json::Str(ds.clone())),
+                                (
+                                    "policies",
+                                    Json::Arr(
+                                        pol.iter()
+                                            .map(|(name, vals)| {
+                                                Json::obj(vec![
+                                                    ("name", Json::Str(name.clone())),
+                                                    (
+                                                        "rel_cost",
+                                                        Json::Arr(
+                                                            vals.iter()
+                                                                .map(|&v| Json::Num(v))
+                                                                .collect(),
+                                                        ),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn series_for(&self, dataset: &str, policy: &str) -> Option<&[f64]> {
+        self.series
+            .iter()
+            .find(|(d, _)| d == dataset)?
+            .1
+            .iter()
+            .find(|(p, _)| p == policy)
+            .map(|(_, v)| v.as_slice())
+    }
+}
+
+/// Generic sweep: vary one config parameter, run the policy set on both
+/// datasets, normalize to OPT per point.
+fn sweep_param(
+    id: &str,
+    param_name: &str,
+    params: &[f64],
+    opts: &ExpOptions,
+    base: &AkpcConfig,
+    policies: &[PolicyChoice],
+    apply: impl Fn(&AkpcConfig, f64) -> AkpcConfig,
+    regen_trace_per_point: bool,
+) -> SweepResult {
+    let mut series = Vec::new();
+    for ds in Dataset::BOTH {
+        let base_trace = if regen_trace_per_point {
+            None
+        } else {
+            Some(ds.trace(base, opts))
+        };
+        let mut per_policy: Vec<(String, Vec<f64>)> = Vec::new();
+        for &p in params {
+            let cfg = apply(base, p);
+            let trace = match &base_trace {
+                Some(t) => t.clone(),
+                None => ds.trace(&cfg, opts),
+            };
+            let reports = run_policy_set(&cfg, &trace, policies, opts.engine);
+            let rel = RelativeCosts::from_reports(&reports);
+            for (name, v, ..) in &rel.rows {
+                match per_policy.iter_mut().find(|(n, _)| n == name) {
+                    Some((_, vals)) => vals.push(*v),
+                    None => per_policy.push((name.clone(), vec![*v])),
+                }
+            }
+        }
+        series.push((ds.label().to_string(), per_policy));
+    }
+    SweepResult {
+        id: id.to_string(),
+        param_name: param_name.to_string(),
+        params: params.to_vec(),
+        series,
+    }
+}
+
+// ---------------------------------------------------------------- Table I
+
+/// Table I — analytic transfer/caching costs by pack size. Pure cost-model
+/// check (also unit-tested); printed for completeness.
+pub fn table1(cfg: &AkpcConfig) {
+    let m = crate::cache::CostModel::from_config(cfg);
+    println!("== Table I — transfer & caching costs (λ={}, μ={}, Δt={}, α={}) ==",
+        cfg.lambda, cfg.mu, cfg.delta_t(), cfg.alpha);
+    println!("{:<10}{:<12}{:>14}{:>14}", "#packed", "type", "transfer", "caching");
+    for k in [1u32, 2, 5] {
+        println!(
+            "{:<10}{:<12}{:>14.2}{:>14.2}",
+            k, "unpacked", m.transfer_unpacked(k), m.caching(k, m.delta_t)
+        );
+        println!(
+            "{:<10}{:<12}{:>14.2}{:>14.2}",
+            k, "K-packed", m.transfer_packed(k), m.caching(k, m.delta_t)
+        );
+    }
+}
+
+// ---------------------------------------------------------------- Fig. 5
+
+/// Fig. 5 result: stacked C_T/C_P per policy per dataset, relative to OPT.
+#[derive(Debug, Clone)]
+pub struct Fig5Result {
+    /// `(dataset, rows)` where rows = `(policy, rel_total, rel_ct, rel_cp)`.
+    pub datasets: Vec<(String, Vec<(String, f64, f64, f64)>)>,
+}
+
+impl Fig5Result {
+    pub fn rel_total(&self, dataset: &str, policy: &str) -> Option<f64> {
+        self.datasets
+            .iter()
+            .find(|(d, _)| d == dataset)?
+            .1
+            .iter()
+            .find(|(p, ..)| p == policy)
+            .map(|&(_, t, ..)| t)
+    }
+
+    /// JSON export.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::Arr(
+            self.datasets
+                .iter()
+                .map(|(ds, rows)| {
+                    Json::obj(vec![
+                        ("dataset", Json::Str(ds.clone())),
+                        (
+                            "rows",
+                            Json::Arr(
+                                rows.iter()
+                                    .map(|(name, t, ct, cp)| {
+                                        Json::obj(vec![
+                                            ("policy", Json::Str(name.clone())),
+                                            ("total", Json::Num(*t)),
+                                            ("c_t", Json::Num(*ct)),
+                                            ("c_p", Json::Num(*cp)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn print(&self) {
+        println!("== Fig. 5 — total cost vs SOTA (normalized, OPT = 1) ==");
+        for (ds, rows) in &self.datasets {
+            println!("-- {ds} --");
+            println!(
+                "{:<26}{:>10}{:>10}{:>10}",
+                "policy", "total", "C_T", "C_P"
+            );
+            for (name, t, ct, cp) in rows {
+                println!("{name:<26}{t:>10.2}{ct:>10.2}{cp:>10.2}");
+            }
+        }
+    }
+}
+
+/// Fig. 5 — cost comparison across all packing strategies on both traces.
+pub fn fig5(opts: &ExpOptions, base: &AkpcConfig) -> Fig5Result {
+    let mut datasets = Vec::new();
+    for ds in Dataset::BOTH {
+        let trace = ds.trace(base, opts);
+        let reports = run_policy_set(base, &trace, PolicyChoice::FIG5, opts.engine);
+        let rel = RelativeCosts::from_reports(&reports);
+        datasets.push((ds.label().to_string(), rel.rows));
+    }
+    Fig5Result { datasets }
+}
+
+// ------------------------------------------------------- Fig. 6 (α and ρ)
+
+/// Fig. 6(a) — sensitivity to the discount factor α ∈ [0.6, 1.0].
+pub fn fig6a(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 6(a)",
+        "alpha",
+        &[0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 1.0],
+        opts,
+        base,
+        PolicyChoice::SWEEP,
+        |c, a| AkpcConfig { alpha: a, ..c.clone() },
+        false,
+    )
+}
+
+/// Fig. 6(b) — sensitivity to the cost ratio ρ = λ/μ ∈ [1, 10].
+pub fn fig6b(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 6(b)",
+        "rho",
+        &[1.0, 2.0, 4.0, 6.0, 8.0, 10.0],
+        opts,
+        base,
+        PolicyChoice::SWEEP,
+        // The swept quantity is the λ/μ *price ratio* (the paper's Fig. 6b
+        // x-axis). Δt is held at its base value by compensating ρ —
+        // sweeping Δt together with λ (Alg. 6 line 1 taken literally)
+        // would conflate the expiry horizon with the price ratio and
+        // reverses the trend the paper reports (DESIGN.md §6).
+        |c, r| AkpcConfig {
+            lambda: r * c.mu,
+            rho: 1.0 / r,
+            ..c.clone()
+        },
+        false,
+    )
+}
+
+// ----------------------------------------------------- Fig. 7 (θ, γ, ω)
+
+/// Fig. 7(a) — CRM threshold θ sweep.
+pub fn fig7a(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 7(a)",
+        "theta",
+        &[0.05, 0.1, 0.15, 0.2, 0.3, 0.4, 0.6, 0.8],
+        opts,
+        base,
+        &[PolicyChoice::AkpcNoCsNoAcm, PolicyChoice::Akpc, PolicyChoice::Opt],
+        |c, t| AkpcConfig { theta: t as f32, ..c.clone() },
+        false,
+    )
+}
+
+/// Fig. 7(b) — clique approximation threshold γ sweep.
+pub fn fig7b(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 7(b)",
+        "gamma",
+        &[0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 1.0],
+        opts,
+        base,
+        &[PolicyChoice::AkpcNoCsNoAcm, PolicyChoice::Akpc, PolicyChoice::Opt],
+        |c, g| AkpcConfig { gamma_approx: g as f32, ..c.clone() },
+        false,
+    )
+}
+
+/// Fig. 7(c) — maximum clique size ω sweep.
+pub fn fig7c(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 7(c)",
+        "omega",
+        &[2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0],
+        opts,
+        base,
+        &[PolicyChoice::AkpcNoCsNoAcm, PolicyChoice::Akpc, PolicyChoice::Opt],
+        |c, w| AkpcConfig { omega: w as u32, ..c.clone() },
+        false,
+    )
+}
+
+// ------------------------------------------------ Fig. 8 (scalability)
+
+/// Fig. 8(a) — number of servers sweep (trace regenerated per point).
+pub fn fig8a(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 8(a)",
+        "servers",
+        &[30.0, 60.0, 150.0, 300.0, 600.0],
+        opts,
+        base,
+        PolicyChoice::SWEEP,
+        |c, m| AkpcConfig { n_servers: m as u32, ..c.clone() },
+        true,
+    )
+}
+
+/// Fig. 8(b) — number of data items sweep (trace regenerated per point).
+pub fn fig8b(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 8(b)",
+        "items",
+        &[60.0, 240.0, 600.0, 1800.0, 3600.0],
+        opts,
+        base,
+        PolicyChoice::SWEEP,
+        |c, n| AkpcConfig { n_items: n as u32, ..c.clone() },
+        true,
+    )
+}
+
+/// Fig. 8(c) — batch size sweep.
+pub fn fig8c(opts: &ExpOptions, base: &AkpcConfig) -> SweepResult {
+    sweep_param(
+        "Fig 8(c)",
+        "batch",
+        &[50.0, 100.0, 200.0, 350.0, 500.0],
+        opts,
+        base,
+        PolicyChoice::SWEEP,
+        |c, b| AkpcConfig { batch_size: b as usize, ..c.clone() },
+        false,
+    )
+}
+
+// ------------------------------------------------ Fig. 9 (cliques, time)
+
+/// Fig. 9(a) — clique-size distribution across the three AKPC variants.
+#[derive(Debug, Clone)]
+pub struct Fig9aResult {
+    /// `(dataset, variant, distribution)`.
+    pub dists: Vec<(String, String, Vec<(u32, f64)>)>,
+}
+
+impl Fig9aResult {
+    pub fn mean_size(&self, dataset: &str, variant: &str) -> Option<f64> {
+        let (_, _, dist) = self
+            .dists
+            .iter()
+            .find(|(d, v, _)| d == dataset && v == variant)?;
+        let total: f64 = dist.iter().map(|(_, f)| f).sum();
+        Some(
+            dist.iter()
+                .map(|&(s, f)| s as f64 * f)
+                .sum::<f64>()
+                / total.max(1e-12),
+        )
+    }
+
+    pub fn print(&self) {
+        println!("== Fig. 9(a) — clique size distribution ==");
+        for (ds, variant, dist) in &self.dists {
+            let mean = self.mean_size(ds, variant).unwrap_or(0.0);
+            print!("{ds:<10} {variant:<24} mean={mean:.2}  ");
+            for (s, f) in dist {
+                print!("{s}:{:.0}% ", f * 100.0);
+            }
+            println!();
+        }
+    }
+}
+
+pub fn fig9a(opts: &ExpOptions, base: &AkpcConfig) -> Fig9aResult {
+    let variants = [
+        (PolicyChoice::AkpcNoCsNoAcm, "AKPC w/o CS, w/o ACM"),
+        (PolicyChoice::AkpcNoAcm, "AKPC w/o ACM"),
+        (PolicyChoice::Akpc, "AKPC (Proposed)"),
+    ];
+    let mut dists = Vec::new();
+    for ds in Dataset::BOTH {
+        let trace = ds.trace(base, opts);
+        for (choice, label) in variants {
+            let mut p = choice.build(base, opts.engine);
+            let rep = sim::run(p.as_mut(), &trace, base.batch_size);
+            dists.push((
+                ds.label().to_string(),
+                label.to_string(),
+                rep.clique_hist.distribution(),
+            ));
+        }
+    }
+    Fig9aResult { dists }
+}
+
+/// Fig. 9(b) — clique-generation execution time vs number of data items.
+#[derive(Debug, Clone)]
+pub struct Fig9bResult {
+    /// `(n_items, seconds per clique-generation tick)`.
+    pub rows: Vec<(u32, f64)>,
+}
+
+impl Fig9bResult {
+    pub fn print(&self) {
+        println!("== Fig. 9(b) — clique generation time vs data size ==");
+        println!("{:<12}{:>16}", "n_items", "secs/tick");
+        for (n, s) in &self.rows {
+            println!("{n:<12}{s:>16.4}");
+        }
+    }
+}
+
+/// Measures the full Event-1 path (CRM build + diff + adjust/split/merge)
+/// per tick, averaged over several windows.
+pub fn fig9b(opts: &ExpOptions, base: &AkpcConfig) -> Fig9bResult {
+    let sizes = [100u32, 500, 1_000, 2_000, 5_000, 10_000];
+    let mut rows = Vec::new();
+    for &n in &sizes {
+        let cfg = AkpcConfig {
+            n_items: n,
+            ..base.clone()
+        };
+        // Enough requests for ~8 windows.
+        let trace = netflix_like(n, cfg.n_servers, cfg.batch_size * 8, opts.seed);
+        let engine = match opts.engine {
+            EngineChoice::Native => crate::runtime::CrmEngine::Native,
+            EngineChoice::Xla => crate::runtime::CrmEngine::Xla,
+        };
+        let mut akpc = Akpc::with_builder(&cfg, engine.builder(&cfg.artifacts_dir));
+        for batch in trace.batches(cfg.batch_size) {
+            akpc.end_batch(batch);
+        }
+        rows.push((n, akpc.clique_gen_secs / akpc.windows.max(1) as f64));
+    }
+    Fig9bResult { rows }
+}
+
+// ------------------------------------------------ Design-choice ablations
+
+/// Ablations over the design choices DESIGN.md §6 documents — not paper
+/// figures, but the evidence behind each resolution:
+///
+/// * `session_gap_frac` — co-utilization gap (must be ≪ Δt);
+/// * `crm_window_batches` — correlation-window span (single-batch CRMs
+///   fragment cliques);
+/// * `charge_policy` — requested-items (paper Table I) vs physical
+///   clique-items caching attribution;
+/// * `transfer_model` — Eq. 3 vs the literal Alg.-5-line-12 formula.
+pub fn ablations(opts: &ExpOptions, base: &AkpcConfig) -> Vec<SweepResult> {
+    let mut out = Vec::new();
+    out.push(sweep_param(
+        "Ablation: session gap",
+        "gap_frac",
+        &[0.01, 0.05, 0.2, 0.5, 1.0],
+        opts,
+        base,
+        &[PolicyChoice::Akpc, PolicyChoice::Opt],
+        |c, g| AkpcConfig {
+            session_gap_frac: g,
+            ..c.clone()
+        },
+        false,
+    ));
+    out.push(sweep_param(
+        "Ablation: CRM window span",
+        "batches",
+        &[1.0, 2.0, 5.0, 10.0, 20.0],
+        opts,
+        base,
+        &[PolicyChoice::Akpc, PolicyChoice::Opt],
+        |c, w| AkpcConfig {
+            crm_window_batches: w as usize,
+            ..c.clone()
+        },
+        false,
+    ));
+    out.push(sweep_param(
+        "Ablation: caching-charge attribution",
+        "policy(0=req,1=clique)",
+        &[0.0, 1.0],
+        opts,
+        base,
+        &[PolicyChoice::NoPacking, PolicyChoice::Akpc, PolicyChoice::Opt],
+        |c, p| AkpcConfig {
+            charge_policy: if p < 0.5 {
+                crate::config::ChargePolicy::RequestedItems
+            } else {
+                crate::config::ChargePolicy::CliqueItems
+            },
+            ..c.clone()
+        },
+        false,
+    ));
+    out.push(sweep_param(
+        "Ablation: packed-transfer formula",
+        "model(0=eq3,1=alg5)",
+        &[0.0, 1.0],
+        opts,
+        base,
+        &[PolicyChoice::NoPacking, PolicyChoice::Akpc, PolicyChoice::Opt],
+        |c, m| AkpcConfig {
+            transfer_model: if m < 0.5 {
+                crate::config::TransferModel::Eq3
+            } else {
+                crate::config::TransferModel::Alg5Line12
+            },
+            ..c.clone()
+        },
+        false,
+    ));
+    out
+}
+
+// ------------------------------------------------ Theorems 1–2 harness
+
+/// Adversarial competitive-ratio experiment (Theorem 2 construction):
+/// phases of S fresh uncached items in distinct ω-cliques, never repeated.
+/// Returns `(measured_ratio, derived_bound)`.
+///
+/// Note on the bound (DESIGN.md §6): the paper *states* the closed form
+/// `(2 + (ω−1)·α·S) / (1 + (S−1)·α)`, but its own Case-2.1 derivation
+/// computes `C_AKPC = S·(2 + (ω−1)α)λ` against `C_OPT = (1+(S−1)α)λ`,
+/// whose ratio is `S·(2 + (ω−1)α) / (1 + (S−1)α)` — the `2` must scale
+/// with S. The two agree only at S = 1. We report the derivation's value
+/// as [`adversarial_bound_derived`] (what the algorithm actually attains)
+/// and the paper's stated form as [`adversarial_bound_stated`].
+pub fn adversarial_ratio(cfg: &AkpcConfig, s: u32, phases: u32) -> (f64, f64) {
+    let cost = crate::cache::CostModel::from_config(cfg);
+
+    // AKPC under adversary: each of the S items triggers a full ω-clique
+    // transfer plus Δt caching of the requested item (Theorem 1 Case 2.1).
+    let akpc_phase =
+        s as f64 * (cost.transfer_packed(cfg.omega) + cfg.mu * cfg.delta_t());
+    // OPT: one exactly-S packed transfer.
+    let opt_phase = (1.0 + (s as f64 - 1.0) * cfg.alpha) * cfg.lambda;
+    let measured = (phases as f64 * akpc_phase) / (phases as f64 * opt_phase);
+
+    (measured, adversarial_bound_derived(cfg, s))
+}
+
+/// The bound the paper's Case-2.1 derivation actually yields:
+/// `S·(2 + (ω−1)α) / (1 + (S−1)α)` (assumes ρ = 1, i.e. μΔt = λ).
+pub fn adversarial_bound_derived(cfg: &AkpcConfig, s: u32) -> f64 {
+    let s = s as f64;
+    s * (2.0 + (cfg.omega as f64 - 1.0) * cfg.alpha) / (1.0 + (s - 1.0) * cfg.alpha)
+}
+
+/// The closed form as *stated* in Theorems 1-2:
+/// `(2 + (ω−1)·α·S) / (1 + (S−1)·α)`.
+pub fn adversarial_bound_stated(cfg: &AkpcConfig, s: u32) -> f64 {
+    let s = s as f64;
+    (2.0 + (cfg.omega as f64 - 1.0) * cfg.alpha * s) / (1.0 + (s - 1.0) * cfg.alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> ExpOptions {
+        ExpOptions {
+            n_requests: 20_000,
+            engine: EngineChoice::Native,
+            seed: 3,
+        }
+    }
+
+    fn quick_cfg() -> AkpcConfig {
+        // Table-II shape (see sim::tests on density).
+        AkpcConfig {
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig5_shape_holds() {
+        let r = fig5(&quick_opts(), &quick_cfg());
+        for ds in ["Netflix", "Spotify"] {
+            let akpc = r.rel_total(ds, "AKPC").unwrap();
+            let pc = r.rel_total(ds, "PackCache").unwrap();
+            let np = r.rel_total(ds, "NoPacking").unwrap();
+            assert!(akpc < pc, "{ds}: AKPC {akpc} !< PackCache {pc}");
+            assert!(pc <= np * 1.01, "{ds}: PackCache {pc} !<= NoPacking {np}");
+            assert!(akpc >= 1.0);
+        }
+        r.print();
+    }
+
+    #[test]
+    fn fig6a_converges_toward_no_packing_at_alpha_1() {
+        let r = fig6a(&quick_opts(), &quick_cfg());
+        let akpc = r.series_for("Netflix", "AKPC").unwrap();
+        let np = r.series_for("Netflix", "NoPacking").unwrap();
+        // Gap at α=0.6 must be much larger than gap at α=1.0.
+        let gap_first = np[0] - akpc[0];
+        let gap_last = np.last().unwrap() - akpc.last().unwrap();
+        assert!(
+            gap_last < gap_first,
+            "gap did not shrink: {gap_first} -> {gap_last}"
+        );
+    }
+
+    #[test]
+    fn adversarial_matches_derived_bound_exactly() {
+        let cfg = AkpcConfig::default();
+        for s in 1..=5 {
+            let (measured, bound) = adversarial_ratio(&cfg, s, 10);
+            assert!(
+                (measured - bound).abs() < 1e-9,
+                "S={s}: {measured} vs {bound}"
+            );
+            // The paper's stated closed form agrees at S=1 and is smaller
+            // (typo'd) for S>1 — see DESIGN.md §6.
+            let stated = adversarial_bound_stated(&cfg, s);
+            if s == 1 {
+                assert!((stated - bound).abs() < 1e-9);
+            } else {
+                assert!(stated < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn fig9b_times_are_sane() {
+        let mut o = quick_opts();
+        o.n_requests = 2_000;
+        let r = fig9b(&o, &quick_cfg());
+        assert_eq!(r.rows.len(), 6);
+        for (n, secs) in &r.rows {
+            assert!(*secs >= 0.0 && *secs < 10.0, "n={n}: {secs}s");
+        }
+    }
+}

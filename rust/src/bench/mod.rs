@@ -1,0 +1,9 @@
+//! The paper's evaluation harness: one function per table/figure
+//! (DESIGN.md §4 experiment index). Each regenerates the same rows/series
+//! the paper reports, normalized to OPT = 1 where the paper does.
+
+pub mod experiments;
+pub mod sweep;
+
+pub use experiments::*;
+pub use sweep::{run_policy_set, PolicyChoice, RelativeCosts};

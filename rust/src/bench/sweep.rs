@@ -1,0 +1,164 @@
+//! Shared sweep machinery: instantiate policy sets, run them over a trace,
+//! normalize to OPT.
+
+use crate::algo::{Akpc, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
+use crate::config::AkpcConfig;
+use crate::runtime::CrmEngine;
+use crate::sim::{self, SimReport};
+use crate::trace::model::Trace;
+
+/// Which CRM engine AKPC variants use in experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineChoice {
+    Native,
+    Xla,
+}
+
+impl EngineChoice {
+    fn to_engine(self) -> CrmEngine {
+        match self {
+            EngineChoice::Native => CrmEngine::Native,
+            EngineChoice::Xla => CrmEngine::Xla,
+        }
+    }
+}
+
+/// The policies of Fig. 5 (superset used by all sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyChoice {
+    NoPacking,
+    DpGreedy,
+    PackCache,
+    AkpcNoCsNoAcm,
+    AkpcNoAcm,
+    Akpc,
+    Opt,
+}
+
+impl PolicyChoice {
+    pub const FIG5: &'static [PolicyChoice] = &[
+        PolicyChoice::NoPacking,
+        PolicyChoice::DpGreedy,
+        PolicyChoice::PackCache,
+        PolicyChoice::AkpcNoCsNoAcm,
+        PolicyChoice::Akpc,
+        PolicyChoice::Opt,
+    ];
+
+    pub const SWEEP: &'static [PolicyChoice] = &[
+        PolicyChoice::NoPacking,
+        PolicyChoice::PackCache,
+        PolicyChoice::Akpc,
+        PolicyChoice::Opt,
+    ];
+
+    pub fn build(
+        self,
+        cfg: &AkpcConfig,
+        engine: EngineChoice,
+    ) -> Box<dyn CachePolicy> {
+        match self {
+            PolicyChoice::NoPacking => Box::new(NoPacking::new(cfg)),
+            PolicyChoice::DpGreedy => Box::new(DpGreedy::new(cfg)),
+            PolicyChoice::PackCache => Box::new(PackCache2::new(cfg)),
+            PolicyChoice::AkpcNoCsNoAcm => Box::new(Akpc::with_builder(
+                &cfg.without_cs_acm(),
+                engine.to_engine().builder(&cfg.artifacts_dir),
+            )),
+            PolicyChoice::AkpcNoAcm => Box::new(Akpc::with_builder(
+                &cfg.without_acm(),
+                engine.to_engine().builder(&cfg.artifacts_dir),
+            )),
+            PolicyChoice::Akpc => Box::new(Akpc::with_builder(
+                cfg,
+                engine.to_engine().builder(&cfg.artifacts_dir),
+            )),
+            PolicyChoice::Opt => Box::new(Opt::new(cfg)),
+        }
+    }
+}
+
+/// Run a set of policies over one trace; returns reports in input order.
+pub fn run_policy_set(
+    cfg: &AkpcConfig,
+    trace: &Trace,
+    policies: &[PolicyChoice],
+    engine: EngineChoice,
+) -> Vec<SimReport> {
+    policies
+        .iter()
+        .map(|&p| {
+            let mut policy = p.build(cfg, engine);
+            sim::run(policy.as_mut(), trace, cfg.batch_size)
+        })
+        .collect()
+}
+
+/// Costs normalized to the OPT entry (paper's "relative total cost").
+#[derive(Debug, Clone)]
+pub struct RelativeCosts {
+    /// `(policy name, relative total, relative C_T, relative C_P)`.
+    pub rows: Vec<(String, f64, f64, f64)>,
+    pub opt_total: f64,
+}
+
+impl RelativeCosts {
+    /// Normalize a report set by its OPT member (falls back to the
+    /// minimum total if OPT was not in the set).
+    pub fn from_reports(reports: &[SimReport]) -> Self {
+        let opt_total = reports
+            .iter()
+            .find(|r| r.name == "OPT")
+            .map(|r| r.total())
+            .unwrap_or_else(|| {
+                reports
+                    .iter()
+                    .map(|r| r.total())
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .max(1e-12);
+        let rows = reports
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    r.total() / opt_total,
+                    r.ledger.c_t / opt_total,
+                    r.ledger.c_p / opt_total,
+                )
+            })
+            .collect();
+        Self { rows, opt_total }
+    }
+
+    pub fn of(&self, name: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(n, ..)| n == name)
+            .map(|&(_, t, ..)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::netflix_like;
+
+    #[test]
+    fn policy_set_runs_and_normalizes() {
+        let cfg = AkpcConfig {
+            n_items: 40,
+            n_servers: 300,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        };
+        let trace = netflix_like(40, 300, 5_000, 1);
+        let reports =
+            run_policy_set(&cfg, &trace, PolicyChoice::FIG5, EngineChoice::Native);
+        assert_eq!(reports.len(), PolicyChoice::FIG5.len());
+        let rel = RelativeCosts::from_reports(&reports);
+        assert!((rel.of("OPT").unwrap() - 1.0).abs() < 1e-9);
+        assert!(rel.of("NoPacking").unwrap() >= 1.0);
+        assert!(rel.of("AKPC").unwrap() >= 1.0);
+    }
+}

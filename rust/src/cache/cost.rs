@@ -1,0 +1,206 @@
+//! The paper's cost model (§III-C): caching cost `C_P` (Eq. 1-2) and
+//! transfer cost `C_T` (Eq. 3-4, Table I), with the Δt = ρ·λ/μ expiry
+//! window of Algorithm 6 line 1.
+
+use crate::config::{AkpcConfig, TransferModel};
+use crate::util::Json;
+
+/// Immutable cost parameters for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Caching cost per item per unit time (μ).
+    pub mu: f64,
+    /// Base transfer cost per item (λ).
+    pub lambda: f64,
+    /// Packed-transfer discount α ∈ [0, 1].
+    pub alpha: f64,
+    /// Δt = ρ·λ/μ.
+    pub delta_t: f64,
+    /// Which packed-transfer formula to apply (DESIGN.md §6).
+    pub transfer_model: TransferModel,
+}
+
+impl CostModel {
+    pub fn from_config(cfg: &AkpcConfig) -> Self {
+        Self {
+            mu: cfg.mu,
+            lambda: cfg.lambda,
+            alpha: cfg.alpha,
+            delta_t: cfg.delta_t(),
+            transfer_model: cfg.transfer_model,
+        }
+    }
+
+    /// Transfer cost of one *packed* group of `size` items (Table I):
+    /// `λ` for a singleton, `(1 + (size−1)·α)·λ` for a pack.
+    #[inline]
+    pub fn transfer_packed(&self, size: u32) -> f64 {
+        if size <= 1 {
+            self.lambda
+        } else {
+            match self.transfer_model {
+                TransferModel::Eq3 => (1.0 + (size as f64 - 1.0) * self.alpha) * self.lambda,
+                // Paper Alg. 5 line 12 literal variant (kept for the
+                // ablation; inconsistent with Table I — see DESIGN.md §6).
+                TransferModel::Alg5Line12 => self.alpha * self.mu * size as f64,
+            }
+        }
+    }
+
+    /// Transfer cost of `k` items sent individually (Table I, unpacked).
+    #[inline]
+    pub fn transfer_unpacked(&self, k: u32) -> f64 {
+        k as f64 * self.lambda
+    }
+
+    /// Caching cost of holding `units` item-slots for `duration` time.
+    #[inline]
+    pub fn caching(&self, units: u32, duration: f64) -> f64 {
+        units as f64 * self.mu * duration.max(0.0)
+    }
+}
+
+/// Mutable cost/state counters accumulated over a run (Eq. 2, 4, 5 plus
+/// operational statistics reported by the harness).
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    /// Total caching cost C_P.
+    pub c_p: f64,
+    /// Total transfer cost C_T.
+    pub c_t: f64,
+    /// Packed-group transfers performed.
+    pub transfers: u64,
+    /// Requests fully served from local cache.
+    pub full_hits: u64,
+    /// Requests that triggered at least one transfer.
+    pub misses: u64,
+    /// Total requests handled.
+    pub requests: u64,
+    /// Total items delivered (incl. unrequested clique members, Obs. 4).
+    pub items_delivered: u64,
+    /// Items delivered that were actually requested.
+    pub items_requested: u64,
+}
+
+impl CostLedger {
+    /// Total cost C = C_T + C_P (Eq. 5).
+    pub fn total(&self) -> f64 {
+        self.c_p + self.c_t
+    }
+
+    /// Fraction of delivered items that were requested (packing utility).
+    pub fn delivery_efficiency(&self) -> f64 {
+        if self.items_delivered == 0 {
+            1.0
+        } else {
+            self.items_requested as f64 / self.items_delivered as f64
+        }
+    }
+
+    /// Request-level hit rate.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.full_hits as f64 / self.requests as f64
+        }
+    }
+
+    /// JSON export.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("c_p", Json::Num(self.c_p)),
+            ("c_t", Json::Num(self.c_t)),
+            ("total", Json::Num(self.total())),
+            ("transfers", Json::Num(self.transfers as f64)),
+            ("full_hits", Json::Num(self.full_hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("items_delivered", Json::Num(self.items_delivered as f64)),
+            ("items_requested", Json::Num(self.items_requested as f64)),
+            ("hit_rate", Json::Num(self.hit_rate())),
+            (
+                "delivery_efficiency",
+                Json::Num(self.delivery_efficiency()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(alpha: f64) -> CostModel {
+        CostModel {
+            mu: 1.0,
+            lambda: 1.0,
+            alpha,
+            delta_t: 1.0,
+            transfer_model: TransferModel::Eq3,
+        }
+    }
+
+    /// Table I rows, λ = μ = Δt = 1.
+    #[test]
+    fn table1_transfer_costs() {
+        let m = model(0.8);
+        assert_eq!(m.transfer_packed(1), 1.0); // 1 packed = λ
+        assert_eq!(m.transfer_unpacked(1), 1.0); // 1 unpacked = λ
+        assert!((m.transfer_packed(2) - 1.8).abs() < 1e-12); // (1+α)λ
+        assert_eq!(m.transfer_unpacked(2), 2.0); // 2λ
+        let k = 5;
+        assert!((m.transfer_packed(k) - (1.0 + 4.0 * 0.8)).abs() < 1e-12);
+        assert_eq!(m.transfer_unpacked(k), 5.0);
+    }
+
+    #[test]
+    fn table1_caching_costs() {
+        let m = model(0.8);
+        assert_eq!(m.caching(1, 1.0), 1.0); // μ·Δt
+        assert_eq!(m.caching(5, 1.0), 5.0); // |D_i|·μ·Δt
+        assert_eq!(m.caching(2, 0.5), 1.0);
+        assert_eq!(m.caching(2, -1.0), 0.0); // clamped
+    }
+
+    #[test]
+    fn packed_cheaper_than_unpacked_iff_alpha_below_one() {
+        for k in 2..10u32 {
+            let m = model(0.8);
+            assert!(m.transfer_packed(k) < m.transfer_unpacked(k));
+            let m1 = model(1.0);
+            assert!((m1.transfer_packed(k) - m1.transfer_unpacked(k)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn alg5_variant_formula() {
+        let m = CostModel {
+            transfer_model: TransferModel::Alg5Line12,
+            ..model(0.8)
+        };
+        assert!((m.transfer_packed(5) - 0.8 * 5.0).abs() < 1e-12);
+        assert_eq!(m.transfer_packed(1), 1.0); // singleton still λ
+    }
+
+    #[test]
+    fn ledger_total_and_rates() {
+        let mut l = CostLedger::default();
+        l.c_p = 2.0;
+        l.c_t = 3.0;
+        l.requests = 10;
+        l.full_hits = 4;
+        l.items_delivered = 20;
+        l.items_requested = 10;
+        assert_eq!(l.total(), 5.0);
+        assert_eq!(l.hit_rate(), 0.4);
+        assert_eq!(l.delivery_efficiency(), 0.5);
+    }
+
+    #[test]
+    fn ledger_empty_rates() {
+        let l = CostLedger::default();
+        assert_eq!(l.hit_rate(), 0.0);
+        assert_eq!(l.delivery_efficiency(), 1.0);
+    }
+}

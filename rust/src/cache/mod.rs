@@ -1,0 +1,8 @@
+//! Per-ESS cache state, expiry handling (Algorithm 6) and the cost model
+//! (paper §III-C, Table I, Eqs. 1-5).
+
+pub mod cost;
+pub mod state;
+
+pub use cost::{CostLedger, CostModel};
+pub use state::CacheState;

@@ -1,0 +1,304 @@
+//! Distributed cache state: which packed copies live on which ESS, their
+//! expiries `E[c][j]`, the global alive-copy counters `G[c]`, and the
+//! expiry event loop of Algorithm 6.
+//!
+//! Copies are keyed by the *content hash* of the packed clique
+//! ([`crate::util::clique_key`]), so copies of a clique survive window
+//! ticks in which the clique set is regenerated with identical content,
+//! and stale packings age out naturally.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Expiry event: `(time, key, server)` with total order on time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ExpEvent {
+    time: f64,
+    key: u64,
+    server: u32,
+}
+
+impl Eq for ExpEvent {}
+
+impl PartialOrd for ExpEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ExpEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.key.cmp(&other.key))
+            .then(self.server.cmp(&other.server))
+    }
+}
+
+/// Cache bookkeeping across all ESSs for one policy run.
+#[derive(Debug, Default)]
+pub struct CacheState {
+    /// `E[c][j]`: expiry of clique copy `c` on server `j` (absent = not
+    /// cached).
+    expiry: HashMap<(u64, u32), f64>,
+    /// `G[c]`: number of alive copies of clique `c` across all ESSs.
+    copies: HashMap<u64, u32>,
+    /// Packed size |c| per key (for retention bookkeeping / stats).
+    sizes: HashMap<u64, u32>,
+    /// Pending expiry events (lazy deletion: stale events are re-checked
+    /// against `expiry` when popped).
+    events: BinaryHeap<Reverse<ExpEvent>>,
+    /// Total forced retentions performed (Alg. 6 line 3) — statistic.
+    pub retentions: u64,
+    /// Accumulated item·time units of forced retention (size × Δt per
+    /// retention event). Algorithm 6 shows no charge, but storage rent is
+    /// real (§III-C: "cost paid by the CDN to ESSs for renting storage");
+    /// the policy core bills this at μ per unit (DESIGN.md §6).
+    pub retained_units: f64,
+}
+
+impl CacheState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Is copy `key` alive on `server` at time `now`?
+    #[inline]
+    pub fn is_cached(&self, key: u64, server: u32, now: f64) -> bool {
+        self.expiry
+            .get(&(key, server))
+            .is_some_and(|&e| e > now)
+    }
+
+    /// Current expiry `E[c][j]`, if the copy exists.
+    #[inline]
+    pub fn expiry_of(&self, key: u64, server: u32) -> Option<f64> {
+        self.expiry.get(&(key, server)).copied()
+    }
+
+    /// `G[c]`.
+    #[inline]
+    pub fn copy_count(&self, key: u64) -> u32 {
+        self.copies.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Number of live (key, server) entries.
+    pub fn live_entries(&self) -> usize {
+        self.expiry.len()
+    }
+
+    /// Insert a fresh copy on `server` expiring at `expires`
+    /// (Algorithm 1 line 5 / Algorithm 5 lines 7-8: `G[c]+=1`).
+    pub fn insert(&mut self, key: u64, size: u32, server: u32, expires: f64) {
+        let prev = self.expiry.insert((key, server), expires);
+        debug_assert!(prev.is_none(), "insert over a live copy — use extend");
+        *self.copies.entry(key).or_insert(0) += 1;
+        self.sizes.insert(key, size);
+        self.events.push(Reverse(ExpEvent {
+            time: expires,
+            key,
+            server,
+        }));
+    }
+
+    /// Extend a live copy's expiry to `expires` (Algorithm 5 line 6).
+    /// Returns the previous expiry.
+    pub fn extend(&mut self, key: u64, server: u32, expires: f64) -> f64 {
+        let e = self
+            .expiry
+            .get_mut(&(key, server))
+            .expect("extend of a non-cached copy");
+        let prev = *e;
+        if expires > prev {
+            *e = expires;
+            self.events.push(Reverse(ExpEvent {
+                time: expires,
+                key,
+                server,
+            }));
+        }
+        prev
+    }
+
+    /// Process all expiry events up to `now` (Algorithm 6).
+    ///
+    /// `current_keys` is the key set of `Clique(W)`: the last alive copy of
+    /// a *current* clique is retained (its expiry extended by `delta_t`)
+    /// instead of dropped, so the packed copy never disappears from every
+    /// ESS while it is still being served (Observation 3).
+    pub fn process_expirations(
+        &mut self,
+        now: f64,
+        current_keys: &HashSet<u64>,
+        delta_t: f64,
+    ) {
+        while let Some(&Reverse(ev)) = self.events.peek() {
+            if ev.time > now {
+                break;
+            }
+            self.events.pop();
+            let Some(&stored) = self.expiry.get(&(ev.key, ev.server)) else {
+                continue; // already dropped
+            };
+            if stored > ev.time {
+                continue; // stale event; a newer one is queued
+            }
+            // The copy genuinely expires now.
+            let g = self.copy_count(ev.key);
+            if g == 1 && current_keys.contains(&ev.key) {
+                // Alg. 6 line 3: last copy of a live clique — extend.
+                let new_exp = ev.time + delta_t;
+                *self.expiry.get_mut(&(ev.key, ev.server)).unwrap() = new_exp;
+                self.events.push(Reverse(ExpEvent {
+                    time: new_exp,
+                    key: ev.key,
+                    server: ev.server,
+                }));
+                self.retentions += 1;
+                self.retained_units +=
+                    self.sizes.get(&ev.key).copied().unwrap_or(1) as f64 * delta_t;
+            } else {
+                // Alg. 6 lines 5-6: drop the copy.
+                self.expiry.remove(&(ev.key, ev.server));
+                match self.copies.get_mut(&ev.key) {
+                    Some(c) if *c > 1 => *c -= 1,
+                    _ => {
+                        self.copies.remove(&ev.key);
+                        self.sizes.remove(&ev.key);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consistency check for tests: `G[c]` equals the number of live
+    /// `(c, ·)` entries.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        let mut counts: HashMap<u64, u32> = HashMap::new();
+        for &(key, _server) in self.expiry.keys() {
+            *counts.entry(key).or_insert(0) += 1;
+        }
+        for (key, &g) in &self.copies {
+            anyhow::ensure!(
+                counts.get(key) == Some(&g),
+                "G[{key}]={g} but {} live entries",
+                counts.get(key).copied().unwrap_or(0)
+            );
+        }
+        anyhow::ensure!(
+            counts.len() == self.copies.len(),
+            "live entries without G counter"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(v: &[u64]) -> HashSet<u64> {
+        v.iter().copied().collect()
+    }
+
+    #[test]
+    fn insert_and_query() {
+        let mut c = CacheState::new();
+        c.insert(7, 3, 0, 1.0);
+        assert!(c.is_cached(7, 0, 0.5));
+        assert!(!c.is_cached(7, 0, 1.0)); // expiry is exclusive
+        assert!(!c.is_cached(7, 1, 0.5)); // other server
+        assert_eq!(c.copy_count(7), 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_pushes_expiry() {
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 1.0);
+        let prev = c.extend(7, 0, 1.9);
+        assert_eq!(prev, 1.0);
+        assert!(c.is_cached(7, 0, 1.5));
+        // Old event at t=1.0 must be ignored (stale).
+        c.process_expirations(1.0, &keys(&[]), 1.0);
+        assert!(c.is_cached(7, 0, 1.5));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expiry_drops_copy_when_not_last() {
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 1.0);
+        c.insert(7, 2, 1, 2.0);
+        assert_eq!(c.copy_count(7), 2);
+        // Paper's example: expires at s_0 while G=2 -> dropped, G=1.
+        c.process_expirations(1.0, &keys(&[7]), 1.0);
+        assert!(!c.is_cached(7, 0, 1.0));
+        assert_eq!(c.copy_count(7), 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn last_copy_of_current_clique_retained() {
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 1.0);
+        c.process_expirations(1.5, &keys(&[7]), 1.0);
+        // Retained and extended to 2.0 (= 1.0 + Δt).
+        assert!(c.is_cached(7, 0, 1.9));
+        assert_eq!(c.copy_count(7), 1);
+        assert_eq!(c.retentions, 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn last_copy_of_stale_clique_dropped() {
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 1.0);
+        // 7 is no longer in Clique(W).
+        c.process_expirations(1.5, &keys(&[]), 1.0);
+        assert!(!c.is_cached(7, 0, 1.2));
+        assert_eq!(c.copy_count(7), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retention_chains_until_clique_retired() {
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 1.0);
+        c.process_expirations(1.0, &keys(&[7]), 1.0); // retained to 2.0
+        c.process_expirations(2.0, &keys(&[7]), 1.0); // retained to 3.0
+        assert_eq!(c.retentions, 2);
+        assert!(c.is_cached(7, 0, 2.5));
+        c.process_expirations(3.0, &keys(&[]), 1.0); // retired -> drop
+        assert_eq!(c.copy_count(7), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn multi_server_multi_key() {
+        let mut c = CacheState::new();
+        for s in 0..5u32 {
+            c.insert(100, 3, s, 1.0 + s as f64);
+        }
+        c.insert(200, 1, 0, 10.0);
+        c.process_expirations(3.0, &keys(&[100, 200]), 1.0);
+        // Servers 0,1,2 expired (times 1,2,3), two copies remain.
+        assert_eq!(c.copy_count(100), 2);
+        assert_eq!(c.copy_count(200), 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn observation1_no_copy_outlives_dt_when_g_above_1() {
+        // With G>1 no retention happens: every copy dies at its expiry.
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 1.0);
+        c.insert(7, 2, 1, 1.4);
+        c.process_expirations(5.0, &keys(&[7]), 1.0);
+        // Last copy (server 1) was retained at 1.4 (G had dropped to 1).
+        assert_eq!(c.copy_count(7), 1);
+        assert!(c.expiry_of(7, 1).unwrap() > 1.4);
+        assert!(c.expiry_of(7, 0).is_none());
+    }
+}

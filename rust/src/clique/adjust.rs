@@ -1,0 +1,204 @@
+//! Adjust Previous Cliques (Algorithm 4) — incremental clique maintenance
+//! from the edge diff ΔE between consecutive binary CRMs.
+//!
+//! * A **removed** edge `(u, v)` with both endpoints in the same clique
+//!   invalidates it: the clique is split into two along that edge (members
+//!   assigned to the side they are more strongly connected to — same
+//!   affinity rule as clique splitting).
+//! * An **added** edge with unassigned endpoints leaves them unassigned
+//!   here; the `form_new` step of the surrounding Algorithm 3 pipeline
+//!   greedily grows *maximal* cliques over all unassigned items (forming
+//!   the pair here would fragment triangles: {u,v} would lock u and v away
+//!   from a better 3-clique the same window revealed — Alg. 4 line 9's
+//!   "update if any new cliques are formed" is realized by that step).
+//! * Items that left the kept set (all their edges removed) degrade to
+//!   unassigned singletons.
+
+use super::CliqueSet;
+use crate::crm::{CrmWindow, EdgeDiff};
+
+impl CliqueSet {
+    /// Apply Algorithm 4 in place.
+    pub fn adjust(&mut self, crm: &CrmWindow, delta: &EdgeDiff) {
+        for &(u, v) in &delta.removed {
+            let (cu, cv) = (self.clique_id_of(u), self.clique_id_of(v));
+            if let (Some(cu), Some(cv)) = (cu, cv) {
+                if cu == cv {
+                    let items = self.remove(cu).expect("live slot");
+                    let (a, b) = split_on_edge(&items, u, v, crm);
+                    if a.len() >= 2 {
+                        self.insert(a);
+                    }
+                    if b.len() >= 2 {
+                        self.insert(b);
+                    }
+                    // Size-1 leftovers become unassigned (served as
+                    // singleton cliques by the request path).
+                }
+            }
+        }
+        // Drop members that fell out of the kept set entirely: every clique
+        // member must still be a kept item with at least one intra-clique
+        // edge; otherwise the clique's co-utilization claim is stale.
+        let stale: Vec<usize> = self
+            .iter_ids()
+            .filter(|(_, c)| {
+                c.iter().any(|&d| {
+                    !crm.contains(d)
+                        || !c.iter().any(|&o| o != d && crm.edge(d, o))
+                })
+            })
+            .map(|(id, _)| id)
+            .collect();
+        for id in stale {
+            let items = self.remove(id).expect("live");
+            // Re-insert the still-connected core if it remains a clique.
+            let core: Vec<u32> = items
+                .iter()
+                .copied()
+                .filter(|&d| {
+                    crm.contains(d)
+                        && items.iter().any(|&o| o != d && crm.edge(d, o))
+                })
+                .collect();
+            if core.len() >= 2 {
+                self.insert(core);
+            }
+        }
+
+        // Added edges: nothing to do here — endpoints that are unassigned
+        // are picked up by `form_new` right after (see module docs).
+        let _ = &delta.added;
+    }
+}
+
+/// Split `items` into the `u`-side and `v`-side after edge `(u, v)`
+/// vanished (Algorithm 4 line 7).
+fn split_on_edge(items: &[u32], u: u32, v: u32, crm: &CrmWindow) -> (Vec<u32>, Vec<u32>) {
+    let mut side_u = vec![u];
+    let mut side_v = vec![v];
+    for &d in items {
+        if d == u || d == v {
+            continue;
+        }
+        let wu: f32 = side_u.iter().map(|&m| crm.weight(d, m)).sum();
+        let wv: f32 = side_v.iter().map(|&m| crm.weight(d, m)).sum();
+        if wu > wv || (wu == wv && side_u.len() <= side_v.len()) {
+            side_u.push(d);
+        } else {
+            side_v.push(d);
+        }
+    }
+    side_u.sort_unstable();
+    side_v.sort_unstable();
+    (side_u, side_v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crm::diff_windows;
+    use crate::crm::native::build_native;
+    use crate::trace::model::Request;
+
+    fn req(items: &[u32]) -> Request {
+        Request::new(items.to_vec(), 0, 0.0)
+    }
+
+    fn crm_of(groups: &[&[u32]]) -> CrmWindow {
+        let mut reqs = Vec::new();
+        for g in groups {
+            for _ in 0..10 {
+                reqs.push(req(g));
+            }
+        }
+        reqs.push(req(&[14, 15])); // spread
+        build_native(&reqs, 16, 0.1, 1.0)
+    }
+
+    #[test]
+    fn removed_edge_splits_clique() {
+        let prev_crm = crm_of(&[&[0, 1, 2, 3]]);
+        // Next window: {0,1} and {2,3} separate.
+        let curr_crm = crm_of(&[&[0, 1], &[2, 3]]);
+        let delta = diff_windows(&prev_crm, &curr_crm);
+        assert!(!delta.removed.is_empty());
+
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1, 2, 3]);
+        set.adjust(&curr_crm, &delta);
+        set.check_invariants().unwrap();
+        // After splitting, no clique may span the broken edge set.
+        assert_ne!(set.clique_id_of(0), set.clique_id_of(2));
+    }
+
+    #[test]
+    fn added_edge_forms_pair_via_form_new() {
+        let prev_crm = crm_of(&[&[0, 1]]);
+        let curr_crm = crm_of(&[&[0, 1], &[4, 5]]);
+        let delta = diff_windows(&prev_crm, &curr_crm);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1]);
+        set.adjust(&curr_crm, &delta);
+        // adjust leaves new endpoints unassigned; the pipeline's form_new
+        // step picks them up.
+        assert_eq!(set.clique_of(4), None);
+        set.form_new(&curr_crm, None);
+        set.check_invariants().unwrap();
+        assert_eq!(set.clique_of(4).unwrap(), &[4, 5]);
+        assert_eq!(set.clique_of(0).unwrap(), &[0, 1]);
+    }
+
+    #[test]
+    fn added_edge_into_existing_clique_no_double_assign() {
+        let prev_crm = crm_of(&[&[0, 1]]);
+        let curr_crm = crm_of(&[&[0, 1], &[1, 2]]);
+        let delta = diff_windows(&prev_crm, &curr_crm);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1]);
+        set.adjust(&curr_crm, &delta);
+        set.check_invariants().unwrap();
+        // 1 stays in its clique; 2 unassigned (form_new may pick it up
+        // later with other unassigned items, but not steal 1).
+        assert_eq!(set.clique_of(1).unwrap(), &[0, 1]);
+    }
+
+    #[test]
+    fn vanished_item_dropped_from_clique() {
+        let prev_crm = crm_of(&[&[0, 1, 2]]);
+        // Item 2 disappears from the workload entirely.
+        let curr_crm = crm_of(&[&[0, 1]]);
+        let delta = diff_windows(&prev_crm, &curr_crm);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1, 2]);
+        set.adjust(&curr_crm, &delta);
+        set.check_invariants().unwrap();
+        assert_eq!(set.clique_of(0).unwrap(), &[0, 1]);
+        assert_eq!(set.clique_of(2), None);
+    }
+
+    #[test]
+    fn unrelated_cliques_untouched() {
+        let prev_crm = crm_of(&[&[0, 1], &[2, 3]]);
+        let curr_crm = crm_of(&[&[0, 1], &[2, 3], &[4, 5]]);
+        let delta = diff_windows(&prev_crm, &curr_crm);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1]);
+        set.insert(vec![2, 3]);
+        set.adjust(&curr_crm, &delta);
+        set.check_invariants().unwrap();
+        assert_eq!(set.clique_of(0).unwrap(), &[0, 1]);
+        assert_eq!(set.clique_of(2).unwrap(), &[2, 3]);
+    }
+
+    #[test]
+    fn empty_delta_is_noop() {
+        let crm = crm_of(&[&[0, 1]]);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1]);
+        let before: Vec<Vec<u32>> = set.iter().map(|c| c.to_vec()).collect();
+        set.adjust(&crm, &EdgeDiff::default());
+        let after: Vec<Vec<u32>> = set.iter().map(|c| c.to_vec()).collect();
+        assert_eq!(before, after);
+    }
+}

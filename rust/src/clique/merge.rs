@@ -1,0 +1,199 @@
+//! Approximate Clique Merging (Algorithm 3, lines 4-10).
+//!
+//! Two cliques `c1, c2` merge into `U = c1 ∪ c2` when
+//!
+//! * `|U| = ω` (the target size — merging reconstructs full-size packs), and
+//! * the edge density of the subgraph induced by `U` in `CRM_bin(W)` is at
+//!   least γ: `|E_U| / (ω·(ω−1)/2) ≥ γ`.
+//!
+//! Candidate pairs are evaluated in descending density order so the best
+//! near-cliques merge first; each clique merges at most once per window
+//! (a merged clique has size ω and cannot satisfy `|U| = ω` again).
+
+use super::CliqueSet;
+use crate::crm::CrmWindow;
+
+/// Edge density of the union of two cliques in the binary CRM.
+pub fn union_density(c1: &[u32], c2: &[u32], crm: &CrmWindow) -> f32 {
+    let u: Vec<u32> = c1.iter().chain(c2.iter()).copied().collect();
+    let n = u.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut edges = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if crm.edge(u[i], u[j]) {
+                edges += 1;
+            }
+        }
+    }
+    let max = n * (n - 1) / 2;
+    edges as f32 / max as f32
+}
+
+impl CliqueSet {
+    /// Run one approximate-merging pass.
+    pub fn merge_approx(&mut self, crm: &CrmWindow, omega: u32, gamma: f32) {
+        let omega = omega as usize;
+        // Collect candidate pairs (|c1|+|c2| == ω since cliques are
+        // disjoint) with their density.
+        let ids: Vec<(usize, usize)> = {
+            let live: Vec<(usize, &[u32])> = self.iter_ids().collect();
+            let mut pairs = Vec::new();
+            for a in 0..live.len() {
+                for b in (a + 1)..live.len() {
+                    let (ia, ca) = live[a];
+                    let (ib, cb) = live[b];
+                    if ca.len() + cb.len() == omega {
+                        pairs.push((ia, ib, union_density(ca, cb, crm)));
+                    }
+                }
+            }
+            pairs.retain(|&(_, _, d)| d >= gamma);
+            pairs.sort_unstable_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
+            pairs.into_iter().map(|(a, b, _)| (a, b)).collect()
+        };
+
+        let mut consumed = std::collections::HashSet::new();
+        for (a, b) in ids {
+            if consumed.contains(&a) || consumed.contains(&b) {
+                continue;
+            }
+            let ca = self.remove(a).expect("live");
+            let cb = self.remove(b).expect("live");
+            let mut u = ca;
+            u.extend(cb);
+            self.insert(u);
+            consumed.insert(a);
+            consumed.insert(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crm::native::build_native;
+    use crate::trace::model::Request;
+
+    fn req(items: &[u32]) -> Request {
+        Request::new(items.to_vec(), 0, 0.0)
+    }
+
+    /// CRM over a near-clique {0..4}: all 10 edges except (3,4).
+    fn near_clique_crm(missing: &[(u32, u32)]) -> CrmWindow {
+        let mut reqs = Vec::new();
+        for a in 0..5u32 {
+            for b in (a + 1)..5 {
+                if !missing.contains(&(a, b)) {
+                    for _ in 0..5 {
+                        reqs.push(req(&[a, b]));
+                    }
+                }
+            }
+        }
+        reqs.push(req(&[10, 11])); // normalization spread
+        build_native(&reqs, 16, 0.1, 1.0)
+    }
+
+    #[test]
+    fn density_computation() {
+        let crm = near_clique_crm(&[(3, 4)]);
+        // Union {0,1,2} ∪ {3,4}: 9 of 10 edges.
+        let d = union_density(&[0, 1, 2], &[3, 4], &crm);
+        assert!((d - 0.9).abs() < 1e-6, "{d}");
+    }
+
+    #[test]
+    fn merges_near_clique_at_gamma_085() {
+        let crm = near_clique_crm(&[(3, 4)]);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1, 2]);
+        set.insert(vec![3, 4]);
+        set.merge_approx(&crm, 5, 0.85);
+        set.check_invariants().unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.clique_of(0).unwrap(), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn no_merge_below_gamma() {
+        // Remove 3 edges -> density 0.7 < 0.85.
+        let crm = near_clique_crm(&[(3, 4), (0, 3), (1, 4)]);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1, 2]);
+        set.insert(vec![3, 4]);
+        set.merge_approx(&crm, 5, 0.85);
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn no_merge_when_union_size_differs_from_omega() {
+        let crm = near_clique_crm(&[]);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1]);
+        set.insert(vec![2, 3]);
+        // union = 4 != ω=5 -> no merge even at density 1.
+        set.merge_approx(&crm, 5, 0.5);
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn each_clique_merges_at_most_once() {
+        // Three cliques: {0,1,2}, {3,4}, {5,6}: both small ones are
+        // mergeable with {0,1,2}, but only one merge may happen.
+        let mut reqs = Vec::new();
+        for a in 0..7u32 {
+            for b in (a + 1)..7 {
+                for _ in 0..5 {
+                    reqs.push(req(&[a, b]));
+                }
+            }
+        }
+        reqs.push(req(&[10, 11]));
+        let crm = build_native(&reqs, 16, 0.1, 1.0);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1, 2]);
+        set.insert(vec![3, 4]);
+        set.insert(vec![5, 6]);
+        set.merge_approx(&crm, 5, 0.85);
+        set.check_invariants().unwrap();
+        assert_eq!(set.len(), 2);
+        let sizes: Vec<usize> = {
+            let mut s: Vec<usize> = set.iter().map(|c| c.len()).collect();
+            s.sort_unstable();
+            s
+        };
+        assert_eq!(sizes, vec![2, 5]);
+    }
+
+    #[test]
+    fn best_density_pair_wins() {
+        // {0,1,2} can merge with {3,4} (density 1.0) or {5,6} (lower).
+        let mut reqs = Vec::new();
+        let full: &[u32] = &[0, 1, 2, 3, 4];
+        for (i, &a) in full.iter().enumerate() {
+            for &b in &full[i + 1..] {
+                for _ in 0..5 {
+                    reqs.push(req(&[a, b]));
+                }
+            }
+        }
+        // {5,6} weakly tied to {0,1,2}: only 2 cross edges.
+        for _ in 0..5 {
+            reqs.push(req(&[5, 6]));
+            reqs.push(req(&[0, 5]));
+            reqs.push(req(&[1, 6]));
+        }
+        let crm = build_native(&reqs, 16, 0.1, 1.0);
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1, 2]);
+        set.insert(vec![3, 4]);
+        set.insert(vec![5, 6]);
+        set.merge_approx(&crm, 5, 0.5);
+        // {0,1,2} must have merged with {3,4}, not {5,6}.
+        assert_eq!(set.clique_of(0).unwrap(), &[0, 1, 2, 3, 4]);
+        assert_eq!(set.clique_of(5).unwrap(), &[5, 6]);
+    }
+}

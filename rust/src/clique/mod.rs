@@ -1,0 +1,360 @@
+//! Disjoint clique construction and maintenance — Algorithms 3 & 4.
+//!
+//! [`CliqueSet`] holds the disjoint set `Clique(W)` of co-access groups.
+//! The per-window update (Algorithm 3) is:
+//!
+//! 1. [`adjust`](CliqueSet::adjust) previous cliques by the edge diff ΔE
+//!    (Algorithm 4) — reuse instead of recompute;
+//! 2. [`form_new`](CliqueSet::form_new): greedily grow cliques over items
+//!    not yet assigned (covers both the cold start and edges added between
+//!    previously unassigned items);
+//! 3. [`split_oversized`](CliqueSet::split_oversized): recursively split
+//!    cliques larger than ω along the weakest co-utilization edges;
+//! 4. [`merge_approx`](CliqueSet::merge_approx): approximate clique
+//!    merging — combine `c1, c2` when `|c1 ∪ c2| = ω` and the induced edge
+//!    density is ≥ γ.
+
+pub mod adjust;
+pub mod merge;
+pub mod split;
+
+use std::collections::HashMap;
+
+use crate::crm::{CrmWindow, EdgeDiff};
+
+/// A disjoint set of cliques over item ids.
+///
+/// Slots may be vacated (`None`) by merges/removals; `item_to_clique`
+/// always maps every assigned item to its live slot.
+#[derive(Debug, Clone, Default)]
+pub struct CliqueSet {
+    slots: Vec<Option<Vec<u32>>>,
+    item_to_clique: HashMap<u32, usize>,
+}
+
+impl CliqueSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Full Algorithm 3 pipeline for one window.
+    ///
+    /// `prev` is `Clique(W-1)` (empty on cold start), `delta` the edge diff
+    /// between the previous and current binary CRMs. Flags gate the CS/ACM
+    /// modules for the paper's ablation variants.
+    pub fn generate(
+        prev: &CliqueSet,
+        crm: &CrmWindow,
+        delta: &EdgeDiff,
+        omega: u32,
+        gamma: f32,
+        clique_splitting: bool,
+        approx_merging: bool,
+    ) -> CliqueSet {
+        let mut set = prev.clone();
+        set.adjust(crm, delta);
+        set.form_new(crm, if clique_splitting { Some(omega) } else { None });
+        if clique_splitting {
+            set.split_oversized(crm, omega);
+        }
+        if approx_merging {
+            set.merge_approx(crm, omega, gamma);
+        }
+        set.compact();
+        set
+    }
+
+    /// Insert a clique (sorted, deduped). Panics in debug if any item is
+    /// already assigned — cliques must stay disjoint.
+    pub fn insert(&mut self, mut items: Vec<u32>) -> usize {
+        items.sort_unstable();
+        items.dedup();
+        debug_assert!(
+            items.iter().all(|d| !self.item_to_clique.contains_key(d)),
+            "insert violates disjointness"
+        );
+        let id = self.slots.len();
+        for &d in &items {
+            self.item_to_clique.insert(d, id);
+        }
+        self.slots.push(Some(items));
+        id
+    }
+
+    /// Remove a clique by slot id, unassigning its items.
+    pub fn remove(&mut self, id: usize) -> Option<Vec<u32>> {
+        let items = self.slots.get_mut(id)?.take()?;
+        for d in &items {
+            self.item_to_clique.remove(d);
+        }
+        Some(items)
+    }
+
+    /// The clique containing `item`, if any.
+    pub fn clique_of(&self, item: u32) -> Option<&[u32]> {
+        let id = *self.item_to_clique.get(&item)?;
+        self.slots[id].as_deref()
+    }
+
+    /// Slot id of the clique containing `item`.
+    pub fn clique_id_of(&self, item: u32) -> Option<usize> {
+        self.item_to_clique.get(&item).copied()
+    }
+
+    /// Iterate live cliques.
+    pub fn iter(&self) -> impl Iterator<Item = &[u32]> {
+        self.slots.iter().filter_map(|s| s.as_deref())
+    }
+
+    /// Iterate `(slot_id, clique)`.
+    pub fn iter_ids(&self) -> impl Iterator<Item = (usize, &[u32])> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_deref().map(|c| (i, c)))
+    }
+
+    /// Number of live cliques.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop vacated slots, renumbering ids.
+    pub fn compact(&mut self) {
+        let live: Vec<Vec<u32>> = self.slots.drain(..).flatten().collect();
+        self.item_to_clique.clear();
+        for (id, c) in live.iter().enumerate() {
+            for &d in c {
+                self.item_to_clique.insert(d, id);
+            }
+        }
+        self.slots = live.into_iter().map(Some).collect();
+    }
+
+    /// Greedily grow cliques over items of `crm` that are not yet assigned.
+    ///
+    /// Nodes are visited in descending degree order; a node joins a growing
+    /// clique only if it has a binary edge to **every** current member —
+    /// i.e., the result is a set of true cliques of the binary CRM.
+    /// `cap` bounds growth at ω when splitting is enabled (equivalent to
+    /// split-after-grow but cheaper); `None` leaves sizes unbounded (the
+    /// "w/o CS" variant).
+    pub fn form_new(&mut self, crm: &CrmWindow, cap: Option<u32>) {
+        let k = crm.k();
+        if k == 0 {
+            return;
+        }
+        // Degree per kept item, over unassigned nodes only.
+        let unassigned: Vec<u32> = crm
+            .active
+            .iter()
+            .copied()
+            .filter(|d| !self.item_to_clique.contains_key(d))
+            .collect();
+        let mut order = unassigned.clone();
+        let degree = |u: u32| -> usize {
+            unassigned.iter().filter(|&&v| crm.edge(u, v)).count()
+        };
+        let degs: HashMap<u32, usize> =
+            unassigned.iter().map(|&u| (u, degree(u))).collect();
+        order.sort_unstable_by(|&a, &b| degs[&b].cmp(&degs[&a]).then(a.cmp(&b)));
+
+        let mut assigned: std::collections::HashSet<u32> = Default::default();
+        for &seed in &order {
+            if assigned.contains(&seed) || degs[&seed] == 0 {
+                continue;
+            }
+            let mut members = vec![seed];
+            // Candidate neighbours sorted by weight to the seed, desc.
+            let mut cands: Vec<u32> = unassigned
+                .iter()
+                .copied()
+                .filter(|&v| v != seed && !assigned.contains(&v) && crm.edge(seed, v))
+                .collect();
+            cands.sort_unstable_by(|&a, &b| {
+                crm.weight(seed, b)
+                    .partial_cmp(&crm.weight(seed, a))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            for v in cands {
+                if let Some(cap) = cap {
+                    if members.len() >= cap as usize {
+                        break;
+                    }
+                }
+                if members.iter().all(|&m| crm.edge(m, v)) {
+                    members.push(v);
+                }
+            }
+            if members.len() >= 2 {
+                for &m in &members {
+                    assigned.insert(m);
+                }
+                self.insert(members);
+            }
+        }
+    }
+
+    /// Verify internal invariants (tests / proptest harness).
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for (id, c) in self.iter_ids() {
+            anyhow::ensure!(!c.is_empty(), "empty clique in slot {id}");
+            anyhow::ensure!(
+                c.windows(2).all(|w| w[0] < w[1]),
+                "clique {id} not sorted"
+            );
+            for &d in c {
+                anyhow::ensure!(seen.insert(d), "item {d} in two cliques");
+                anyhow::ensure!(
+                    self.item_to_clique.get(&d) == Some(&id),
+                    "index out of sync for item {d}"
+                );
+            }
+        }
+        anyhow::ensure!(
+            seen.len() == self.item_to_clique.len(),
+            "stale index entries"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crm::native::build_native;
+    use crate::trace::model::Request;
+
+    fn req(items: &[u32]) -> Request {
+        Request::new(items.to_vec(), 0, 0.0)
+    }
+
+    /// CRM where the given pairs each co-occur `w` times (plus one weak
+    /// global pair so normalization has spread).
+    fn crm_from(pairs: &[(u32, u32, usize)]) -> CrmWindow {
+        let mut reqs = Vec::new();
+        for &(a, b, w) in pairs {
+            for _ in 0..w {
+                reqs.push(req(&[a, b]));
+            }
+        }
+        build_native(&reqs, 32, 0.0, 1.0)
+    }
+
+    #[test]
+    fn insert_and_lookup() {
+        let mut s = CliqueSet::new();
+        let id = s.insert(vec![3, 1, 2]);
+        assert_eq!(s.clique_of(2), Some(&[1, 2, 3][..]));
+        assert_eq!(s.clique_id_of(1), Some(id));
+        assert_eq!(s.len(), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_unassigns() {
+        let mut s = CliqueSet::new();
+        let id = s.insert(vec![1, 2]);
+        assert_eq!(s.remove(id), Some(vec![1, 2]));
+        assert_eq!(s.clique_of(1), None);
+        assert_eq!(s.len(), 0);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn form_new_finds_triangle() {
+        let crm = crm_from(&[(0, 1, 5), (1, 2, 5), (0, 2, 5), (8, 9, 1)]);
+        let mut s = CliqueSet::new();
+        s.form_new(&crm, None);
+        s.check_invariants().unwrap();
+        let c = s.clique_of(0).unwrap().to_vec();
+        assert_eq!(c, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn form_new_respects_cap() {
+        // 5-clique in the CRM, cap 3.
+        let mut pairs = vec![];
+        for a in 0..5u32 {
+            for b in (a + 1)..5 {
+                pairs.push((a, b, 5));
+            }
+        }
+        pairs.push((10, 11, 1));
+        let crm = crm_from(&pairs);
+        let mut s = CliqueSet::new();
+        s.form_new(&crm, Some(3));
+        s.check_invariants().unwrap();
+        for c in s.iter() {
+            assert!(c.len() <= 3, "clique {c:?} exceeds cap");
+        }
+    }
+
+    #[test]
+    fn form_new_skips_assigned_items() {
+        let crm = crm_from(&[(0, 1, 5), (1, 2, 5), (0, 2, 5), (8, 9, 1)]);
+        let mut s = CliqueSet::new();
+        s.insert(vec![1]); // pre-assigned elsewhere
+        s.form_new(&crm, None);
+        s.check_invariants().unwrap();
+        // 1 must not be stolen; 0-2 can pair up.
+        assert_eq!(s.clique_of(1), Some(&[1][..]));
+    }
+
+    #[test]
+    fn form_new_only_true_cliques() {
+        // Path 0-1-2 (no 0-2 edge): no triangle allowed.
+        let crm = crm_from(&[(0, 1, 5), (1, 2, 5), (8, 9, 1)]);
+        let mut s = CliqueSet::new();
+        s.form_new(&crm, None);
+        s.check_invariants().unwrap();
+        for c in s.iter() {
+            for i in 0..c.len() {
+                for j in (i + 1)..c.len() {
+                    assert!(crm.edge(c[i], c[j]), "non-edge inside {c:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compact_renumbers() {
+        let mut s = CliqueSet::new();
+        let a = s.insert(vec![1, 2]);
+        let _b = s.insert(vec![3, 4]);
+        s.remove(a);
+        s.compact();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.clique_id_of(3), Some(0));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn generate_cold_start_pipeline() {
+        // Two ground-truth bundles co-accessed heavily.
+        let mut reqs = Vec::new();
+        for _ in 0..20 {
+            reqs.push(req(&[0, 1, 2]));
+            reqs.push(req(&[5, 6]));
+        }
+        let crm = build_native(&reqs, 16, 0.2, 1.0);
+        let set = CliqueSet::generate(
+            &CliqueSet::new(),
+            &crm,
+            &crate::crm::diff_windows(&CrmWindow::default(), &crm),
+            5,
+            0.85,
+            true,
+            true,
+        );
+        set.check_invariants().unwrap();
+        assert_eq!(set.clique_of(0).unwrap(), &[0, 1, 2]);
+        assert_eq!(set.clique_of(5).unwrap(), &[5, 6]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Clique Splitting (Algorithm 3, lines 2-3).
+//!
+//! Cliques larger than ω are recursively partitioned along the *weakest
+//! co-utilization edge* of `CRM_norm(W)`: pick the minimum-weight pair
+//! `(u, v)` inside the clique, seed two sub-groups with `u` and `v`, and
+//! assign every other member to the side it is more strongly connected to
+//! (total normalized weight). Recurse until every part is ≤ ω.
+
+use super::CliqueSet;
+use crate::crm::CrmWindow;
+
+impl CliqueSet {
+    /// Split every clique with `|c| > omega` (paper example: an 8-clique
+    /// with ω=5 becomes two 4-cliques).
+    pub fn split_oversized(&mut self, crm: &CrmWindow, omega: u32) {
+        let oversized: Vec<usize> = self
+            .iter_ids()
+            .filter(|(_, c)| c.len() > omega as usize)
+            .map(|(id, _)| id)
+            .collect();
+        for id in oversized {
+            let items = self.remove(id).expect("live slot");
+            for part in split_recursive(items, crm, omega as usize) {
+                self.insert(part);
+            }
+        }
+    }
+}
+
+/// Recursively split `items` until every part has `len <= omega`.
+pub fn split_recursive(items: Vec<u32>, crm: &CrmWindow, omega: usize) -> Vec<Vec<u32>> {
+    if items.len() <= omega {
+        return vec![items];
+    }
+    let (a, b) = split_once(&items, crm);
+    let mut out = split_recursive(a, crm, omega);
+    out.extend(split_recursive(b, crm, omega));
+    out
+}
+
+/// One bisection along the weakest edge.
+fn split_once(items: &[u32], crm: &CrmWindow) -> (Vec<u32>, Vec<u32>) {
+    debug_assert!(items.len() >= 2);
+    // Weakest pair (u, v).
+    let mut min_w = f32::INFINITY;
+    let (mut u, mut v) = (items[0], items[1]);
+    for i in 0..items.len() {
+        for j in (i + 1)..items.len() {
+            let w = crm.weight(items[i], items[j]);
+            if w < min_w {
+                min_w = w;
+                u = items[i];
+                v = items[j];
+            }
+        }
+    }
+    let mut side_u = vec![u];
+    let mut side_v = vec![v];
+    for &d in items {
+        if d == u || d == v {
+            continue;
+        }
+        // Affinity = total weight towards each side's current members.
+        let wu: f32 = side_u.iter().map(|&m| crm.weight(d, m)).sum();
+        let wv: f32 = side_v.iter().map(|&m| crm.weight(d, m)).sum();
+        // Balance ties towards the smaller side so splits cannot degenerate.
+        if wu > wv || (wu == wv && side_u.len() <= side_v.len()) {
+            side_u.push(d);
+        } else {
+            side_v.push(d);
+        }
+    }
+    side_u.sort_unstable();
+    side_v.sort_unstable();
+    (side_u, side_v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crm::native::build_native;
+    use crate::trace::model::Request;
+
+    fn req(items: &[u32]) -> Request {
+        Request::new(items.to_vec(), 0, 0.0)
+    }
+
+    /// Two tight 4-bundles {0..3} and {4..7}, connected by one weak link.
+    fn two_bundle_crm() -> CrmWindow {
+        let mut reqs = Vec::new();
+        for _ in 0..10 {
+            reqs.push(req(&[0, 1, 2, 3]));
+            reqs.push(req(&[4, 5, 6, 7]));
+        }
+        reqs.push(req(&[3, 4])); // weak bridge
+        build_native(&reqs, 16, 0.0, 1.0)
+    }
+
+    #[test]
+    fn splits_along_weak_bridge() {
+        let crm = two_bundle_crm();
+        let parts = split_recursive((0..8).collect(), &crm, 5);
+        assert_eq!(parts.len(), 2);
+        let mut parts = parts;
+        parts.sort();
+        assert_eq!(parts[0], vec![0, 1, 2, 3]);
+        assert_eq!(parts[1], vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn paper_example_8_into_4_4() {
+        // ω=5, clique of 8 splits into two groups of ≤5 (paper: 4+4).
+        let crm = two_bundle_crm();
+        let mut set = CliqueSet::new();
+        set.insert((0..8).collect());
+        set.split_oversized(&crm, 5);
+        set.check_invariants().unwrap();
+        assert!(set.iter().all(|c| c.len() <= 5));
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn no_split_when_within_omega() {
+        let crm = two_bundle_crm();
+        let mut set = CliqueSet::new();
+        set.insert(vec![0, 1, 2]);
+        set.split_oversized(&crm, 5);
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.clique_of(0).unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn recursion_bounds_all_parts() {
+        // 16 items in one blob with uniform weights: must end ≤ ω anyway.
+        let mut reqs = Vec::new();
+        for a in 0..16u32 {
+            for b in (a + 1)..16 {
+                reqs.push(req(&[a, b]));
+            }
+        }
+        let crm = build_native(&reqs, 16, 0.0, 1.0);
+        let parts = split_recursive((0..16).collect(), &crm, 3);
+        assert!(parts.iter().all(|p| p.len() <= 3 && !p.is_empty()));
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 16);
+    }
+
+    #[test]
+    fn split_preserves_membership() {
+        let crm = two_bundle_crm();
+        let parts = split_recursive((0..8).collect(), &crm, 5);
+        let mut all: Vec<u32> = parts.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,398 @@
+//! Configuration system.
+//!
+//! [`AkpcConfig`] carries every tunable in the paper (Table II defaults),
+//! loadable from TOML ([`toml_lite`] — the environment is offline, so the
+//! parser is in-tree) and overridable from the CLI. Experiment sweeps
+//! (Figs. 6-8) are expressed as transformations over a base config.
+
+pub mod toml_lite;
+
+use std::path::Path;
+
+/// How the caching cost is attributed (see DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChargePolicy {
+    /// Paper-faithful (Eq. 1 / Alg. 5 line 5 / Thm. 1): caching cost is
+    /// charged per *requested* item whose clique's expiry is set/extended.
+    #[default]
+    RequestedItems,
+    /// Physical accounting: charge every item of the cached clique.
+    CliqueItems,
+}
+
+impl ChargePolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ChargePolicy::RequestedItems => "requested_items",
+            ChargePolicy::CliqueItems => "clique_items",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "requested_items" => Ok(Self::RequestedItems),
+            "clique_items" => Ok(Self::CliqueItems),
+            _ => anyhow::bail!("unknown charge_policy `{s}`"),
+        }
+    }
+}
+
+/// Which packed-transfer cost formula to use (paper inconsistency,
+/// DESIGN.md §6): Eq. 3 `(1+(|c|-1)α)λ` (default) vs Alg. 5 line 12
+/// `α·μ·|c|`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransferModel {
+    #[default]
+    Eq3,
+    Alg5Line12,
+}
+
+impl TransferModel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransferModel::Eq3 => "eq3",
+            TransferModel::Alg5Line12 => "alg5_line12",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "eq3" => Ok(Self::Eq3),
+            "alg5_line12" => Ok(Self::Alg5Line12),
+            _ => anyhow::bail!("unknown transfer_model `{s}`"),
+        }
+    }
+}
+
+/// Full system configuration. Defaults reproduce the paper's Table II.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AkpcConfig {
+    // ---- cost model (Table I / II) ----
+    /// Caching cost per data item per unit time (μ).
+    pub mu: f64,
+    /// Base transfer cost per data item (λ).
+    pub lambda: f64,
+    /// Cost-ratio constant ρ; the expiry window is Δt = ρ·λ/μ (Alg. 6 l.1).
+    pub rho: f64,
+    /// Packed-transfer discount factor α ∈ [0, 1].
+    pub alpha: f64,
+
+    // ---- clique generation (Alg. 2-4) ----
+    /// Maximum (and target) clique size ω.
+    pub omega: u32,
+    /// CRM binarization threshold θ.
+    pub theta: f32,
+    /// Approximate-clique-merging density threshold γ.
+    pub gamma_approx: f32,
+    /// Fraction of most-frequent active items kept in the CRM.
+    /// Default 1.0: the paper's "top 10% of the dataset" extraction
+    /// (§V-A) happens at *dataset construction* — Table II's n = 60 is
+    /// already the post-filter universe, so the CRM covers all n items.
+    /// Lower values re-enable the filter for large-n runs (Fig. 9b).
+    pub crm_top_frac: f32,
+    /// CRM construction window: number of most-recent batches whose
+    /// requests feed Algorithm 2 (the clique-generation *period* T^CG is
+    /// one batch; the correlation *window* W spans this many batches —
+    /// Fig. 3 separates the two).
+    pub crm_window_batches: usize,
+    /// Co-utilization session gap, as a fraction of Δt: consecutive
+    /// requests at one server merge into one CRM transaction when their
+    /// inter-arrival gap is below `session_gap_frac · Δt`. Must be well
+    /// below 1.0, or independent sessions at hot servers chain into
+    /// cross-bundle transactions and poison the CRM.
+    pub session_gap_frac: f64,
+    /// Enable Clique Splitting (CS).
+    pub clique_splitting: bool,
+    /// Enable Approximate Clique Merging (ACM).
+    pub approx_merging: bool,
+
+    // ---- workload / system shape (Table II) ----
+    /// Number of edge storage servers m = |S|.
+    pub n_servers: u32,
+    /// Number of data items n = |U|.
+    pub n_items: u32,
+    /// Requests per batch; the clique-generation window T^CG is one batch.
+    pub batch_size: usize,
+    /// Maximum request size d_max.
+    pub d_max: usize,
+
+    // ---- accounting variants ----
+    pub charge_policy: ChargePolicy,
+    pub transfer_model: TransferModel,
+
+    // ---- runtime ----
+    /// Directory holding AOT artifacts (`crm_b*_n*.hlo.txt` + manifest).
+    pub artifacts_dir: String,
+    /// Prefer the XLA engine when an artifact covers `n_items`.
+    pub use_xla: bool,
+
+    /// RNG seed for everything derived from this config.
+    pub seed: u64,
+}
+
+impl Default for AkpcConfig {
+    fn default() -> Self {
+        Self {
+            mu: 1.0,
+            lambda: 1.0,
+            rho: 1.0,
+            alpha: 0.8,
+            omega: 5,
+            theta: 0.2,
+            gamma_approx: 0.85,
+            crm_top_frac: 1.0,
+            crm_window_batches: 10,
+            session_gap_frac: 0.05,
+            clique_splitting: true,
+            approx_merging: true,
+            n_servers: 600,
+            n_items: 60,
+            batch_size: 200,
+            d_max: 5,
+            charge_policy: ChargePolicy::default(),
+            transfer_model: TransferModel::default(),
+            artifacts_dir: "artifacts".to_string(),
+            use_xla: true,
+            seed: 0xAC_2025,
+        }
+    }
+}
+
+impl AkpcConfig {
+    /// The cache-expiry window Δt = ρ·λ/μ (Algorithm 6 line 1).
+    pub fn delta_t(&self) -> f64 {
+        self.rho * self.lambda / self.mu
+    }
+
+    /// Parse from TOML text; unknown keys are rejected, missing keys keep
+    /// defaults.
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
+        let map = toml_lite::parse(text)?;
+        let mut cfg = Self::default();
+        for (k, v) in &map {
+            let num = || {
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("`{k}` must be a number"))
+            };
+            let flag = || {
+                v.as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("`{k}` must be a bool"))
+            };
+            let text = || {
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("`{k}` must be a string"))
+            };
+            match k.as_str() {
+                "mu" => cfg.mu = num()?,
+                "lambda" => cfg.lambda = num()?,
+                "rho" => cfg.rho = num()?,
+                "alpha" => cfg.alpha = num()?,
+                "omega" => cfg.omega = num()? as u32,
+                "theta" => cfg.theta = num()? as f32,
+                "gamma_approx" => cfg.gamma_approx = num()? as f32,
+                "crm_top_frac" => cfg.crm_top_frac = num()? as f32,
+                "crm_window_batches" => cfg.crm_window_batches = num()? as usize,
+                "session_gap_frac" => cfg.session_gap_frac = num()?,
+                "clique_splitting" => cfg.clique_splitting = flag()?,
+                "approx_merging" => cfg.approx_merging = flag()?,
+                "n_servers" => cfg.n_servers = num()? as u32,
+                "n_items" => cfg.n_items = num()? as u32,
+                "batch_size" => cfg.batch_size = num()? as usize,
+                "d_max" => cfg.d_max = num()? as usize,
+                "charge_policy" => cfg.charge_policy = ChargePolicy::parse(text()?)?,
+                "transfer_model" => cfg.transfer_model = TransferModel::parse(text()?)?,
+                "artifacts_dir" => cfg.artifacts_dir = text()?.to_string(),
+                "use_xla" => cfg.use_xla = flag()?,
+                "seed" => cfg.seed = num()? as u64,
+                _ => anyhow::bail!("unknown config key `{k}`"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a TOML file.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Self::from_toml_str(&std::fs::read_to_string(path.as_ref())?)
+    }
+
+    /// Serialize to TOML.
+    pub fn to_toml(&self) -> String {
+        format!(
+            "# AKPC configuration (defaults = paper Table II)\n\
+             mu = {}\nlambda = {}\nrho = {}\nalpha = {}\n\
+             omega = {}\ntheta = {}\ngamma_approx = {}\ncrm_top_frac = {}\n\
+             crm_window_batches = {}\nsession_gap_frac = {}\n\
+             clique_splitting = {}\napprox_merging = {}\n\
+             n_servers = {}\nn_items = {}\nbatch_size = {}\nd_max = {}\n\
+             charge_policy = {}\ntransfer_model = {}\n\
+             artifacts_dir = {}\nuse_xla = {}\nseed = {}\n",
+            self.mu,
+            self.lambda,
+            self.rho,
+            self.alpha,
+            self.omega,
+            self.theta,
+            self.gamma_approx,
+            self.crm_top_frac,
+            self.crm_window_batches,
+            self.session_gap_frac,
+            self.clique_splitting,
+            self.approx_merging,
+            self.n_servers,
+            self.n_items,
+            self.batch_size,
+            self.d_max,
+            toml_lite::quote(self.charge_policy.as_str()),
+            toml_lite::quote(self.transfer_model.as_str()),
+            toml_lite::quote(&self.artifacts_dir),
+            self.use_xla,
+            self.seed,
+        )
+    }
+
+    /// Validate invariants; called by the CLI and the simulator.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.mu > 0.0, "mu must be positive");
+        anyhow::ensure!(self.lambda > 0.0, "lambda must be positive");
+        anyhow::ensure!(self.rho > 0.0, "rho must be positive");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.alpha),
+            "alpha must be in [0,1]"
+        );
+        anyhow::ensure!(self.omega >= 1, "omega must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.theta),
+            "theta must be in [0,1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.gamma_approx),
+            "gamma_approx must be in [0,1]"
+        );
+        anyhow::ensure!(
+            self.crm_top_frac > 0.0 && self.crm_top_frac <= 1.0,
+            "crm_top_frac must be in (0,1]"
+        );
+        anyhow::ensure!(self.n_servers >= 1, "need at least one server");
+        anyhow::ensure!(self.n_items >= 1, "need at least one item");
+        anyhow::ensure!(self.batch_size >= 1, "batch_size must be >= 1");
+        anyhow::ensure!(self.crm_window_batches >= 1, "crm_window_batches must be >= 1");
+        anyhow::ensure!(
+            self.session_gap_frac > 0.0,
+            "session_gap_frac must be positive"
+        );
+        anyhow::ensure!(self.d_max >= 1, "d_max must be >= 1");
+        Ok(())
+    }
+
+    /// AKPC variant without clique splitting and approximate merging
+    /// ("AKPC w/o CS, w/o ACM" in Figs. 5, 7, 9).
+    pub fn without_cs_acm(&self) -> Self {
+        Self {
+            clique_splitting: false,
+            approx_merging: false,
+            ..self.clone()
+        }
+    }
+
+    /// AKPC variant with splitting only ("AKPC w/o ACM" in Fig. 9a).
+    pub fn without_acm(&self) -> Self {
+        Self {
+            approx_merging: false,
+            ..self.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let c = AkpcConfig::default();
+        assert_eq!(c.mu, 1.0);
+        assert_eq!(c.lambda, 1.0);
+        assert_eq!(c.rho, 1.0);
+        assert_eq!(c.alpha, 0.8);
+        assert_eq!(c.omega, 5);
+        assert_eq!(c.theta, 0.2);
+        assert_eq!(c.gamma_approx, 0.85);
+        assert_eq!(c.n_servers, 600);
+        assert_eq!(c.n_items, 60);
+        assert_eq!(c.batch_size, 200);
+        assert_eq!(c.d_max, 5);
+        assert!((c.crm_top_frac - 1.0).abs() < 1e-9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn delta_t_follows_rho() {
+        let mut c = AkpcConfig::default();
+        assert_eq!(c.delta_t(), 1.0);
+        c.rho = 4.0;
+        assert_eq!(c.delta_t(), 4.0);
+        c.mu = 2.0;
+        assert_eq!(c.delta_t(), 2.0);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = AkpcConfig {
+            alpha: 0.6,
+            omega: 7,
+            charge_policy: ChargePolicy::CliqueItems,
+            artifacts_dir: "my/arts".into(),
+            ..Default::default()
+        };
+        let text = c.to_toml();
+        let back = AkpcConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let back = AkpcConfig::from_toml_str("alpha = 0.5").unwrap();
+        assert_eq!(back.alpha, 0.5);
+        assert_eq!(back.omega, 5); // default
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(AkpcConfig::from_toml_str("nonsense = 1").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = AkpcConfig::default();
+        c.alpha = 1.5;
+        assert!(c.validate().is_err());
+        c = AkpcConfig::default();
+        c.mu = 0.0;
+        assert!(c.validate().is_err());
+        c = AkpcConfig::default();
+        c.omega = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn variants_flip_flags() {
+        let c = AkpcConfig::default();
+        let v = c.without_cs_acm();
+        assert!(!v.clique_splitting && !v.approx_merging);
+        let v = c.without_acm();
+        assert!(v.clique_splitting && !v.approx_merging);
+    }
+
+    #[test]
+    fn enum_parsers() {
+        assert_eq!(
+            ChargePolicy::parse("clique_items").unwrap(),
+            ChargePolicy::CliqueItems
+        );
+        assert!(ChargePolicy::parse("bogus").is_err());
+        assert_eq!(
+            TransferModel::parse("alg5_line12").unwrap(),
+            TransferModel::Alg5Line12
+        );
+    }
+}

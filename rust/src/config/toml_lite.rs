@@ -1,0 +1,135 @@
+//! TOML-subset reader (offline environment — no `toml` crate): flat
+//! `key = value` documents with `#` comments; values are strings, bools,
+//! integers or floats. Exactly what [`super::AkpcConfig`] needs.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Num(f64),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a flat TOML document into key → value.
+pub fn parse(text: &str) -> anyhow::Result<BTreeMap<String, Value>> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() || line.starts_with('[') {
+            // Tables are ignored (config is flat).
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim().to_string();
+        let val = v.trim();
+        let value = if let Some(stripped) = val.strip_prefix('"') {
+            let inner = stripped
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated string", lineno + 1))?;
+            Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\"))
+        } else if val == "true" {
+            Value::Bool(true)
+        } else if val == "false" {
+            Value::Bool(false)
+        } else {
+            Value::Num(
+                val.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("line {}: bad value `{val}`", lineno + 1))?,
+            )
+        };
+        map.insert(key, value);
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Render a string value with escaping.
+pub fn quote(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_document() {
+        let doc = r#"
+            # costs
+            mu = 1.0
+            omega = 5
+            use_xla = true
+            artifacts_dir = "artifacts"  # trailing comment
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["mu"].as_f64(), Some(1.0));
+        assert_eq!(m["omega"].as_f64(), Some(5.0));
+        assert_eq!(m["use_xla"].as_bool(), Some(true));
+        assert_eq!(m["artifacts_dir"].as_str(), Some("artifacts"));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let m = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(m["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just words").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("x = notanumber").is_err());
+    }
+
+    #[test]
+    fn quote_roundtrip() {
+        let q = quote("a\"b\\c");
+        let m = parse(&format!("k = {q}")).unwrap();
+        assert_eq!(m["k"].as_str(), Some("a\"b\\c"));
+    }
+
+    #[test]
+    fn ignores_tables() {
+        let m = parse("[section]\nx = 1").unwrap();
+        assert_eq!(m["x"].as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,85 @@
+//! Window batcher: accumulates served requests into the clique-generation
+//! window (Fig. 3). A window closes when `batch_size` requests have been
+//! collected — the paper's batch semantics — or when explicitly flushed
+//! (idle timeout on the service side).
+
+use crate::trace::model::Request;
+
+#[derive(Debug)]
+pub struct WindowBatcher {
+    batch_size: usize,
+    buf: Vec<Request>,
+    /// Total windows closed.
+    pub windows_closed: u64,
+}
+
+impl WindowBatcher {
+    pub fn new(batch_size: usize) -> Self {
+        Self {
+            batch_size: batch_size.max(1),
+            buf: Vec::with_capacity(batch_size.max(1)),
+            windows_closed: 0,
+        }
+    }
+
+    /// Add a served request; returns the closed window when full.
+    pub fn push(&mut self, r: Request) -> Option<Vec<Request>> {
+        self.buf.push(r);
+        if self.buf.len() >= self.batch_size {
+            self.windows_closed += 1;
+            Some(std::mem::take(&mut self.buf))
+        } else {
+            None
+        }
+    }
+
+    /// Force-close the current window (idle flush); `None` if empty.
+    pub fn flush(&mut self) -> Option<Vec<Request>> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            self.windows_closed += 1;
+            Some(std::mem::take(&mut self.buf))
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(t: f64) -> Request {
+        Request::new(vec![0], 0, t)
+    }
+
+    #[test]
+    fn closes_at_batch_size() {
+        let mut b = WindowBatcher::new(3);
+        assert!(b.push(req(0.0)).is_none());
+        assert!(b.push(req(1.0)).is_none());
+        let w = b.push(req(2.0)).unwrap();
+        assert_eq!(w.len(), 3);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.windows_closed, 1);
+    }
+
+    #[test]
+    fn flush_closes_partial() {
+        let mut b = WindowBatcher::new(10);
+        b.push(req(0.0));
+        b.push(req(1.0));
+        let w = b.flush().unwrap();
+        assert_eq!(w.len(), 2);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn zero_batch_size_clamped() {
+        let mut b = WindowBatcher::new(0);
+        assert!(b.push(req(0.0)).is_some());
+    }
+}

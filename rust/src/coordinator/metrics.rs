@@ -1,0 +1,86 @@
+//! Coordinator metrics: point-in-time snapshots of the leader's state,
+//! exported over the snapshot channel (Prometheus-style pull).
+
+use crate::cache::CostLedger;
+use crate::util::{Histogram, Json};
+
+/// A consistent snapshot of the serving state.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Policy display name.
+    pub policy: String,
+    /// CRM engine in use ("xla" / "native").
+    pub engine: String,
+    pub ledger: CostLedger,
+    /// Requests served since start.
+    pub served: u64,
+    /// Clique-generation windows executed.
+    pub windows: u64,
+    /// Live cliques after the last window tick.
+    pub live_cliques: usize,
+    /// Clique-size distribution (cumulative over windows).
+    pub clique_hist: Histogram,
+    /// Cumulative seconds spent in clique generation.
+    pub clique_gen_secs: f64,
+    /// Per-request service latency in microseconds.
+    pub latency_us: Histogram,
+}
+
+impl MetricsSnapshot {
+    /// Render a compact one-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "policy={} engine={} served={} windows={} cliques={} total_cost={:.1} (C_T={:.1} C_P={:.1}) hit={:.1}% p50={}us p99={}us",
+            self.policy,
+            self.engine,
+            self.served,
+            self.windows,
+            self.live_cliques,
+            self.ledger.total(),
+            self.ledger.c_t,
+            self.ledger.c_p,
+            self.ledger.hit_rate() * 100.0,
+            self.latency_us.quantile(0.5),
+            self.latency_us.quantile(0.99),
+        )
+    }
+
+    /// JSON export.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("ledger", self.ledger.to_json()),
+            ("served", Json::Num(self.served as f64)),
+            ("windows", Json::Num(self.windows as f64)),
+            ("live_cliques", Json::Num(self.live_cliques as f64)),
+            ("clique_hist", self.clique_hist.to_json()),
+            ("clique_gen_secs", Json::Num(self.clique_gen_secs)),
+            ("latency_us", self.latency_us.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_renders() {
+        let s = MetricsSnapshot {
+            policy: "AKPC".into(),
+            engine: "xla".into(),
+            ledger: CostLedger::default(),
+            served: 10,
+            windows: 2,
+            live_cliques: 3,
+            clique_hist: Histogram::new(),
+            clique_gen_secs: 0.1,
+            latency_us: Histogram::new(),
+        };
+        let line = s.summary();
+        assert!(line.contains("policy=AKPC"));
+        assert!(line.contains("engine=xla"));
+        crate::util::json::parse(&s.to_json().to_string()).unwrap();
+    }
+}

@@ -1,0 +1,27 @@
+//! Online serving coordinator — the L3 runtime around the AKPC policy.
+//!
+//! Architecture (vLLM-router-like leader/worker split, sized for this
+//! paper's contribution — the *policy*, not the data plane):
+//!
+//! ```text
+//!   clients ──(mpsc)──► Coordinator ──(channel)──► leader thread
+//!                          │  tokio side:             owns Akpc policy +
+//!                          │  routing, admission,     PJRT runtime (thread-
+//!                          │  oneshot responses       affine), batcher,
+//!                          ▼                          window ticks
+//!                       metrics snapshots ◄─────────── ledger/cliques
+//! ```
+//!
+//! The PJRT client is `Rc`-backed (thread-affine), so the policy and the
+//! XLA runtime are constructed *on* the leader thread and never move; the
+//! async side communicates exclusively through channels. Python is never
+//! involved: the leader executes the AOT artifact through
+//! [`crate::runtime::XlaCrmBuilder`].
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::WindowBatcher;
+pub use metrics::MetricsSnapshot;
+pub use service::{Coordinator, CoordinatorClient, ServeRequest, ServeResponse};

@@ -1,0 +1,340 @@
+//! The serving service: client handle + leader thread owning the policy.
+//!
+//! The leader thread owns the (thread-affine) AKPC policy and PJRT
+//! runtime; clients talk to it over an mpsc channel and receive responses
+//! on per-call reply channels. The handle is `Clone + Send + Sync`, so any
+//! number of client threads can submit concurrently — the leader serializes
+//! policy access (single-writer, exactly the paper's per-ESS event model).
+//!
+//! (The offline build environment has no tokio; the async facade is a
+//! blocking-channel actor instead — same topology, same single-leader
+//! semantics. See DESIGN.md §2.)
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::algo::{Akpc, CachePolicy};
+use crate::config::AkpcConfig;
+use crate::runtime::CrmEngine;
+use crate::trace::model::Request;
+
+use super::batcher::WindowBatcher;
+use super::metrics::MetricsSnapshot;
+use crate::util::Histogram;
+
+/// A request submitted to the coordinator.
+#[derive(Debug)]
+pub struct ServeRequest {
+    pub items: Vec<u32>,
+    pub server: u32,
+    /// Logical request time; `None` = wall-clock seconds since service
+    /// start (live mode). Trace replay supplies explicit times.
+    pub time: Option<f64>,
+}
+
+/// What the coordinator returns to the client.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    /// Items delivered (the packed cliques covering the request —
+    /// Observation 4: may exceed what was asked).
+    pub delivered: Vec<u32>,
+    /// True if no transfer was needed (full local hit).
+    pub full_hit: bool,
+    /// Cost delta (C_T + C_P) attributed to this request.
+    pub cost_delta: f64,
+}
+
+enum Msg {
+    Serve(ServeRequest, mpsc::Sender<ServeResponse>),
+    Snapshot(mpsc::Sender<MetricsSnapshot>),
+    FlushWindow,
+    Shutdown,
+}
+
+/// Handle to the serving leader. Cloneable; dropping the last handle shuts
+/// the leader down.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    join: Option<std::thread::JoinHandle<MetricsSnapshot>>,
+}
+
+impl Coordinator {
+    /// Start the leader thread with the given config and CRM engine.
+    pub fn start(cfg: AkpcConfig, engine: CrmEngine) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("akpc-leader".into())
+            .spawn(move || leader_loop(cfg, engine, rx))
+            .expect("spawn leader");
+        Self {
+            tx,
+            join: Some(join),
+        }
+    }
+
+    /// A cloneable, `Send + Sync` client for submitting from many threads.
+    pub fn client(&self) -> CoordinatorClient {
+        CoordinatorClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Serve one request (blocks until the leader responds).
+    pub fn serve(&self, req: ServeRequest) -> anyhow::Result<ServeResponse> {
+        self.client().serve(req)
+    }
+
+    /// Pull a metrics snapshot.
+    pub fn metrics(&self) -> anyhow::Result<MetricsSnapshot> {
+        let (otx, orx) = mpsc::channel();
+        self.tx
+            .send(Msg::Snapshot(otx))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        Ok(orx.recv()?)
+    }
+
+    /// Force-close the current clique-generation window (idle flush).
+    pub fn flush_window(&self) -> anyhow::Result<()> {
+        self.tx
+            .send(Msg::FlushWindow)
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))
+    }
+
+    /// Graceful shutdown; returns the final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.join
+            .take()
+            .expect("not yet joined")
+            .join()
+            .expect("leader panicked")
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Cloneable submission handle (no lifecycle control).
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl CoordinatorClient {
+    pub fn serve(&self, req: ServeRequest) -> anyhow::Result<ServeResponse> {
+        let (otx, orx) = mpsc::channel();
+        self.tx
+            .send(Msg::Serve(req, otx))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        Ok(orx.recv()?)
+    }
+}
+
+fn leader_loop(
+    cfg: AkpcConfig,
+    engine: CrmEngine,
+    rx: mpsc::Receiver<Msg>,
+) -> MetricsSnapshot {
+    // Thread-affine construction: the PJRT client never crosses threads.
+    let builder = engine.builder(&cfg.artifacts_dir);
+    let engine_name = builder.engine_name().to_string();
+    let mut policy = Akpc::with_builder(&cfg, builder);
+    let mut batcher = WindowBatcher::new(cfg.batch_size);
+    let mut latency = Histogram::new();
+    let mut served: u64 = 0;
+    let start = Instant::now();
+
+    let snapshot = |policy: &Akpc,
+                    served: u64,
+                    latency: &Histogram,
+                    engine_name: &str| MetricsSnapshot {
+        policy: policy.name(),
+        engine: engine_name.to_string(),
+        ledger: policy.ledger().clone(),
+        served,
+        windows: policy.windows,
+        live_cliques: policy.cliques().len(),
+        clique_hist: policy.clique_sizes(),
+        clique_gen_secs: policy.clique_gen_secs,
+        latency_us: latency.clone(),
+    };
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Serve(sreq, resp) => {
+                let t0 = Instant::now();
+                let time = sreq
+                    .time
+                    .unwrap_or_else(|| start.elapsed().as_secs_f64());
+                let r = Request::new(sreq.items, sreq.server, time);
+
+                // Response assembly: the packed cliques covering D_i
+                // (Algorithm 5 line 13 — deliver whole cliques).
+                let before_hits = policy.ledger().full_hits;
+                let before_total = policy.ledger().total();
+                let mut delivered: Vec<u32> = Vec::with_capacity(r.items.len());
+                for &d in &r.items {
+                    match policy.cliques().clique_of(d) {
+                        Some(c) => delivered.extend_from_slice(c),
+                        None => delivered.push(d),
+                    }
+                }
+                delivered.sort_unstable();
+                delivered.dedup();
+
+                policy.handle_request(&r);
+                let after = policy.ledger();
+                let full_hit = after.full_hits > before_hits;
+                let cost_delta = after.total() - before_total;
+
+                served += 1;
+                latency.record(t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32);
+                let _ = resp.send(ServeResponse {
+                    delivered,
+                    full_hit,
+                    cost_delta,
+                });
+
+                if let Some(window) = batcher.push(r) {
+                    policy.end_batch(&window);
+                }
+            }
+            Msg::Snapshot(resp) => {
+                let _ = resp.send(snapshot(&policy, served, &latency, &engine_name));
+            }
+            Msg::FlushWindow => {
+                if let Some(window) = batcher.flush() {
+                    policy.end_batch(&window);
+                }
+            }
+            Msg::Shutdown => break,
+        }
+    }
+    snapshot(&policy, served, &latency, &engine_name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 16,
+            n_servers: 4,
+            batch_size: 10,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serves_and_learns_cliques() {
+        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        // Two windows of a strong {1,2} bundle.
+        for i in 0..20 {
+            let resp = coord
+                .serve(ServeRequest {
+                    items: vec![1, 2],
+                    server: 0,
+                    time: Some(i as f64 * 0.05),
+                })
+                .unwrap();
+            assert!(!resp.delivered.is_empty());
+        }
+        let m = coord.metrics().unwrap();
+        assert_eq!(m.served, 20);
+        assert_eq!(m.windows, 2);
+        assert!(m.live_cliques >= 1, "learned no cliques");
+        // After learning, a request for item 1 delivers the {1,2} pack.
+        let resp = coord
+            .serve(ServeRequest {
+                items: vec![1],
+                server: 3,
+                time: Some(10.0),
+            })
+            .unwrap();
+        assert_eq!(resp.delivered, vec![1, 2]);
+        let final_m = coord.shutdown();
+        assert_eq!(final_m.served, 21);
+    }
+
+    #[test]
+    fn flush_window_forces_tick() {
+        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        for i in 0..5 {
+            coord
+                .serve(ServeRequest {
+                    items: vec![3, 4],
+                    server: 0,
+                    time: Some(i as f64 * 0.01),
+                })
+                .unwrap();
+        }
+        coord.flush_window().unwrap();
+        let m = coord.metrics().unwrap();
+        assert_eq!(m.windows, 1);
+    }
+
+    #[test]
+    fn cost_deltas_accumulate_to_ledger() {
+        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        let mut sum = 0.0;
+        for i in 0..10u32 {
+            let r = coord
+                .serve(ServeRequest {
+                    items: vec![i % 4, 8],
+                    server: i % 2,
+                    time: Some(i as f64 * 0.3),
+                })
+                .unwrap();
+            sum += r.cost_delta;
+        }
+        let m = coord.metrics().unwrap();
+        assert!((m.ledger.total() - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        let mut handles = Vec::new();
+        for c in 0..8u32 {
+            let client = coord.client();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u32 {
+                    client
+                        .serve(ServeRequest {
+                            items: vec![(c + i) % 16],
+                            server: c % 4,
+                            time: None, // wall clock
+                        })
+                        .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = coord.metrics().unwrap();
+        assert_eq!(m.served, 400);
+        assert_eq!(m.ledger.requests, 400);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_via_drop() {
+        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        coord
+            .serve(ServeRequest {
+                items: vec![1],
+                server: 0,
+                time: Some(0.0),
+            })
+            .unwrap();
+        drop(coord); // must not hang or panic
+    }
+}

@@ -1,0 +1,90 @@
+//! Edge-level diff between the binary CRMs of consecutive windows —
+//! the ΔE input of Algorithm 4 (Adjust Previous Cliques).
+
+use super::CrmWindow;
+use std::collections::HashSet;
+
+/// Set of changed edges between `CRM_bin(W-1)` and `CRM_bin(W)`.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeDiff {
+    /// Edges present in W-1 but not in W (item-id pairs, u < v).
+    pub removed: Vec<(u32, u32)>,
+    /// Edges present in W but not in W-1.
+    pub added: Vec<(u32, u32)>,
+}
+
+impl EdgeDiff {
+    pub fn len(&self) -> usize {
+        self.removed.len() + self.added.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.removed.is_empty() && self.added.is_empty()
+    }
+}
+
+/// Compute ΔE between two windows. Works on item-id space, so windows with
+/// different kept sets compare correctly (an item leaving the kept set
+/// removes all its edges).
+pub fn diff_windows(prev: &CrmWindow, curr: &CrmWindow) -> EdgeDiff {
+    let prev_edges: HashSet<(u32, u32)> = prev.edges().into_iter().collect();
+    let curr_edges: HashSet<(u32, u32)> = curr.edges().into_iter().collect();
+
+    let mut removed: Vec<(u32, u32)> = prev_edges.difference(&curr_edges).copied().collect();
+    let mut added: Vec<(u32, u32)> = curr_edges.difference(&prev_edges).copied().collect();
+    removed.sort_unstable();
+    added.sort_unstable();
+    EdgeDiff { removed, added }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crm::native::build_native;
+    use crate::trace::model::Request;
+
+    fn req(items: &[u32]) -> Request {
+        Request::new(items.to_vec(), 0, 0.0)
+    }
+
+    fn window(pairs: &[(u32, u32)]) -> CrmWindow {
+        let reqs: Vec<Request> = pairs.iter().map(|&(a, b)| req(&[a, b])).collect();
+        build_native(&reqs, 16, 0.0, 1.0)
+    }
+
+    #[test]
+    fn no_change() {
+        let a = window(&[(0, 1), (2, 3)]);
+        let b = window(&[(0, 1), (2, 3)]);
+        let d = diff_windows(&a, &b);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn detects_added_and_removed() {
+        let a = window(&[(0, 1), (2, 3)]);
+        let b = window(&[(0, 1), (4, 5)]);
+        let d = diff_windows(&a, &b);
+        assert_eq!(d.removed, vec![(2, 3)]);
+        assert_eq!(d.added, vec![(4, 5)]);
+    }
+
+    #[test]
+    fn empty_prev_is_all_added() {
+        let a = CrmWindow::default();
+        let b = window(&[(0, 1)]);
+        let d = diff_windows(&a, &b);
+        assert!(d.removed.is_empty());
+        assert_eq!(d.added, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn item_leaving_kept_set_removes_edges() {
+        let a = window(&[(0, 1), (0, 2), (1, 2)]);
+        // New window where only (5,6) appears: all old edges removed.
+        let b = window(&[(5, 6)]);
+        let d = diff_windows(&a, &b);
+        assert_eq!(d.removed.len(), 3);
+        assert_eq!(d.added, vec![(5, 6)]);
+    }
+}

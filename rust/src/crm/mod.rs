@@ -1,0 +1,306 @@
+//! Correlation-matrix (CRM) construction — Algorithm 2 of the paper.
+//!
+//! Two interchangeable producers exist for the numeric pipeline
+//! (co-occurrence → top-p% filter → min-max normalize → binarize):
+//!
+//! * the **XLA path** ([`crate::runtime`]): executes the AOT-lowered
+//!   JAX/Pallas artifact — the production configuration;
+//! * the **native path** ([`native::build_native`]): a pure-Rust
+//!   re-implementation used for sizes with no artifact, for tests, and as
+//!   the ablation baseline in the §Perf comparison.
+//!
+//! Both produce a [`CrmWindow`]: a *compacted* dense matrix over only the
+//! kept (top-p% most frequent) items, which is what the clique machinery
+//! consumes.
+
+pub mod diff;
+pub mod native;
+
+pub use diff::{diff_windows, EdgeDiff};
+pub use native::build_native;
+
+use std::collections::HashMap;
+
+use crate::trace::model::Request;
+
+/// Collapse a window of requests into co-utilization *transactions*:
+/// consecutive requests at the same server whose inter-arrival gap is at
+/// most `gap` (one user session browsing related content — the paper's
+/// co-access premise) are unioned into one multi-hot transaction.
+///
+/// Both CRM engines consume transactions, so a session that walks a bundle
+/// one item per request still registers pairwise co-utilization — exactly
+/// the signal Figure 2's timeline describes. Within-request co-access is
+/// a transaction of its own chain trivially.
+pub fn sessionize(window: &[Request], gap: f64) -> Vec<Request> {
+    // (last time, index into out) per server.
+    let mut open: HashMap<u32, (f64, usize)> = HashMap::new();
+    let mut out: Vec<Request> = Vec::new();
+    for r in window {
+        match open.get(&r.server) {
+            Some(&(last_t, idx)) if r.time - last_t <= gap => {
+                let tx = &mut out[idx];
+                tx.items.extend_from_slice(&r.items);
+                open.insert(r.server, (r.time, idx));
+            }
+            _ => {
+                out.push(r.clone());
+                open.insert(r.server, (r.time, out.len() - 1));
+            }
+        }
+    }
+    for tx in out.iter_mut() {
+        tx.items.sort_unstable();
+        tx.items.dedup();
+    }
+    out
+}
+
+/// Producer of per-window CRMs — implemented by the native Rust path
+/// ([`NativeCrmBuilder`]) and by the XLA runtime
+/// ([`crate::runtime::XlaCrmBuilder`]) executing the AOT artifact.
+///
+/// Deliberately **not** `Send`: the PJRT client is thread-affine
+/// (`Rc`-backed), so the coordinator constructs the builder *on* the
+/// leader thread that owns the policy (see [`crate::coordinator`]).
+pub trait CrmBuilder {
+    /// Build the CRM for one window of requests.
+    fn build(
+        &mut self,
+        window: &[Request],
+        n_items: u32,
+        theta: f32,
+        top_frac: f32,
+    ) -> CrmWindow;
+
+    /// Engine name for reports ("native" / "xla").
+    fn engine_name(&self) -> &'static str;
+}
+
+/// Pure-Rust [`CrmBuilder`].
+#[derive(Debug, Default, Clone)]
+pub struct NativeCrmBuilder;
+
+impl CrmBuilder for NativeCrmBuilder {
+    fn build(
+        &mut self,
+        window: &[Request],
+        n_items: u32,
+        theta: f32,
+        top_frac: f32,
+    ) -> CrmWindow {
+        native::build_native(window, n_items, theta, top_frac)
+    }
+
+    fn engine_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// A normalized, thresholded correlation matrix over the kept item set of
+/// one clique-generation window `W`.
+#[derive(Debug, Clone, Default)]
+pub struct CrmWindow {
+    /// Kept item ids (top-p% most frequent active items), ascending.
+    pub active: Vec<u32>,
+    /// item id → index into `active` / matrix rows.
+    pub index: HashMap<u32, usize>,
+    /// Dense lookup table `item id → index+1` (0 = absent) — the clique
+    /// machinery queries edges per item pair in tight loops, where a
+    /// vector probe beats hashing (§Perf iteration 3).
+    lut: Vec<u32>,
+    /// Dense `k×k` min-max-normalized co-access strengths, row-major.
+    pub norm: Vec<f32>,
+    /// Dense `k×k` binary adjacency (`norm > θ`), row-major.
+    pub bin: Vec<bool>,
+}
+
+impl CrmWindow {
+    /// Number of kept items `k`.
+    pub fn k(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Build the internal item-id lookup table; must be called by every
+    /// constructor after `active`/`index` are final.
+    pub(crate) fn build_lut(&mut self) {
+        let cap = self
+            .active
+            .last()
+            .map(|&m| m as usize + 1)
+            .unwrap_or(0);
+        self.lut = vec![0; cap];
+        for (i, &item) in self.active.iter().enumerate() {
+            self.lut[item as usize] = i as u32 + 1;
+        }
+    }
+
+    #[inline]
+    fn idx(&self, item: u32) -> Option<usize> {
+        match self.lut.get(item as usize) {
+            Some(&v) if v > 0 => Some(v as usize - 1),
+            _ => None,
+        }
+    }
+
+    /// Is `item` part of the kept set?
+    #[inline]
+    pub fn contains(&self, item: u32) -> bool {
+        self.idx(item).is_some()
+    }
+
+    /// Binary edge between two *item ids* (false if either is not kept).
+    #[inline]
+    pub fn edge(&self, u: u32, v: u32) -> bool {
+        match (self.idx(u), self.idx(v)) {
+            (Some(i), Some(j)) if i != j => self.bin[i * self.k() + j],
+            _ => false,
+        }
+    }
+
+    /// Normalized co-access weight between two item ids (0 if not kept).
+    #[inline]
+    pub fn weight(&self, u: u32, v: u32) -> f32 {
+        match (self.idx(u), self.idx(v)) {
+            (Some(i), Some(j)) if i != j => self.norm[i * self.k() + j],
+            _ => 0.0,
+        }
+    }
+
+    /// All binary edges as item-id pairs `(u, v)` with `u < v`.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let k = self.k();
+        let mut out = Vec::new();
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if self.bin[i * k + j] {
+                    out.push((self.active[i], self.active[j]));
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of binary edges.
+    pub fn edge_count(&self) -> usize {
+        let k = self.k();
+        let mut c = 0;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if self.bin[i * k + j] {
+                    c += 1;
+                }
+            }
+        }
+        c
+    }
+
+    /// Build from full `n×n` matrices (the XLA artifact's outputs),
+    /// compacting to the kept item set. `keep` mirrors the artifact's
+    /// internal top-p% rule: an item is kept iff its row/col participates
+    /// in the normalized support, i.e. `freq >= kth` among active items.
+    pub fn from_full(
+        norm_full: &[f32],
+        bin_full: &[f32],
+        freq: &[f32],
+        n: usize,
+        top_frac: f32,
+    ) -> Self {
+        assert_eq!(norm_full.len(), n * n);
+        assert_eq!(bin_full.len(), n * n);
+        assert_eq!(freq.len(), n);
+        let keep = top_k_keep_mask(freq, top_frac);
+        let active: Vec<u32> = (0..n as u32).filter(|&i| keep[i as usize]).collect();
+        let k = active.len();
+        let mut index = HashMap::with_capacity(k);
+        for (ci, &item) in active.iter().enumerate() {
+            index.insert(item, ci);
+        }
+        let mut norm = vec![0.0f32; k * k];
+        let mut bin = vec![false; k * k];
+        for (ci, &u) in active.iter().enumerate() {
+            for (cj, &v) in active.iter().enumerate() {
+                norm[ci * k + cj] = norm_full[u as usize * n + v as usize];
+                bin[ci * k + cj] = bin_full[u as usize * n + v as usize] > 0.5;
+            }
+        }
+        let mut w = Self {
+            active,
+            index,
+            lut: Vec::new(),
+            norm,
+            bin,
+        };
+        w.build_lut();
+        w
+    }
+}
+
+/// The top-p% keep rule shared by the native path and `from_full`,
+/// mirroring the L2 graph exactly: keep item iff `freq > 0` and
+/// `freq >= kth`, where `kth` is the `ceil(top_frac · n_active)`-th largest
+/// nonzero frequency (ties at the boundary keep everybody).
+pub fn top_k_keep_mask(freq: &[f32], top_frac: f32) -> Vec<bool> {
+    let n_active = freq.iter().filter(|&&f| f > 0.0).count();
+    if n_active == 0 {
+        return vec![false; freq.len()];
+    }
+    let k = ((top_frac as f64 * n_active as f64).ceil() as usize).max(1);
+    let mut sorted: Vec<f32> = freq.iter().copied().filter(|&f| f > 0.0).collect();
+    sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let kth = sorted[(k - 1).min(sorted.len() - 1)];
+    freq.iter().map(|&f| f > 0.0 && f >= kth).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_mask_top_fraction() {
+        // freqs: item0=10, item1=5, item2=1, item3=0
+        let freq = vec![10.0, 5.0, 1.0, 0.0];
+        // 3 active, top 34% -> k=ceil(1.02)=2 -> kth=5 -> keep 0,1
+        let keep = top_k_keep_mask(&freq, 0.34);
+        assert_eq!(keep, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn keep_mask_ties_keep_boundary() {
+        let freq = vec![5.0, 5.0, 5.0, 1.0];
+        // k = ceil(0.25*4)=1, kth=5 -> all three fives kept
+        let keep = top_k_keep_mask(&freq, 0.25);
+        assert_eq!(keep, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn keep_mask_all_zero() {
+        assert_eq!(top_k_keep_mask(&[0.0, 0.0], 0.5), vec![false, false]);
+    }
+
+    #[test]
+    fn keep_mask_full_fraction_keeps_all_active() {
+        let freq = vec![1.0, 2.0, 0.0];
+        assert_eq!(top_k_keep_mask(&freq, 1.0), vec![true, true, false]);
+    }
+
+    #[test]
+    fn from_full_compacts() {
+        // n=3, items 0 and 2 kept (freq), 1 inactive.
+        let n = 3;
+        let mut norm = vec![0.0f32; 9];
+        let mut bin = vec![0.0f32; 9];
+        norm[0 * n + 2] = 1.0;
+        norm[2 * n + 0] = 1.0;
+        bin[0 * n + 2] = 1.0;
+        bin[2 * n + 0] = 1.0;
+        let freq = vec![4.0, 0.0, 4.0];
+        let w = CrmWindow::from_full(&norm, &bin, &freq, n, 1.0);
+        assert_eq!(w.active, vec![0, 2]);
+        assert!(w.edge(0, 2) && w.edge(2, 0));
+        assert!(!w.edge(0, 1));
+        assert_eq!(w.weight(0, 2), 1.0);
+        assert_eq!(w.edges(), vec![(0, 2)]);
+        assert_eq!(w.edge_count(), 1);
+    }
+}

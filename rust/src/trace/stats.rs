@@ -1,0 +1,133 @@
+//! Trace statistics: popularity skew, co-access strength, request mix.
+//!
+//! Used by `akpc trace stats`, by DESIGN/EXPERIMENTS documentation, and by
+//! tests asserting that generated traces exhibit the structure the paper's
+//! datasets have.
+
+use std::collections::HashMap;
+
+use super::model::Trace;
+
+/// Summary statistics of a trace.
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub n_requests: usize,
+    pub n_items: u32,
+    pub n_servers: u32,
+    pub time_span: f64,
+    pub mean_request_size: f64,
+    /// Fraction of accesses going to the top 10% of items.
+    pub top10pct_item_share: f64,
+    /// Fraction of requests landing on the top 10% of servers.
+    pub top10pct_server_share: f64,
+    /// Number of distinct co-accessed pairs observed.
+    pub distinct_pairs: usize,
+    /// Mean co-access count over observed pairs.
+    pub mean_pair_count: f64,
+}
+
+impl TraceStats {
+    /// JSON export.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("n_requests", Json::Num(self.n_requests as f64)),
+            ("n_items", Json::Num(self.n_items as f64)),
+            ("n_servers", Json::Num(self.n_servers as f64)),
+            ("time_span", Json::Num(self.time_span)),
+            ("mean_request_size", Json::Num(self.mean_request_size)),
+            ("top10pct_item_share", Json::Num(self.top10pct_item_share)),
+            (
+                "top10pct_server_share",
+                Json::Num(self.top10pct_server_share),
+            ),
+            ("distinct_pairs", Json::Num(self.distinct_pairs as f64)),
+            ("mean_pair_count", Json::Num(self.mean_pair_count)),
+        ])
+    }
+}
+
+/// Compute [`TraceStats`].
+pub fn analyze(trace: &Trace) -> TraceStats {
+    let mut item_counts: HashMap<u32, u64> = HashMap::new();
+    let mut server_counts: HashMap<u32, u64> = HashMap::new();
+    let mut pair_counts: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut size_sum = 0usize;
+
+    for r in &trace.requests {
+        size_sum += r.items.len();
+        *server_counts.entry(r.server).or_default() += 1;
+        for (i, &a) in r.items.iter().enumerate() {
+            *item_counts.entry(a).or_default() += 1;
+            for &b in &r.items[i + 1..] {
+                *pair_counts.entry((a, b)).or_default() += 1;
+            }
+        }
+    }
+
+    let share_top10 = |counts: &HashMap<u32, u64>| -> f64 {
+        if counts.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<u64> = counts.values().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        let k = (v.len() as f64 * 0.10).ceil() as usize;
+        let top: u64 = v[..k.max(1).min(v.len())].iter().sum();
+        let total: u64 = v.iter().sum();
+        top as f64 / total.max(1) as f64
+    };
+
+    let time_span = match (trace.requests.first(), trace.requests.last()) {
+        (Some(a), Some(b)) => b.time - a.time,
+        _ => 0.0,
+    };
+
+    TraceStats {
+        n_requests: trace.len(),
+        n_items: trace.n_items,
+        n_servers: trace.n_servers,
+        time_span,
+        mean_request_size: size_sum as f64 / trace.len().max(1) as f64,
+        top10pct_item_share: share_top10(&item_counts),
+        top10pct_server_share: share_top10(&server_counts),
+        distinct_pairs: pair_counts.len(),
+        mean_pair_count: {
+            let s: u64 = pair_counts.values().sum();
+            s as f64 / pair_counts.len().max(1) as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::{netflix_like, spotify_like};
+
+    #[test]
+    fn netflix_more_skewed_than_spotify() {
+        let nf = analyze(&netflix_like(60, 100, 30_000, 1));
+        let sp = analyze(&spotify_like(60, 100, 30_000, 1));
+        assert!(
+            nf.top10pct_item_share > sp.top10pct_item_share,
+            "netflix {} vs spotify {}",
+            nf.top10pct_item_share,
+            sp.top10pct_item_share
+        );
+    }
+
+    #[test]
+    fn stats_shapes() {
+        let s = analyze(&netflix_like(60, 100, 10_000, 2));
+        assert_eq!(s.n_requests, 10_000);
+        assert!(s.mean_request_size >= 1.0 && s.mean_request_size <= 5.0);
+        assert!(s.time_span > 0.0);
+        assert!(s.distinct_pairs > 0);
+    }
+
+    #[test]
+    fn empty_trace_stats() {
+        let s = analyze(&Trace::default());
+        assert_eq!(s.n_requests, 0);
+        assert_eq!(s.mean_request_size, 0.0);
+    }
+}

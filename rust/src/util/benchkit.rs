@@ -1,0 +1,134 @@
+//! Tiny benchmarking harness used by `cargo bench` (the offline
+//! environment has no criterion). Warms up, runs timed iterations, and
+//! prints min/median/mean per benchmark in a stable, greppable format:
+//!
+//! ```text
+//! bench <group>/<name> ... min=1.234ms med=1.301ms mean=1.310ms iters=20
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group (criterion-style naming).
+pub struct Group {
+    name: String,
+    /// Target measured iterations per benchmark.
+    pub iters: usize,
+    /// Warm-up iterations.
+    pub warmup: usize,
+}
+
+impl Group {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            iters: 10,
+            warmup: 2,
+        }
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n.max(1);
+        self
+    }
+
+    /// Run one benchmark; `f` returns any value (kept alive to prevent
+    /// dead-code elimination via `std::hint::black_box`).
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let stats = BenchStats::from_samples(&self.name, name, samples);
+        println!("{stats}");
+        stats
+    }
+}
+
+/// Summary of one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub group: String,
+    pub name: String,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    fn from_samples(group: &str, name: &str, mut samples: Vec<Duration>) -> Self {
+        samples.sort_unstable();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        Self {
+            group: group.to_string(),
+            name: name.to_string(),
+            min: samples[0],
+            median: samples[n / 2],
+            mean,
+            iters: n,
+        }
+    }
+
+    /// Median seconds (for derived throughput reporting).
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {}/{} ... min={} med={} mean={} iters={}",
+            self.group,
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let g = Group::new("test").iters(5);
+        let stats = g.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(stats.min <= stats.median && stats.median <= stats.mean * 2);
+        assert_eq!(stats.iters, 5);
+    }
+
+    #[test]
+    fn formats_durations() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("us"));
+    }
+}

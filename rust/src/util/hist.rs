@@ -1,0 +1,152 @@
+//! Integer-bucket histogram used for clique-size distributions (Fig. 9a)
+//! and latency tracking in the coordinator.
+
+use std::collections::BTreeMap;
+
+/// Sparse histogram over `u32` values.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    buckets: BTreeMap<u32, u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, value: u32) {
+        *self.buckets.entry(value).or_insert(0) += 1;
+        self.count += 1;
+        self.sum += value as f64;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> u32 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (&v, &c) in &self.buckets {
+            acc += c;
+            if acc >= target.max(1) {
+                return v;
+            }
+        }
+        *self.buckets.keys().next_back().unwrap()
+    }
+
+    pub fn max(&self) -> u32 {
+        self.buckets.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// `(value, count)` pairs in ascending value order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u64)> + '_ {
+        self.buckets.iter().map(|(&v, &c)| (v, c))
+    }
+
+    /// Normalized distribution `(value, fraction)`.
+    pub fn distribution(&self) -> Vec<(u32, f64)> {
+        let n = self.count.max(1) as f64;
+        self.iter().map(|(v, c)| (v, c as f64 / n)).collect()
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (v, c) in other.iter() {
+            *self.buckets.entry(v).or_insert(0) += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// JSON export (`{"buckets": [[v, c], ...], "count": n, "mean": m}`).
+    pub fn to_json(&self) -> super::json::Json {
+        use super::json::Json;
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::Arr(
+                    self.iter()
+                        .map(|(v, c)| {
+                            Json::Arr(vec![Json::Num(v as f64), Json::Num(c as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("count", Json::Num(self.count as f64)),
+            ("mean", Json::Num(self.mean())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_means() {
+        let mut h = Histogram::new();
+        for v in [1, 2, 2, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(h.max(), 3);
+    }
+
+    #[test]
+    fn quantiles() {
+        let mut h = Histogram::new();
+        for v in 1..=100 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.5), 50);
+        assert_eq!(h.quantile(0.99), 99);
+        assert_eq!(h.quantile(1.0), 100);
+        assert_eq!(h.quantile(0.0), 1);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn distribution_sums_to_one() {
+        let mut h = Histogram::new();
+        for v in [5, 5, 7, 9] {
+            h.record(v);
+        }
+        let total: f64 = h.distribution().iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Histogram::new();
+        a.record(1);
+        let mut b = Histogram::new();
+        b.record(2);
+        b.record(1);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![(1, 2), (2, 1)]);
+    }
+}

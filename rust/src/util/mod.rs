@@ -1,0 +1,83 @@
+//! Small deterministic utilities shared across the crate.
+//!
+//! Everything here is dependency-free and fully deterministic so that every
+//! experiment in the paper harness is exactly reproducible from a seed.
+
+pub mod benchkit;
+pub mod hist;
+pub mod json;
+pub mod rng;
+pub mod tempdir;
+
+pub use hist::Histogram;
+pub use json::Json;
+pub use rng::{Rng, ZipfSampler};
+
+/// Min-max normalize a slice in place; returns `(min, max)` before scaling.
+/// A constant slice maps to all zeros (span clamped like the L2 graph).
+pub fn min_max_normalize(values: &mut [f32]) -> (f32, f32) {
+    if values.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in values.iter() {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-9);
+    for v in values.iter_mut() {
+        *v = (*v - lo) / span;
+    }
+    (lo, hi)
+}
+
+/// Stable content hash for a *sorted* item set — the cache key for a packed
+/// clique copy. FNV-1a over the little-endian item ids; collision
+/// probability is negligible at the paper's scales and the key is only used
+/// to identify identical packings.
+pub fn clique_key(sorted_items: &[u32]) -> u64 {
+    debug_assert!(sorted_items.windows(2).all(|w| w[0] < w[1]));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &d in sorted_items {
+        for b in d.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_basic() {
+        let mut v = vec![2.0, 4.0, 6.0];
+        let (lo, hi) = min_max_normalize(&mut v);
+        assert_eq!((lo, hi), (2.0, 6.0));
+        assert_eq!(v, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn normalize_constant_is_zero() {
+        let mut v = vec![3.0; 4];
+        min_max_normalize(&mut v);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn normalize_empty() {
+        let mut v: Vec<f32> = vec![];
+        assert_eq!(min_max_normalize(&mut v), (0.0, 0.0));
+    }
+
+    #[test]
+    fn clique_key_distinguishes_sets() {
+        assert_ne!(clique_key(&[1, 2, 3]), clique_key(&[1, 2, 4]));
+        assert_ne!(clique_key(&[1]), clique_key(&[2]));
+        assert_ne!(clique_key(&[1, 2]), clique_key(&[12]));
+        assert_eq!(clique_key(&[5, 9]), clique_key(&[5, 9]));
+    }
+}

@@ -1,0 +1,110 @@
+//! Cross-layer integration: the AOT XLA artifact (L1 Pallas kernel + L2
+//! pipeline, compiled via PJRT) must agree with the native Rust CRM
+//! engine on every decision-level output — the guarantee that lets the
+//! experiments run on either engine interchangeably.
+//!
+//! Requires `make artifacts`; tests are skipped (with a message) when the
+//! artifacts directory is absent so `cargo test` works from a fresh clone.
+
+use akpc::crm::{sessionize, CrmBuilder, NativeCrmBuilder};
+use akpc::runtime::{ArtifactRegistry, XlaCrmBuilder};
+use akpc::trace::generator::{netflix_like, spotify_like};
+
+fn artifacts_available() -> bool {
+    ArtifactRegistry::load("artifacts").is_ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn registry_lists_built_artifacts() {
+    require_artifacts!();
+    let reg = ArtifactRegistry::load("artifacts").unwrap();
+    assert!(!reg.specs().is_empty());
+    // The base Table-II shape (n=60 -> 64, batch<=1024) must be covered.
+    assert!(reg.select(60, 256).is_some());
+    assert!(reg.select(60, 1024).is_some());
+}
+
+#[test]
+fn xla_agrees_with_native_on_netflix_windows() {
+    require_artifacts!();
+    let mut xla = XlaCrmBuilder::new("artifacts").unwrap();
+    let mut native = NativeCrmBuilder;
+    let trace = netflix_like(60, 30, 2_000, 11);
+
+    for (i, batch) in trace.requests.chunks(200).take(5).enumerate() {
+        let txs = sessionize(batch, 1.0);
+        for (theta, frac) in [(0.2f32, 1.0f32), (0.15, 1.0), (0.4, 0.5)] {
+            let a = xla.build(&txs, 60, theta, frac);
+            let b = native.build(&txs, 60, theta, frac);
+            assert_eq!(a.active, b.active, "window {i}: kept set differs");
+            assert_eq!(a.bin, b.bin, "window {i}: binary CRM differs");
+            for (x, y) in a.norm.iter().zip(&b.norm) {
+                assert!(
+                    (x - y).abs() < 1e-5,
+                    "window {i}: norm differs: {x} vs {y}"
+                );
+            }
+        }
+    }
+    assert!(xla.xla_windows > 0, "XLA path never exercised");
+    assert_eq!(xla.native_windows, 0, "unexpected native fallback");
+}
+
+#[test]
+fn xla_agrees_with_native_on_spotify_windows() {
+    require_artifacts!();
+    let mut xla = XlaCrmBuilder::new("artifacts").unwrap();
+    let mut native = NativeCrmBuilder;
+    let trace = spotify_like(60, 30, 2_000, 12);
+    for batch in trace.requests.chunks(250).take(4) {
+        let txs = sessionize(batch, 1.0);
+        let a = xla.build(&txs, 60, 0.2, 1.0);
+        let b = native.build(&txs, 60, 0.2, 1.0);
+        assert_eq!(a.active, b.active);
+        assert_eq!(a.bin, b.bin);
+    }
+}
+
+#[test]
+fn oversized_windows_fall_back_to_native() {
+    require_artifacts!();
+    let mut xla = XlaCrmBuilder::new("artifacts").unwrap();
+    // n larger than any artifact -> native fallback, same semantics.
+    let trace = netflix_like(2000, 10, 1_500, 13);
+    let txs = sessionize(&trace.requests, 1.0);
+    let a = xla.build(&txs, 2000, 0.2, 0.1);
+    let b = NativeCrmBuilder.build(&txs, 2000, 0.2, 0.1);
+    assert_eq!(a.active, b.active);
+    assert_eq!(a.bin, b.bin);
+    assert!(xla.native_windows > 0);
+}
+
+#[test]
+fn end_to_end_policy_identical_across_engines() {
+    require_artifacts!();
+    // The headline integration check: a full simulated run makes *exactly*
+    // the same caching decisions (hence costs) on both engines.
+    use akpc::bench::sweep::{EngineChoice, PolicyChoice};
+    let cfg = akpc::config::AkpcConfig {
+        n_items: 60,
+        n_servers: 50,
+        ..Default::default()
+    };
+    let trace = netflix_like(60, 50, 10_000, 14);
+    let mut native = PolicyChoice::Akpc.build(&cfg, EngineChoice::Native);
+    let mut xla = PolicyChoice::Akpc.build(&cfg, EngineChoice::Xla);
+    let rn = akpc::sim::run(native.as_mut(), &trace, cfg.batch_size);
+    let rx = akpc::sim::run(xla.as_mut(), &trace, cfg.batch_size);
+    assert_eq!(rn.ledger.c_t, rx.ledger.c_t, "C_T diverged across engines");
+    assert_eq!(rn.ledger.c_p, rx.ledger.c_p, "C_P diverged across engines");
+    assert_eq!(rn.ledger.full_hits, rx.ledger.full_hits);
+}

@@ -1,0 +1,189 @@
+//! End-to-end integration over the simulator, the experiment harness and
+//! the online coordinator — small-scale versions of the paper's
+//! experiments asserting the *shape* of each result.
+
+use akpc::bench::experiments::{self, ExpOptions};
+use akpc::bench::sweep::{run_policy_set, EngineChoice, PolicyChoice, RelativeCosts};
+use akpc::config::AkpcConfig;
+use akpc::coordinator::{Coordinator, ServeRequest};
+use akpc::runtime::CrmEngine;
+use akpc::trace::generator::{netflix_like, spotify_like};
+
+fn base_cfg() -> AkpcConfig {
+    AkpcConfig::default() // Table II
+}
+
+fn opts(n: usize) -> ExpOptions {
+    ExpOptions {
+        n_requests: n,
+        engine: EngineChoice::Native,
+        seed: 21,
+    }
+}
+
+#[test]
+fn fig5_ordering_on_both_datasets() {
+    let cfg = base_cfg();
+    let r = experiments::fig5(&opts(30_000), &cfg);
+    for ds in ["Netflix", "Spotify"] {
+        let v = |p: &str| r.rel_total(ds, p).unwrap();
+        assert!((v("OPT") - 1.0).abs() < 1e-9);
+        assert!(v("AKPC") < v("PackCache"), "{ds}: AKPC !< PackCache");
+        assert!(v("AKPC") < v("NoPacking"), "{ds}: AKPC !< NoPacking");
+        assert!(v("PackCache") < v("NoPacking"), "{ds}: PackCache !< NoPacking");
+        assert!(v("DP_Greedy") < v("NoPacking"), "{ds}: DP_Greedy !< NoPacking");
+        // "Even the AKPC variant without CS and ACM outperforms all
+        // existing baselines" (paper §V-C-1).
+        assert!(
+            v("AKPC w/o CS, w/o ACM") < v("PackCache"),
+            "{ds}: reduced AKPC !< PackCache"
+        );
+    }
+}
+
+#[test]
+fn fig6b_akpc_stays_best_across_rho() {
+    // Paper: AKPC incurs the lowest cost across all cost ratios, and keeps
+    // a clear edge over the 2-packing SOTA at ρ = 10 (~30%/27% there; the
+    // exact growth-vs-ρ trend depends on the C_P attribution subtleties
+    // discussed in EXPERIMENTS.md §Fig6b).
+    let cfg = base_cfg();
+    let r = experiments::fig6b(&opts(20_000), &cfg);
+    for ds in ["Netflix", "Spotify"] {
+        let akpc = r.series_for(ds, "AKPC").unwrap();
+        let np = r.series_for(ds, "NoPacking").unwrap();
+        let pc = r.series_for(ds, "PackCache").unwrap();
+        for (i, a) in akpc.iter().enumerate() {
+            // 2% tolerance vs NoPacking: at large ρ the C_P component (the
+            // packing-driven saving under extension accounting) becomes
+            // negligible and the two converge on transfer-noise.
+            assert!(
+                *a <= np[i] * 1.02 && *a <= pc[i] + 1e-9,
+                "{ds}: AKPC not best at rho index {i} ({a:.3} vs np {:.3} pc {:.3})",
+                np[i],
+                pc[i]
+            );
+        }
+        // The edge over PackCache persists at the largest ρ.
+        let edge = 1.0 - akpc.last().unwrap() / pc.last().unwrap();
+        assert!(edge > 0.05, "{ds}: edge over PackCache at rho=10 is {edge:.3}");
+    }
+}
+
+#[test]
+fn fig8c_batch_size_helps() {
+    let cfg = base_cfg();
+    let r = experiments::fig8c(&opts(30_000), &cfg);
+    let akpc = r.series_for("Netflix", "AKPC").unwrap();
+    // Paper: increasing batch size 50 -> 500 reduces relative cost.
+    assert!(
+        akpc.last().unwrap() < &akpc[0],
+        "batch sweep not decreasing: {akpc:?}"
+    );
+}
+
+#[test]
+fn fig9a_acm_shifts_distribution_up() {
+    let cfg = base_cfg();
+    let r = experiments::fig9a(&opts(20_000), &cfg);
+    for ds in ["Netflix", "Spotify"] {
+        let base = r.mean_size(ds, "AKPC w/o CS, w/o ACM").unwrap();
+        let full = r.mean_size(ds, "AKPC (Proposed)").unwrap();
+        // ACM merges near-cliques to ω -> mean size goes up vs the capped
+        // w/o-ACM variant; vs the uncapped variant it must stay within ω.
+        let no_acm = r.mean_size(ds, "AKPC w/o ACM").unwrap();
+        assert!(
+            full > no_acm,
+            "{ds}: ACM did not shift sizes up ({no_acm:.2} -> {full:.2})"
+        );
+        assert!(base > 0.0 && full > 0.0);
+    }
+}
+
+#[test]
+fn dp_greedy_offline_beats_online_packcache() {
+    // Offline knowledge should not hurt (paper Fig. 5: DP_Greedy below
+    // PackCache).
+    let cfg = base_cfg();
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 30_000, 22);
+    let reports = run_policy_set(
+        &cfg,
+        &trace,
+        &[PolicyChoice::DpGreedy, PolicyChoice::PackCache, PolicyChoice::Opt],
+        EngineChoice::Native,
+    );
+    let rel = RelativeCosts::from_reports(&reports);
+    assert!(rel.of("DP_Greedy").unwrap() <= rel.of("PackCache").unwrap());
+}
+
+#[test]
+fn coordinator_replay_matches_simulator() {
+    // The online coordinator and the offline simulator implement the same
+    // Algorithm 1: replaying a trace through the service must produce the
+    // same ledger as sim::run.
+    let cfg = AkpcConfig {
+        n_servers: 40,
+        ..base_cfg()
+    };
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 5_000, 23);
+
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native);
+    for r in &trace.requests {
+        coord
+            .serve(ServeRequest {
+                items: r.items.clone(),
+                server: r.server,
+                time: Some(r.time),
+            })
+            .unwrap();
+    }
+    let m = coord.shutdown();
+
+    let mut policy = akpc::algo::Akpc::new(&cfg);
+    let rep = akpc::sim::run(&mut policy, &trace, cfg.batch_size);
+
+    assert!(
+        (m.ledger.total() - rep.ledger.total()).abs() < 1e-6,
+        "coordinator {} vs simulator {}",
+        m.ledger.total(),
+        rep.ledger.total()
+    );
+    assert_eq!(m.ledger.full_hits, rep.ledger.full_hits);
+}
+
+#[test]
+fn spotify_churn_stresses_adjustment_without_breaking() {
+    let cfg = base_cfg();
+    let trace = spotify_like(cfg.n_items, cfg.n_servers, 60_000, 24);
+    let mut akpc = akpc::algo::Akpc::new(&cfg);
+    let rep = akpc::sim::run(&mut akpc, &trace, cfg.batch_size);
+    akpc.cliques().check_invariants().unwrap();
+    assert_eq!(rep.ledger.requests, 60_000);
+    assert!(rep.ledger.hit_rate() > 0.3, "churn collapsed the hit rate");
+}
+
+#[test]
+fn ablation_crm_window_span_helps() {
+    // DESIGN.md §6: single-batch CRMs fragment cliques; the sliding
+    // multi-batch window must not be worse.
+    let cfg = base_cfg();
+    let ab = experiments::ablations(&opts(15_000), &cfg);
+    let window = ab
+        .iter()
+        .find(|r| r.id.contains("CRM window"))
+        .expect("window ablation present");
+    let akpc = window.series_for("Netflix", "AKPC").unwrap();
+    assert!(
+        akpc.last().unwrap() <= &(akpc[0] * 1.02),
+        "wider CRM window should not hurt: {akpc:?}"
+    );
+}
+
+#[test]
+fn adversarial_cli_table_is_tight() {
+    let cfg = base_cfg();
+    for s in 1..=cfg.omega {
+        let (measured, bound) = experiments::adversarial_ratio(&cfg, s, 50);
+        assert!((measured - bound).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,311 @@
+//! Property-based tests over the coordinator invariants (offline
+//! environment — no proptest crate; the in-tree rig draws hundreds of
+//! randomized cases from `akpc::util::Rng` and reports the failing seed,
+//! which reproduces deterministically).
+
+use akpc::algo::{Akpc, CachePolicy, NoPacking, Opt, PackCache2};
+use akpc::cache::CacheState;
+use akpc::clique::CliqueSet;
+use akpc::config::AkpcConfig;
+use akpc::crm::{diff_windows, native::build_native, sessionize, CrmWindow};
+use akpc::trace::model::{Request, Trace};
+use akpc::util::{json, Rng};
+
+/// Run `f` over `cases` random seeds; panic with the seed on failure.
+fn forall(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 1..=cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property `{name}` failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+/// Random request window over `n` items / `m` servers.
+fn random_window(rng: &mut Rng, len: usize, n: u32, m: u32, t0: f64) -> Vec<Request> {
+    let mut t = t0;
+    (0..len)
+        .map(|_| {
+            t += rng.exp(0.01);
+            let k = rng.range(1, 4);
+            let items: Vec<u32> = (0..k).map(|_| rng.below(n as usize) as u32).collect();
+            Request::new(items, rng.below(m as usize) as u32, t)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cliques_always_disjoint_and_bounded() {
+    forall("cliques_disjoint", 200, |rng| {
+        let n = 24 + rng.below(40) as u32;
+        let omega = 2 + rng.below(6) as u32;
+        let gamma = 0.5 + rng.f64() as f32 * 0.5;
+        let w1 = random_window(rng, 150, n, 4, 0.0);
+        let w2 = random_window(rng, 150, n, 4, 100.0);
+        let c1 = build_native(&sessionize(&w1, 1.0), n, 0.2, 1.0);
+        let c2 = build_native(&sessionize(&w2, 1.0), n, 0.2, 1.0);
+
+        let prev = CliqueSet::generate(
+            &CliqueSet::new(),
+            &c1,
+            &diff_windows(&CrmWindow::default(), &c1),
+            omega,
+            gamma,
+            true,
+            true,
+        );
+        prev.check_invariants().expect("window 1 invariants");
+        for c in prev.iter() {
+            assert!(c.len() <= omega as usize, "oversized clique with CS on");
+        }
+
+        // Incremental window with all module combinations.
+        for (cs, acm) in [(true, true), (true, false), (false, true), (false, false)] {
+            let set = CliqueSet::generate(
+                &prev,
+                &c2,
+                &diff_windows(&c1, &c2),
+                omega,
+                gamma,
+                cs,
+                acm,
+            );
+            set.check_invariants().expect("window 2 invariants");
+            if cs {
+                for c in set.iter() {
+                    assert!(c.len() <= omega as usize);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cache_state_g_count_consistent() {
+    forall("cache_g_consistent", 200, |rng| {
+        let mut cache = CacheState::new();
+        let mut now = 0.0;
+        let keys: Vec<u64> = (0..8).map(|i| 1000 + i).collect();
+        let current: std::collections::HashSet<u64> =
+            keys.iter().copied().take(4).collect();
+        for _ in 0..300 {
+            now += rng.exp(0.3);
+            cache.process_expirations(now, &current, 1.0);
+            let key = keys[rng.below(keys.len())];
+            let server = rng.below(5) as u32;
+            if cache.is_cached(key, server, now) {
+                cache.extend(key, server, now + 1.0);
+            } else if cache.expiry_of(key, server).is_none() {
+                cache.insert(key, 1 + rng.below(5) as u32, server, now + 1.0);
+            }
+            cache.check_invariants().expect("G[c] consistency");
+        }
+    });
+}
+
+#[test]
+fn prop_no_data_loss_for_current_cliques() {
+    // Observation 3: a clique in Clique(W) that was cached at least once
+    // keeps >= 1 alive copy across any expiry pattern.
+    forall("no_data_loss", 100, |rng| {
+        let mut cache = CacheState::new();
+        let current: std::collections::HashSet<u64> = [7u64].into_iter().collect();
+        cache.insert(7, 3, 0, 1.0);
+        let mut now = 0.0;
+        for _ in 0..100 {
+            now += rng.exp(0.7);
+            cache.process_expirations(now, &current, 1.0);
+            assert!(
+                cache.copy_count(7) >= 1,
+                "last copy of a current clique was dropped"
+            );
+            // Sometimes add/expire extra copies.
+            if rng.chance(0.3) {
+                let s = 1 + rng.below(4) as u32;
+                if !cache.is_cached(7, s, now) && cache.expiry_of(7, s).is_none() {
+                    cache.insert(7, 3, s, now + 0.5);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_costs_nonnegative_and_accumulating() {
+    forall("costs_monotone", 60, |rng| {
+        let cfg = AkpcConfig {
+            n_items: 40,
+            n_servers: 8,
+            batch_size: 50,
+            crm_window_batches: 2,
+            ..Default::default()
+        };
+        let mut policy = Akpc::new(&cfg);
+        let window = random_window(rng, 400, 40, 8, 0.0);
+        let mut last_total = 0.0;
+        for (i, r) in window.iter().enumerate() {
+            policy.handle_request(r);
+            let l = policy.ledger();
+            assert!(l.c_p >= 0.0 && l.c_t >= 0.0);
+            assert!(
+                l.total() >= last_total - 1e-9,
+                "total cost decreased at step {i}"
+            );
+            last_total = l.total();
+        }
+        let l = policy.ledger();
+        assert_eq!(l.requests, window.len() as u64);
+        assert!(l.items_delivered >= l.items_requested);
+    });
+}
+
+#[test]
+fn prop_policies_agree_on_request_count() {
+    forall("request_accounting", 40, |rng| {
+        let n = 30u32;
+        let m = 6u32;
+        let reqs = random_window(rng, 300, n, m, 0.0);
+        let trace = Trace {
+            requests: reqs,
+            n_items: n,
+            n_servers: m,
+            name: "prop".into(),
+        };
+        let cfg = AkpcConfig {
+            n_items: n,
+            n_servers: m,
+            batch_size: 64,
+            ..Default::default()
+        };
+        let mut policies: Vec<Box<dyn CachePolicy>> = vec![
+            Box::new(NoPacking::new(&cfg)),
+            Box::new(PackCache2::new(&cfg)),
+            Box::new(Akpc::new(&cfg)),
+            Box::new(Opt::new(&cfg)),
+        ];
+        for p in policies.iter_mut() {
+            let rep = akpc::sim::run(p.as_mut(), &trace, cfg.batch_size);
+            assert_eq!(rep.ledger.requests, 300);
+            assert_eq!(
+                rep.ledger.full_hits + rep.ledger.misses,
+                300,
+                "{}: hits+misses != requests",
+                rep.name
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_sessionize_preserves_items_and_respects_gap() {
+    forall("sessionize", 200, |rng| {
+        let window = random_window(rng, 120, 30, 4, 0.0);
+        let gap = 0.2 + rng.f64();
+        let txs = sessionize(&window, gap);
+        // Item preservation per server.
+        let items_of = |rs: &[Request]| {
+            let mut v: Vec<(u32, u32)> = rs
+                .iter()
+                .flat_map(|r| r.items.iter().map(move |&d| (r.server, d)))
+                .collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        assert_eq!(items_of(&window), items_of(&txs));
+        // Transactions are fewer or equal, sorted-deduped item lists.
+        assert!(txs.len() <= window.len());
+        for tx in &txs {
+            assert!(tx.items.windows(2).all(|w| w[0] < w[1]));
+        }
+    });
+}
+
+#[test]
+fn prop_competitive_ratio_bound_holds_on_adversary() {
+    // The measured adversarial ratio never exceeds the derived Theorem-1
+    // bound, for any (ω, α, S).
+    forall("competitive_bound", 200, |rng| {
+        let cfg = AkpcConfig {
+            omega: 2 + rng.below(8) as u32,
+            alpha: 0.05 + rng.f64() * 0.95,
+            ..Default::default()
+        };
+        let s = 1 + rng.below(cfg.omega as usize) as u32;
+        let (measured, bound) =
+            akpc::bench::experiments::adversarial_ratio(&cfg, s, 1 + rng.below(20) as u32);
+        assert!(
+            measured <= bound + 1e-9,
+            "ratio {measured} exceeds bound {bound} (omega={}, alpha={}, S={s})",
+            cfg.omega,
+            cfg.alpha
+        );
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall("json_roundtrip", 300, |rng| {
+        // Random JSON value, depth-limited.
+        fn gen(rng: &mut Rng, depth: usize) -> json::Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => json::Json::Null,
+                1 => json::Json::Bool(rng.chance(0.5)),
+                2 => json::Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+                3 => {
+                    let len = rng.below(12);
+                    json::Json::Str(
+                        (0..len)
+                            .map(|_| {
+                                let c = rng.below(128) as u8;
+                                if c.is_ascii_graphic() || c == b' ' {
+                                    c as char
+                                } else {
+                                    '\n'
+                                }
+                            })
+                            .collect(),
+                    )
+                }
+                4 => json::Json::Arr(
+                    (0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect(),
+                ),
+                _ => json::Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        let parsed = json::parse(&v.to_string()).expect("parse back");
+        assert_eq!(parsed, v);
+        let pretty = json::parse(&v.to_string_pretty()).expect("parse pretty");
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn prop_trace_binary_roundtrip() {
+    forall("trace_io_roundtrip", 50, |rng| {
+        let n = 10 + rng.below(50) as u32;
+        let m = 1 + rng.below(20) as u32;
+        let len = 1 + rng.below(200);
+        let reqs = random_window(rng, len, n, m, 0.0);
+        let trace = Trace {
+            requests: reqs,
+            n_items: n,
+            n_servers: m,
+            name: format!("prop-{}", rng.below(1000)),
+        };
+        let dir = akpc::util::tempdir::TempDir::new("prop-io").unwrap();
+        let p = dir.file("t.bin");
+        akpc::trace::io::write_binary(&trace, &p).unwrap();
+        let back = akpc::trace::io::read_binary(&p).unwrap();
+        assert_eq!(back.requests, trace.requests);
+        assert_eq!(back.name, trace.name);
+    });
+}

@@ -115,6 +115,38 @@ fn trace_generation() {
     );
 }
 
+fn sharded_replay() {
+    // Serving-path scaling: parallel replay through the sharded
+    // coordinator at 1/2/4/8 shards (async window ticks — the throughput
+    // configuration; see DESIGN.md §2.3).
+    use akpc::sim::{replay_sharded, ReplayMode};
+    let cfg = AkpcConfig {
+        n_servers: 96,
+        ..Default::default()
+    };
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 50_000, 1);
+    let g = Group::new("sharded_replay").iters(3);
+    for n_shards in [1usize, 2, 4, 8] {
+        let s = g.bench(&format!("shards_{n_shards}_50k"), || {
+            replay_sharded(
+                &cfg,
+                akpc::runtime::CrmEngine::Native,
+                &trace,
+                n_shards,
+                ReplayMode::Parallel,
+            )
+            .expect("replay failed")
+            .metrics
+            .ledger
+            .total()
+        });
+        println!(
+            "  -> {:.0} requests/s through {n_shards} shard(s)",
+            trace.len() as f64 / s.median_secs()
+        );
+    }
+}
+
 fn main() {
     println!("== hot_paths bench suite ==");
     request_path();
@@ -122,4 +154,5 @@ fn main() {
     crm_xla_vs_native();
     clique_generation();
     trace_generation();
+    sharded_replay();
 }

@@ -6,9 +6,11 @@
 //!
 //! Proves all layers compose:
 //!   * L1/L2 — the AOT-compiled JAX/Pallas CRM pipeline (HLO text) is
-//!     loaded and executed by the PJRT CPU client on every window tick;
-//!   * L3 — the tokio coordinator routes batched requests through the
-//!     AKPC policy, Python never on the request path.
+//!     loaded and executed by the PJRT CPU client on every window tick
+//!     (requires the `xla` feature + artifacts; native fallback otherwise);
+//!   * L3 — the sharded coordinator routes requests by ESS to four shard
+//!     actors under one clique-generation worker, Python never on the
+//!     request path.
 //!
 //! Replays a 1M-request Netflix-like trace through the online coordinator
 //! (XLA engine), then runs the offline baselines on the same trace and
@@ -38,9 +40,9 @@ fn main() -> anyhow::Result<()> {
         cfg.batch_size
     );
 
-    // ---- Online serving through the coordinator (XLA runtime) ----
+    // ---- Online serving through the sharded coordinator ----
     let t0 = std::time::Instant::now();
-    let coord = Coordinator::start(cfg.clone(), CrmEngine::Xla);
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Xla, 4);
     let mut delivered_total: u64 = 0;
     for r in &trace.requests {
         let resp = coord.serve(ServeRequest {

@@ -1,0 +1,84 @@
+//! Sharded multi-ESS serving demo: replay one trace through 1-, 2-, 4- and
+//! 8-shard coordinators and verify the tentpole invariant — per-shard cost
+//! ledgers sum exactly (mod float summation order) to the single-leader
+//! ledger on the same trace (DESIGN.md §2.3).
+//!
+//! ```bash
+//! cargo run --release --example sharded_serve [n_requests]
+//! ```
+
+use akpc::algo::Akpc;
+use akpc::config::AkpcConfig;
+use akpc::runtime::CrmEngine;
+use akpc::sim::{self, replay_sharded, ReplayMode};
+use akpc::trace::generator::netflix_like;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+
+    let cfg = AkpcConfig::default(); // Table II: n=60, m=600, batch=200
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, n_requests, cfg.seed);
+    println!(
+        "sharded_serve: {} requests over m={} servers (batch={})",
+        trace.len(),
+        cfg.n_servers,
+        cfg.batch_size
+    );
+
+    // Single-leader reference: the offline simulator running the same
+    // Algorithm 1 pipeline.
+    let mut akpc = Akpc::new(&cfg);
+    let reference = sim::run(&mut akpc, &trace, cfg.batch_size);
+    println!(
+        "single-leader reference: total={:.1} (C_T={:.1} C_P={:.1})",
+        reference.total(),
+        reference.ledger.c_t,
+        reference.ledger.c_p
+    );
+
+    println!("\n-- deterministic ordered replay (sync window barrier) --");
+    for n_shards in [1usize, 2, 4, 8] {
+        let rep = replay_sharded(
+            &cfg,
+            CrmEngine::Native,
+            &trace,
+            n_shards,
+            ReplayMode::Ordered,
+        )?;
+        let sum = rep.shard_sum();
+        let diff = (sum - reference.total()).abs();
+        println!(
+            "{}  shard-sum={:.3} diff-vs-leader={:.2e}",
+            rep.row(),
+            sum,
+            diff
+        );
+        sim::replay::assert_shard_sum_matches(&rep, reference.total());
+        for s in &rep.metrics.per_shard {
+            println!(
+                "    shard {}: served={} total={:.1} retentions={}",
+                s.shard,
+                s.served,
+                s.ledger.total(),
+                s.retentions
+            );
+        }
+    }
+
+    println!("\n-- parallel replay (async ticks, throughput mode) --");
+    for n_shards in [1usize, 2, 4, 8] {
+        let rep = replay_sharded(
+            &cfg,
+            CrmEngine::Native,
+            &trace,
+            n_shards,
+            ReplayMode::Parallel,
+        )?;
+        println!("{}", rep.row());
+    }
+    println!("\nper-shard ledgers sum to the single-leader ledger: OK");
+    Ok(())
+}

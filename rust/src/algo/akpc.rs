@@ -20,9 +20,13 @@ use crate::crm::{diff_windows, CrmBuilder, CrmWindow, NativeCrmBuilder};
 use crate::trace::model::Request;
 use crate::util::Histogram;
 
-pub struct Akpc {
+/// The Event-1 machinery of Algorithm 1 — CRM windowing, diffing and
+/// clique regeneration — factored out of [`Akpc`] so the sharded
+/// coordinator's background clique-generation worker (DESIGN.md §2.3) runs
+/// the *identical* pipeline over the *identical* state and the per-shard
+/// ledgers stay bit-equivalent to a single-leader run.
+pub struct CliqueGenPipeline {
     cfg: AkpcConfig,
-    core: PackedCacheCore,
     builder: Box<dyn CrmBuilder>,
     prev_crm: CrmWindow,
     cliques: CliqueSet,
@@ -40,16 +44,9 @@ pub struct Akpc {
     pub windows: u64,
 }
 
-impl Akpc {
-    /// AKPC with the native CRM engine.
-    pub fn new(cfg: &AkpcConfig) -> Self {
-        Self::with_builder(cfg, Box::new(NativeCrmBuilder))
-    }
-
-    /// AKPC with an explicit CRM engine (the runtime injects the XLA one).
-    pub fn with_builder(cfg: &AkpcConfig, builder: Box<dyn CrmBuilder>) -> Self {
+impl CliqueGenPipeline {
+    pub fn new(cfg: &AkpcConfig, builder: Box<dyn CrmBuilder>) -> Self {
         Self {
-            core: PackedCacheCore::new(CostModel::from_config(cfg), cfg.charge_policy),
             cfg: cfg.clone(),
             builder,
             prev_crm: CrmWindow::default(),
@@ -61,7 +58,7 @@ impl Akpc {
         }
     }
 
-    /// Current clique set (inspection / tests).
+    /// Current clique set.
     pub fn cliques(&self) -> &CliqueSet {
         &self.cliques
     }
@@ -71,11 +68,19 @@ impl Akpc {
         self.builder.engine_name()
     }
 
-    /// Adjust the maximum clique size ω in place (used by the AdaptiveK
-    /// controller — future-work item (i)). Takes effect at the next
-    /// window tick; cache state and ledger carry across.
+    /// Display name of the policy this pipeline generates for.
+    pub fn policy_name(&self) -> String {
+        format!("AKPC{}", self.variant_suffix())
+    }
+
+    /// Adjust the maximum clique size ω; takes effect at the next tick.
     pub fn set_omega(&mut self, omega: u32) {
         self.cfg.omega = omega.max(1);
+    }
+
+    /// Cumulative clique-size distribution over ticks (Fig. 9a).
+    pub fn clique_sizes(&self) -> Histogram {
+        self.hist.clone()
     }
 
     fn variant_suffix(&self) -> &'static str {
@@ -86,18 +91,11 @@ impl Akpc {
             (false, false) => " w/o CS, w/o ACM",
         }
     }
-}
 
-impl CachePolicy for Akpc {
-    fn name(&self) -> String {
-        format!("AKPC{}", self.variant_suffix())
-    }
-
-    fn handle_request(&mut self, r: &Request) {
-        self.core.handle_request(r);
-    }
-
-    fn end_batch(&mut self, batch: &[Request]) {
+    /// One window tick (Algorithm 1 Event 1): slide the correlation
+    /// window, rebuild the CRM, diff, regenerate cliques. Returns the new
+    /// clique set for installation into the serving state(s).
+    pub fn tick(&mut self, batch: &[Request]) -> &CliqueSet {
         let t0 = std::time::Instant::now();
 
         // Slide the correlation window (last `crm_window_batches` T^CG
@@ -131,14 +129,74 @@ impl CachePolicy for Akpc {
         );
         self.prev_crm = crm;
 
-        // Install for subsequent requests (Algorithm 1 line 5).
-        self.core.set_cliques(self.cliques.iter());
         for c in self.cliques.iter() {
             self.hist.record(c.len() as u32);
         }
-
         self.clique_gen_secs += t0.elapsed().as_secs_f64();
         self.windows += 1;
+        &self.cliques
+    }
+}
+
+pub struct Akpc {
+    core: PackedCacheCore,
+    gen: CliqueGenPipeline,
+    /// Cumulative time spent in clique generation (Fig. 9b); mirrors the
+    /// pipeline after every tick.
+    pub clique_gen_secs: f64,
+    /// Window ticks executed; mirrors the pipeline after every tick.
+    pub windows: u64,
+}
+
+impl Akpc {
+    /// AKPC with the native CRM engine.
+    pub fn new(cfg: &AkpcConfig) -> Self {
+        Self::with_builder(cfg, Box::new(NativeCrmBuilder))
+    }
+
+    /// AKPC with an explicit CRM engine (the runtime injects the XLA one).
+    pub fn with_builder(cfg: &AkpcConfig, builder: Box<dyn CrmBuilder>) -> Self {
+        Self {
+            core: PackedCacheCore::new(CostModel::from_config(cfg), cfg.charge_policy),
+            gen: CliqueGenPipeline::new(cfg, builder),
+            clique_gen_secs: 0.0,
+            windows: 0,
+        }
+    }
+
+    /// Current clique set (inspection / tests).
+    pub fn cliques(&self) -> &CliqueSet {
+        self.gen.cliques()
+    }
+
+    /// CRM engine in use.
+    pub fn engine_name(&self) -> &'static str {
+        self.gen.engine_name()
+    }
+
+    /// Adjust the maximum clique size ω in place (used by the AdaptiveK
+    /// controller — future-work item (i)). Takes effect at the next
+    /// window tick; cache state and ledger carry across.
+    pub fn set_omega(&mut self, omega: u32) {
+        self.gen.set_omega(omega);
+    }
+}
+
+impl CachePolicy for Akpc {
+    fn name(&self) -> String {
+        self.gen.policy_name()
+    }
+
+    fn handle_request(&mut self, r: &Request) {
+        self.core.handle_request(r);
+    }
+
+    fn end_batch(&mut self, batch: &[Request]) {
+        let cliques = self.gen.tick(batch);
+        // Install for subsequent requests (Algorithm 1 line 5).
+        self.core.set_cliques(cliques.iter());
+        self.clique_gen_secs = self.gen.clique_gen_secs;
+        self.windows = self.gen.windows;
     }
 
     fn ledger(&self) -> &CostLedger {
@@ -146,7 +204,7 @@ impl CachePolicy for Akpc {
     }
 
     fn clique_sizes(&self) -> Histogram {
-        self.hist.clone()
+        self.gen.clique_sizes()
     }
 }
 

@@ -21,7 +21,7 @@ pub mod opt;
 pub mod packcache2;
 
 pub use adaptive::AdaptiveK;
-pub use akpc::Akpc;
+pub use akpc::{Akpc, CliqueGenPipeline};
 pub use dp_greedy::DpGreedy;
 pub use no_packing::NoPacking;
 pub use opt::Opt;
@@ -139,9 +139,15 @@ impl PackedCacheCore {
         }
     }
 
-    /// Algorithm 5 for one request.
-    pub fn handle_request(&mut self, r: &Request) {
-        let now = r.time;
+    /// Advance expiry processing (Algorithm 6) to `now` without serving a
+    /// request, charging retention rent exactly as a request arrival
+    /// would. Used by the sharded coordinator's shutdown quiesce: a shard
+    /// only sweeps at its *own* request times, so without a final sweep to
+    /// the global end time its ledger would miss the retention rent a
+    /// single leader charges when other servers' requests advance the
+    /// clock (DESIGN.md §2.3). Idempotent: re-advancing to a past time
+    /// processes nothing.
+    pub fn advance_time(&mut self, now: f64) {
         let retained_before = self.cache.retained_units;
         self.cache
             .process_expirations(now, &self.current_keys, self.cost.delta_t);
@@ -149,6 +155,12 @@ impl PackedCacheCore {
         // (uncharged in the paper's pseudocode; see DESIGN.md §6).
         self.ledger.c_p +=
             self.cost.mu * (self.cache.retained_units - retained_before);
+    }
+
+    /// Algorithm 5 for one request.
+    pub fn handle_request(&mut self, r: &Request) {
+        let now = r.time;
+        self.advance_time(now);
 
         // Gather distinct cliques + per-clique requested counts
         // (|D_i| ≤ d_max, so linear dedup beats hashing).

@@ -15,7 +15,7 @@ pub enum EngineChoice {
 }
 
 impl EngineChoice {
-    fn to_engine(self) -> CrmEngine {
+    pub fn to_engine(self) -> CrmEngine {
         match self {
             EngineChoice::Native => CrmEngine::Native,
             EngineChoice::Xla => CrmEngine::Xla,
@@ -139,10 +139,67 @@ impl RelativeCosts {
     }
 }
 
+/// One row of the serving-path shard-scaling sweep.
+#[derive(Debug, Clone)]
+pub struct ShardScalingRow {
+    pub n_shards: usize,
+    pub requests_per_sec: f64,
+    pub total_cost: f64,
+    pub p99_latency_us: u32,
+}
+
+/// Replay `trace` through the sharded coordinator at each shard count
+/// (parallel clients, async ticks — the throughput configuration) and
+/// report req/s + cost per configuration. Used by `benches/hot_paths.rs`
+/// and `akpc exp shards` to exercise 1/2/4/8-shard setups.
+pub fn shard_scaling(
+    cfg: &AkpcConfig,
+    trace: &Trace,
+    shard_counts: &[usize],
+    engine: EngineChoice,
+) -> anyhow::Result<Vec<ShardScalingRow>> {
+    let mut rows = Vec::with_capacity(shard_counts.len());
+    for &n in shard_counts {
+        let rep = sim::replay_sharded(
+            cfg,
+            engine.to_engine(),
+            trace,
+            n,
+            sim::ReplayMode::Parallel,
+        )?;
+        rows.push(ShardScalingRow {
+            n_shards: rep.n_shards,
+            requests_per_sec: rep.requests_per_sec,
+            total_cost: rep.metrics.ledger.total(),
+            p99_latency_us: rep.metrics.latency_us.quantile(0.99),
+        });
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::trace::generator::netflix_like;
+
+    #[test]
+    fn shard_scaling_reports_all_counts() {
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 16,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        };
+        let trace = netflix_like(30, 16, 2_000, 2);
+        let rows = shard_scaling(&cfg, &trace, &[1, 2], EngineChoice::Native).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].n_shards, 1);
+        assert_eq!(rows[1].n_shards, 2);
+        for r in &rows {
+            assert!(r.requests_per_sec > 0.0);
+            assert!(r.total_cost > 0.0);
+        }
+    }
 
     #[test]
     fn policy_set_runs_and_normalizes() {

@@ -1,0 +1,241 @@
+//! Cross-shard copy board: the shared view of *every* packed-copy lifetime
+//! that makes Algorithm 6's retention rule exact when cache state is
+//! sharded per ESS group (DESIGN.md §2.3).
+//!
+//! Algorithm 6 line 3 retains the **globally last** alive copy of a
+//! current clique. `G[c]` is the only cross-server coupling in the whole
+//! request path — `is_cached` / `extend` / `insert` are all per
+//! `(key, server)` — so the sharded coordinator keeps per-shard
+//! [`CacheState`](super::CacheState)s for the hot path and routes only the
+//! retention decision through this board.
+//!
+//! ## Why lifetimes, not a shared counter
+//!
+//! Shards sweep their expiry heaps at their *own* request times, so a
+//! naively shared `G[c]` counter would be decremented in sweep order, which
+//! differs from the single leader's global time order. The decision the
+//! single leader actually makes at a genuine expiry `(t, c, j)` is
+//! order-independent once restated structurally:
+//!
+//! > retain iff no other server holds a copy that was **created before
+//! > `t`** and is still alive at `t` — expiry `> t`, or `= t` with a
+//! > larger server id (the leader's heap breaks expiry ties by server id,
+//! > dropping all but the last).
+//!
+//! Both bounds of a copy's lifetime matter, because a shard may judge an
+//! old event long after it happened (at its next request, a snapshot
+//! install, or the shutdown quiesce):
+//!
+//! * **Creation**: a copy another shard fetched *after* `t` did not exist
+//!   when the leader processed the event, so it must not block — each
+//!   board entry records the sweep clock at insert time ([`Incarnation`]).
+//! * **Expiry**: a copy that died at `e > t` was alive at `t` and must
+//!   still block, so dropped incarnations are kept as tombstones rather
+//!   than removed. They are pruned once every shard's sweep clock has
+//!   passed them ([`CopyBoard::prune`]).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// One lifetime `[start, expiry)` of a copy of some clique on one server.
+/// A re-fetch after expiry starts a *new* incarnation; extensions (and
+/// Algorithm-6 retentions) move `expiry` of the current one forward.
+#[derive(Debug, Clone, Copy)]
+struct Incarnation {
+    server: u32,
+    start: f64,
+    expiry: f64,
+}
+
+/// Shared lifetime view `key -> [incarnations]`.
+///
+/// All mutation goes through [`CacheState`](super::CacheState) mirrors
+/// (`insert` / `extend` / retention), so the board never disagrees with the
+/// union of the per-shard states. Entries are small vectors: a clique copy
+/// rarely lives on more than a handful of ESSs between prunes.
+#[derive(Debug, Default)]
+pub struct CopyBoard {
+    inner: Mutex<HashMap<u64, Vec<Incarnation>>>,
+}
+
+impl CopyBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a fresh copy of `key` on `server`: created at sweep-clock
+    /// `start`, expiring at `expiry`.
+    pub fn note_insert(&self, key: u64, server: u32, start: f64, expiry: f64) {
+        let mut map = self.inner.lock().expect("copy board poisoned");
+        map.entry(key).or_default().push(Incarnation {
+            server,
+            start,
+            expiry,
+        });
+    }
+
+    /// Raise the expiry of the *current* (latest-started) incarnation of
+    /// `key` on `server`. Expiries never move backwards.
+    pub fn note_extend(&self, key: u64, server: u32, expiry: f64) {
+        let mut map = self.inner.lock().expect("copy board poisoned");
+        let incs = map.entry(key).or_default();
+        let mut current: Option<usize> = None;
+        for (i, inc) in incs.iter().enumerate() {
+            let newer = match current {
+                None => true,
+                Some(c) => inc.start > incs[c].start,
+            };
+            if inc.server == server && newer {
+                current = Some(i);
+            }
+        }
+        match current {
+            Some(i) => {
+                if expiry > incs[i].expiry {
+                    incs[i].expiry = expiry;
+                }
+            }
+            // Extend without a recorded insert (direct CacheState use):
+            // record a conservatively early start so it still blocks.
+            None => incs.push(Incarnation {
+                server,
+                start: f64::NEG_INFINITY,
+                expiry,
+            }),
+        }
+    }
+
+    /// The Algorithm-6 retention predicate for a genuine expiry event
+    /// `(key, server)` at time `at`: true iff no other server has an
+    /// incarnation that was alive at `at` and outlives this copy
+    /// (`start < at` and `expiry > at`, ties by server id).
+    pub fn is_latest(&self, key: u64, server: u32, at: f64) -> bool {
+        let map = self.inner.lock().expect("copy board poisoned");
+        match map.get(&key) {
+            None => true,
+            Some(incs) => !incs.iter().any(|i| {
+                i.server != server
+                    && i.start < at
+                    && (i.expiry > at || (i.expiry == at && i.server > server))
+            }),
+        }
+    }
+
+    /// Drop incarnations whose expiry lies strictly before `watermark` —
+    /// safe once `watermark = min` over all shards' sweep clocks, because
+    /// every future retention decision happens at an event time
+    /// `> watermark` and only incarnations with expiry `>` the event time
+    /// can influence it.
+    pub fn prune(&self, watermark: f64) {
+        if !watermark.is_finite() {
+            return;
+        }
+        let mut map = self.inner.lock().expect("copy board poisoned");
+        map.retain(|_, incs| {
+            incs.retain(|i| i.expiry >= watermark);
+            !incs.is_empty()
+        });
+    }
+
+    /// Number of tracked incarnations (observability/tests).
+    pub fn entries(&self) -> usize {
+        self.inner
+            .lock()
+            .expect("copy board poisoned")
+            .values()
+            .map(Vec::len)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latest_copy_wins() {
+        let b = CopyBoard::new();
+        b.note_insert(7, 0, 0.0, 1.0);
+        b.note_insert(7, 1, 0.0, 2.0);
+        // Server 0 expires at 1.0 while server 1 is alive until 2.0.
+        assert!(!b.is_latest(7, 0, 1.0));
+        // Server 1 at 2.0: server 0's tombstone (1.0) is dead by then.
+        assert!(b.is_latest(7, 1, 2.0));
+    }
+
+    #[test]
+    fn ties_break_by_server_id() {
+        let b = CopyBoard::new();
+        b.note_insert(7, 0, 0.0, 1.0);
+        b.note_insert(7, 3, 0.0, 1.0);
+        assert!(!b.is_latest(7, 0, 1.0), "lower id must defer");
+        assert!(b.is_latest(7, 3, 1.0), "highest id is the survivor");
+    }
+
+    #[test]
+    fn tombstones_block_earlier_decisions() {
+        let b = CopyBoard::new();
+        b.note_insert(7, 0, 0.0, 1.0);
+        b.note_insert(7, 1, 0.0, 2.0);
+        // Server 1's copy dies at 2.0 (tombstone stays). A late sweep of
+        // server 0's event at t=1.0 must still see it as a blocker.
+        assert!(!b.is_latest(7, 0, 1.0));
+    }
+
+    #[test]
+    fn copies_created_after_the_event_do_not_block() {
+        // The time-consistency case: server 0's copy expires at 11.2, a
+        // lagging shard decides that event late — after server 2 re-fetched
+        // the clique at t=20.5. The leader retained at 11.2 (nothing else
+        // was alive *then*), so the board must too.
+        let b = CopyBoard::new();
+        b.note_insert(7, 0, 10.0, 11.2);
+        b.note_insert(7, 2, 20.5, 21.5);
+        assert!(b.is_latest(7, 0, 11.2), "future copy must not block");
+        // But it does block decisions after its creation.
+        assert!(!b.is_latest(7, 0, 21.0));
+    }
+
+    #[test]
+    fn reincarnation_keeps_old_lifetime_as_blocker() {
+        let b = CopyBoard::new();
+        // First life [0, 5), re-fetched for a second life [8, 9).
+        b.note_insert(7, 1, 0.0, 5.0);
+        b.note_insert(7, 1, 8.0, 9.0);
+        // Another server's event at t=3: the *first* life was alive.
+        assert!(!b.is_latest(7, 0, 3.0));
+        // At t=6 neither life covers the event.
+        assert!(b.is_latest(7, 0, 6.0));
+    }
+
+    #[test]
+    fn extend_raises_only_current_incarnation() {
+        let b = CopyBoard::new();
+        b.note_insert(7, 1, 0.0, 5.0);
+        b.note_insert(7, 1, 8.0, 9.0);
+        b.note_extend(7, 1, 9.5);
+        assert!(!b.is_latest(7, 0, 9.2), "extension must block");
+        assert!(b.is_latest(7, 0, 6.0), "old life must stay at 5.0");
+        b.note_extend(7, 1, 9.0); // never lowers
+        assert!(!b.is_latest(7, 0, 9.2));
+    }
+
+    #[test]
+    fn prune_respects_watermark() {
+        let b = CopyBoard::new();
+        b.note_insert(7, 0, 0.0, 1.0);
+        b.note_insert(7, 1, 0.0, 10.0);
+        b.note_insert(8, 2, 0.0, 0.5);
+        b.prune(2.0);
+        assert_eq!(b.entries(), 1); // only (7, 1, ..10.0) survives
+        b.prune(f64::NEG_INFINITY); // no-op guard
+        assert_eq!(b.entries(), 1);
+        assert!(b.is_latest(7, 1, 10.0));
+    }
+
+    #[test]
+    fn unknown_key_is_latest() {
+        let b = CopyBoard::new();
+        assert!(b.is_latest(42, 0, 1.0));
+    }
+}

@@ -88,6 +88,19 @@ impl CostLedger {
         self.c_p + self.c_t
     }
 
+    /// Fold another ledger into this one (cross-shard aggregation: shards
+    /// serve disjoint ESS sets, so every counter is purely additive).
+    pub fn merge(&mut self, other: &CostLedger) {
+        self.c_p += other.c_p;
+        self.c_t += other.c_t;
+        self.transfers += other.transfers;
+        self.full_hits += other.full_hits;
+        self.misses += other.misses;
+        self.requests += other.requests;
+        self.items_delivered += other.items_delivered;
+        self.items_requested += other.items_requested;
+    }
+
     /// Fraction of delivered items that were requested (packing utility).
     pub fn delivery_efficiency(&self) -> f64 {
         if self.items_delivered == 0 {
@@ -195,6 +208,26 @@ mod tests {
         assert_eq!(l.total(), 5.0);
         assert_eq!(l.hit_rate(), 0.4);
         assert_eq!(l.delivery_efficiency(), 0.5);
+    }
+
+    #[test]
+    fn ledger_merge_is_additive() {
+        let mut a = CostLedger {
+            c_p: 1.0,
+            c_t: 2.0,
+            transfers: 3,
+            full_hits: 1,
+            misses: 2,
+            requests: 3,
+            items_delivered: 10,
+            items_requested: 6,
+        };
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.total(), 6.0);
+        assert_eq!(a.requests, 6);
+        assert_eq!(a.transfers, 6);
+        assert_eq!(a.items_delivered, 20);
     }
 
     #[test]

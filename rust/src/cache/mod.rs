@@ -1,8 +1,10 @@
 //! Per-ESS cache state, expiry handling (Algorithm 6) and the cost model
 //! (paper §III-C, Table I, Eqs. 1-5).
 
+pub mod board;
 pub mod cost;
 pub mod state;
 
+pub use board::CopyBoard;
 pub use cost::{CostLedger, CostModel};
 pub use state::CacheState;

@@ -8,14 +8,27 @@
 //! and stale packings age out naturally.
 
 use std::cmp::Reverse;
+use std::collections::hash_map::Entry;
 use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::Arc;
 
-/// Expiry event: `(time, key, server)` with total order on time.
-#[derive(Debug, Clone, Copy, PartialEq)]
+use super::board::CopyBoard;
+
+/// Expiry event: `(time, key, server)` with a NaN-safe total order on time
+/// (`f64::total_cmp`; a NaN expiry can never be produced by the cost model,
+/// but a heap with an inconsistent order would corrupt silently, so the
+/// comparator must not pretend NaN equals everything).
+#[derive(Debug, Clone, Copy)]
 struct ExpEvent {
     time: f64,
     key: u64,
     server: u32,
+}
+
+impl PartialEq for ExpEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
 }
 
 impl Eq for ExpEvent {}
@@ -29,15 +42,14 @@ impl PartialOrd for ExpEvent {
 impl Ord for ExpEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.time
-            .partial_cmp(&other.time)
-            .unwrap_or(std::cmp::Ordering::Equal)
+            .total_cmp(&other.time)
             .then(self.key.cmp(&other.key))
             .then(self.server.cmp(&other.server))
     }
 }
 
 /// Cache bookkeeping across all ESSs for one policy run.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CacheState {
     /// `E[c][j]`: expiry of clique copy `c` on server `j` (absent = not
     /// cached).
@@ -56,11 +68,46 @@ pub struct CacheState {
     /// real (§III-C: "cost paid by the CDN to ESSs for renting storage");
     /// the policy core bills this at μ per unit (DESIGN.md §6).
     pub retained_units: f64,
+    /// Cross-shard copy board. `None` (the default) means this state is the
+    /// global one and the retention rule uses the local `G[c]`; `Some`
+    /// means this state covers only one shard's ESSs and retention defers
+    /// to the board's global latest-copy predicate (DESIGN.md §2.3).
+    board: Option<Arc<CopyBoard>>,
+    /// Sweep clock: the largest `now` ever passed to
+    /// [`process_expirations`](Self::process_expirations). Inserts mirror
+    /// it to the board as the copy's creation time (callers sweep to `now`
+    /// before mutating, so at insert time `clock == now`).
+    clock: f64,
+}
+
+impl Default for CacheState {
+    fn default() -> Self {
+        Self {
+            expiry: HashMap::new(),
+            copies: HashMap::new(),
+            sizes: HashMap::new(),
+            events: BinaryHeap::new(),
+            retentions: 0,
+            retained_units: 0.0,
+            board: None,
+            clock: f64::NEG_INFINITY,
+        }
+    }
 }
 
 impl CacheState {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach the cross-shard copy board. Must happen before the first
+    /// insert, so the board mirrors every copy this state ever tracks.
+    pub fn attach_board(&mut self, board: Arc<CopyBoard>) {
+        debug_assert!(
+            self.expiry.is_empty(),
+            "attach_board after inserts would desynchronize the board"
+        );
+        self.board = Some(board);
     }
 
     /// Is copy `key` alive on `server` at time `now`?
@@ -88,13 +135,35 @@ impl CacheState {
         self.expiry.len()
     }
 
-    /// Insert a fresh copy on `server` expiring at `expires`
+    /// Insert a copy on `server` expiring at `expires`
     /// (Algorithm 1 line 5 / Algorithm 5 lines 7-8: `G[c]+=1`).
+    ///
+    /// Lazy deletion means an expired-but-unswept entry may still sit in
+    /// `expiry` — callers that track time themselves (`is_cached` returned
+    /// false) legitimately re-insert over it. That case *replaces* the
+    /// stale entry in place: `G[c]` already counts this `(key, server)`
+    /// copy, so bumping it again would corrupt the counter (and the old
+    /// `debug_assert` made the whole situation a crash). A live copy is
+    /// never shortened: the stored expiry only moves forward.
     pub fn insert(&mut self, key: u64, size: u32, server: u32, expires: f64) {
-        let prev = self.expiry.insert((key, server), expires);
-        debug_assert!(prev.is_none(), "insert over a live copy — use extend");
-        *self.copies.entry(key).or_insert(0) += 1;
         self.sizes.insert(key, size);
+        match self.expiry.entry((key, server)) {
+            Entry::Occupied(mut stale) => {
+                if expires <= *stale.get() {
+                    return; // existing (later) expiry wins; event already queued
+                }
+                *stale.get_mut() = expires;
+            }
+            Entry::Vacant(slot) => {
+                slot.insert(expires);
+                *self.copies.entry(key).or_insert(0) += 1;
+            }
+        }
+        if let Some(b) = &self.board {
+            // A fresh (or reincarnated) copy: its lifetime starts at the
+            // sweep clock, which equals the caller's `now`.
+            b.note_insert(key, server, self.clock, expires);
+        }
         self.events.push(Reverse(ExpEvent {
             time: expires,
             key,
@@ -112,6 +181,9 @@ impl CacheState {
         let prev = *e;
         if expires > prev {
             *e = expires;
+            if let Some(b) = &self.board {
+                b.note_extend(key, server, expires);
+            }
             self.events.push(Reverse(ExpEvent {
                 time: expires,
                 key,
@@ -133,6 +205,9 @@ impl CacheState {
         current_keys: &HashSet<u64>,
         delta_t: f64,
     ) {
+        if now > self.clock {
+            self.clock = now;
+        }
         while let Some(&Reverse(ev)) = self.events.peek() {
             if ev.time > now {
                 break;
@@ -144,12 +219,22 @@ impl CacheState {
             if stored > ev.time {
                 continue; // stale event; a newer one is queued
             }
-            // The copy genuinely expires now.
-            let g = self.copy_count(ev.key);
-            if g == 1 && current_keys.contains(&ev.key) {
+            // The copy genuinely expires now. "Last alive copy" is judged
+            // locally via G[c] for the global (unsharded) state, or via the
+            // cross-shard board when this state covers one shard only —
+            // the two predicates decide identically (see cache/board.rs).
+            let last_copy = match &self.board {
+                None => self.copy_count(ev.key) == 1,
+                Some(b) => b.is_latest(ev.key, ev.server, ev.time),
+            };
+            if last_copy && current_keys.contains(&ev.key) {
                 // Alg. 6 line 3: last copy of a live clique — extend.
                 let new_exp = ev.time + delta_t;
                 *self.expiry.get_mut(&(ev.key, ev.server)).unwrap() = new_exp;
+                if let Some(b) = &self.board {
+                    // The same incarnation lives on with a later expiry.
+                    b.note_extend(ev.key, ev.server, new_exp);
+                }
                 self.events.push(Reverse(ExpEvent {
                     time: new_exp,
                     key: ev.key,
@@ -287,6 +372,58 @@ mod tests {
         assert_eq!(c.copy_count(100), 2);
         assert_eq!(c.copy_count(200), 1);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn insert_over_expired_unswept_copy_replaces() {
+        // Regression: lazy deletion leaves the (key, server) entry behind
+        // after its expiry passes; re-inserting used to trip the
+        // debug_assert and double-increment G[c].
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 1.0);
+        // Time moves past 1.0 with no sweep in between (no request touched
+        // this state), then the copy is re-fetched.
+        c.insert(7, 2, 0, 3.0);
+        assert_eq!(c.copy_count(7), 1, "G[c] must not double-count");
+        c.check_invariants().unwrap();
+        // The stale event at t=1.0 is a no-op against the newer expiry.
+        c.process_expirations(1.0, &keys(&[]), 1.0);
+        assert!(c.is_cached(7, 0, 2.0));
+        c.process_expirations(3.0, &keys(&[]), 1.0);
+        assert_eq!(c.copy_count(7), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn insert_never_shortens_live_copy() {
+        let mut c = CacheState::new();
+        c.insert(7, 2, 0, 5.0);
+        c.insert(7, 2, 0, 2.0); // stale-looking re-insert with earlier expiry
+        assert!(c.is_cached(7, 0, 4.0));
+        assert_eq!(c.copy_count(7), 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn board_backed_state_matches_g_rule() {
+        use crate::cache::CopyBoard;
+        use std::sync::Arc;
+        // One global state vs one board-backed state fed the identical
+        // sequence: retention decisions must agree event for event.
+        let board = Arc::new(CopyBoard::new());
+        let mut plain = CacheState::new();
+        let mut sharded = CacheState::new();
+        sharded.attach_board(board);
+        let current = keys(&[7]);
+        for c in [&mut plain, &mut sharded] {
+            c.insert(7, 2, 0, 1.0);
+            c.insert(7, 2, 1, 1.4);
+            c.process_expirations(5.0, &current, 1.0);
+        }
+        assert_eq!(plain.retentions, sharded.retentions);
+        assert_eq!(plain.retained_units, sharded.retained_units);
+        assert_eq!(plain.copy_count(7), sharded.copy_count(7));
+        assert_eq!(plain.expiry_of(7, 1), sharded.expiry_of(7, 1));
     }
 
     #[test]

@@ -1,16 +1,88 @@
-//! Coordinator metrics: point-in-time snapshots of the leader's state,
-//! exported over the snapshot channel (Prometheus-style pull).
+//! Coordinator metrics: per-shard snapshots, clique-generation worker
+//! stats, and the cross-shard aggregation that folds them into one
+//! [`MetricsSnapshot`] (Prometheus-style pull).
 
 use crate::cache::CostLedger;
 use crate::util::{Histogram, Json};
 
-/// A consistent snapshot of the serving state.
+/// Point-in-time stats of one shard actor.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Shard index (owns servers `s` with `s % n_shards == shard`).
+    pub shard: usize,
+    /// This shard's cost ledger (its disjoint ESS set only).
+    pub ledger: CostLedger,
+    /// Requests served by this shard.
+    pub served: u64,
+    /// Per-request service latency in microseconds.
+    pub latency_us: Histogram,
+    /// Forced Algorithm-6 retentions performed by this shard.
+    pub retentions: u64,
+    /// Live `(clique, server)` cache entries.
+    pub live_entries: usize,
+    /// Version of the installed clique snapshot.
+    pub snapshot_version: u64,
+    /// Largest request time processed (the shard's sweep clock);
+    /// `NEG_INFINITY` until the first request.
+    pub last_time: f64,
+}
+
+impl ShardStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("ledger", self.ledger.to_json()),
+            ("served", Json::Num(self.served as f64)),
+            ("retentions", Json::Num(self.retentions as f64)),
+            ("live_entries", Json::Num(self.live_entries as f64)),
+            (
+                "snapshot_version",
+                Json::Num(self.snapshot_version as f64),
+            ),
+            ("latency_us", self.latency_us.to_json()),
+        ])
+    }
+}
+
+/// Point-in-time stats of the background clique-generation worker.
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    /// Policy display name (e.g. "AKPC").
+    pub policy: String,
+    /// CRM engine in use ("xla" / "native").
+    pub engine: String,
+    /// Clique-generation windows executed.
+    pub windows: u64,
+    /// Live cliques after the last window tick.
+    pub live_cliques: usize,
+    /// Clique-size distribution (cumulative over windows).
+    pub clique_hist: Histogram,
+    /// Cumulative seconds spent in clique generation.
+    pub clique_gen_secs: f64,
+}
+
+impl Default for GenStats {
+    fn default() -> Self {
+        Self {
+            policy: "AKPC".to_string(),
+            engine: "native".to_string(),
+            windows: 0,
+            live_cliques: 0,
+            clique_hist: Histogram::new(),
+            clique_gen_secs: 0.0,
+        }
+    }
+}
+
+/// A consistent snapshot of the serving state, aggregated over all shards.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     /// Policy display name.
     pub policy: String,
     /// CRM engine in use ("xla" / "native").
     pub engine: String,
+    /// Cross-shard merged ledger (shards are disjoint, so this equals the
+    /// single-leader ledger on the same ordered trace — DESIGN.md §2.3).
     pub ledger: CostLedger,
     /// Requests served since start.
     pub served: u64,
@@ -22,17 +94,50 @@ pub struct MetricsSnapshot {
     pub clique_hist: Histogram,
     /// Cumulative seconds spent in clique generation.
     pub clique_gen_secs: f64,
-    /// Per-request service latency in microseconds.
+    /// Per-request service latency in microseconds (all shards merged).
     pub latency_us: Histogram,
+    /// The unmerged per-shard view (empty only for hand-built snapshots).
+    pub per_shard: Vec<ShardStats>,
 }
 
 impl MetricsSnapshot {
+    /// Fold the worker's stats and every shard's stats into one snapshot.
+    pub fn aggregate(gen: GenStats, mut per_shard: Vec<ShardStats>) -> Self {
+        per_shard.sort_by_key(|s| s.shard);
+        let mut ledger = CostLedger::default();
+        let mut latency = Histogram::new();
+        let mut served = 0u64;
+        for s in &per_shard {
+            ledger.merge(&s.ledger);
+            latency.merge(&s.latency_us);
+            served += s.served;
+        }
+        Self {
+            policy: gen.policy,
+            engine: gen.engine,
+            ledger,
+            served,
+            windows: gen.windows,
+            live_cliques: gen.live_cliques,
+            clique_hist: gen.clique_hist,
+            clique_gen_secs: gen.clique_gen_secs,
+            latency_us: latency,
+            per_shard,
+        }
+    }
+
+    /// Total Algorithm-6 retentions across shards.
+    pub fn retentions(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.retentions).sum()
+    }
+
     /// Render a compact one-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "policy={} engine={} served={} windows={} cliques={} total_cost={:.1} (C_T={:.1} C_P={:.1}) hit={:.1}% p50={}us p99={}us",
+            "policy={} engine={} shards={} served={} windows={} cliques={} total_cost={:.1} (C_T={:.1} C_P={:.1}) hit={:.1}% p50={}us p99={}us",
             self.policy,
             self.engine,
+            self.per_shard.len().max(1),
             self.served,
             self.windows,
             self.live_cliques,
@@ -57,6 +162,10 @@ impl MetricsSnapshot {
             ("clique_hist", self.clique_hist.to_json()),
             ("clique_gen_secs", Json::Num(self.clique_gen_secs)),
             ("latency_us", self.latency_us.to_json()),
+            (
+                "per_shard",
+                Json::Arr(self.per_shard.iter().map(ShardStats::to_json).collect()),
+            ),
         ])
     }
 }
@@ -64,6 +173,19 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn shard(i: usize, c_t: f64, served: u64) -> ShardStats {
+        let mut s = ShardStats {
+            shard: i,
+            served,
+            last_time: served as f64,
+            ..Default::default()
+        };
+        s.ledger.c_t = c_t;
+        s.ledger.requests = served;
+        s.latency_us.record(10 * (i as u32 + 1));
+        s
+    }
 
     #[test]
     fn summary_renders() {
@@ -77,10 +199,33 @@ mod tests {
             clique_hist: Histogram::new(),
             clique_gen_secs: 0.1,
             latency_us: Histogram::new(),
+            per_shard: Vec::new(),
         };
         let line = s.summary();
         assert!(line.contains("policy=AKPC"));
         assert!(line.contains("engine=xla"));
         crate::util::json::parse(&s.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn aggregate_merges_shards() {
+        let gen = GenStats {
+            windows: 7,
+            live_cliques: 4,
+            ..Default::default()
+        };
+        // Out-of-order shard ids must be sorted in.
+        let m = MetricsSnapshot::aggregate(
+            gen,
+            vec![shard(1, 2.0, 5), shard(0, 3.0, 7)],
+        );
+        assert_eq!(m.served, 12);
+        assert_eq!(m.windows, 7);
+        assert!((m.ledger.c_t - 5.0).abs() < 1e-12);
+        assert_eq!(m.ledger.requests, 12);
+        assert_eq!(m.latency_us.count(), 2);
+        assert_eq!(m.per_shard[0].shard, 0);
+        assert_eq!(m.per_shard[1].shard, 1);
+        crate::util::json::parse(&m.to_json().to_string()).unwrap();
     }
 }

@@ -1,27 +1,36 @@
 //! Online serving coordinator — the L3 runtime around the AKPC policy.
 //!
-//! Architecture (vLLM-router-like leader/worker split, sized for this
-//! paper's contribution — the *policy*, not the data plane):
+//! Architecture (sharded actor topology, DESIGN.md §2.3 — sized for this
+//! paper's contribution, the *policy*, not the data plane):
 //!
 //! ```text
-//!   clients ──(mpsc)──► Coordinator ──(channel)──► leader thread
-//!                          │  tokio side:             owns Akpc policy +
-//!                          │  routing, admission,     PJRT runtime (thread-
-//!                          │  oneshot responses       affine), batcher,
-//!                          ▼                          window ticks
-//!                       metrics snapshots ◄─────────── ledger/cliques
+//!   clients ──(route by server % N)──► shard actors 0..N-1
+//!                  │                     each owns PackedCacheCore:
+//!                  │ served requests     per-ESS cache state + cost
+//!                  ▼                     ledger for a disjoint ESS set
+//!            window batcher
+//!                  │ closed window            ▲ Install(Arc<CliqueSnapshot>)
+//!                  ▼                          │
+//!            clique-gen worker ───────────────┘
+//!            (CliqueGenPipeline + CRM engine, thread-affine PJRT)
 //! ```
 //!
-//! The PJRT client is `Rc`-backed (thread-affine), so the policy and the
-//! XLA runtime are constructed *on* the leader thread and never move; the
-//! async side communicates exclusively through channels. Python is never
-//! involved: the leader executes the AOT artifact through
-//! [`crate::runtime::XlaCrmBuilder`].
+//! Each shard is a single-writer actor over its ESS group (the paper's
+//! per-ESS event model); the clique set is regenerated once per window by
+//! one background worker and published to every shard as an `Arc`-swapped
+//! immutable snapshot. The only cross-shard state is the Algorithm-6
+//! retention board ([`crate::cache::CopyBoard`]). The PJRT client is
+//! `Rc`-backed (thread-affine), so the CRM engine is constructed *on* the
+//! worker thread and never moves; Python is never involved at runtime.
 
 pub mod batcher;
 pub mod metrics;
 pub mod service;
+pub mod snapshot;
 
 pub use batcher::WindowBatcher;
-pub use metrics::MetricsSnapshot;
-pub use service::{Coordinator, CoordinatorClient, ServeRequest, ServeResponse};
+pub use metrics::{GenStats, MetricsSnapshot, ShardStats};
+pub use service::{
+    Coordinator, CoordinatorClient, ServeRequest, ServeResponse, TickMode,
+};
+pub use snapshot::CliqueSnapshot;

@@ -1,25 +1,44 @@
-//! The serving service: client handle + leader thread owning the policy.
+//! The sharded serving service: shard actors own per-ESS cache state and
+//! cost ledgers, one background worker owns clique generation.
 //!
-//! The leader thread owns the (thread-affine) AKPC policy and PJRT
-//! runtime; clients talk to it over an mpsc channel and receive responses
-//! on per-call reply channels. The handle is `Clone + Send + Sync`, so any
-//! number of client threads can submit concurrently — the leader serializes
-//! policy access (single-writer, exactly the paper's per-ESS event model).
+//! Topology (DESIGN.md §2.3):
+//!
+//! ```text
+//!   clients ──route by server % N──► shard 0..N-1   (PackedCacheCore:
+//!      │                                │             cache + ledger for a
+//!      │ served requests                │ Install     disjoint ESS set)
+//!      ▼                                ▲ (Arc<CliqueSnapshot>)
+//!   window batcher ──closed window──► clique-gen worker
+//!                                      (CliqueGenPipeline + CRM engine)
+//! ```
+//!
+//! Every shard is a single-writer actor over its ESS group — exactly the
+//! per-ESS event model Algorithms 1/5/6 assume — and the only cross-shard
+//! state is the retention [`CopyBoard`] (cache/board.rs), which keeps
+//! Algorithm 6's global `G[c]` rule exact. In [`TickMode::Sync`] a window
+//! close blocks until the new snapshot is installed on every shard, which
+//! makes an ordered replay deterministic: the per-shard ledgers sum to the
+//! single-leader ledger on the same trace. [`TickMode::Async`] trades that
+//! barrier for throughput (shards keep serving under the old snapshot
+//! while the worker rebuilds).
 //!
 //! (The offline build environment has no tokio; the async facade is a
-//! blocking-channel actor instead — same topology, same single-leader
-//! semantics. See DESIGN.md §2.)
+//! blocking-channel actor system instead — same topology, same
+//! single-writer semantics. See DESIGN.md §2.)
 
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::algo::{Akpc, CachePolicy};
+use crate::algo::{CliqueGenPipeline, PackedCacheCore};
+use crate::cache::{CopyBoard, CostModel};
 use crate::config::AkpcConfig;
 use crate::runtime::CrmEngine;
 use crate::trace::model::Request;
 
 use super::batcher::WindowBatcher;
-use super::metrics::MetricsSnapshot;
+use super::metrics::{GenStats, MetricsSnapshot, ShardStats};
+use super::snapshot::CliqueSnapshot;
 use crate::util::Histogram;
 
 /// A request submitted to the coordinator.
@@ -44,143 +63,350 @@ pub struct ServeResponse {
     pub cost_delta: f64,
 }
 
-enum Msg {
-    Serve(ServeRequest, mpsc::Sender<ServeResponse>),
-    Snapshot(mpsc::Sender<MetricsSnapshot>),
-    FlushWindow,
+/// How window closes propagate to the shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickMode {
+    /// The serve call that closes a window blocks until the regenerated
+    /// snapshot is installed on every shard. Deterministic under ordered
+    /// replay; the global tick barrier the single leader had implicitly.
+    Sync,
+    /// The worker rebuilds in the background and Arc-swaps the snapshot in
+    /// when ready; shards keep serving under the previous packing.
+    Async,
+}
+
+enum ShardMsg {
+    Serve(Request, mpsc::Sender<ServeResponse>),
+    /// Install a new snapshot. The `f64` is the closed window's end time:
+    /// the shard first sweeps its expiry events up to it under the *old*
+    /// clique set — exactly when the single leader processed them —
+    /// before swapping in the new one (retention decisions depend on
+    /// `current_keys` at sweep time, so a lagging shard must not process
+    /// old events under a newer snapshot).
+    Install(Arc<CliqueSnapshot>, f64, mpsc::Sender<f64>),
+    Metrics(mpsc::Sender<ShardStats>),
+    /// Advance expiry processing to the global end time (shutdown
+    /// barrier): a shard sweeps only at its own request times, so without
+    /// this, retention rent accrued on its servers after its last request
+    /// would be missing from its ledger vs the single leader.
+    Quiesce(f64),
     Shutdown,
 }
 
-/// Handle to the serving leader. Cloneable; dropping the last handle shuts
-/// the leader down.
-pub struct Coordinator {
-    tx: mpsc::Sender<Msg>,
-    join: Option<std::thread::JoinHandle<MetricsSnapshot>>,
+enum GenMsg {
+    Window(Vec<Request>, Option<mpsc::Sender<()>>),
+    Metrics(mpsc::Sender<GenStats>),
+    Shutdown,
 }
 
-impl Coordinator {
-    /// Start the leader thread with the given config and CRM engine.
-    pub fn start(cfg: AkpcConfig, engine: CrmEngine) -> Self {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let join = std::thread::Builder::new()
-            .name("akpc-leader".into())
-            .spawn(move || leader_loop(cfg, engine, rx))
-            .expect("spawn leader");
+/// State shared by every client handle.
+struct Shared {
+    window: Mutex<WindowBatcher>,
+    tick_mode: TickMode,
+    start: Instant,
+}
+
+/// Cloneable, `Send` submission handle (no lifecycle control). Each clone
+/// carries its own channel senders; only the window batcher is shared.
+pub struct CoordinatorClient {
+    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    gen_tx: mpsc::Sender<GenMsg>,
+    shared: Arc<Shared>,
+}
+
+impl Clone for CoordinatorClient {
+    fn clone(&self) -> Self {
         Self {
-            tx,
-            join: Some(join),
+            shard_txs: self.shard_txs.clone(),
+            gen_tx: self.gen_tx.clone(),
+            shared: self.shared.clone(),
         }
     }
+}
 
-    /// A cloneable, `Send + Sync` client for submitting from many threads.
-    pub fn client(&self) -> CoordinatorClient {
-        CoordinatorClient {
-            tx: self.tx.clone(),
-        }
+impl CoordinatorClient {
+    fn route(&self, server: u32) -> usize {
+        server as usize % self.shard_txs.len()
     }
 
-    /// Serve one request (blocks until the leader responds).
+    /// Serve one request (blocks until the owning shard responds).
     pub fn serve(&self, req: ServeRequest) -> anyhow::Result<ServeResponse> {
-        self.client().serve(req)
-    }
-
-    /// Pull a metrics snapshot.
-    pub fn metrics(&self) -> anyhow::Result<MetricsSnapshot> {
-        let (otx, orx) = mpsc::channel();
-        self.tx
-            .send(Msg::Snapshot(otx))
+        let time = req
+            .time
+            .unwrap_or_else(|| self.shared.start.elapsed().as_secs_f64());
+        let r = Request::new(req.items, req.server, time);
+        let (rtx, rrx) = mpsc::channel();
+        self.shard_txs[self.route(r.server)]
+            .send(ShardMsg::Serve(r.clone(), rtx))
             .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-        Ok(orx.recv()?)
+        let resp = rrx.recv()?;
+
+        // Window accounting happens after the response, mirroring the
+        // single leader (serve, then batch — Fig. 3 causality). The mutex
+        // also serializes the tick barrier in Sync mode: whoever closes
+        // the window holds it until every shard installed the snapshot.
+        let mut window = self
+            .shared
+            .window
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(batch) = window.push(r) {
+            self.dispatch_window(batch)?;
+        }
+        drop(window);
+        Ok(resp)
     }
 
     /// Force-close the current clique-generation window (idle flush).
     pub fn flush_window(&self) -> anyhow::Result<()> {
-        self.tx
-            .send(Msg::FlushWindow)
-            .map_err(|_| anyhow::anyhow!("coordinator is down"))
+        let mut window = self
+            .shared
+            .window
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(batch) = window.flush() {
+            self.dispatch_window(batch)?;
+        }
+        Ok(())
     }
 
-    /// Graceful shutdown; returns the final metrics.
+    fn dispatch_window(&self, batch: Vec<Request>) -> anyhow::Result<()> {
+        match self.shared.tick_mode {
+            TickMode::Sync => {
+                let (dtx, drx) = mpsc::channel();
+                self.gen_tx
+                    .send(GenMsg::Window(batch, Some(dtx)))
+                    .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+                drx.recv()
+                    .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+            }
+            TickMode::Async => {
+                self.gen_tx
+                    .send(GenMsg::Window(batch, None))
+                    .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Pull an aggregated metrics snapshot.
+    pub fn metrics(&self) -> anyhow::Result<MetricsSnapshot> {
+        let (gtx, grx) = mpsc::channel();
+        self.gen_tx
+            .send(GenMsg::Metrics(gtx))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        let gen = grx.recv()?;
+        let mut shards = Vec::with_capacity(self.shard_txs.len());
+        for tx in &self.shard_txs {
+            let (stx, srx) = mpsc::channel();
+            tx.send(ShardMsg::Metrics(stx))
+                .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+            shards.push(srx.recv()?);
+        }
+        Ok(MetricsSnapshot::aggregate(gen, shards))
+    }
+}
+
+/// Handle to the sharded service. Cloning clients is cheap; dropping the
+/// `Coordinator` (or calling [`Coordinator::shutdown`]) stops every actor.
+pub struct Coordinator {
+    client: CoordinatorClient,
+    shard_joins: Vec<Option<std::thread::JoinHandle<ShardStats>>>,
+    gen_join: Option<std::thread::JoinHandle<GenStats>>,
+}
+
+impl Coordinator {
+    /// Start `n_shards` shard actors plus the clique-generation worker,
+    /// with the deterministic [`TickMode::Sync`] window barrier.
+    pub fn start(cfg: AkpcConfig, engine: CrmEngine, n_shards: usize) -> Self {
+        Self::start_with(cfg, engine, n_shards, TickMode::Sync)
+    }
+
+    /// Start with an explicit [`TickMode`]. `n_shards` is clamped to ≥ 1;
+    /// requests route to shard `server % n_shards`.
+    pub fn start_with(
+        cfg: AkpcConfig,
+        engine: CrmEngine,
+        n_shards: usize,
+        tick_mode: TickMode,
+    ) -> Self {
+        let n_shards = n_shards.max(1);
+        // The retention board is cross-shard state; a lone shard's local
+        // G[c] already *is* the global rule, so skip the mutex entirely.
+        let board = (n_shards > 1).then(|| Arc::new(CopyBoard::new()));
+
+        let mut shard_txs = Vec::with_capacity(n_shards);
+        let mut shard_joins = Vec::with_capacity(n_shards);
+        for shard in 0..n_shards {
+            let (tx, rx) = mpsc::channel::<ShardMsg>();
+            let cfg = cfg.clone();
+            let board = board.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("akpc-shard-{shard}"))
+                .spawn(move || shard_loop(shard, &cfg, board, rx))
+                .expect("spawn shard");
+            shard_txs.push(tx);
+            shard_joins.push(Some(join));
+        }
+
+        let (gen_tx, gen_rx) = mpsc::channel::<GenMsg>();
+        let gen_join = {
+            let cfg = cfg.clone();
+            let board = board.clone();
+            let txs = shard_txs.clone();
+            std::thread::Builder::new()
+                .name("akpc-cliquegen".into())
+                .spawn(move || gen_loop(&cfg, engine, board, txs, gen_rx))
+                .expect("spawn clique-gen worker")
+        };
+
+        let client = CoordinatorClient {
+            shard_txs,
+            gen_tx,
+            shared: Arc::new(Shared {
+                window: Mutex::new(WindowBatcher::new(cfg.batch_size)),
+                tick_mode,
+                start: Instant::now(),
+            }),
+        };
+        Self {
+            client,
+            shard_joins,
+            gen_join: Some(gen_join),
+        }
+    }
+
+    /// Number of shard actors.
+    pub fn n_shards(&self) -> usize {
+        self.client.shard_txs.len()
+    }
+
+    /// A cloneable client for submitting from many threads.
+    pub fn client(&self) -> CoordinatorClient {
+        self.client.clone()
+    }
+
+    /// Serve one request (blocks until the owning shard responds).
+    pub fn serve(&self, req: ServeRequest) -> anyhow::Result<ServeResponse> {
+        self.client.serve(req)
+    }
+
+    /// Pull an aggregated metrics snapshot.
+    pub fn metrics(&self) -> anyhow::Result<MetricsSnapshot> {
+        self.client.metrics()
+    }
+
+    /// Force-close the current clique-generation window (idle flush).
+    pub fn flush_window(&self) -> anyhow::Result<()> {
+        self.client.flush_window()
+    }
+
+    /// Stop every actor; returns `None` when already stopped. With
+    /// `tolerate_panics` (the Drop path — possibly already unwinding), a
+    /// panicked actor yields default stats instead of re-raising; the
+    /// explicit shutdown path re-raises so the panic is not swallowed.
+    fn stop(&mut self, tolerate_panics: bool) -> Option<MetricsSnapshot> {
+        let gen_join = self.gen_join.take()?;
+        // Worker first: any queued window is processed (and its Install
+        // acked by the still-running shards) before the Shutdown drains.
+        let _ = self.client.gen_tx.send(GenMsg::Shutdown);
+        let gen = match gen_join.join() {
+            Ok(g) => g,
+            Err(_) if tolerate_panics => GenStats::default(),
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
+
+        // Quiesce barrier: sweep every shard to the global end time so
+        // per-shard ledgers account retention rent exactly like a single
+        // leader whose clock advances on every request.
+        let mut t_end = f64::NEG_INFINITY;
+        for tx in &self.client.shard_txs {
+            let (stx, srx) = mpsc::channel();
+            if tx.send(ShardMsg::Metrics(stx)).is_ok() {
+                if let Ok(s) = srx.recv() {
+                    t_end = t_end.max(s.last_time);
+                }
+            }
+        }
+        if t_end.is_finite() {
+            for tx in &self.client.shard_txs {
+                let _ = tx.send(ShardMsg::Quiesce(t_end));
+            }
+        }
+
+        let mut shards = Vec::with_capacity(self.shard_joins.len());
+        for (tx, join) in self.client.shard_txs.iter().zip(&mut self.shard_joins) {
+            let _ = tx.send(ShardMsg::Shutdown);
+            if let Some(j) = join.take() {
+                match j.join() {
+                    Ok(s) => shards.push(s),
+                    Err(_) if tolerate_panics => {}
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        }
+        Some(MetricsSnapshot::aggregate(gen, shards))
+    }
+
+    /// Graceful shutdown; returns the final aggregated metrics. Re-raises
+    /// if an actor thread panicked.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        let _ = self.tx.send(Msg::Shutdown);
-        self.join
-            .take()
-            .expect("not yet joined")
-            .join()
-            .expect("leader panicked")
+        self.stop(false).expect("coordinator already stopped")
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        // Idempotent (no-op after shutdown()); never panics — Drop may run
+        // during an unwind, and a double panic would abort and mask the
+        // original failure.
+        let _ = self.stop(true);
     }
 }
 
-/// Cloneable submission handle (no lifecycle control).
-#[derive(Clone)]
-pub struct CoordinatorClient {
-    tx: mpsc::Sender<Msg>,
-}
-
-impl CoordinatorClient {
-    pub fn serve(&self, req: ServeRequest) -> anyhow::Result<ServeResponse> {
-        let (otx, orx) = mpsc::channel();
-        self.tx
-            .send(Msg::Serve(req, otx))
-            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-        Ok(orx.recv()?)
+/// One shard actor: single writer over the cache state and ledger of the
+/// ESS group `{ s | s % n_shards == shard }`.
+fn shard_loop(
+    shard: usize,
+    cfg: &AkpcConfig,
+    board: Option<Arc<CopyBoard>>,
+    rx: mpsc::Receiver<ShardMsg>,
+) -> ShardStats {
+    let mut core = PackedCacheCore::new(CostModel::from_config(cfg), cfg.charge_policy);
+    if let Some(board) = board {
+        core.cache.attach_board(board);
     }
-}
-
-fn leader_loop(
-    cfg: AkpcConfig,
-    engine: CrmEngine,
-    rx: mpsc::Receiver<Msg>,
-) -> MetricsSnapshot {
-    // Thread-affine construction: the PJRT client never crosses threads.
-    let builder = engine.builder(&cfg.artifacts_dir);
-    let engine_name = builder.engine_name().to_string();
-    let mut policy = Akpc::with_builder(&cfg, builder);
-    let mut batcher = WindowBatcher::new(cfg.batch_size);
+    let mut snapshot = Arc::new(CliqueSnapshot::empty());
     let mut latency = Histogram::new();
     let mut served: u64 = 0;
-    let start = Instant::now();
+    let mut last_time = f64::NEG_INFINITY;
 
-    let snapshot = |policy: &Akpc,
-                    served: u64,
-                    latency: &Histogram,
-                    engine_name: &str| MetricsSnapshot {
-        policy: policy.name(),
-        engine: engine_name.to_string(),
-        ledger: policy.ledger().clone(),
+    let stats = |core: &PackedCacheCore,
+                 snapshot_version: u64,
+                 served: u64,
+                 last_time: f64,
+                 latency: &Histogram| ShardStats {
+        shard,
+        ledger: core.ledger.clone(),
         served,
-        windows: policy.windows,
-        live_cliques: policy.cliques().len(),
-        clique_hist: policy.clique_sizes(),
-        clique_gen_secs: policy.clique_gen_secs,
         latency_us: latency.clone(),
+        retentions: core.cache.retentions,
+        live_entries: core.cache.live_entries(),
+        snapshot_version,
+        last_time,
     };
 
     while let Ok(msg) = rx.recv() {
         match msg {
-            Msg::Serve(sreq, resp) => {
+            ShardMsg::Serve(r, resp) => {
                 let t0 = Instant::now();
-                let time = sreq
-                    .time
-                    .unwrap_or_else(|| start.elapsed().as_secs_f64());
-                let r = Request::new(sreq.items, sreq.server, time);
-
                 // Response assembly: the packed cliques covering D_i
                 // (Algorithm 5 line 13 — deliver whole cliques).
-                let before_hits = policy.ledger().full_hits;
-                let before_total = policy.ledger().total();
+                let before_hits = core.ledger.full_hits;
+                let before_total = core.ledger.total();
                 let mut delivered: Vec<u32> = Vec::with_capacity(r.items.len());
                 for &d in &r.items {
-                    match policy.cliques().clique_of(d) {
+                    match snapshot.members_of(d) {
                         Some(c) => delivered.extend_from_slice(c),
                         None => delivered.push(d),
                     }
@@ -188,35 +414,117 @@ fn leader_loop(
                 delivered.sort_unstable();
                 delivered.dedup();
 
-                policy.handle_request(&r);
-                let after = policy.ledger();
-                let full_hit = after.full_hits > before_hits;
-                let cost_delta = after.total() - before_total;
+                core.handle_request(&r);
+                let full_hit = core.ledger.full_hits > before_hits;
+                let cost_delta = core.ledger.total() - before_total;
 
                 served += 1;
+                if r.time > last_time {
+                    last_time = r.time;
+                }
                 latency.record(t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32);
                 let _ = resp.send(ServeResponse {
                     delivered,
                     full_hit,
                     cost_delta,
                 });
-
-                if let Some(window) = batcher.push(r) {
-                    policy.end_batch(&window);
+            }
+            ShardMsg::Install(snap, window_end, clock) => {
+                core.advance_time(window_end);
+                if window_end > last_time {
+                    last_time = window_end;
+                }
+                core.set_cliques(snap.iter());
+                snapshot = snap;
+                let _ = clock.send(last_time);
+            }
+            ShardMsg::Metrics(resp) => {
+                let _ =
+                    resp.send(stats(&core, snapshot.version, served, last_time, &latency));
+            }
+            ShardMsg::Quiesce(t_end) => {
+                core.advance_time(t_end);
+                if t_end > last_time {
+                    last_time = t_end;
                 }
             }
-            Msg::Snapshot(resp) => {
-                let _ = resp.send(snapshot(&policy, served, &latency, &engine_name));
-            }
-            Msg::FlushWindow => {
-                if let Some(window) = batcher.flush() {
-                    policy.end_batch(&window);
-                }
-            }
-            Msg::Shutdown => break,
+            ShardMsg::Shutdown => break,
         }
     }
-    snapshot(&policy, served, &latency, &engine_name)
+    stats(&core, snapshot.version, served, last_time, &latency)
+}
+
+/// The background clique-generation worker: owns the (thread-affine) CRM
+/// engine and the Algorithm-1-Event-1 pipeline; publishes snapshots.
+fn gen_loop(
+    cfg: &AkpcConfig,
+    engine: CrmEngine,
+    board: Option<Arc<CopyBoard>>,
+    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    rx: mpsc::Receiver<GenMsg>,
+) -> GenStats {
+    // Thread-affine construction: a PJRT client never crosses threads.
+    let builder = engine.builder(&cfg.artifacts_dir);
+    let engine_name = builder.engine_name().to_string();
+    let mut pipeline = CliqueGenPipeline::new(cfg, builder);
+
+    let stats = |pipeline: &CliqueGenPipeline, engine_name: &str| GenStats {
+        policy: pipeline.policy_name(),
+        engine: engine_name.to_string(),
+        windows: pipeline.windows,
+        live_cliques: pipeline.cliques().len(),
+        clique_hist: pipeline.clique_sizes(),
+        clique_gen_secs: pipeline.clique_gen_secs,
+    };
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            GenMsg::Window(batch, done) => {
+                let window_end = batch
+                    .last()
+                    .map(|r| r.time)
+                    .unwrap_or(f64::NEG_INFINITY);
+                pipeline.tick(&batch);
+                let snap = Arc::new(CliqueSnapshot::from_cliques(
+                    pipeline.windows,
+                    pipeline.cliques(),
+                ));
+                // Broadcast; collect every shard's sweep clock so stale
+                // board tombstones can be pruned behind the global
+                // watermark (see CopyBoard::prune).
+                let (ctx, crx) = mpsc::channel();
+                let mut expected = 0usize;
+                for tx in &shard_txs {
+                    if tx
+                        .send(ShardMsg::Install(snap.clone(), window_end, ctx.clone()))
+                        .is_ok()
+                    {
+                        expected += 1;
+                    }
+                }
+                drop(ctx);
+                let mut min_clock = f64::INFINITY;
+                let mut acked = 0usize;
+                while let Ok(clock) = crx.recv() {
+                    min_clock = min_clock.min(clock);
+                    acked += 1;
+                }
+                if acked == shard_txs.len() && acked == expected {
+                    if let Some(b) = &board {
+                        b.prune(min_clock);
+                    }
+                }
+                if let Some(d) = done {
+                    let _ = d.send(());
+                }
+            }
+            GenMsg::Metrics(resp) => {
+                let _ = resp.send(stats(&pipeline, &engine_name));
+            }
+            GenMsg::Shutdown => break,
+        }
+    }
+    stats(&pipeline, &engine_name)
 }
 
 #[cfg(test)]
@@ -235,7 +543,7 @@ mod tests {
 
     #[test]
     fn serves_and_learns_cliques() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 1);
         // Two windows of a strong {1,2} bundle.
         for i in 0..20 {
             let resp = coord
@@ -265,8 +573,43 @@ mod tests {
     }
 
     #[test]
+    fn sharded_serving_learns_across_shards() {
+        // Same bundle workload, but spread over 4 shards: the snapshot is
+        // published to all of them, so a shard that never saw the bundle
+        // still serves the whole pack.
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 4);
+        assert_eq!(coord.n_shards(), 4);
+        for i in 0..20 {
+            coord
+                .serve(ServeRequest {
+                    items: vec![1, 2],
+                    server: i % 2, // shards 1 and 2 stay cold
+                    time: Some(i as f64 * 0.05),
+                })
+                .unwrap();
+        }
+        let resp = coord
+            .serve(ServeRequest {
+                items: vec![1],
+                server: 3, // cold shard
+                time: Some(10.0),
+            })
+            .unwrap();
+        assert_eq!(resp.delivered, vec![1, 2]);
+        let m = coord.metrics().unwrap();
+        assert_eq!(m.served, 21);
+        assert_eq!(m.windows, 2);
+        assert_eq!(m.per_shard.len(), 4);
+        let per_shard_served: u64 = m.per_shard.iter().map(|s| s.served).sum();
+        assert_eq!(per_shard_served, 21);
+        for s in &m.per_shard {
+            assert_eq!(s.snapshot_version, 2, "shard missed an install");
+        }
+    }
+
+    #[test]
     fn flush_window_forces_tick() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2);
         for i in 0..5 {
             coord
                 .serve(ServeRequest {
@@ -283,7 +626,7 @@ mod tests {
 
     #[test]
     fn cost_deltas_accumulate_to_ledger() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2);
         let mut sum = 0.0;
         for i in 0..10u32 {
             let r = coord
@@ -301,7 +644,7 @@ mod tests {
 
     #[test]
     fn concurrent_clients() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2);
         let mut handles = Vec::new();
         for c in 0..8u32 {
             let client = coord.client();
@@ -327,7 +670,7 @@ mod tests {
 
     #[test]
     fn shutdown_is_idempotent_via_drop() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 3);
         coord
             .serve(ServeRequest {
                 items: vec![1],
@@ -336,5 +679,40 @@ mod tests {
             })
             .unwrap();
         drop(coord); // must not hang or panic
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 0);
+        assert_eq!(coord.n_shards(), 1);
+        coord
+            .serve(ServeRequest {
+                items: vec![1],
+                server: 3,
+                time: Some(0.0),
+            })
+            .unwrap();
+        let m = coord.shutdown();
+        assert_eq!(m.served, 1);
+    }
+
+    #[test]
+    fn async_tick_mode_still_installs() {
+        let coord =
+            Coordinator::start_with(cfg(), CrmEngine::Native, 2, TickMode::Async);
+        for i in 0..30 {
+            coord
+                .serve(ServeRequest {
+                    items: vec![1, 2],
+                    server: i % 4,
+                    time: Some(i as f64 * 0.05),
+                })
+                .unwrap();
+        }
+        // Metrics goes through the worker's queue, so by the time it
+        // answers, all three async window ticks have been processed.
+        let m = coord.metrics().unwrap();
+        assert_eq!(m.windows, 3);
+        assert!(m.live_cliques >= 1);
     }
 }

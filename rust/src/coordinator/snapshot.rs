@@ -1,0 +1,92 @@
+//! Immutable clique snapshots published by the background clique-generation
+//! worker to every shard (DESIGN.md §2.3).
+//!
+//! A snapshot is built once per window tick from the worker's
+//! [`CliqueSet`] and shared via `Arc`: shards swap their pointer on
+//! `Install` and keep serving lock-free; the previous snapshot is freed
+//! when the last shard lets go of it.
+
+use std::collections::HashMap;
+
+use crate::clique::CliqueSet;
+
+/// Frozen clique assignment for one window.
+#[derive(Debug, Default)]
+pub struct CliqueSnapshot {
+    /// Monotone tick counter (0 = the empty pre-first-window snapshot).
+    pub version: u64,
+    cliques: Vec<Vec<u32>>,
+    item_idx: HashMap<u32, u32>,
+}
+
+impl CliqueSnapshot {
+    /// The empty snapshot every shard starts from (no packing yet).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Freeze a clique set as the snapshot for tick `version`.
+    pub fn from_cliques(version: u64, set: &CliqueSet) -> Self {
+        let cliques: Vec<Vec<u32>> = set.iter().map(<[u32]>::to_vec).collect();
+        let mut item_idx = HashMap::new();
+        for (i, c) in cliques.iter().enumerate() {
+            for &d in c {
+                item_idx.insert(d, i as u32);
+            }
+        }
+        Self {
+            version,
+            cliques,
+            item_idx,
+        }
+    }
+
+    /// Members of the packed clique containing `item`, if any.
+    pub fn members_of(&self, item: u32) -> Option<&[u32]> {
+        self.item_idx
+            .get(&item)
+            .map(|&i| self.cliques[i as usize].as_slice())
+    }
+
+    /// Iterate the cliques (shards feed this to
+    /// [`PackedCacheCore::set_cliques`](crate::algo::PackedCacheCore::set_cliques)).
+    pub fn iter(&self) -> impl Iterator<Item = &[u32]> {
+        self.cliques.iter().map(Vec::as_slice)
+    }
+
+    /// Number of cliques.
+    pub fn len(&self) -> usize {
+        self.cliques.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cliques.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freezes_and_looks_up() {
+        let mut set = CliqueSet::new();
+        set.insert(vec![1, 2, 3]);
+        set.insert(vec![7, 9]);
+        let snap = CliqueSnapshot::from_cliques(4, &set);
+        assert_eq!(snap.version, 4);
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap.members_of(2), Some(&[1, 2, 3][..]));
+        assert_eq!(snap.members_of(9), Some(&[7, 9][..]));
+        assert_eq!(snap.members_of(5), None);
+        assert_eq!(snap.iter().count(), 2);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let snap = CliqueSnapshot::empty();
+        assert_eq!(snap.version, 0);
+        assert!(snap.is_empty());
+        assert_eq!(snap.members_of(0), None);
+    }
+}

@@ -13,8 +13,10 @@
 //! * **L2/L1 (build-time Python)** — the Clique Generation Module's numeric
 //!   hot-spot (request-incidence → co-occurrence → normalized, thresholded
 //!   CRM) authored in JAX with a Pallas matmul kernel and AOT-lowered to
-//!   HLO text; executed at runtime through [`runtime::XlaRuntime`]
-//!   (PJRT CPU via the `xla` crate). Python is never on the request path.
+//!   HLO text; executed at runtime through `runtime::XlaRuntime`
+//!   (PJRT CPU via the `xla` crate, behind the `xla` cargo feature — the
+//!   offline build falls back to the native CRM engine). Python is never
+//!   on the request path.
 //!
 //! ## Crate map
 //!
@@ -27,10 +29,10 @@
 //! | [`clique`] | disjoint clique store; split / approximate-merge / adjust |
 //! | [`cache`] | per-ESS cache state, expiry queue, cost model & ledger |
 //! | [`algo`] | `CachePolicy` trait: AKPC + NoPacking, PackCache, DP_Greedy, OPT |
-//! | [`sim`] | event-driven CDN simulator + reports |
+//! | [`sim`] | event-driven CDN simulator, sharded replay driver + reports |
 //! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
-//! | [`coordinator`] | online tokio service: router, batcher, background clique-gen |
-//! | [`bench`] | the paper's evaluation harness (every table & figure) |
+//! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker |
+//! | [`bench`] | the paper's evaluation harness (every table & figure, shard scaling) |
 
 pub mod algo;
 pub mod bench;

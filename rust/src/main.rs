@@ -10,7 +10,7 @@
 //!                 fig8c fig9a fig9b adversarial all)
 //!   gen-trace    write a synthetic Netflix/Spotify-like trace to disk
 //!   trace-stats  analyze a trace file
-//!   serve        online coordinator demo (replays a trace, XLA runtime)
+//!   serve        online sharded coordinator demo (replays a trace)
 //!   config       show the effective configuration (Table II defaults)
 //!
 //! flags:
@@ -23,16 +23,17 @@
 //!   --trace <file>            run: load a trace file instead
 //!   --out <file>              gen-trace: output path (.bin or .csv)
 //!   --seed <N>                RNG seed override
+//!   --shards <N>              serve: shard actor count (default 1)
+//!   --mode <ordered|parallel> serve: replay scheduling (default parallel)
 //! ```
 //!
 //! (The offline build has no clap; flag parsing is in-tree.)
 
 use akpc::algo::{AdaptiveK, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
 use akpc::bench::experiments as exp;
-use akpc::bench::sweep::{EngineChoice, PolicyChoice};
+use akpc::bench::sweep::{shard_scaling, EngineChoice, PolicyChoice};
 use akpc::config::AkpcConfig;
-use akpc::coordinator::{Coordinator, ServeRequest};
-use akpc::runtime::CrmEngine;
+use akpc::sim::{replay_sharded, ReplayMode};
 use akpc::trace::{generator, io as trace_io, stats};
 
 /// Parsed command line.
@@ -75,9 +76,10 @@ fn usage() {
          run:       --policy <no-packing|packcache|dp-greedy|akpc|akpc-no-cs-no-acm|akpc-adaptive-k|opt>\n\
          \u{20}          --dataset <netflix|spotify> | --trace <file>\n\
          exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
-         \u{20}           fig9a|fig9b|adversarial|ablations|all>\n\
+         \u{20}           fig9a|fig9b|adversarial|ablations|shards|all>\n\
          gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
-         serve:     --dataset <netflix|spotify> [--requests N]"
+         serve:     --dataset <netflix|spotify> [--requests N] [--shards N]\n\
+         \u{20}          [--mode <ordered|parallel>]"
     );
 }
 
@@ -184,29 +186,21 @@ fn main() -> anyhow::Result<()> {
                 .map(|s| s.parse())
                 .transpose()?
                 .unwrap_or(20_000);
+            let n_shards: usize = cli
+                .flag("shards")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(1);
+            let mode = match cli.flag("mode").unwrap_or("parallel") {
+                "ordered" => ReplayMode::Ordered,
+                "parallel" => ReplayMode::Parallel,
+                m => anyhow::bail!("unknown replay mode `{m}`"),
+            };
             let trace = gen(&cfg, n)?;
-            let coord = Coordinator::start(
-                cfg.clone(),
-                match engine {
-                    EngineChoice::Native => CrmEngine::Native,
-                    EngineChoice::Xla => CrmEngine::Xla,
-                },
-            );
-            let t0 = std::time::Instant::now();
-            for r in &trace.requests {
-                coord.serve(ServeRequest {
-                    items: r.items.clone(),
-                    server: r.server,
-                    time: Some(r.time),
-                })?;
-            }
-            let m = coord.metrics()?;
-            println!("{}", m.summary());
-            println!(
-                "replay throughput: {:.0} req/s",
-                trace.len() as f64 / t0.elapsed().as_secs_f64()
-            );
-            println!("{}", m.to_json().to_string_pretty());
+            let rep = replay_sharded(&cfg, engine.to_engine(), &trace, n_shards, mode)?;
+            println!("{}", rep.metrics.summary());
+            println!("{}", rep.row());
+            println!("{}", rep.metrics.to_json().to_string_pretty());
         }
         "config" => {
             println!("{}", cfg.to_toml());
@@ -305,6 +299,24 @@ fn run_experiment(
     if all || id == "ablations" {
         for r in exp::ablations(opts, cfg) {
             r.print();
+        }
+        matched = true;
+    }
+    if all || id == "shards" {
+        println!("== Serving-path shard scaling (multi-ESS coordinator) ==");
+        let trace = generator::netflix_like(
+            cfg.n_items,
+            cfg.n_servers,
+            opts.n_requests.min(50_000),
+            opts.seed,
+        );
+        let rows = shard_scaling(cfg, &trace, &[1, 2, 4, 8], opts.engine)?;
+        println!("{:<8}{:>12}{:>14}{:>10}", "shards", "req/s", "total", "p99(us)");
+        for r in &rows {
+            println!(
+                "{:<8}{:>12.0}{:>14.1}{:>10}",
+                r.n_shards, r.requests_per_sec, r.total_cost, r.p99_latency_us
+            );
         }
         matched = true;
     }

@@ -5,207 +5,268 @@
 //! Interchange is HLO *text* (see `python/compile/aot.py`): jax ≥ 0.5
 //! emits 64-bit instruction ids in serialized protos which xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! The PJRT path needs the external `xla` crate, which the offline build
+//! image cannot fetch, so it is gated behind the `xla` cargo feature.
+//! Without it, [`XlaCrmBuilder::new`] reports the runtime unavailable and
+//! every caller (CLI, coordinator, benches) falls back to the native CRM
+//! engine — same decision-level outputs, pure Rust.
 
-use std::collections::HashMap;
+use crate::crm::{CrmBuilder, NativeCrmBuilder};
 
-use crate::crm::{CrmBuilder, CrmWindow, NativeCrmBuilder};
-use crate::trace::model::Request;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
 
-use super::registry::{ArtifactRegistry, ArtifactSpec};
+    use crate::crm::{CrmBuilder, CrmWindow, NativeCrmBuilder};
+    use crate::trace::model::Request;
 
-/// A compiled CRM executable for one `(batch, n)` artifact shape.
-struct CompiledCrm {
-    exe: xla::PjRtLoadedExecutable,
-    batch: usize,
-    n: usize,
-}
+    use super::super::registry::{ArtifactRegistry, ArtifactSpec};
 
-/// PJRT-CPU runtime holding the client and compiled executables
-/// (one per artifact shape, compiled lazily and memoized).
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    registry: ArtifactRegistry,
-    compiled: HashMap<String, CompiledCrm>,
-}
-
-impl XlaRuntime {
-    /// Create a CPU PJRT client and index the artifacts directory.
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
-        let registry = ArtifactRegistry::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Self {
-            client,
-            registry,
-            compiled: HashMap::new(),
-        })
+    /// A compiled CRM executable for one `(batch, n)` artifact shape.
+    struct CompiledCrm {
+        exe: xla::PjRtLoadedExecutable,
+        batch: usize,
+        n: usize,
     }
 
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+    /// PJRT-CPU runtime holding the client and compiled executables
+    /// (one per artifact shape, compiled lazily and memoized).
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        registry: ArtifactRegistry,
+        compiled: HashMap<String, CompiledCrm>,
     }
 
-    pub fn registry(&self) -> &ArtifactRegistry {
-        &self.registry
-    }
-
-    /// Can the registry serve this `(n_items, batch)` workload?
-    pub fn covers(&self, n_items: usize, batch: usize) -> bool {
-        self.registry.select(n_items, batch).is_some()
-    }
-
-    fn compile_spec(&mut self, spec: &ArtifactSpec) -> anyhow::Result<&CompiledCrm> {
-        if !self.compiled.contains_key(&spec.file) {
-            let path = self.registry.path_of(spec);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
-            )
-            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
-            self.compiled.insert(
-                spec.file.clone(),
-                CompiledCrm {
-                    exe,
-                    batch: spec.batch,
-                    n: spec.n,
-                },
-            );
+    impl XlaRuntime {
+        /// Create a CPU PJRT client and index the artifacts directory.
+        pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+            let registry = ArtifactRegistry::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+            Ok(Self {
+                client,
+                registry,
+                compiled: HashMap::new(),
+            })
         }
-        Ok(&self.compiled[&spec.file])
-    }
 
-    /// Execute the CRM pipeline on one window of requests.
-    ///
-    /// The incidence matrix is padded to the artifact's `(batch, n)` shape
-    /// (zero rows/columns contribute nothing — verified in pytest). Windows
-    /// larger than the artifact batch are folded: co-occurrence is additive
-    /// over row blocks, but normalization is not, so oversized windows are
-    /// rejected here and routed to the native engine by the caller.
-    pub fn run_crm(
-        &mut self,
-        window: &[Request],
-        n_items: u32,
-        theta: f32,
-        top_frac: f32,
-    ) -> anyhow::Result<CrmWindow> {
-        let spec = self
-            .registry
-            .select(n_items as usize, window.len())
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "no artifact covers n={n_items}, batch={}",
-                    window.len()
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn registry(&self) -> &ArtifactRegistry {
+            &self.registry
+        }
+
+        /// Can the registry serve this `(n_items, batch)` workload?
+        pub fn covers(&self, n_items: usize, batch: usize) -> bool {
+            self.registry.select(n_items, batch).is_some()
+        }
+
+        fn compile_spec(&mut self, spec: &ArtifactSpec) -> anyhow::Result<&CompiledCrm> {
+            if !self.compiled.contains_key(&spec.file) {
+                let path = self.registry.path_of(spec);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str()
+                        .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
                 )
-            })?
-            .clone();
-        let compiled = self.compile_spec(&spec)?;
-        let (b, n) = (compiled.batch, compiled.n);
-
-        // Multi-hot incidence, padded.
-        let mut x = vec![0.0f32; b * n];
-        for (row, r) in window.iter().enumerate() {
-            for &d in &r.items {
-                x[row * n + d as usize] = 1.0;
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+                self.compiled.insert(
+                    spec.file.clone(),
+                    CompiledCrm {
+                        exe,
+                        batch: spec.batch,
+                        n: spec.n,
+                    },
+                );
             }
+            Ok(&self.compiled[&spec.file])
         }
-        let x_lit = xla::Literal::vec1(&x)
-            .reshape(&[b as i64, n as i64])
-            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
-        let theta_lit = xla::Literal::scalar(theta);
-        let frac_lit = xla::Literal::scalar(top_frac);
 
-        let result = compiled
-            .exe
-            .execute::<xla::Literal>(&[x_lit, theta_lit, frac_lit])
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        /// Execute the CRM pipeline on one window of requests.
+        ///
+        /// The incidence matrix is padded to the artifact's `(batch, n)`
+        /// shape (zero rows/columns contribute nothing — verified in
+        /// pytest). Windows larger than the artifact batch are folded:
+        /// co-occurrence is additive over row blocks, but normalization is
+        /// not, so oversized windows are rejected here and routed to the
+        /// native engine by the caller.
+        pub fn run_crm(
+            &mut self,
+            window: &[Request],
+            n_items: u32,
+            theta: f32,
+            top_frac: f32,
+        ) -> anyhow::Result<CrmWindow> {
+            let spec = self
+                .registry
+                .select(n_items as usize, window.len())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no artifact covers n={n_items}, batch={}",
+                        window.len()
+                    )
+                })?
+                .clone();
+            let compiled = self.compile_spec(&spec)?;
+            let (b, n) = (compiled.batch, compiled.n);
 
-        let (norm_l, bin_l, freq_l) = result
-            .to_tuple3()
-            .map_err(|e| anyhow::anyhow!("to_tuple3: {e:?}"))?;
-        let norm: Vec<f32> = norm_l
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("norm to_vec: {e:?}"))?;
-        let bin: Vec<f32> = bin_l
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("bin to_vec: {e:?}"))?;
-        let freq: Vec<f32> = freq_l
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("freq to_vec: {e:?}"))?;
-
-        Ok(CrmWindow::from_full(&norm, &bin, &freq, n, top_frac))
-    }
-}
-
-/// [`CrmBuilder`] backed by the XLA runtime, with transparent native
-/// fallback for shapes no artifact covers (logged once).
-pub struct XlaCrmBuilder {
-    runtime: XlaRuntime,
-    native: NativeCrmBuilder,
-    warned: bool,
-    /// Windows served by the XLA path / the native fallback.
-    pub xla_windows: u64,
-    pub native_windows: u64,
-}
-
-impl XlaCrmBuilder {
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
-        Ok(Self {
-            runtime: XlaRuntime::new(artifacts_dir)?,
-            native: NativeCrmBuilder,
-            warned: false,
-            xla_windows: 0,
-            native_windows: 0,
-        })
-    }
-
-    pub fn runtime(&self) -> &XlaRuntime {
-        &self.runtime
-    }
-}
-
-impl CrmBuilder for XlaCrmBuilder {
-    fn build(
-        &mut self,
-        window: &[Request],
-        n_items: u32,
-        theta: f32,
-        top_frac: f32,
-    ) -> CrmWindow {
-        if self.runtime.covers(n_items as usize, window.len()) {
-            match self.runtime.run_crm(window, n_items, theta, top_frac) {
-                Ok(w) => {
-                    self.xla_windows += 1;
-                    return w;
+            // Multi-hot incidence, padded.
+            let mut x = vec![0.0f32; b * n];
+            for (row, r) in window.iter().enumerate() {
+                for &d in &r.items {
+                    x[row * n + d as usize] = 1.0;
                 }
-                Err(e) => {
-                    if !self.warned {
-                        eprintln!("[akpc] XLA CRM failed ({e}); falling back to native");
-                        self.warned = true;
+            }
+            let x_lit = xla::Literal::vec1(&x)
+                .reshape(&[b as i64, n as i64])
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+            let theta_lit = xla::Literal::scalar(theta);
+            let frac_lit = xla::Literal::scalar(top_frac);
+
+            let result = compiled
+                .exe
+                .execute::<xla::Literal>(&[x_lit, theta_lit, frac_lit])
+                .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+
+            let (norm_l, bin_l, freq_l) = result
+                .to_tuple3()
+                .map_err(|e| anyhow::anyhow!("to_tuple3: {e:?}"))?;
+            let norm: Vec<f32> = norm_l
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("norm to_vec: {e:?}"))?;
+            let bin: Vec<f32> = bin_l
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("bin to_vec: {e:?}"))?;
+            let freq: Vec<f32> = freq_l
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("freq to_vec: {e:?}"))?;
+
+            Ok(CrmWindow::from_full(&norm, &bin, &freq, n, top_frac))
+        }
+    }
+
+    /// [`CrmBuilder`] backed by the XLA runtime, with transparent native
+    /// fallback for shapes no artifact covers (logged once).
+    pub struct XlaCrmBuilder {
+        runtime: XlaRuntime,
+        native: NativeCrmBuilder,
+        warned: bool,
+        /// Windows served by the XLA path / the native fallback.
+        pub xla_windows: u64,
+        pub native_windows: u64,
+    }
+
+    impl XlaCrmBuilder {
+        pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+            Ok(Self {
+                runtime: XlaRuntime::new(artifacts_dir)?,
+                native: NativeCrmBuilder,
+                warned: false,
+                xla_windows: 0,
+                native_windows: 0,
+            })
+        }
+
+        pub fn runtime(&self) -> &XlaRuntime {
+            &self.runtime
+        }
+    }
+
+    impl CrmBuilder for XlaCrmBuilder {
+        fn build(
+            &mut self,
+            window: &[Request],
+            n_items: u32,
+            theta: f32,
+            top_frac: f32,
+        ) -> CrmWindow {
+            if self.runtime.covers(n_items as usize, window.len()) {
+                match self.runtime.run_crm(window, n_items, theta, top_frac) {
+                    Ok(w) => {
+                        self.xla_windows += 1;
+                        return w;
+                    }
+                    Err(e) => {
+                        if !self.warned {
+                            eprintln!(
+                                "[akpc] XLA CRM failed ({e}); falling back to native"
+                            );
+                            self.warned = true;
+                        }
                     }
                 }
+            } else if !self.warned {
+                eprintln!(
+                    "[akpc] no artifact covers n={n_items}, batch={} — native CRM engine",
+                    window.len()
+                );
+                self.warned = true;
             }
-        } else if !self.warned {
-            eprintln!(
-                "[akpc] no artifact covers n={n_items}, batch={} — native CRM engine",
-                window.len()
-            );
-            self.warned = true;
+            self.native_windows += 1;
+            self.native.build(window, n_items, theta, top_frac)
         }
-        self.native_windows += 1;
-        self.native.build(window, n_items, theta, top_frac)
-    }
 
-    fn engine_name(&self) -> &'static str {
-        "xla"
+        fn engine_name(&self) -> &'static str {
+            "xla"
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::{XlaCrmBuilder, XlaRuntime};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::crm::{CrmBuilder, CrmWindow, NativeCrmBuilder};
+    use crate::trace::model::Request;
+
+    /// Feature-gated stand-in: constructing it always fails, so callers
+    /// take their existing native-fallback paths. Kept as a real type so
+    /// code and tests referencing `XlaCrmBuilder` compile unchanged.
+    pub struct XlaCrmBuilder {
+        native: NativeCrmBuilder,
+        /// Mirror the real builder's counters for API parity.
+        pub xla_windows: u64,
+        pub native_windows: u64,
+    }
+
+    impl XlaCrmBuilder {
+        pub fn new(_artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+            anyhow::bail!(
+                "akpc was built without the `xla` feature; PJRT runtime unavailable"
+            )
+        }
+    }
+
+    impl CrmBuilder for XlaCrmBuilder {
+        fn build(
+            &mut self,
+            window: &[Request],
+            n_items: u32,
+            theta: f32,
+            top_frac: f32,
+        ) -> CrmWindow {
+            self.native_windows += 1;
+            self.native.build(window, n_items, theta, top_frac)
+        }
+
+        fn engine_name(&self) -> &'static str {
+            "xla"
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaCrmBuilder;
 
 /// Engine selection for the CLI / experiments.
 pub enum CrmEngine {
@@ -215,7 +276,7 @@ pub enum CrmEngine {
 
 impl CrmEngine {
     /// Instantiate a boxed builder; `Xla` falls back to native (with a
-    /// warning) when artifacts are absent.
+    /// warning) when artifacts — or the `xla` feature — are absent.
     pub fn builder(&self, artifacts_dir: &str) -> Box<dyn CrmBuilder> {
         match self {
             CrmEngine::Native => Box::new(NativeCrmBuilder),

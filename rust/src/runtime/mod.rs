@@ -1,8 +1,12 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them from the
-//! Rust hot path (never touching Python).
+//! Rust hot path (never touching Python). The PJRT client itself requires
+//! the `xla` cargo feature; without it the registry still works and the
+//! engine reports itself unavailable (native fallback everywhere).
 
 pub mod engine;
 pub mod registry;
 
-pub use engine::{CrmEngine, XlaCrmBuilder, XlaRuntime};
+pub use engine::{CrmEngine, XlaCrmBuilder};
+#[cfg(feature = "xla")]
+pub use engine::XlaRuntime;
 pub use registry::{ArtifactRegistry, ArtifactSpec};

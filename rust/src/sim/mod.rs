@@ -2,8 +2,10 @@
 //! with the paper's batched-window timeline (Fig. 3) and produces a
 //! [`SimReport`].
 
+pub mod replay;
 pub mod report;
 
+pub use replay::{replay_sharded, ReplayMode, ShardedReport};
 pub use report::SimReport;
 
 use crate::algo::CachePolicy;

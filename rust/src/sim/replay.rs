@@ -1,0 +1,224 @@
+//! Trace replay through the sharded online coordinator — the bridge
+//! between the offline simulator and the serving path, and the driver the
+//! shard-scaling experiments/benches use (DESIGN.md §2.3).
+//!
+//! Two modes:
+//!
+//! * [`ReplayMode::Ordered`] — one driver thread submits the trace in time
+//!   order with the synchronous window barrier. Deterministic: the
+//!   per-shard ledgers sum to a single-leader run's ledger on the same
+//!   trace (the acceptance check `assert_shard_sum_matches` encodes).
+//! * [`ReplayMode::Parallel`] — one client thread per shard replays that
+//!   shard's request subsequence concurrently (async window ticks). This
+//!   is the throughput configuration; window composition becomes
+//!   arrival-order dependent, so costs may differ slightly run to run.
+
+use crate::cache::CostLedger;
+use crate::config::AkpcConfig;
+use crate::coordinator::{Coordinator, MetricsSnapshot, ServeRequest, TickMode};
+use crate::runtime::CrmEngine;
+use crate::trace::model::Trace;
+
+/// Replay scheduling strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayMode {
+    /// Single driver, global time order, synchronous window ticks.
+    Ordered,
+    /// One client thread per shard, asynchronous window ticks.
+    Parallel,
+}
+
+/// Outcome of a sharded replay.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Aggregated (cross-shard merged) metrics at shutdown.
+    pub metrics: MetricsSnapshot,
+    pub n_shards: usize,
+    pub mode: ReplayMode,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+}
+
+impl ShardedReport {
+    /// Per-shard ledgers (index = shard id).
+    pub fn shard_ledgers(&self) -> Vec<CostLedger> {
+        self.metrics
+            .per_shard
+            .iter()
+            .map(|s| s.ledger.clone())
+            .collect()
+    }
+
+    /// Sum of the per-shard ledger totals (equals `metrics.ledger.total()`
+    /// up to summation order).
+    pub fn shard_sum(&self) -> f64 {
+        self.metrics
+            .per_shard
+            .iter()
+            .map(|s| s.ledger.total())
+            .sum()
+    }
+
+    /// One human-readable summary row for scaling tables.
+    pub fn row(&self) -> String {
+        format!(
+            "shards={:<3} mode={:<8} total={:>12.1}  {:>9.0} req/s  {:.2}s",
+            self.n_shards,
+            format!("{:?}", self.mode).to_lowercase(),
+            self.metrics.ledger.total(),
+            self.requests_per_sec,
+            self.wall_secs,
+        )
+    }
+}
+
+/// Replay `trace` through an `n_shards` coordinator; returns the final
+/// metrics (the coordinator is shut down before returning).
+pub fn replay_sharded(
+    cfg: &AkpcConfig,
+    engine: CrmEngine,
+    trace: &Trace,
+    n_shards: usize,
+    mode: ReplayMode,
+) -> anyhow::Result<ShardedReport> {
+    let tick = match mode {
+        ReplayMode::Ordered => TickMode::Sync,
+        ReplayMode::Parallel => TickMode::Async,
+    };
+    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick);
+    let n_shards = coord.n_shards();
+    let wall = std::time::Instant::now();
+
+    match mode {
+        ReplayMode::Ordered => {
+            for r in &trace.requests {
+                coord.serve(ServeRequest {
+                    items: r.items.clone(),
+                    server: r.server,
+                    time: Some(r.time),
+                })?;
+            }
+        }
+        ReplayMode::Parallel => {
+            let mut handles = Vec::with_capacity(n_shards);
+            for shard in 0..n_shards {
+                let client = coord.client();
+                // Each thread owns its shard's time-ordered subsequence.
+                let requests: Vec<_> = trace
+                    .requests
+                    .iter()
+                    .filter(|r| r.server as usize % n_shards == shard)
+                    .cloned()
+                    .collect();
+                handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+                    for r in requests {
+                        client.serve(ServeRequest {
+                            items: r.items,
+                            server: r.server,
+                            time: Some(r.time),
+                        })?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("replay client panicked"))??;
+            }
+        }
+    }
+
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let metrics = coord.shutdown();
+    Ok(ShardedReport {
+        metrics,
+        n_shards,
+        mode,
+        wall_secs,
+        requests_per_sec: trace.len() as f64 / wall_secs.max(1e-12),
+    })
+}
+
+/// The tentpole determinism check: per-shard ledger totals must sum to the
+/// single-leader total within `1e-9` (relative — the only permitted
+/// difference is floating-point summation order).
+pub fn assert_shard_sum_matches(report: &ShardedReport, single_leader_total: f64) {
+    let sum = report.shard_sum();
+    let tol = 1e-9 * single_leader_total.abs().max(1.0);
+    assert!(
+        (sum - single_leader_total).abs() <= tol,
+        "{}-shard ledger sum {} != single-leader total {} (diff {:.3e}, tol {:.3e})",
+        report.n_shards,
+        sum,
+        single_leader_total,
+        (sum - single_leader_total).abs(),
+        tol
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Akpc;
+    use crate::trace::generator::netflix_like;
+
+    fn cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 40,
+            n_servers: 24,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ordered_replay_matches_simulator() {
+        let cfg = cfg();
+        let trace = netflix_like(cfg.n_items, cfg.n_servers, 4_000, 41);
+        let mut policy = Akpc::new(&cfg);
+        let sim = crate::sim::run(&mut policy, &trace, cfg.batch_size);
+
+        for n_shards in [1usize, 3] {
+            let rep = replay_sharded(
+                &cfg,
+                CrmEngine::Native,
+                &trace,
+                n_shards,
+                ReplayMode::Ordered,
+            )
+            .unwrap();
+            assert_eq!(rep.metrics.ledger.requests, trace.len() as u64);
+            assert_eq!(rep.metrics.ledger.full_hits, sim.ledger.full_hits);
+            assert_eq!(rep.metrics.ledger.transfers, sim.ledger.transfers);
+            assert_shard_sum_matches(&rep, sim.ledger.total());
+        }
+    }
+
+    #[test]
+    fn parallel_replay_completes_and_accounts() {
+        let cfg = cfg();
+        let trace = netflix_like(cfg.n_items, cfg.n_servers, 4_000, 42);
+        let rep = replay_sharded(
+            &cfg,
+            CrmEngine::Native,
+            &trace,
+            4,
+            ReplayMode::Parallel,
+        )
+        .unwrap();
+        assert_eq!(rep.metrics.ledger.requests, trace.len() as u64);
+        assert_eq!(rep.metrics.per_shard.len(), 4);
+        assert!(rep.metrics.ledger.total() > 0.0);
+        assert!(rep.requests_per_sec > 0.0);
+        // Every shard saw only its own servers' traffic.
+        for s in &rep.metrics.per_shard {
+            let expected = trace
+                .requests
+                .iter()
+                .filter(|r| r.server as usize % 4 == s.shard)
+                .count() as u64;
+            assert_eq!(s.served, expected, "shard {} served wrong subset", s.shard);
+        }
+        assert!(rep.row().contains("shards=4"));
+    }
+}

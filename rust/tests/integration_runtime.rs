@@ -3,21 +3,25 @@
 //! engine on every decision-level output — the guarantee that lets the
 //! experiments run on either engine interchangeably.
 //!
-//! Requires `make artifacts`; tests are skipped (with a message) when the
-//! artifacts directory is absent so `cargo test` works from a fresh clone.
+//! Requires `make artifacts` *and* the `xla` cargo feature; tests are
+//! skipped (with a message) when either is absent so `cargo test` works
+//! from a fresh offline clone.
 
 use akpc::crm::{sessionize, CrmBuilder, NativeCrmBuilder};
 use akpc::runtime::{ArtifactRegistry, XlaCrmBuilder};
 use akpc::trace::generator::{netflix_like, spotify_like};
 
 fn artifacts_available() -> bool {
-    ArtifactRegistry::load("artifacts").is_ok()
+    cfg!(feature = "xla") && ArtifactRegistry::load("artifacts").is_ok()
 }
 
 macro_rules! require_artifacts {
     () => {
         if !artifacts_available() {
-            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            eprintln!(
+                "skipping: artifacts/ missing or built without the `xla` \
+                 feature (run `make artifacts`, build with --features xla)"
+            );
             return;
         }
     };

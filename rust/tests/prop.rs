@@ -107,6 +107,88 @@ fn prop_cache_state_g_count_consistent() {
 }
 
 #[test]
+fn prop_board_retention_matches_global_g_rule() {
+    // The cross-shard CopyBoard restates Algorithm 6's "G[c] == 1" as a
+    // structural latest-copy predicate (cache/board.rs). Feed one
+    // G-rule state and one board-backed state the identical random op
+    // sequence: every observable — retentions, retained units, copy
+    // counts, expiries — must stay equal throughout.
+    forall("board_matches_g", 200, |rng| {
+        let board = std::sync::Arc::new(akpc::cache::CopyBoard::new());
+        let mut plain = CacheState::new();
+        let mut sharded = CacheState::new();
+        sharded.attach_board(board);
+        let keys: Vec<u64> = (0..6).map(|i| 500 + i).collect();
+        let current: std::collections::HashSet<u64> =
+            keys.iter().copied().take(3).collect();
+        let mut now = 0.0;
+        for step in 0..300 {
+            now += rng.exp(0.4);
+            plain.process_expirations(now, &current, 1.0);
+            sharded.process_expirations(now, &current, 1.0);
+            let key = keys[rng.below(keys.len())];
+            let server = rng.below(4) as u32;
+            let horizon = now + 0.2 + rng.f64();
+            if plain.is_cached(key, server, now) {
+                plain.extend(key, server, horizon);
+                sharded.extend(key, server, horizon);
+            } else {
+                let size = 1 + rng.below(4) as u32;
+                plain.insert(key, size, server, horizon);
+                sharded.insert(key, size, server, horizon);
+            }
+            assert_eq!(
+                plain.retentions, sharded.retentions,
+                "retention count diverged at step {step}"
+            );
+            assert_eq!(
+                plain.retained_units, sharded.retained_units,
+                "retained units diverged at step {step}"
+            );
+            for &k in &keys {
+                assert_eq!(plain.copy_count(k), sharded.copy_count(k));
+                for s in 0..4u32 {
+                    assert_eq!(
+                        plain.expiry_of(k, s),
+                        sharded.expiry_of(k, s),
+                        "expiry diverged for ({k},{s}) at step {step}"
+                    );
+                }
+            }
+            plain.check_invariants().expect("plain invariants");
+            sharded.check_invariants().expect("sharded invariants");
+        }
+    });
+}
+
+#[test]
+fn prop_insert_over_stale_never_inflates_g() {
+    // Regression property for the lazy-deletion insert fix: random
+    // insert/extend traffic with *no* sweeps in between must keep G[c]
+    // equal to the number of distinct (key, server) pairs.
+    forall("insert_over_stale", 200, |rng| {
+        let mut cache = CacheState::new();
+        let mut pairs = std::collections::HashSet::new();
+        let mut now = 0.0;
+        for _ in 0..200 {
+            now += rng.exp(0.5);
+            let key = 100 + rng.below(4) as u64;
+            let server = rng.below(3) as u32;
+            if cache.is_cached(key, server, now) {
+                cache.extend(key, server, now + 1.0);
+            } else {
+                // May overwrite an expired-but-unswept entry.
+                cache.insert(key, 1, server, now + 1.0);
+            }
+            pairs.insert((key, server));
+            cache.check_invariants().expect("G consistency");
+        }
+        let total: u32 = (100..104u64).map(|k| cache.copy_count(k)).sum();
+        assert_eq!(total as usize, pairs.len(), "G[c] drifted from live pairs");
+    });
+}
+
+#[test]
 fn prop_no_data_loss_for_current_cliques() {
     // Observation 3: a clique in Clique(W) that was cached at least once
     // keeps >= 1 alive copy across any expiry pattern.

@@ -1,0 +1,302 @@
+//! Integration tests for the sharded multi-ESS coordinator: ledger
+//! equivalence with the single leader (the tentpole determinism check),
+//! concurrent clients across shards, retention accounting across shard
+//! boundaries, and shutdown behavior.
+
+use akpc::algo::Akpc;
+use akpc::config::AkpcConfig;
+use akpc::coordinator::{Coordinator, ServeRequest, TickMode};
+use akpc::runtime::CrmEngine;
+use akpc::sim::replay::assert_shard_sum_matches;
+use akpc::sim::{self, replay_sharded, ReplayMode};
+use akpc::trace::generator::{netflix_like, spotify_like};
+use akpc::trace::model::{Request, Trace};
+
+/// The acceptance-criterion check: an 8-shard ordered replay's per-shard
+/// ledgers sum to the single-leader run's total within 1e-9 (relative),
+/// and the integer decision counters match exactly.
+#[test]
+fn eight_shard_ledgers_sum_to_single_leader() {
+    let cfg = AkpcConfig {
+        n_items: 60,
+        n_servers: 64,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 20_000, 31);
+
+    let mut policy = Akpc::new(&cfg);
+    let single = sim::run(&mut policy, &trace, cfg.batch_size);
+
+    let rep = replay_sharded(
+        &cfg,
+        CrmEngine::Native,
+        &trace,
+        8,
+        ReplayMode::Ordered,
+    )
+    .unwrap();
+    assert_eq!(rep.n_shards, 8);
+    assert_eq!(rep.metrics.per_shard.len(), 8);
+    assert_shard_sum_matches(&rep, single.ledger.total());
+    // Decision-level equality, not just cost-level.
+    assert_eq!(rep.metrics.ledger.requests, single.ledger.requests);
+    assert_eq!(rep.metrics.ledger.full_hits, single.ledger.full_hits);
+    assert_eq!(rep.metrics.ledger.misses, single.ledger.misses);
+    assert_eq!(rep.metrics.ledger.transfers, single.ledger.transfers);
+    assert_eq!(
+        rep.metrics.ledger.items_delivered,
+        single.ledger.items_delivered
+    );
+    // Every shard actually participated.
+    for s in &rep.metrics.per_shard {
+        assert!(s.served > 0, "shard {} served nothing", s.shard);
+    }
+}
+
+/// Same equivalence on the churny Spotify-like workload (clique set
+/// rotates, so snapshot installs and retention currency changes are
+/// exercised harder) and a shard count that does not divide the server
+/// count evenly.
+#[test]
+fn churny_trace_equivalence_with_odd_shards() {
+    let cfg = AkpcConfig {
+        n_items: 60,
+        n_servers: 30,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let trace = spotify_like(cfg.n_items, cfg.n_servers, 15_000, 32);
+
+    let mut policy = Akpc::new(&cfg);
+    let single = sim::run(&mut policy, &trace, cfg.batch_size);
+
+    for n_shards in [2usize, 7] {
+        let rep = replay_sharded(
+            &cfg,
+            CrmEngine::Native,
+            &trace,
+            n_shards,
+            ReplayMode::Ordered,
+        )
+        .unwrap();
+        assert_shard_sum_matches(&rep, single.ledger.total());
+        assert_eq!(rep.metrics.ledger.full_hits, single.ledger.full_hits);
+        assert_eq!(rep.metrics.ledger.transfers, single.ledger.transfers);
+    }
+}
+
+/// Retention (Algorithm 6 line 3) must account identically when the
+/// copies of one clique live on servers owned by different shards. The
+/// trace is handcrafted so the last copies expire with the clique still
+/// current, forcing retention chains that cross shard sweep gaps.
+#[test]
+fn cross_shard_retention_matches_single_leader() {
+    let cfg = AkpcConfig {
+        n_items: 8,
+        n_servers: 4,
+        batch_size: 4,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let mut requests = Vec::new();
+    // Window 1: learn the {0,1} bundle (four servers, distinct sessions).
+    for (i, server) in (0..4u32).enumerate() {
+        requests.push(Request::new(vec![0, 1], server, i as f64 * 0.3));
+    }
+    // Sparse phase under the learned packing: copies on servers 0 (shard
+    // 0) and 1 (shard 1), then long gaps so both expire while {0,1} is
+    // still current. Server 1's retention chain runs entirely between its
+    // own requests — the single leader sweeps it from other servers'
+    // requests, a 2-shard run only via install/quiesce sweeps.
+    requests.push(Request::new(vec![0], 0, 10.0)); // cache on ESS 0 (exp 11)
+    requests.push(Request::new(vec![1], 1, 10.2)); // cache on ESS 1 (exp 11.2)
+    requests.push(Request::new(vec![5], 2, 20.0)); // advances the leader clock
+    requests.push(Request::new(vec![0], 2, 20.5)); // refetch on ESS 2
+    let trace = Trace {
+        requests,
+        n_items: cfg.n_items,
+        n_servers: cfg.n_servers,
+        name: "retention-handcrafted".into(),
+    };
+    trace.validate().unwrap();
+
+    let mut policy = Akpc::new(&cfg);
+    let single = sim::run(&mut policy, &trace, cfg.batch_size);
+
+    let rep = replay_sharded(
+        &cfg,
+        CrmEngine::Native,
+        &trace,
+        2,
+        ReplayMode::Ordered,
+    )
+    .unwrap();
+    assert!(
+        rep.metrics.retentions() > 0,
+        "scenario failed to exercise retention"
+    );
+    assert_shard_sum_matches(&rep, single.ledger.total());
+    let c_p_sum: f64 = rep.metrics.per_shard.iter().map(|s| s.ledger.c_p).sum();
+    assert!(
+        (c_p_sum - single.ledger.c_p).abs() <= 1e-9 * single.ledger.c_p.max(1.0),
+        "retention rent diverged: shards {} vs leader {}",
+        c_p_sum,
+        single.ledger.c_p
+    );
+}
+
+/// Many concurrent clients over many shards: every request is accounted
+/// exactly once, across shards.
+#[test]
+fn concurrent_clients_across_shards() {
+    let cfg = AkpcConfig {
+        n_items: 32,
+        n_servers: 16,
+        batch_size: 50,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, CrmEngine::Native, 4);
+    let mut handles = Vec::new();
+    for c in 0..12u32 {
+        let client = coord.client();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..100u32 {
+                client
+                    .serve(ServeRequest {
+                        items: vec![(c * 3 + i) % 32, (c + i) % 32],
+                        server: (c + i) % 16,
+                        time: None, // wall clock
+                    })
+                    .unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.served, 1200);
+    assert_eq!(m.ledger.requests, 1200);
+    assert_eq!(m.per_shard.len(), 4);
+    assert_eq!(m.per_shard.iter().map(|s| s.served).sum::<u64>(), 1200);
+    assert_eq!(
+        m.ledger.full_hits + m.ledger.misses,
+        1200,
+        "hits+misses must partition requests"
+    );
+}
+
+/// Shutdown must be clean and idempotent with N shards: explicit
+/// shutdown, drop-without-shutdown, and drop with live clients.
+#[test]
+fn shutdown_with_n_shards_is_clean() {
+    let cfg = AkpcConfig {
+        n_items: 16,
+        n_servers: 8,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+
+    // Explicit shutdown returns aggregated finals.
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 8);
+    for i in 0..8u32 {
+        coord
+            .serve(ServeRequest {
+                items: vec![i % 16],
+                server: i % 8,
+                time: Some(i as f64 * 0.1),
+            })
+            .unwrap();
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.served, 8);
+    assert_eq!(m.per_shard.len(), 8);
+
+    // Drop without explicit shutdown must not hang or panic.
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 8);
+    coord
+        .serve(ServeRequest {
+            items: vec![1],
+            server: 0,
+            time: Some(0.0),
+        })
+        .unwrap();
+    drop(coord);
+
+    // A surviving client observes a clean "down" error after shutdown.
+    let coord = Coordinator::start(cfg, CrmEngine::Native, 3);
+    let client = coord.client();
+    coord.shutdown();
+    let err = client
+        .serve(ServeRequest {
+            items: vec![1],
+            server: 0,
+            time: Some(0.0),
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("down"), "got: {err}");
+}
+
+/// Async tick mode over a parallel replay still serves everything and
+/// keeps per-shard accounting consistent (costs may differ from the
+/// ordered run — window composition is arrival-order dependent).
+#[test]
+fn parallel_async_replay_accounts_every_request() {
+    let cfg = AkpcConfig {
+        n_items: 40,
+        n_servers: 32,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 10_000, 33);
+    let rep = replay_sharded(
+        &cfg,
+        CrmEngine::Native,
+        &trace,
+        4,
+        ReplayMode::Parallel,
+    )
+    .unwrap();
+    assert_eq!(rep.metrics.ledger.requests, 10_000);
+    assert_eq!(
+        rep.metrics.ledger.full_hits + rep.metrics.ledger.misses,
+        10_000
+    );
+    assert!(rep.metrics.windows > 0, "async ticks never ran");
+    assert!(rep.metrics.ledger.total() > 0.0);
+}
+
+/// An ordered replay through `start_with(.., TickMode::Sync)` equals the
+/// plain `start` path (same defaults), pinning the public API contract.
+#[test]
+fn start_defaults_to_sync_ticks() {
+    let cfg = AkpcConfig {
+        n_items: 24,
+        n_servers: 12,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 3_000, 34);
+    let serve_all = |coord: &Coordinator| {
+        for r in &trace.requests {
+            coord
+                .serve(ServeRequest {
+                    items: r.items.clone(),
+                    server: r.server,
+                    time: Some(r.time),
+                })
+                .unwrap();
+        }
+    };
+    let a = Coordinator::start(cfg.clone(), CrmEngine::Native, 3);
+    serve_all(&a);
+    let ma = a.shutdown();
+    let b = Coordinator::start_with(cfg, CrmEngine::Native, 3, TickMode::Sync);
+    serve_all(&b);
+    let mb = b.shutdown();
+    assert_eq!(ma.ledger.c_t, mb.ledger.c_t);
+    assert_eq!(ma.ledger.c_p, mb.ledger.c_p);
+    assert_eq!(ma.ledger.full_hits, mb.ledger.full_hits);
+}

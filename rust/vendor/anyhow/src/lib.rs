@@ -1,0 +1,122 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so the subset of the
+//! `anyhow` API this crate actually uses — [`Result`], [`Error`], and the
+//! `anyhow!` / `bail!` / `ensure!` macros — is provided in-tree. Errors are
+//! message-only: the source chain is flattened into the message at
+//! conversion time (`Display`/`Debug` both print it), which is all the
+//! callers rely on.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-carrying error. Unlike the real `anyhow::Error` there is no
+/// backtrace and no downcasting; the full source chain is captured as text
+/// when converting from a `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The same blanket conversion the real crate provides; it is coherent
+// because `Error` itself deliberately does not implement
+// `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            let v: u32 = s.parse()?; // From<ParseIntError>
+            crate::ensure!(v < 100, "value {v} too large");
+            if v == 13 {
+                crate::bail!("unlucky");
+            }
+            Ok(v)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").unwrap_err().to_string().contains("invalid"));
+        assert!(parse("200").unwrap_err().to_string().contains("too large"));
+        assert_eq!(parse("13").unwrap_err().to_string(), "unlucky");
+        let e = crate::anyhow!("plain {}", 1);
+        assert_eq!(format!("{e}"), "plain 1");
+        assert_eq!(format!("{e:?}"), "plain 1");
+    }
+}

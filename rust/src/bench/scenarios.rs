@@ -1,0 +1,147 @@
+//! Scenario suite runner: sweep the built-in scenario library × a policy
+//! set through the phased single-leader driver and report a cost matrix
+//! plus per-phase breakdowns (EXPERIMENTS.md §Scenarios). Sits alongside
+//! the fig* experiments; `akpc scenario suite` and the CI smoke job call
+//! into it.
+
+use crate::config::AkpcConfig;
+use crate::scenario::{self, run_phased, ScenarioRun};
+use crate::util::Json;
+
+use super::sweep::{EngineChoice, PolicyChoice};
+
+/// Everything one suite sweep produced.
+#[derive(Debug, Clone)]
+pub struct ScenarioMatrix {
+    /// Scenario names, column order.
+    pub scenarios: Vec<String>,
+    /// Policy display names, row order.
+    pub policies: Vec<String>,
+    /// All runs (scenario-major: `runs[s * policies.len() + p]`).
+    pub runs: Vec<ScenarioRun>,
+}
+
+impl ScenarioMatrix {
+    /// Total cost of `(policy row, scenario col)`.
+    pub fn total(&self, policy: usize, scenario: usize) -> f64 {
+        self.runs[scenario * self.policies.len() + policy].total_cost()
+    }
+
+    /// Render the policy × scenario total-cost matrix.
+    pub fn print(&self) {
+        println!("== Scenario suite — total cost (policy × scenario) ==");
+        print!("{:<24}", "policy");
+        for s in &self.scenarios {
+            print!("{s:>18}");
+        }
+        println!();
+        for (pi, p) in self.policies.iter().enumerate() {
+            print!("{p:<24}");
+            for si in 0..self.scenarios.len() {
+                print!("{:>18.1}", self.total(pi, si));
+            }
+            println!();
+        }
+    }
+
+    /// JSON export: the matrix plus every per-phase breakdown.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "scenarios",
+                Json::Arr(
+                    self.scenarios
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "policies",
+                Json::Arr(self.policies.iter().map(|p| Json::Str(p.clone())).collect()),
+            ),
+            (
+                "runs",
+                Json::Arr(self.runs.iter().map(ScenarioRun::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Run `policies` over each named built-in scenario at `scale` (phase
+/// lengths multiplied; 1.0 = full size). Scenario state never leaks
+/// between cells: every run builds a fresh policy and recompiles the
+/// scenario.
+pub fn scenario_suite(
+    cfg: &AkpcConfig,
+    names: &[&str],
+    policies: &[PolicyChoice],
+    engine: EngineChoice,
+    scale: f64,
+) -> anyhow::Result<ScenarioMatrix> {
+    let mut runs = Vec::with_capacity(names.len() * policies.len());
+    let mut policy_names = Vec::new();
+    for &name in names {
+        let spec = scenario::builtin(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown built-in scenario `{name}`"))?;
+        let sc = spec.compile(scale)?;
+        let cell_cfg = AkpcConfig {
+            n_items: sc.n_items,
+            n_servers: sc.n_servers,
+            ..cfg.clone()
+        };
+        for &p in policies {
+            let mut policy = p.build(&cell_cfg, engine);
+            let run = run_phased(policy.as_mut(), &sc, cell_cfg.batch_size);
+            if policy_names.len() < policies.len() {
+                policy_names.push(run.policy.clone());
+            }
+            runs.push(run);
+        }
+    }
+    Ok(ScenarioMatrix {
+        scenarios: names.iter().map(|s| s.to_string()).collect(),
+        policies: policy_names,
+        runs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_runs_smoke_matrix() {
+        let cfg = AkpcConfig {
+            crm_top_frac: 1.0,
+            ..Default::default()
+        };
+        let m = scenario_suite(
+            &cfg,
+            &["smoke"],
+            &[PolicyChoice::NoPacking, PolicyChoice::Akpc],
+            EngineChoice::Native,
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(m.scenarios, vec!["smoke"]);
+        assert_eq!(m.policies, vec!["NoPacking", "AKPC"]);
+        assert_eq!(m.runs.len(), 2);
+        assert!(m.total(0, 0) > 0.0 && m.total(1, 0) > 0.0);
+        crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        m.print();
+    }
+
+    #[test]
+    fn suite_rejects_unknown_scenario() {
+        let cfg = AkpcConfig::default();
+        assert!(scenario_suite(
+            &cfg,
+            &["nope"],
+            &[PolicyChoice::NoPacking],
+            EngineChoice::Native,
+            1.0
+        )
+        .is_err());
+    }
+}

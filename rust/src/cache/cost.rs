@@ -101,6 +101,24 @@ impl CostLedger {
         self.items_requested += other.items_requested;
     }
 
+    /// Counters accumulated since `earlier` was captured (`self` must be a
+    /// later snapshot of the same ledger). The phased scenario drivers use
+    /// this to attribute costs to individual workload phases
+    /// (DESIGN.md §7.3); counters saturate at zero so a stale baseline
+    /// cannot underflow.
+    pub fn delta_from(&self, earlier: &CostLedger) -> CostLedger {
+        CostLedger {
+            c_p: (self.c_p - earlier.c_p).max(0.0),
+            c_t: (self.c_t - earlier.c_t).max(0.0),
+            transfers: self.transfers.saturating_sub(earlier.transfers),
+            full_hits: self.full_hits.saturating_sub(earlier.full_hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            requests: self.requests.saturating_sub(earlier.requests),
+            items_delivered: self.items_delivered.saturating_sub(earlier.items_delivered),
+            items_requested: self.items_requested.saturating_sub(earlier.items_requested),
+        }
+    }
+
     /// Fraction of delivered items that were requested (packing utility).
     pub fn delivery_efficiency(&self) -> f64 {
         if self.items_delivered == 0 {
@@ -228,6 +246,34 @@ mod tests {
         assert_eq!(a.requests, 6);
         assert_eq!(a.transfers, 6);
         assert_eq!(a.items_delivered, 20);
+    }
+
+    #[test]
+    fn ledger_delta_inverts_merge() {
+        let base = CostLedger {
+            c_p: 1.0,
+            c_t: 2.0,
+            transfers: 3,
+            full_hits: 1,
+            misses: 2,
+            requests: 3,
+            items_delivered: 10,
+            items_requested: 6,
+        };
+        let mut later = base.clone();
+        later.merge(&base);
+        let d = later.delta_from(&base);
+        assert_eq!(d.requests, base.requests);
+        assert_eq!(d.transfers, base.transfers);
+        assert!((d.total() - base.total()).abs() < 1e-12);
+        // Saturation: a stale baseline never underflows the counters,
+        // and the float fields clamp at zero too.
+        let d = base.delta_from(&later);
+        assert_eq!(d.requests, 0);
+        assert_eq!(d.items_delivered, 0);
+        assert_eq!(d.c_p, 0.0);
+        assert_eq!(d.c_t, 0.0);
+        assert_eq!(d.total(), 0.0);
     }
 
     #[test]

@@ -1,6 +1,10 @@
-//! TOML-subset reader (offline environment — no `toml` crate): flat
-//! `key = value` documents with `#` comments; values are strings, bools,
-//! integers or floats. Exactly what [`super::AkpcConfig`] needs.
+//! TOML-subset reader (offline environment — no `toml` crate):
+//! `key = value` documents with `#` comments and optional `[table]`
+//! sections; values are strings, bools, integers or floats. [`parse`]
+//! flattens tables (what [`super::AkpcConfig`] needs); [`parse_doc`]
+//! keeps them, in document order, so repeated sections can express
+//! ordered lists — the scenario spec grammar (`[[phase]]`-style, written
+//! as repeated `[phase]` blocks) is built on it (DESIGN.md §7).
 
 use std::collections::BTreeMap;
 
@@ -35,13 +39,34 @@ impl Value {
     }
 }
 
-/// Parse a flat TOML document into key → value.
-pub fn parse(text: &str) -> anyhow::Result<BTreeMap<String, Value>> {
-    let mut map = BTreeMap::new();
+/// A parsed document that keeps `[table]` structure: the keys before the
+/// first table header, plus every table block in document order. The same
+/// table name may repeat — each block is a separate entry, which is how
+/// ordered lists (scenario phases) are expressed in this subset.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub root: BTreeMap<String, Value>,
+    pub tables: Vec<(String, BTreeMap<String, Value>)>,
+}
+
+/// Parse a document preserving `[table]` sections.
+pub fn parse_doc(text: &str) -> anyhow::Result<Doc> {
+    let mut doc = Doc::default();
+    // None = still in the root block; Some(i) = filling tables[i].
+    let mut current: Option<usize> = None;
     for (lineno, raw) in text.lines().enumerate() {
         let line = strip_comment(raw).trim();
-        if line.is_empty() || line.starts_with('[') {
-            // Tables are ignored (config is flat).
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            anyhow::ensure!(!name.is_empty(), "line {}: empty table name", lineno + 1);
+            doc.tables.push((name.to_string(), BTreeMap::new()));
+            current = Some(doc.tables.len() - 1);
             continue;
         }
         let (k, v) = line
@@ -64,7 +89,22 @@ pub fn parse(text: &str) -> anyhow::Result<BTreeMap<String, Value>> {
                     .map_err(|_| anyhow::anyhow!("line {}: bad value `{val}`", lineno + 1))?,
             )
         };
-        map.insert(key, value);
+        match current {
+            None => doc.root.insert(key, value),
+            Some(i) => doc.tables[i].1.insert(key, value),
+        };
+    }
+    Ok(doc)
+}
+
+/// Parse a flat TOML document into key → value (tables are flattened into
+/// the root map, later keys winning — the historical behavior flat-config
+/// callers rely on).
+pub fn parse(text: &str) -> anyhow::Result<BTreeMap<String, Value>> {
+    let doc = parse_doc(text)?;
+    let mut map = doc.root;
+    for (_, table) in doc.tables {
+        map.extend(table);
     }
     Ok(map)
 }
@@ -131,5 +171,25 @@ mod tests {
     fn ignores_tables() {
         let m = parse("[section]\nx = 1").unwrap();
         assert_eq!(m["x"].as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn parse_doc_keeps_repeated_tables_in_order() {
+        let doc = parse_doc(
+            "name = \"s\"\n[phase]\nlabel = \"a\"\nrequests = 10\n\
+             [phase]\nlabel = \"b\"\nrequests = 20\n",
+        )
+        .unwrap();
+        assert_eq!(doc.root["name"].as_str(), Some("s"));
+        assert_eq!(doc.tables.len(), 2);
+        assert_eq!(doc.tables[0].0, "phase");
+        assert_eq!(doc.tables[0].1["label"].as_str(), Some("a"));
+        assert_eq!(doc.tables[1].1["requests"].as_f64(), Some(20.0));
+    }
+
+    #[test]
+    fn parse_doc_rejects_bad_headers() {
+        assert!(parse_doc("[unterminated\nx = 1").is_err());
+        assert!(parse_doc("[]\nx = 1").is_err());
     }
 }

@@ -131,6 +131,13 @@ impl MetricsSnapshot {
         self.per_shard.iter().map(|s| s.retentions).sum()
     }
 
+    /// Cross-shard ledger delta vs an earlier snapshot of the same
+    /// coordinator — the per-phase cost breakdown the scenario replay
+    /// driver records at phase boundaries (DESIGN.md §7.3).
+    pub fn ledger_delta(&self, earlier: &MetricsSnapshot) -> CostLedger {
+        self.ledger.delta_from(&earlier.ledger)
+    }
+
     /// Render a compact one-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
@@ -227,5 +234,18 @@ mod tests {
         assert_eq!(m.per_shard[0].shard, 0);
         assert_eq!(m.per_shard[1].shard, 1);
         crate::util::json::parse(&m.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn ledger_delta_between_snapshots() {
+        let early =
+            MetricsSnapshot::aggregate(GenStats::default(), vec![shard(0, 3.0, 7)]);
+        let late = MetricsSnapshot::aggregate(
+            GenStats::default(),
+            vec![shard(0, 5.0, 9), shard(1, 2.0, 4)],
+        );
+        let d = late.ledger_delta(&early);
+        assert!((d.c_t - 4.0).abs() < 1e-12);
+        assert_eq!(d.requests, 6);
     }
 }

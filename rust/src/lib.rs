@@ -29,6 +29,7 @@
 //! | [`clique`] | disjoint clique store; split / approximate-merge / adjust |
 //! | [`cache`] | per-ESS cache state, expiry queue, cost model & ledger |
 //! | [`algo`] | `CachePolicy` trait: AKPC + NoPacking, PackCache, DP_Greedy, OPT |
+//! | [`scenario`] | Scenario Lab: declarative workload scenarios, trace transformers, phased replay |
 //! | [`sim`] | event-driven CDN simulator, sharded replay driver + reports |
 //! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
 //! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker |
@@ -42,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod crm;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod trace;
 pub mod util;

@@ -8,6 +8,8 @@
 //!   exp <id>     regenerate a paper table/figure
 //!                (table1 fig5 fig6a fig6b fig7a fig7b fig7c fig8a fig8b
 //!                 fig8c fig9a fig9b adversarial all)
+//!   scenario     Scenario Lab: phased non-stationary workload replays
+//!                (list | suite | <name> | <spec.toml>)
 //!   gen-trace    write a synthetic Netflix/Spotify-like trace to disk
 //!   trace-stats  analyze a trace file
 //!   serve        online sharded coordinator demo (replays a trace)
@@ -17,22 +19,26 @@
 //!   --config <file.toml>      load configuration
 //!   --requests <N>            trace length (default 200000)
 //!   --engine <native|xla>     CRM engine for AKPC (default xla)
-//!   --policy <name>           run: no-packing|packcache|dp-greedy|akpc|
-//!                             akpc-no-cs-no-acm|opt     (default akpc)
+//!   --policy <name>           run/scenario: no-packing|packcache|dp-greedy|
+//!                             akpc|akpc-no-cs-no-acm|opt (default akpc)
 //!   --dataset <netflix|spotify>                          (default netflix)
 //!   --trace <file>            run: load a trace file instead
-//!   --out <file>              gen-trace: output path (.bin or .csv)
+//!   --out <file|dir>          gen-trace: output path (.bin or .csv);
+//!                             exp/scenario: JSON report directory
 //!   --seed <N>                RNG seed override
-//!   --shards <N>              serve: shard actor count (default 1)
-//!   --mode <ordered|parallel> serve: replay scheduling (default parallel)
+//!   --shards <N>              serve/scenario: shard actor count
+//!   --mode <ordered|parallel> serve/scenario: replay scheduling
+//!   --scale <F>               scenario: phase-length multiplier (default 1)
 //! ```
 //!
 //! (The offline build has no clap; flag parsing is in-tree.)
 
 use akpc::algo::{AdaptiveK, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
 use akpc::bench::experiments as exp;
+use akpc::bench::scenarios::scenario_suite;
 use akpc::bench::sweep::{shard_scaling, EngineChoice, PolicyChoice};
 use akpc::config::AkpcConfig;
+use akpc::scenario::{self, ScenarioSpec};
 use akpc::sim::{replay_sharded, ReplayMode};
 use akpc::trace::{generator, io as trace_io, stats};
 
@@ -71,12 +77,14 @@ fn usage() {
     // The module doc is the manual; print its code block.
     println!(
         "akpc — Adaptive K-PackCache (cost-centric clique-packed CDN caching)\n\n\
-         usage: akpc <run|exp|gen-trace|trace-stats|serve|config> [flags]\n\n\
+         usage: akpc <run|exp|scenario|gen-trace|trace-stats|serve|config> [flags]\n\n\
          flags: --config <toml> --requests <N> --engine <native|xla> --seed <N> --out <dir>\n\
          run:       --policy <no-packing|packcache|dp-greedy|akpc|akpc-no-cs-no-acm|akpc-adaptive-k|opt>\n\
          \u{20}          --dataset <netflix|spotify> | --trace <file>\n\
          exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
          \u{20}           fig9a|fig9b|adversarial|ablations|shards|all>\n\
+         scenario:  <list|suite|name|spec.toml> [--policy P] [--scale F]\n\
+         \u{20}          [--shards N [--mode <ordered|parallel>]] [--out <dir>]\n\
          gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
          serve:     --dataset <netflix|spotify> [--requests N] [--shards N]\n\
          \u{20}          [--mode <ordered|parallel>]"
@@ -110,12 +118,22 @@ fn main() -> anyhow::Result<()> {
         e => anyhow::bail!("unknown engine `{e}`"),
     };
     let dataset = cli.flag("dataset").unwrap_or("netflix").to_string();
+    // Fallible generation path: GeneratorParams::validate runs before any
+    // sampling, so a bad --config fails with a message, not a panic.
     let gen = |cfg: &AkpcConfig, n: usize| -> anyhow::Result<akpc::Trace> {
-        Ok(match dataset.as_str() {
-            "netflix" => generator::netflix_like(cfg.n_items, cfg.n_servers, n, cfg.seed),
-            "spotify" => generator::spotify_like(cfg.n_items, cfg.n_servers, n, cfg.seed),
+        let (mut params, kind) = match dataset.as_str() {
+            "netflix" => (
+                generator::GeneratorParams::netflix(cfg.n_items, cfg.n_servers, n),
+                generator::TraceKind::Netflix,
+            ),
+            "spotify" => (
+                generator::GeneratorParams::spotify(cfg.n_items, cfg.n_servers, n),
+                generator::TraceKind::Spotify,
+            ),
             d => anyhow::bail!("unknown dataset `{d}`"),
-        })
+        };
+        params.seed ^= cfg.seed;
+        generator::try_generate(&params, kind)
     };
 
     match cli.cmd.as_str() {
@@ -155,6 +173,25 @@ fn main() -> anyhow::Result<()> {
                 std::fs::create_dir_all(d)?;
             }
             run_experiment(id, &opts, &cfg, out_dir.as_deref())?;
+        }
+        "scenario" => {
+            let what = cli
+                .pos
+                .first()
+                .ok_or_else(|| anyhow::anyhow!(
+                    "scenario needs <list|suite|name|spec.toml>"
+                ))?
+                .as_str();
+            let scale: f64 = cli
+                .flag("scale")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(1.0);
+            let out_dir = cli.flag("out").map(|s| s.to_string());
+            if let Some(d) = &out_dir {
+                std::fs::create_dir_all(d)?;
+            }
+            run_scenario_cmd(what, &cli, &cfg, engine, scale, out_dir.as_deref())?;
         }
         "gen-trace" => {
             let out = cli
@@ -330,5 +367,124 @@ fn run_experiment(
         matched = true;
     }
     anyhow::ensure!(matched, "unknown experiment id: {id}");
+    Ok(())
+}
+
+/// `akpc scenario <list|suite|name|spec.toml>` — the Scenario Lab CLI.
+fn run_scenario_cmd(
+    what: &str,
+    cli: &Cli,
+    cfg: &AkpcConfig,
+    engine: EngineChoice,
+    scale: f64,
+    out_dir: Option<&str>,
+) -> anyhow::Result<()> {
+    match what {
+        "list" => {
+            println!("built-in scenarios:");
+            for name in scenario::builtin_names() {
+                println!(
+                    "  {name:<18} {}",
+                    scenario::describe(name).unwrap_or_default()
+                );
+            }
+            return Ok(());
+        }
+        "suite" => {
+            anyhow::ensure!(
+                cli.flag("policy").is_none(),
+                "scenario suite always sweeps its fixed policy set; drop --policy"
+            );
+            let names = scenario::suite_names();
+            let matrix = scenario_suite(
+                cfg,
+                &names,
+                PolicyChoice::SWEEP,
+                engine,
+                scale,
+            )?;
+            matrix.print();
+            if let Some(d) = out_dir {
+                let path = format!("{d}/scenario_suite.json");
+                std::fs::write(&path, matrix.to_json().to_string_pretty())?;
+                println!("[wrote {path}]");
+            }
+            return Ok(());
+        }
+        _ => {}
+    }
+
+    // A built-in name, or a spec file on disk.
+    let spec = match scenario::builtin(what) {
+        Some(spec) => spec,
+        None if what.ends_with(".toml") || std::path::Path::new(what).exists() => {
+            ScenarioSpec::from_toml_file(what)?
+        }
+        None => anyhow::bail!(
+            "unknown scenario `{what}` (try `akpc scenario list`, or pass a spec.toml)"
+        ),
+    };
+    let mut spec = spec;
+    if let Some(s) = cli.flag("seed") {
+        spec.seed = s.parse()?;
+    }
+    let sc = spec.compile(scale)?;
+    println!(
+        "scenario `{}`: {} phases, {} requests, universe {} items × {} servers",
+        sc.name,
+        sc.phases.len(),
+        sc.total_requests(),
+        sc.n_items,
+        sc.n_servers
+    );
+
+    let n_shards: usize = cli
+        .flag("shards")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let run = if n_shards > 0 {
+        // Sharded coordinator driver (AKPC, like `akpc serve`). Refuse a
+        // conflicting --policy rather than silently running AKPC.
+        if let Some(p) = cli.flag("policy") {
+            anyhow::ensure!(
+                p == "akpc",
+                "--shards runs the sharded AKPC coordinator; --policy {p} \
+                 is only available in the single-leader driver (drop --shards)"
+            );
+        }
+        let mode = match cli.flag("mode").unwrap_or("ordered") {
+            "ordered" => ReplayMode::Ordered,
+            "parallel" => ReplayMode::Parallel,
+            m => anyhow::bail!("unknown replay mode `{m}`"),
+        };
+        scenario::run_phased_sharded(cfg, engine.to_engine(), &sc, n_shards, mode)?
+    } else {
+        let cell_cfg = AkpcConfig {
+            n_items: sc.n_items,
+            n_servers: sc.n_servers,
+            ..cfg.clone()
+        };
+        let mut policy: Box<dyn CachePolicy> = match cli.flag("policy").unwrap_or("akpc") {
+            "no-packing" => Box::new(NoPacking::new(&cell_cfg)),
+            "packcache" => Box::new(PackCache2::new(&cell_cfg)),
+            "dp-greedy" => Box::new(DpGreedy::new(&cell_cfg)),
+            "akpc" => PolicyChoice::Akpc.build(&cell_cfg, engine),
+            "akpc-no-cs-no-acm" => PolicyChoice::AkpcNoCsNoAcm.build(&cell_cfg, engine),
+            "akpc-adaptive-k" => Box::new(AdaptiveK::new(&cell_cfg)),
+            "opt" => Box::new(Opt::new(&cell_cfg)),
+            p => anyhow::bail!("unknown policy `{p}`"),
+        };
+        scenario::run_phased(policy.as_mut(), &sc, cell_cfg.batch_size)
+    };
+
+    print!("{}", run.render());
+    if let Some(d) = out_dir {
+        let path = format!("{d}/scenario_{}.json", sc.name);
+        std::fs::write(&path, run.to_json().to_string_pretty())?;
+        println!("[wrote {path}]");
+    } else {
+        println!("{}", run.to_json().to_string_pretty());
+    }
     Ok(())
 }

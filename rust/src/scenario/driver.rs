@@ -1,0 +1,378 @@
+//! Phased replay drivers (DESIGN.md §7.3): run a [`CompiledScenario`]
+//! end-to-end while carrying cache/ledger state across phase boundaries,
+//! recording a per-phase cost breakdown.
+//!
+//! Two drivers with identical window semantics:
+//!
+//! * [`run_phased`] — in-process single-leader loop over any
+//!   [`CachePolicy`] (the simulator path, works for every baseline incl.
+//!   the clairvoyant OPT);
+//! * [`run_phased_sharded`] — the sharded online coordinator
+//!   (AKPC-only, like `akpc serve`), with per-phase cross-shard metrics
+//!   deltas.
+//!
+//! **Phase-boundary rule:** a clique-generation window never spans a
+//! phase boundary. The single-leader driver ends a (possibly partial)
+//! batch at each boundary; the sharded driver mirrors it with
+//! `flush_window`. Combined with the ordered/sync replay semantics of
+//! DESIGN.md §2.3 this keeps the two drivers ledger-equivalent within
+//! floating-point summation order — the property
+//! `tests/scenario.rs::churn_storm_sharded_matches_single_leader` pins.
+
+use std::time::Instant;
+
+use crate::algo::CachePolicy;
+use crate::cache::CostLedger;
+use crate::config::AkpcConfig;
+use crate::coordinator::{Coordinator, ServeRequest, TickMode};
+use crate::runtime::CrmEngine;
+use crate::sim::ReplayMode;
+use crate::util::Json;
+
+use super::spec::CompiledScenario;
+
+/// Cost breakdown of one phase (ledger deltas, not cumulative totals).
+#[derive(Debug, Clone)]
+pub struct PhaseCost {
+    pub label: String,
+    pub n_requests: usize,
+    /// Global time window the phase covered.
+    pub t_start: f64,
+    pub t_end: f64,
+    pub ledger: CostLedger,
+}
+
+impl PhaseCost {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("n_requests", Json::Num(self.n_requests as f64)),
+            ("t_start", Json::Num(self.t_start)),
+            ("t_end", Json::Num(self.t_end)),
+            ("ledger", self.ledger.to_json()),
+        ])
+    }
+
+    fn row(&self) -> String {
+        format!(
+            "  {:<16} reqs={:<8} total={:>12.1}  C_T={:>12.1}  C_P={:>12.1}  hit={:>5.1}%",
+            self.label,
+            self.n_requests,
+            self.ledger.total(),
+            self.ledger.c_t,
+            self.ledger.c_p,
+            self.ledger.hit_rate() * 100.0,
+        )
+    }
+}
+
+/// Outcome of one scenario replay.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    pub scenario: String,
+    pub policy: String,
+    /// Shard actors used; 0 = the in-process single-leader driver.
+    pub n_shards: usize,
+    pub phases: Vec<PhaseCost>,
+    /// Whole-run ledger (the phase ledgers sum to it).
+    pub total: CostLedger,
+    pub wall_secs: f64,
+}
+
+impl ScenarioRun {
+    /// Total cost C = C_T + C_P over the whole timeline.
+    pub fn total_cost(&self) -> f64 {
+        self.total.total()
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "scenario={} policy={} driver={} total={:.1} (C_T={:.1} C_P={:.1}) hit={:.1}% {:.2}s\n",
+            self.scenario,
+            self.policy,
+            if self.n_shards == 0 {
+                "single-leader".to_string()
+            } else {
+                format!("{}-shard", self.n_shards)
+            },
+            self.total.total(),
+            self.total.c_t,
+            self.total.c_p,
+            self.total.hit_rate() * 100.0,
+            self.wall_secs,
+        );
+        for p in &self.phases {
+            out.push_str(&p.row());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("n_shards", Json::Num(self.n_shards as f64)),
+            (
+                "phases",
+                Json::Arr(self.phases.iter().map(PhaseCost::to_json).collect()),
+            ),
+            ("total", self.total.to_json()),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+}
+
+fn phase_cost(
+    sc: &CompiledScenario,
+    i: usize,
+    cumulative: &CostLedger,
+    prev: &CostLedger,
+) -> PhaseCost {
+    let trace = &sc.phases[i].trace;
+    PhaseCost {
+        label: sc.phases[i].label.clone(),
+        n_requests: trace.len(),
+        t_start: trace.requests.first().map(|r| r.time).unwrap_or(0.0),
+        t_end: trace.requests.last().map(|r| r.time).unwrap_or(0.0),
+        ledger: cumulative.delta_from(prev),
+    }
+}
+
+/// Drive `policy` through the scenario with the single-leader loop,
+/// snapshotting the ledger at each phase boundary.
+pub fn run_phased(
+    policy: &mut dyn CachePolicy,
+    sc: &CompiledScenario,
+    batch_size: usize,
+) -> ScenarioRun {
+    let wall = Instant::now();
+    // Offline policies (OPT, DP_Greedy) see the whole timeline up front.
+    policy.prepare(sc.concat_trace());
+    let mut prev = CostLedger::default();
+    let mut phases = Vec::with_capacity(sc.phases.len());
+    for (i, ph) in sc.phases.iter().enumerate() {
+        for batch in ph.trace.batches(batch_size) {
+            for r in batch {
+                policy.handle_request(r);
+            }
+            // The trailing chunk may be partial: windows end at phase
+            // boundaries by construction (module docs).
+            policy.end_batch(batch);
+        }
+        let cumulative = policy.ledger().clone();
+        phases.push(phase_cost(sc, i, &cumulative, &prev));
+        prev = cumulative;
+    }
+    ScenarioRun {
+        scenario: sc.name.clone(),
+        policy: policy.name(),
+        n_shards: 0,
+        phases,
+        total: policy.ledger().clone(),
+        wall_secs: wall.elapsed().as_secs_f64(),
+    }
+}
+
+/// Drive the scenario through the sharded online coordinator (AKPC), one
+/// coordinator across all phases so cache/ledger state carries over.
+/// `Ordered` replays the global time order from one thread (deterministic,
+/// ledger-equivalent to [`run_phased`] with AKPC); `Parallel` replays each
+/// shard's subsequence concurrently within every phase.
+pub fn run_phased_sharded(
+    cfg: &AkpcConfig,
+    engine: CrmEngine,
+    sc: &CompiledScenario,
+    n_shards: usize,
+    mode: ReplayMode,
+) -> anyhow::Result<ScenarioRun> {
+    let mut cfg = cfg.clone();
+    cfg.n_items = sc.n_items;
+    cfg.n_servers = sc.n_servers;
+    let tick = match mode {
+        ReplayMode::Ordered => TickMode::Sync,
+        ReplayMode::Parallel => TickMode::Async,
+    };
+    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick);
+    let n_shards = coord.n_shards();
+    let wall = Instant::now();
+
+    let mut prev = CostLedger::default();
+    let mut phases = Vec::with_capacity(sc.phases.len());
+    for (i, ph) in sc.phases.iter().enumerate() {
+        match mode {
+            ReplayMode::Ordered => {
+                for r in &ph.trace.requests {
+                    coord.serve(ServeRequest {
+                        items: r.items.clone(),
+                        server: r.server,
+                        time: Some(r.time),
+                    })?;
+                }
+            }
+            ReplayMode::Parallel => {
+                let mut handles = Vec::with_capacity(n_shards);
+                for shard in 0..n_shards {
+                    let client = coord.client();
+                    let requests: Vec<_> = ph
+                        .trace
+                        .requests
+                        .iter()
+                        .filter(|r| r.server as usize % n_shards == shard)
+                        .cloned()
+                        .collect();
+                    handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+                        for r in requests {
+                            client.serve(ServeRequest {
+                                items: r.items,
+                                server: r.server,
+                                time: Some(r.time),
+                            })?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("scenario replay client panicked"))??;
+                }
+            }
+        }
+        // Windows never span phases (module docs).
+        coord.flush_window()?;
+        let m = coord.metrics()?;
+        phases.push(phase_cost(sc, i, &m.ledger, &prev));
+        prev = m.ledger;
+    }
+
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let metrics = coord.shutdown();
+    // The shutdown quiesce sweeps retention rent accrued after the last
+    // request (DESIGN.md §2.3); fold the residual into the final phase so
+    // the per-phase ledgers still sum to the run total.
+    if let Some(last) = phases.last_mut() {
+        last.ledger.merge(&metrics.ledger.delta_from(&prev));
+    }
+    Ok(ScenarioRun {
+        scenario: sc.name.clone(),
+        policy: metrics.policy.clone(),
+        n_shards,
+        phases,
+        total: metrics.ledger.clone(),
+        wall_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Akpc, NoPacking};
+    use crate::scenario::spec::ScenarioSpec;
+
+    fn small_scenario() -> CompiledScenario {
+        ScenarioSpec::from_toml_str(
+            r#"
+            name = "drv"
+            seed = 11
+            n_items = 30
+            n_servers = 12
+
+            [phase]
+            label = "a"
+            generator = "netflix"
+            requests = 900
+
+            [phase]
+            label = "b"
+            generator = "netflix"
+            requests = 450
+            flash_frac = 0.4
+            flash_items = 3
+            "#,
+        )
+        .unwrap()
+        .compile(1.0)
+        .unwrap()
+    }
+
+    #[test]
+    fn phases_sum_to_total_single_leader() {
+        let sc = small_scenario();
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            ..Default::default()
+        };
+        let run = run_phased(&mut Akpc::new(&cfg), &sc, cfg.batch_size);
+        assert_eq!(run.phases.len(), 2);
+        assert_eq!(run.n_shards, 0);
+        let req_sum: usize = run.phases.iter().map(|p| p.n_requests).sum();
+        assert_eq!(req_sum, sc.total_requests());
+        let cost_sum: f64 = run.phases.iter().map(|p| p.ledger.total()).sum();
+        assert!(
+            (cost_sum - run.total_cost()).abs() <= 1e-9 * run.total_cost().abs().max(1.0),
+            "phase sum {cost_sum} != total {}",
+            run.total_cost()
+        );
+        assert!(run.render().contains("scenario=drv"));
+        crate::util::json::parse(&run.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn phases_sum_to_total_sharded() {
+        let sc = small_scenario();
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            ..Default::default()
+        };
+        let run = run_phased_sharded(
+            &cfg,
+            CrmEngine::Native,
+            &sc,
+            2,
+            ReplayMode::Ordered,
+        )
+        .unwrap();
+        assert_eq!(run.n_shards, 2);
+        assert_eq!(run.total.requests as usize, sc.total_requests());
+        let cost_sum: f64 = run.phases.iter().map(|p| p.ledger.total()).sum();
+        assert!(
+            (cost_sum - run.total_cost()).abs() <= 1e-9 * run.total_cost().abs().max(1.0)
+        );
+    }
+
+    #[test]
+    fn parallel_mode_serves_every_request() {
+        let sc = small_scenario();
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            ..Default::default()
+        };
+        let run = run_phased_sharded(
+            &cfg,
+            CrmEngine::Native,
+            &sc,
+            3,
+            ReplayMode::Parallel,
+        )
+        .unwrap();
+        assert_eq!(run.total.requests as usize, sc.total_requests());
+        assert_eq!(run.phases[0].n_requests, 900);
+    }
+
+    #[test]
+    fn no_packing_runs_phased_too() {
+        let sc = small_scenario();
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            ..Default::default()
+        };
+        let run = run_phased(&mut NoPacking::new(&cfg), &sc, cfg.batch_size);
+        assert_eq!(run.policy, "NoPacking");
+        assert_eq!(run.total.requests as usize, sc.total_requests());
+    }
+}

@@ -1,0 +1,251 @@
+//! Built-in scenario library (EXPERIMENTS.md §Scenarios): the
+//! non-stationary regimes the paper's two static workloads cannot
+//! express, written in the spec grammar itself so each doubles as a
+//! reference example. `akpc scenario <name>` resolves names here.
+
+use super::spec::ScenarioSpec;
+
+/// `(name, one-line description, spec TOML)`.
+const BUILTINS: &[(&str, &str, &str)] = &[
+    (
+        "flash-crowd",
+        "breaking-news popularity spike on a Netflix-like catalog",
+        r#"
+        name = "flash-crowd"
+        seed = 101
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "warmup"
+        generator = "netflix"
+        requests = 25000
+
+        [phase]
+        label = "spike"
+        generator = "netflix"
+        requests = 30000
+        flash_frac = 0.35
+        flash_items = 4
+
+        [phase]
+        label = "cooldown"
+        generator = "netflix"
+        requests = 25000
+        "#,
+    ),
+    (
+        "diurnal",
+        "day/night arrival-rate cycle (time-varying volume)",
+        r#"
+        name = "diurnal"
+        seed = 102
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "cycle"
+        generator = "netflix"
+        requests = 80000
+        diurnal_period = 10.0
+        diurnal_amplitude = 0.8
+        "#,
+    ),
+    (
+        "regional-outage",
+        "a third of the edge servers go dark; traffic fails over",
+        r#"
+        name = "regional-outage"
+        seed = 103
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "steady"
+        generator = "netflix"
+        requests = 25000
+
+        [phase]
+        label = "outage"
+        generator = "netflix"
+        requests = 30000
+        outage_servers = 200
+        outage_start_frac = 0.1
+        outage_end_frac = 0.9
+
+        [phase]
+        label = "recovery"
+        generator = "netflix"
+        requests = 25000
+        "#,
+    ),
+    (
+        "catalog-rollover",
+        "half the Spotify-like catalog is displaced by new releases",
+        r#"
+        name = "catalog-rollover"
+        seed = 104
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "charts"
+        generator = "spotify"
+        requests = 30000
+
+        [phase]
+        label = "release-day"
+        generator = "spotify"
+        requests = 30000
+        rollover_frac = 0.5
+        rollover_at_frac = 0.3
+
+        [phase]
+        label = "new-charts"
+        generator = "spotify"
+        requests = 20000
+        "#,
+    ),
+    (
+        "churn-storm",
+        "bundle popularity rotates every Δt: merge/split under fire",
+        r#"
+        name = "churn-storm"
+        seed = 105
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "calm"
+        generator = "spotify"
+        requests = 25000
+
+        [phase]
+        label = "storm"
+        generator = "spotify"
+        requests = 30000
+        churn_period = 2.0
+        churn_shift = 13
+
+        [phase]
+        label = "aftermath"
+        generator = "spotify"
+        requests = 20000
+        "#,
+    ),
+    (
+        "rate-surge",
+        "request volume ramps 1x -> 4x -> 1x against a fixed Δt",
+        r#"
+        name = "rate-surge"
+        seed = 106
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "baseline"
+        generator = "netflix"
+        requests = 25000
+
+        [phase]
+        label = "surge"
+        generator = "netflix"
+        requests = 40000
+        rate_scale = 4.0
+
+        [phase]
+        label = "relax"
+        generator = "netflix"
+        requests = 25000
+        "#,
+    ),
+    (
+        "smoke",
+        "tiny three-phase mix exercising every driver path (CI)",
+        r#"
+        name = "smoke"
+        seed = 107
+        n_items = 24
+        n_servers = 12
+
+        [phase]
+        label = "warm"
+        generator = "netflix"
+        requests = 600
+
+        [phase]
+        label = "stress"
+        generator = "spotify"
+        requests = 800
+        flash_frac = 0.3
+        flash_items = 3
+        churn_period = 0.2
+        churn_shift = 5
+        outage_servers = 3
+
+        [phase]
+        label = "settle"
+        generator = "netflix"
+        requests = 600
+        rate_scale = 2.0
+        "#,
+    ),
+];
+
+/// Names of every built-in scenario, in presentation order.
+pub fn builtin_names() -> Vec<&'static str> {
+    BUILTINS.iter().map(|(n, ..)| *n).collect()
+}
+
+/// The ~6 "real" scenarios the suite runner sweeps (everything except the
+/// CI smoke helper).
+pub fn suite_names() -> Vec<&'static str> {
+    BUILTINS
+        .iter()
+        .map(|(n, ..)| *n)
+        .filter(|&n| n != "smoke")
+        .collect()
+}
+
+/// One-line description of a built-in.
+pub fn describe(name: &str) -> Option<&'static str> {
+    BUILTINS
+        .iter()
+        .find(|(n, ..)| *n == name)
+        .map(|(_, d, _)| *d)
+}
+
+/// Resolve a built-in scenario by name.
+pub fn builtin(name: &str) -> Option<ScenarioSpec> {
+    let (_, _, toml) = BUILTINS.iter().find(|(n, ..)| *n == name)?;
+    Some(
+        ScenarioSpec::from_toml_str(toml)
+            .unwrap_or_else(|e| panic!("built-in scenario `{name}` is invalid: {e}")),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_parses_and_matches_its_name() {
+        for name in builtin_names() {
+            let spec = builtin(name).expect("missing builtin");
+            assert_eq!(spec.name, name);
+            assert!(!spec.phases.is_empty());
+            assert!(describe(name).is_some());
+        }
+        assert!(builtin("no-such").is_none());
+        assert!(builtin_names().len() >= 7);
+        assert_eq!(suite_names().len(), builtin_names().len() - 1);
+        assert!(!suite_names().contains(&"smoke"));
+    }
+
+    #[test]
+    fn smoke_is_small_enough_for_ci() {
+        let sc = builtin("smoke").unwrap().compile(1.0).unwrap();
+        assert!(sc.total_requests() <= 2_500);
+        sc.concat_trace().validate().unwrap();
+    }
+}

@@ -1,0 +1,29 @@
+//! Scenario Lab (DESIGN.md §7): a declarative workload-scenario engine
+//! sitting between trace generation and simulation.
+//!
+//! The paper evaluates on two *stationary* workload shapes; AKPC's
+//! adaptive machinery — clique merge/split under churn (Algorithms 3-5)
+//! and the Δt retention rule (Algorithm 6) — only shows its value under
+//! non-stationary traffic (flash crowds, diurnal cycles, failover,
+//! catalog rollovers; cf. arXiv:1803.03914, arXiv:1312.0499). This module
+//! makes such regimes first-class:
+//!
+//! * [`spec`] — the declarative scenario grammar (TOML-lite with repeated
+//!   `[phase]` tables) and its compiler to globally-timed traces;
+//! * [`transform`] — the trace-transformer combinator pipeline (flash
+//!   crowd, diurnal modulation, bundle churn, outage re-routing, catalog
+//!   rollover, rate scaling);
+//! * [`driver`] — phased replay through the single-leader simulator and
+//!   the sharded coordinator, with per-phase cost breakdowns;
+//! * [`library`] — the built-in named scenarios (`akpc scenario <name>`;
+//!   the suite runner in [`crate::bench::scenarios`] sweeps them).
+
+pub mod driver;
+pub mod library;
+pub mod spec;
+pub mod transform;
+
+pub use driver::{run_phased, run_phased_sharded, PhaseCost, ScenarioRun};
+pub use library::{builtin, builtin_names, describe, suite_names};
+pub use spec::{CompiledPhase, CompiledScenario, PhaseBase, PhaseSpec, ScenarioSpec};
+pub use transform::Transform;

@@ -1,0 +1,558 @@
+//! The declarative scenario spec (DESIGN.md §7.1): a TOML-lite document
+//! with root-level universe keys and one `[phase]` table per timeline
+//! phase, compiled into a [`CompiledScenario`] — the materialized,
+//! globally-timed traces the replay drivers consume.
+//!
+//! ```toml
+//! name = "flash-crowd"
+//! seed = 7
+//! n_items = 60
+//! n_servers = 600
+//!
+//! [phase]
+//! label = "warmup"
+//! generator = "netflix"
+//! requests = 20000
+//!
+//! [phase]
+//! label = "spike"
+//! generator = "netflix"
+//! requests = 30000
+//! flash_frac = 0.35        # transformer keys — see Transform
+//! flash_items = 4
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::toml_lite::{self, Value};
+use crate::trace::generator::{self, GeneratorParams, TraceKind};
+use crate::trace::io as trace_io;
+use crate::trace::model::Trace;
+use crate::util::Rng;
+
+use super::transform::{sort_canonical, Transform};
+
+/// Where a phase's base trace comes from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PhaseBase {
+    /// Synthetic Netflix-like preset.
+    Netflix,
+    /// Synthetic Spotify-like preset.
+    Spotify,
+    /// An `akpc-trace` CSV written by [`trace_io::write_csv`].
+    Csv(String),
+    /// An external Kaggle-style CSV ([`trace_io::read_external_csv`]).
+    Kaggle(String),
+}
+
+impl PhaseBase {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(p) = s.strip_prefix("csv:") {
+            return Ok(PhaseBase::Csv(p.to_string()));
+        }
+        if let Some(p) = s.strip_prefix("kaggle:") {
+            return Ok(PhaseBase::Kaggle(p.to_string()));
+        }
+        match s {
+            "netflix" => Ok(PhaseBase::Netflix),
+            "spotify" => Ok(PhaseBase::Spotify),
+            _ => anyhow::bail!(
+                "unknown generator `{s}` (expected netflix|spotify|csv:<path>|kaggle:<path>)"
+            ),
+        }
+    }
+}
+
+/// One phase of the scenario timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpec {
+    pub label: String,
+    pub base: PhaseBase,
+    /// Requests to generate (synthetic bases) or keep (file bases;
+    /// 0 = whole file). Scaled by the compile-time `scale` factor.
+    pub n_requests: usize,
+    /// Transformer pipeline, already in canonical order.
+    pub transforms: Vec<Transform>,
+}
+
+/// A full declarative scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub seed: u64,
+    pub n_items: u32,
+    pub n_servers: u32,
+    pub phases: Vec<PhaseSpec>,
+}
+
+/// Pull a typed value out of a table, consuming the key.
+fn take_num(map: &mut BTreeMap<String, Value>, key: &str) -> anyhow::Result<Option<f64>> {
+    match map.remove(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("`{key}` must be a number")),
+    }
+}
+
+fn take_str(map: &mut BTreeMap<String, Value>, key: &str) -> anyhow::Result<Option<String>> {
+    match map.remove(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| anyhow::anyhow!("`{key}` must be a string")),
+    }
+}
+
+/// Like [`take_num`] but insists on a non-negative integer — a bare `as`
+/// cast would silently truncate fractions and saturate negatives, which
+/// contradicts the parser's reject-anything-suspect policy.
+fn take_uint(map: &mut BTreeMap<String, Value>, key: &str) -> anyhow::Result<Option<u64>> {
+    match take_num(map, key)? {
+        None => Ok(None),
+        Some(v) => {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64,
+                "`{key}` must be a non-negative integer (got {v})"
+            );
+            Ok(Some(v as u64))
+        }
+    }
+}
+
+/// [`take_uint`] narrowed to `u32`.
+fn take_u32(map: &mut BTreeMap<String, Value>, key: &str) -> anyhow::Result<Option<u32>> {
+    match take_uint(map, key)? {
+        None => Ok(None),
+        Some(v) => {
+            anyhow::ensure!(v <= u32::MAX as u64, "`{key}` {v} exceeds u32 range");
+            Ok(Some(v as u32))
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse a scenario document.
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
+        let doc = toml_lite::parse_doc(text)?;
+        let mut root = doc.root;
+        let name = take_str(&mut root, "name")?.unwrap_or_else(|| "scenario".to_string());
+        let seed = take_uint(&mut root, "seed")?.unwrap_or(1);
+        let n_items = take_u32(&mut root, "n_items")?
+            .ok_or_else(|| anyhow::anyhow!("scenario needs root key `n_items`"))?;
+        let n_servers = take_u32(&mut root, "n_servers")?
+            .ok_or_else(|| anyhow::anyhow!("scenario needs root key `n_servers`"))?;
+        if let Some(k) = root.keys().next() {
+            anyhow::bail!("unknown scenario key `{k}`");
+        }
+        anyhow::ensure!(n_items >= 1, "n_items must be >= 1");
+        anyhow::ensure!(n_servers >= 1, "n_servers must be >= 1");
+
+        let mut phases = Vec::new();
+        for (table_name, table) in doc.tables {
+            anyhow::ensure!(
+                table_name == "phase",
+                "unknown table `[{table_name}]` (only `[phase]` is allowed)"
+            );
+            phases.push(Self::parse_phase(table, phases.len(), n_items, n_servers)?);
+        }
+        anyhow::ensure!(!phases.is_empty(), "scenario has no `[phase]` tables");
+        Ok(Self {
+            name,
+            seed,
+            n_items,
+            n_servers,
+            phases,
+        })
+    }
+
+    /// Load from a file.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        Self::from_toml_str(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    fn parse_phase(
+        mut t: BTreeMap<String, Value>,
+        index: usize,
+        n_items: u32,
+        n_servers: u32,
+    ) -> anyhow::Result<PhaseSpec> {
+        let label =
+            take_str(&mut t, "label")?.unwrap_or_else(|| format!("phase-{}", index + 1));
+        let base = PhaseBase::parse(
+            &take_str(&mut t, "generator")?
+                .ok_or_else(|| anyhow::anyhow!("phase `{label}`: missing `generator`"))?,
+        )?;
+        let n_requests = take_uint(&mut t, "requests")?.unwrap_or(0) as usize;
+        if matches!(base, PhaseBase::Netflix | PhaseBase::Spotify) {
+            anyhow::ensure!(
+                n_requests >= 1,
+                "phase `{label}`: synthetic base needs `requests >= 1`"
+            );
+        }
+
+        // Dependent sub-keys are consumed up front so a sub-key without
+        // its primary gets a targeted error, not "unknown key".
+        let needs = |sub: Option<f64>, sub_key: &str, primary: &str| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                sub.is_none(),
+                "phase `{label}`: `{sub_key}` needs `{primary}`"
+            );
+            Ok(())
+        };
+        let mut transforms = Vec::new();
+        if let Some(factor) = take_num(&mut t, "rate_scale")? {
+            transforms.push(Transform::RateScale { factor });
+        }
+        let amplitude = take_num(&mut t, "diurnal_amplitude")?;
+        let period = take_num(&mut t, "diurnal_period")?;
+        match (amplitude, period) {
+            (Some(a), Some(p)) => transforms.push(Transform::Diurnal {
+                period: p,
+                amplitude: a,
+            }),
+            (None, None) => {}
+            _ => anyhow::bail!(
+                "phase `{label}`: diurnal_amplitude and diurnal_period go together"
+            ),
+        }
+        let flash_start = take_num(&mut t, "flash_start_frac")?;
+        let flash_end = take_num(&mut t, "flash_end_frac")?;
+        let flash_items = take_u32(&mut t, "flash_items")?;
+        match take_num(&mut t, "flash_frac")? {
+            Some(frac) => transforms.push(Transform::FlashCrowd {
+                start_frac: flash_start.unwrap_or(0.0),
+                end_frac: flash_end.unwrap_or(1.0),
+                frac,
+                n_hot: flash_items.unwrap_or(3) as usize,
+            }),
+            None => {
+                needs(flash_start, "flash_start_frac", "flash_frac")?;
+                needs(flash_end, "flash_end_frac", "flash_frac")?;
+                needs(flash_items.map(f64::from), "flash_items", "flash_frac")?;
+            }
+        }
+        let churn_shift = take_u32(&mut t, "churn_shift")?;
+        match take_num(&mut t, "churn_period")? {
+            Some(p) => transforms.push(Transform::BundleChurn {
+                period: p,
+                shift: churn_shift.unwrap_or(1),
+            }),
+            None => needs(churn_shift.map(f64::from), "churn_shift", "churn_period")?,
+        }
+        let rollover_at = take_num(&mut t, "rollover_at_frac")?;
+        match take_num(&mut t, "rollover_frac")? {
+            Some(frac) => transforms.push(Transform::CatalogRollover {
+                at_frac: rollover_at.unwrap_or(0.5),
+                frac,
+            }),
+            None => needs(rollover_at, "rollover_at_frac", "rollover_frac")?,
+        }
+        let outage_start = take_num(&mut t, "outage_start_frac")?;
+        let outage_end = take_num(&mut t, "outage_end_frac")?;
+        match take_u32(&mut t, "outage_servers")? {
+            Some(n_down) => transforms.push(Transform::Outage {
+                start_frac: outage_start.unwrap_or(0.0),
+                end_frac: outage_end.unwrap_or(1.0),
+                n_down,
+            }),
+            None => {
+                needs(outage_start, "outage_start_frac", "outage_servers")?;
+                needs(outage_end, "outage_end_frac", "outage_servers")?;
+            }
+        }
+        if let Some(k) = t.keys().next() {
+            anyhow::bail!("phase `{label}`: unknown key `{k}`");
+        }
+        for tr in &transforms {
+            tr.validate(n_items, n_servers)
+                .map_err(|e| anyhow::anyhow!("phase `{label}`: {e}"))?;
+        }
+        sort_canonical(&mut transforms);
+        Ok(PhaseSpec {
+            label,
+            base,
+            n_requests,
+            transforms,
+        })
+    }
+
+    /// Materialize every phase at `scale` (phase lengths multiplied by it,
+    /// floored at one request) into globally-timed traces. Deterministic:
+    /// the same spec + scale always yields the same request stream.
+    pub fn compile(&self, scale: f64) -> anyhow::Result<CompiledScenario> {
+        anyhow::ensure!(
+            scale.is_finite() && scale > 0.0,
+            "scale must be positive (got {scale})"
+        );
+        let mut phases = Vec::with_capacity(self.phases.len());
+        // The scenario clock: where the next phase's local t=0 lands.
+        let mut clock = 0.0f64;
+        for (i, ph) in self.phases.iter().enumerate() {
+            let seed = phase_seed(self.seed, i);
+            let want = ((ph.n_requests as f64 * scale).round() as usize).max(1);
+            let mut trace = match &ph.base {
+                PhaseBase::Netflix | PhaseBase::Spotify => {
+                    let kind = if ph.base == PhaseBase::Netflix {
+                        TraceKind::Netflix
+                    } else {
+                        TraceKind::Spotify
+                    };
+                    let mut p = match kind {
+                        TraceKind::Netflix => {
+                            GeneratorParams::netflix(self.n_items, self.n_servers, want)
+                        }
+                        TraceKind::Spotify => {
+                            GeneratorParams::spotify(self.n_items, self.n_servers, want)
+                        }
+                    };
+                    p.seed ^= seed;
+                    generator::try_generate(&p, kind)?
+                }
+                PhaseBase::Csv(path) | PhaseBase::Kaggle(path) => {
+                    let mut t = match &ph.base {
+                        PhaseBase::Csv(_) => trace_io::read_csv(path)?,
+                        _ => trace_io::read_external_csv(path)?,
+                    };
+                    anyhow::ensure!(
+                        t.n_items <= self.n_items && t.n_servers <= self.n_servers,
+                        "phase `{}`: file universe ({} items, {} servers) exceeds \
+                         scenario universe ({}, {})",
+                        ph.label,
+                        t.n_items,
+                        t.n_servers,
+                        self.n_items,
+                        self.n_servers
+                    );
+                    if ph.n_requests > 0 {
+                        t.requests.truncate(want);
+                    }
+                    anyhow::ensure!(
+                        !t.requests.is_empty(),
+                        "phase `{}`: file trace is empty",
+                        ph.label
+                    );
+                    // Normalize file times to a phase-local origin.
+                    let t0 = t.requests[0].time;
+                    for r in t.requests.iter_mut() {
+                        r.time -= t0;
+                    }
+                    t.n_items = self.n_items;
+                    t.n_servers = self.n_servers;
+                    t
+                }
+            };
+
+            let mut rng = Rng::new(seed ^ 0xC0FF_EE);
+            for tr in &ph.transforms {
+                tr.apply(&mut trace, &mut rng);
+            }
+
+            // Shift to the global timeline; advance the clock past the
+            // phase by one mean inter-arrival gap so phase boundaries
+            // never collapse onto each other.
+            for r in trace.requests.iter_mut() {
+                r.time += clock;
+            }
+            let (first, last) = (
+                trace.requests[0].time,
+                trace.requests.last().unwrap().time,
+            );
+            clock = last + ((last - first) / trace.len() as f64).max(1e-9);
+
+            trace.name = format!("{}/{}", self.name, ph.label);
+            trace
+                .validate()
+                .map_err(|e| anyhow::anyhow!("phase `{}`: {e}", ph.label))?;
+            phases.push(CompiledPhase {
+                label: ph.label.clone(),
+                trace,
+            });
+        }
+        // Flatten the timeline once here; every policy's `prepare` and the
+        // export paths borrow it instead of re-concatenating per run.
+        let full = Trace {
+            requests: phases
+                .iter()
+                .flat_map(|p| p.trace.requests.iter().cloned())
+                .collect(),
+            n_items: self.n_items,
+            n_servers: self.n_servers,
+            name: self.name.clone(),
+        };
+        Ok(CompiledScenario {
+            name: self.name.clone(),
+            n_items: self.n_items,
+            n_servers: self.n_servers,
+            phases,
+            full,
+        })
+    }
+}
+
+fn phase_seed(seed: u64, index: usize) -> u64 {
+    seed ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One materialized phase: its trace carries *global* scenario times.
+#[derive(Debug, Clone)]
+pub struct CompiledPhase {
+    pub label: String,
+    pub trace: Trace,
+}
+
+/// A materialized scenario ready for the replay drivers.
+#[derive(Debug, Clone)]
+pub struct CompiledScenario {
+    pub name: String,
+    pub n_items: u32,
+    pub n_servers: u32,
+    pub phases: Vec<CompiledPhase>,
+    /// The flattened timeline, built once at compile time.
+    full: Trace,
+}
+
+impl CompiledScenario {
+    pub fn total_requests(&self) -> usize {
+        self.phases.iter().map(|p| p.trace.len()).sum()
+    }
+
+    /// The whole timeline as one flat trace (offline policies' `prepare`,
+    /// `trace-stats`, export).
+    pub fn concat_trace(&self) -> &Trace {
+        &self.full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+        name = "unit"
+        seed = 5
+        n_items = 30
+        n_servers = 12
+
+        [phase]
+        label = "calm"
+        generator = "netflix"
+        requests = 800
+
+        [phase]
+        label = "storm"
+        generator = "spotify"
+        requests = 1200
+        flash_frac = 0.5
+        flash_items = 3
+        churn_period = 0.2
+        churn_shift = 7
+        outage_servers = 2
+    "#;
+
+    #[test]
+    fn parses_phases_and_canonical_order() {
+        let s = ScenarioSpec::from_toml_str(SPEC).unwrap();
+        assert_eq!(s.name, "unit");
+        assert_eq!(s.phases.len(), 2);
+        assert_eq!(s.phases[0].label, "calm");
+        assert!(s.phases[0].transforms.is_empty());
+        let names: Vec<_> = s.phases[1].transforms.iter().map(|t| t.name()).collect();
+        assert_eq!(names, vec!["bundle_churn", "flash_crowd", "outage"]);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_tables() {
+        assert!(ScenarioSpec::from_toml_str("n_items = 10\nn_servers = 2\nbogus = 1")
+            .unwrap_err()
+            .to_string()
+            .contains("unknown scenario key"));
+        let bad_phase = "n_items = 10\nn_servers = 2\n[phase]\ngenerator = \"netflix\"\n\
+                         requests = 10\nwat = 3";
+        assert!(ScenarioSpec::from_toml_str(bad_phase)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown key `wat`"));
+        let bad_table = "n_items = 10\nn_servers = 2\n[stage]\nx = 1";
+        assert!(ScenarioSpec::from_toml_str(bad_table).is_err());
+        assert!(ScenarioSpec::from_toml_str("n_items = 10\nn_servers = 2").is_err());
+    }
+
+    #[test]
+    fn rejects_non_integer_and_orphan_sub_keys() {
+        // Negative / fractional integers error instead of silently casting.
+        let neg = "n_items = 10\nn_servers = 2\n[phase]\ngenerator = \"netflix\"\n\
+                   requests = -100";
+        assert!(ScenarioSpec::from_toml_str(neg)
+            .unwrap_err()
+            .to_string()
+            .contains("non-negative integer"));
+        let frac = "n_items = 10.5\nn_servers = 2\n[phase]\ngenerator = \"netflix\"\n\
+                    requests = 10";
+        assert!(ScenarioSpec::from_toml_str(frac).is_err());
+        // A dependent sub-key without its primary names the missing key.
+        let orphan = "n_items = 10\nn_servers = 4\n[phase]\ngenerator = \"netflix\"\n\
+                      requests = 10\nflash_start_frac = 0.2";
+        let err = ScenarioSpec::from_toml_str(orphan).unwrap_err().to_string();
+        assert!(err.contains("`flash_start_frac` needs `flash_frac`"), "{err}");
+        let orphan2 = "n_items = 10\nn_servers = 4\n[phase]\ngenerator = \"netflix\"\n\
+                       requests = 10\nchurn_shift = 3";
+        let err = ScenarioSpec::from_toml_str(orphan2).unwrap_err().to_string();
+        assert!(err.contains("`churn_shift` needs `churn_period`"), "{err}");
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_globally_timed() {
+        let s = ScenarioSpec::from_toml_str(SPEC).unwrap();
+        let a = s.compile(1.0).unwrap();
+        let b = s.compile(1.0).unwrap();
+        assert_eq!(a.total_requests(), 2000);
+        assert_eq!(a.phases.len(), 2);
+        for (pa, pb) in a.phases.iter().zip(&b.phases) {
+            assert_eq!(pa.trace.requests, pb.trace.requests);
+        }
+        // Global monotonicity across the phase boundary.
+        a.concat_trace().validate().unwrap();
+        assert!(
+            a.phases[1].trace.requests[0].time
+                > a.phases[0].trace.requests.last().unwrap().time
+        );
+        // Different seeds move the stream.
+        let mut s2 = s.clone();
+        s2.seed = 6;
+        let c = s2.compile(1.0).unwrap();
+        assert_ne!(c.phases[0].trace.requests, a.phases[0].trace.requests);
+    }
+
+    #[test]
+    fn compile_scales_phase_lengths() {
+        let s = ScenarioSpec::from_toml_str(SPEC).unwrap();
+        let half = s.compile(0.5).unwrap();
+        assert_eq!(half.phases[0].trace.len(), 400);
+        assert_eq!(half.phases[1].trace.len(), 600);
+        assert!(s.compile(0.0).is_err());
+    }
+
+    #[test]
+    fn csv_phase_base_loads_and_reoffsets() {
+        let dir = crate::util::tempdir::TempDir::new("scn").unwrap();
+        let path = dir.file("base.csv");
+        let t = crate::trace::generator::netflix_like(20, 6, 300, 3);
+        crate::trace::io::write_csv(&t, &path).unwrap();
+        let spec = format!(
+            "name = \"file\"\nn_items = 30\nn_servers = 12\n[phase]\n\
+             generator = \"csv:{}\"\nrequests = 100\nrate_scale = 2.0\n",
+            path.display()
+        );
+        let s = ScenarioSpec::from_toml_str(&spec).unwrap();
+        let c = s.compile(1.0).unwrap();
+        assert_eq!(c.phases[0].trace.len(), 100);
+        assert_eq!(c.n_items, 30);
+        c.concat_trace().validate().unwrap();
+    }
+}

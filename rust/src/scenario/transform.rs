@@ -1,0 +1,539 @@
+//! Trace transformers — the combinator pipeline a scenario phase applies
+//! to its base trace (DESIGN.md §7.2).
+//!
+//! Each transformer is a pure, deterministic function `Trace → Trace`
+//! (randomness comes from the phase's seeded [`Rng`]), and each preserves
+//! the trace invariants [`Trace::validate`] checks: items stay inside
+//! `[0, n_items)`, servers inside `[0, n_servers)`, and time stays
+//! non-decreasing. They compose in the canonical order of
+//! [`Transform::CANONICAL_ORDER`]: time-warps first (rate scaling,
+//! diurnal modulation), then content rewrites (bundle churn, flash crowd,
+//! catalog rollover), then routing rewrites (outage re-routing) — so a
+//! spec's transformer set always means the same pipeline regardless of
+//! key order in the TOML.
+
+use crate::trace::model::{Request, Trace};
+use crate::util::Rng;
+
+/// One trace transformer. Window fields (`start_frac` / `end_frac`) are
+/// fractions of the phase's time span; the transformer is active for
+/// requests with `t ∈ [t0 + start·span, t0 + end·span)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Transform {
+    /// Compress (factor > 1) or stretch (factor < 1) inter-arrival times:
+    /// the request *content* is untouched, only the arrival rate changes
+    /// relative to the Δt expiry window — the keep-vs-drop economics knob
+    /// (arXiv:1312.0499).
+    RateScale { factor: f64 },
+    /// Diurnal rate modulation: time-warp arrivals so the instantaneous
+    /// rate follows `λ(u) = λ0 · (1 + amplitude · sin(2πu/period))`
+    /// (time-varying volume, arXiv:1803.03914). `amplitude ∈ [0, 0.95]`.
+    Diurnal { period: f64, amplitude: f64 },
+    /// Flash crowd: inside the window, each request is redirected with
+    /// probability `frac` to a small breaking-news hot set of `n_hot`
+    /// items (drawn once per phase).
+    FlashCrowd {
+        start_frac: f64,
+        end_frac: f64,
+        frac: f64,
+        n_hot: usize,
+    },
+    /// Bundle churn injection: every `period` time units the whole item
+    /// id space rotates by `shift` (a popularity relabeling). Co-access
+    /// structure is preserved, but every learned clique goes stale —
+    /// exactly the merge/split/adjust stress (Algorithms 3-5).
+    BundleChurn { period: f64, shift: u32 },
+    /// Catalog rollover: from `at_frac` of the span onward, a sampled
+    /// `frac` of the catalog is swapped for other titles (a random
+    /// permutation of the sampled subset) — new releases displace old.
+    CatalogRollover { at_frac: f64, frac: f64 },
+    /// Region outage: inside the window, a contiguous block of `n_down`
+    /// servers goes dark and its traffic re-routes `n_down` servers ahead
+    /// (mod m), concentrating load on the survivors.
+    Outage {
+        start_frac: f64,
+        end_frac: f64,
+        n_down: u32,
+    },
+}
+
+impl Transform {
+    /// Pipeline position of each variant; [`sort_canonical`] orders a
+    /// transformer set by it.
+    pub const CANONICAL_ORDER: [&'static str; 6] = [
+        "rate_scale",
+        "diurnal",
+        "bundle_churn",
+        "flash_crowd",
+        "catalog_rollover",
+        "outage",
+    ];
+
+    /// Stable spec-grammar name (also the key prefix in phase tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transform::RateScale { .. } => "rate_scale",
+            Transform::Diurnal { .. } => "diurnal",
+            Transform::BundleChurn { .. } => "bundle_churn",
+            Transform::FlashCrowd { .. } => "flash_crowd",
+            Transform::CatalogRollover { .. } => "catalog_rollover",
+            Transform::Outage { .. } => "outage",
+        }
+    }
+
+    fn rank(&self) -> usize {
+        Self::CANONICAL_ORDER
+            .iter()
+            .position(|&n| n == self.name())
+            .unwrap_or(usize::MAX)
+    }
+
+    /// Validate parameters against the universe the phase runs in.
+    pub fn validate(&self, n_items: u32, n_servers: u32) -> anyhow::Result<()> {
+        let window_ok = |lo: f64, hi: f64| (0.0..=1.0).contains(&lo) && lo < hi && hi <= 1.0;
+        match *self {
+            Transform::RateScale { factor } => {
+                anyhow::ensure!(
+                    factor.is_finite() && factor > 0.0,
+                    "rate_scale factor must be positive (got {factor})"
+                );
+            }
+            Transform::Diurnal { period, amplitude } => {
+                anyhow::ensure!(period > 0.0, "diurnal_period must be positive");
+                anyhow::ensure!(
+                    (0.0..=0.95).contains(&amplitude),
+                    "diurnal_amplitude must be in [0, 0.95] (got {amplitude})"
+                );
+            }
+            Transform::FlashCrowd {
+                start_frac,
+                end_frac,
+                frac,
+                n_hot,
+            } => {
+                anyhow::ensure!(
+                    window_ok(start_frac, end_frac),
+                    "flash window [{start_frac}, {end_frac}) invalid"
+                );
+                anyhow::ensure!(
+                    frac > 0.0 && frac <= 1.0,
+                    "flash_frac must be in (0, 1] (got {frac})"
+                );
+                anyhow::ensure!(
+                    n_hot >= 1 && n_hot <= n_items as usize,
+                    "flash_items must be in [1, n_items={n_items}] (got {n_hot})"
+                );
+            }
+            Transform::BundleChurn { period, shift } => {
+                anyhow::ensure!(period > 0.0, "churn_period must be positive");
+                anyhow::ensure!(
+                    shift >= 1 && shift < n_items,
+                    "churn_shift must be in [1, n_items={n_items}) (got {shift})"
+                );
+            }
+            Transform::CatalogRollover { at_frac, frac } => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&at_frac),
+                    "rollover_at_frac must be in [0, 1) (got {at_frac})"
+                );
+                anyhow::ensure!(
+                    frac > 0.0 && frac <= 1.0,
+                    "rollover_frac must be in (0, 1] (got {frac})"
+                );
+            }
+            Transform::Outage {
+                start_frac,
+                end_frac,
+                n_down,
+            } => {
+                anyhow::ensure!(
+                    window_ok(start_frac, end_frac),
+                    "outage window [{start_frac}, {end_frac}) invalid"
+                );
+                anyhow::ensure!(
+                    n_down >= 1 && 2 * n_down <= n_servers,
+                    "outage_servers must be in [1, n_servers/2={}] (got {n_down})",
+                    n_servers / 2
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply in place. `rng` is the phase's transformer stream — every
+    /// variant draws a deterministic amount of randomness per request, so
+    /// the pipeline is reproducible from the scenario seed.
+    pub fn apply(&self, trace: &mut Trace, rng: &mut Rng) {
+        if trace.requests.is_empty() {
+            return;
+        }
+        let t0 = trace.requests[0].time;
+        let span = (trace.requests.last().unwrap().time - t0).max(f64::MIN_POSITIVE);
+        match *self {
+            Transform::RateScale { factor } => {
+                for r in trace.requests.iter_mut() {
+                    r.time = t0 + (r.time - t0) / factor;
+                }
+            }
+            Transform::Diurnal { period, amplitude } => {
+                // Invert the integrated rate Λ(u) = u + (aP/2π)(1-cos(2πu/P)):
+                // mapping tᵢ ↦ Λ⁻¹(tᵢ) turns a homogeneous stream into an
+                // inhomogeneous one with rate λ0·(1 + a·sin(2πu/P)). Λ is
+                // strictly increasing (Λ' = 1 + a·sin ≥ 1-a > 0), so
+                // bisection from the previous solution converges.
+                let two_pi = std::f64::consts::TAU;
+                let lam = |u: f64| {
+                    u + amplitude * period / two_pi * (1.0 - (two_pi * u / period).cos())
+                };
+                let mut prev_u = 0.0f64;
+                let mut prev_t = 0.0f64;
+                for r in trace.requests.iter_mut() {
+                    let t = r.time - t0;
+                    let mut lo = prev_u;
+                    let mut hi = prev_u + (t - prev_t) / (1.0 - amplitude) + 1e-12;
+                    for _ in 0..64 {
+                        let mid = 0.5 * (lo + hi);
+                        if lam(mid) < t {
+                            lo = mid;
+                        } else {
+                            hi = mid;
+                        }
+                    }
+                    prev_u = 0.5 * (lo + hi);
+                    prev_t = t;
+                    r.time = t0 + prev_u;
+                }
+            }
+            Transform::FlashCrowd {
+                start_frac,
+                end_frac,
+                frac,
+                n_hot,
+            } => {
+                let mut hot: Vec<u32> = rng
+                    .sample_distinct(trace.n_items as usize, n_hot)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                hot.sort_unstable();
+                let (w_lo, w_hi) = (t0 + start_frac * span, t0 + end_frac * span);
+                for r in trace.requests.iter_mut() {
+                    if r.time < w_lo || r.time >= w_hi {
+                        continue;
+                    }
+                    if rng.chance(frac) {
+                        let k = r.items.len().min(n_hot);
+                        let off = rng.below(n_hot);
+                        let items: Vec<u32> =
+                            (0..k).map(|j| hot[(off + j) % n_hot]).collect();
+                        *r = Request::new(items, r.server, r.time);
+                    }
+                }
+            }
+            Transform::BundleChurn { period, shift } => {
+                let n = trace.n_items;
+                for r in trace.requests.iter_mut() {
+                    let epoch = ((r.time - t0) / period).floor() as u64;
+                    let rot = (epoch.wrapping_mul(shift as u64) % n as u64) as u32;
+                    if rot == 0 {
+                        continue;
+                    }
+                    let items: Vec<u32> = r
+                        .items
+                        .iter()
+                        .map(|&d| ((d as u64 + rot as u64) % n as u64) as u32)
+                        .collect();
+                    *r = Request::new(items, r.server, r.time);
+                }
+            }
+            Transform::CatalogRollover { at_frac, frac } => {
+                // Sample the rolled-over subset, then permute it: old id →
+                // its shuffled partner (a bijection, so ids never collide).
+                let rolled: Vec<u32> =
+                    (0..trace.n_items).filter(|_| rng.chance(frac)).collect();
+                let mut replacement = rolled.clone();
+                rng.shuffle(&mut replacement);
+                let map: std::collections::HashMap<u32, u32> =
+                    rolled.iter().copied().zip(replacement).collect();
+                let t_cut = t0 + at_frac * span;
+                for r in trace.requests.iter_mut() {
+                    if r.time < t_cut || map.is_empty() {
+                        continue;
+                    }
+                    if r.items.iter().any(|d| map.contains_key(d)) {
+                        let items: Vec<u32> = r
+                            .items
+                            .iter()
+                            .map(|d| map.get(d).copied().unwrap_or(*d))
+                            .collect();
+                        *r = Request::new(items, r.server, r.time);
+                    }
+                }
+            }
+            Transform::Outage {
+                start_frac,
+                end_frac,
+                n_down,
+            } => {
+                let m = trace.n_servers;
+                let first_down = rng.below(m as usize) as u32;
+                let (w_lo, w_hi) = (t0 + start_frac * span, t0 + end_frac * span);
+                for r in trace.requests.iter_mut() {
+                    if r.time < w_lo || r.time >= w_hi {
+                        continue;
+                    }
+                    // Contiguous-mod-m membership test for the down block.
+                    if (r.server + m - first_down) % m < n_down {
+                        r.server = (r.server + n_down) % m;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Order a transformer set into the canonical pipeline order (stable, so
+/// equal-ranked entries keep spec order).
+pub fn sort_canonical(transforms: &mut [Transform]) {
+    transforms.sort_by_key(|t| t.rank());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::netflix_like;
+
+    fn base() -> Trace {
+        netflix_like(40, 20, 4_000, 9)
+    }
+
+    fn apply(t: Transform, seed: u64) -> Trace {
+        let mut trace = base();
+        t.validate(trace.n_items, trace.n_servers).unwrap();
+        let mut rng = Rng::new(seed);
+        t.apply(&mut trace, &mut rng);
+        trace.validate().unwrap();
+        trace
+    }
+
+    #[test]
+    fn rate_scale_compresses_span() {
+        let orig = base();
+        let fast = apply(Transform::RateScale { factor: 4.0 }, 1);
+        let orig_span = orig.requests.last().unwrap().time - orig.requests[0].time;
+        let fast_span = fast.requests.last().unwrap().time - fast.requests[0].time;
+        assert!((fast_span - orig_span / 4.0).abs() < 1e-6 * orig_span);
+        assert_eq!(orig.requests[17].items, fast.requests[17].items);
+    }
+
+    #[test]
+    fn diurnal_modulates_rate_and_keeps_order() {
+        let orig = base();
+        let span = orig.requests.last().unwrap().time - orig.requests[0].time;
+        let period = span / 2.0;
+        let warped = apply(
+            Transform::Diurnal {
+                period,
+                amplitude: 0.8,
+            },
+            1,
+        );
+        // Count arrivals in the first rising half-period (rate > λ0)
+        // vs the falling half: the warped trace must be denser early.
+        let t0 = warped.requests[0].time;
+        let q = period / 2.0;
+        let count = |lo: f64, hi: f64| {
+            warped
+                .requests
+                .iter()
+                .filter(|r| r.time - t0 >= lo && r.time - t0 < hi)
+                .count()
+        };
+        let peak = count(0.0, q);
+        let trough = count(q, 2.0 * q);
+        assert!(
+            peak as f64 > 1.3 * trough as f64,
+            "no modulation: peak {peak} vs trough {trough}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_popularity() {
+        let t = apply(
+            Transform::FlashCrowd {
+                start_frac: 0.25,
+                end_frac: 0.75,
+                frac: 0.8,
+                n_hot: 3,
+            },
+            7,
+        );
+        let mut counts = vec![0usize; 40];
+        for r in &t.requests {
+            for &d in &r.items {
+                counts[d as usize] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top3: usize = counts[..3].iter().sum();
+        // ~40% of requests redirected to 3 items → they dominate.
+        assert!(
+            top3 as f64 > 0.3 * total as f64,
+            "hot set carries {top3}/{total}"
+        );
+    }
+
+    #[test]
+    fn bundle_churn_rotates_hot_set() {
+        let orig = base();
+        let span = orig.requests.last().unwrap().time - orig.requests[0].time;
+        let t = apply(
+            Transform::BundleChurn {
+                period: span / 4.0,
+                shift: 11,
+            },
+            3,
+        );
+        let top = |reqs: &[Request]| {
+            let mut c = vec![0usize; 40];
+            for r in reqs {
+                for &d in &r.items {
+                    c[d as usize] += 1;
+                }
+            }
+            let mut idx: Vec<usize> = (0..40).collect();
+            idx.sort_unstable_by(|&a, &b| c[b].cmp(&c[a]));
+            idx[..5].to_vec()
+        };
+        let head = top(&t.requests[..1000]);
+        let tail = top(&t.requests[3000..]);
+        let overlap = head.iter().filter(|i| tail.contains(i)).count();
+        assert!(overlap < 5, "hot set did not rotate (overlap {overlap})");
+    }
+
+    #[test]
+    fn rollover_changes_post_cut_catalog_only() {
+        let orig = base();
+        let t = apply(
+            Transform::CatalogRollover {
+                at_frac: 0.5,
+                frac: 0.9,
+            },
+            5,
+        );
+        // Pre-cut requests are untouched.
+        assert_eq!(orig.requests[10].items, t.requests[10].items);
+        // Post-cut, a large sampled subset is remapped.
+        let changed = orig
+            .requests
+            .iter()
+            .zip(&t.requests)
+            .skip(3 * orig.len() / 4)
+            .filter(|(a, b)| a.items != b.items)
+            .count();
+        assert!(changed > orig.len() / 8, "only {changed} requests remapped");
+    }
+
+    #[test]
+    fn outage_empties_down_block_inside_window() {
+        let down = 5u32;
+        let t = apply(
+            Transform::Outage {
+                start_frac: 0.3,
+                end_frac: 0.7,
+                n_down: down,
+            },
+            11,
+        );
+        // Recover the down block deterministically from the same stream.
+        let mut rng = Rng::new(11);
+        let first_down = rng.below(t.n_servers as usize) as u32;
+        let t0 = t.requests[0].time;
+        let span = t.requests.last().unwrap().time - t0;
+        let in_block = |s: u32| (s + t.n_servers - first_down) % t.n_servers < down;
+        let dark = t
+            .requests
+            .iter()
+            .filter(|r| {
+                r.time >= t0 + 0.3 * span && r.time < t0 + 0.7 * span && in_block(r.server)
+            })
+            .count();
+        assert_eq!(dark, 0, "{dark} requests still hit the dark block");
+    }
+
+    #[test]
+    fn transforms_are_deterministic() {
+        for t in [
+            Transform::RateScale { factor: 2.0 },
+            Transform::FlashCrowd {
+                start_frac: 0.0,
+                end_frac: 1.0,
+                frac: 0.5,
+                n_hot: 4,
+            },
+            Transform::BundleChurn {
+                period: 0.5,
+                shift: 3,
+            },
+        ] {
+            let a = apply(t.clone(), 42);
+            let b = apply(t, 42);
+            assert_eq!(a.requests, b.requests);
+        }
+    }
+
+    #[test]
+    fn canonical_sort_orders_pipeline() {
+        let mut ts = vec![
+            Transform::Outage {
+                start_frac: 0.0,
+                end_frac: 1.0,
+                n_down: 1,
+            },
+            Transform::FlashCrowd {
+                start_frac: 0.0,
+                end_frac: 1.0,
+                frac: 0.1,
+                n_hot: 1,
+            },
+            Transform::RateScale { factor: 2.0 },
+        ];
+        sort_canonical(&mut ts);
+        assert_eq!(ts[0].name(), "rate_scale");
+        assert_eq!(ts[1].name(), "flash_crowd");
+        assert_eq!(ts[2].name(), "outage");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        assert!(Transform::RateScale { factor: 0.0 }.validate(10, 10).is_err());
+        assert!(Transform::Diurnal {
+            period: 1.0,
+            amplitude: 0.99
+        }
+        .validate(10, 10)
+        .is_err());
+        assert!(Transform::FlashCrowd {
+            start_frac: 0.0,
+            end_frac: 1.0,
+            frac: 0.5,
+            n_hot: 11
+        }
+        .validate(10, 10)
+        .is_err());
+        assert!(Transform::Outage {
+            start_frac: 0.0,
+            end_frac: 1.0,
+            n_down: 6
+        }
+        .validate(10, 10)
+        .is_err());
+        assert!(Transform::BundleChurn {
+            period: 1.0,
+            shift: 10
+        }
+        .validate(10, 10)
+        .is_err());
+    }
+}

@@ -112,6 +112,45 @@ impl GeneratorParams {
     }
 }
 
+impl GeneratorParams {
+    /// Check every knob before sampling starts, so a bad configuration
+    /// fails with a message at the API boundary instead of panicking deep
+    /// in the Zipf sampler or the bundle partitioner.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_items >= 1, "n_items must be >= 1");
+        anyhow::ensure!(self.n_servers >= 1, "n_servers must be >= 1");
+        anyhow::ensure!(self.d_max >= 1, "d_max must be >= 1");
+        anyhow::ensure!(
+            self.zipf_bundles > 0.0,
+            "zipf_bundles must be positive (got {})",
+            self.zipf_bundles
+        );
+        anyhow::ensure!(
+            self.zipf_servers > 0.0,
+            "zipf_servers must be positive (got {})",
+            self.zipf_servers
+        );
+        anyhow::ensure!(self.bundle_min >= 1, "bundle_min must be >= 1");
+        anyhow::ensure!(
+            self.bundle_max >= self.bundle_min,
+            "bundle_max {} < bundle_min {}",
+            self.bundle_max,
+            self.bundle_min
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.noise),
+            "noise must be in [0,1]"
+        );
+        anyhow::ensure!(self.req_rate > 0.0, "req_rate must be positive");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.p_continue),
+            "p_continue must be in [0,1)"
+        );
+        anyhow::ensure!(self.session_max >= 1, "session_max must be >= 1");
+        Ok(())
+    }
+}
+
 /// Latent ground-truth bundles: a partition of the item universe into
 /// groups of co-accessed items (what the CRM/clique machinery must
 /// rediscover online).
@@ -141,9 +180,26 @@ impl Bundles {
     }
 }
 
+/// Generate a trace from explicit parameters, validating them first.
+/// This is the fallible entry the CLI and the scenario compiler use;
+/// [`generate`] panics on the same conditions for infallible callers.
+pub fn try_generate(params: &GeneratorParams, kind: TraceKind) -> anyhow::Result<Trace> {
+    params.validate()?;
+    Ok(generate_unchecked(params, kind))
+}
+
 /// Generate a trace from explicit parameters.
+///
+/// Panics if `params` is invalid — use [`try_generate`] to get an error
+/// instead.
 pub fn generate(params: &GeneratorParams, kind: TraceKind) -> Trace {
-    assert!(params.n_items >= 1 && params.n_servers >= 1);
+    params
+        .validate()
+        .unwrap_or_else(|e| panic!("invalid GeneratorParams: {e}"));
+    generate_unchecked(params, kind)
+}
+
+fn generate_unchecked(params: &GeneratorParams, kind: TraceKind) -> Trace {
     let mut rng = Rng::new(params.seed);
     let bundles = Bundles::generate(params, &mut rng);
     let n_bundles = bundles.groups.len();
@@ -357,6 +413,38 @@ mod tests {
             .filter(|i| top(&tail).contains(i))
             .count();
         assert!(overlap < 10, "hot set did not move: overlap {overlap}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        let good = GeneratorParams::netflix(60, 600, 100);
+        good.validate().unwrap();
+        for tweak in [
+            |p: &mut GeneratorParams| p.n_items = 0,
+            |p: &mut GeneratorParams| p.n_servers = 0,
+            |p: &mut GeneratorParams| p.d_max = 0,
+            |p: &mut GeneratorParams| p.zipf_bundles = 0.0,
+            |p: &mut GeneratorParams| p.zipf_servers = -1.0,
+            |p: &mut GeneratorParams| p.bundle_min = 0,
+            |p: &mut GeneratorParams| p.bundle_max = 1,
+            |p: &mut GeneratorParams| p.noise = 1.5,
+            |p: &mut GeneratorParams| p.req_rate = 0.0,
+            |p: &mut GeneratorParams| p.p_continue = 1.0,
+            |p: &mut GeneratorParams| p.session_max = 0,
+        ] {
+            let mut p = good.clone();
+            tweak(&mut p);
+            assert!(p.validate().is_err(), "accepted bad params {p:?}");
+            assert!(try_generate(&p, TraceKind::Netflix).is_err());
+        }
+    }
+
+    #[test]
+    fn try_generate_matches_generate() {
+        let p = GeneratorParams::netflix(30, 10, 500);
+        let a = try_generate(&p, TraceKind::Netflix).unwrap();
+        let b = generate(&p, TraceKind::Netflix);
+        assert_eq!(a.requests, b.requests);
     }
 
     #[test]

@@ -34,11 +34,16 @@ pub fn write_csv(trace: &Trace, path: impl AsRef<Path>) -> anyhow::Result<()> {
 }
 
 /// Read a CSV trace written by [`write_csv`].
+///
+/// Malformed rows are rejected with their 1-based line number; empty item
+/// lists are errors, and when the `#` header carries `n_items=`, every
+/// item id is validated against it.
 pub fn read_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
     let f = std::fs::File::open(path)?;
     let r = BufReader::new(f);
     let mut trace = Trace::default();
-    for (lineno, line) in r.lines().enumerate() {
+    for (i, line) in r.lines().enumerate() {
+        let lineno = i + 1;
         let line = line?;
         if line.is_empty() {
             continue;
@@ -48,9 +53,13 @@ pub fn read_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
                 if let Some(v) = tok.strip_prefix("name=") {
                     trace.name = v.to_string();
                 } else if let Some(v) = tok.strip_prefix("n_items=") {
-                    trace.n_items = v.parse()?;
+                    trace.n_items = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("line {lineno}: bad n_items `{v}`: {e}"))?;
                 } else if let Some(v) = tok.strip_prefix("n_servers=") {
-                    trace.n_servers = v.parse()?;
+                    trace.n_servers = v.parse().map_err(|e| {
+                        anyhow::anyhow!("line {lineno}: bad n_servers `{v}`: {e}")
+                    })?;
                 }
             }
             continue;
@@ -59,19 +68,225 @@ pub fn read_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
         let time: f64 = parts
             .next()
             .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing time"))?
-            .parse()?;
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad time: {e}"))?;
         let server: u32 = parts
             .next()
             .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing server"))?
-            .parse()?;
-        let items: Vec<u32> = parts
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad server: {e}"))?;
+        let items_field = parts
             .next()
-            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing items"))?
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing items"))?;
+        anyhow::ensure!(!items_field.is_empty(), "line {lineno}: empty item list");
+        let items: Vec<u32> = items_field
             .split(';')
-            .map(|s| s.parse::<u32>())
-            .collect::<Result<_, _>>()?;
+            .map(|s| {
+                s.parse::<u32>()
+                    .map_err(|e| anyhow::anyhow!("line {lineno}: bad item `{s}`: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        if trace.n_items > 0 {
+            if let Some(&bad) = items.iter().find(|&&d| d >= trace.n_items) {
+                anyhow::bail!(
+                    "line {lineno}: item {bad} out of range (header n_items={})",
+                    trace.n_items
+                );
+            }
+        }
         trace.requests.push(Request::new(items, server, time));
     }
+    Ok(trace)
+}
+
+/// Ingest an external "Kaggle-style" request dump as a [`Trace`] — the
+/// adapter the scenario engine uses for real-dataset phases (DESIGN.md
+/// §7.4).
+///
+/// Expected shape: a comma-separated file whose first non-empty line is a
+/// header naming the columns. Recognized column names (case-insensitive):
+///
+/// * time:   `time`, `timestamp`, `t`, `ts`
+/// * server: `server`, `server_id`, `ess`, `region`, `user_id`, `user`
+/// * items:  `item`, `item_id`, `items`, `track_id`, `movie_id`, `title_id`
+///
+/// The item cell may hold several `;`-separated ids. A column whose
+/// values all parse as `u32` keeps its numeric ids; otherwise the whole
+/// column is interned to dense indices in first-seen order (all-or-
+/// nothing per column, so a mixed column can never alias an interned id
+/// onto a literal numeric one). Rows are sorted by `(time, server)`
+/// (stable), rows with identical `(time, server)` merge into one
+/// multi-item request, and `n_items` / `n_servers` are inferred from the
+/// data.
+/// Split one CSV row on commas, honoring double-quoted fields (commas
+/// inside `"..."` do not separate; `""` inside a quoted field is an
+/// escaped quote). Cells come back trimmed and unquoted.
+fn split_csv_row(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => cells.push(std::mem::take(&mut cur).trim().to_string()),
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur.trim().to_string());
+    cells
+}
+
+pub fn read_external_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path)?;
+    let r = BufReader::new(f);
+    let mut lines = r.lines().enumerate();
+
+    // Locate + parse the header row.
+    let (mut time_col, mut server_col, mut item_col) = (None, None, None);
+    for (i, line) in lines.by_ref() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        for (col, name) in split_csv_row(&line).into_iter().enumerate() {
+            match name.to_ascii_lowercase().as_str() {
+                "time" | "timestamp" | "t" | "ts" => time_col = Some(col),
+                "server" | "server_id" | "ess" | "region" | "user_id" | "user" => {
+                    server_col = Some(col)
+                }
+                "item" | "item_id" | "items" | "track_id" | "movie_id" | "title_id" => {
+                    item_col = Some(col)
+                }
+                _ => {}
+            }
+        }
+        anyhow::ensure!(
+            time_col.is_some() && server_col.is_some() && item_col.is_some(),
+            "line {}: header must name time/server/item columns (got `{line}`)",
+            i + 1
+        );
+        break;
+    }
+    let (time_col, server_col, item_col) = match (time_col, server_col, item_col) {
+        (Some(t), Some(s), Some(d)) => (t, s, d),
+        _ => anyhow::bail!("empty file: no header row"),
+    };
+
+    // First pass: collect raw cells (id resolution is per-column,
+    // all-or-nothing, so it must wait until the whole file is read).
+    let mut rows: Vec<(f64, String, Vec<String>)> = Vec::new();
+    for (i, line) in lines {
+        let lineno = i + 1;
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells = split_csv_row(&line);
+        let cell = |col: usize, what: &str| -> anyhow::Result<&str> {
+            cells
+                .get(col)
+                .map(|s| s.as_str())
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing {what} column"))
+        };
+        let time: f64 = cell(time_col, "time")?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad time: {e}"))?;
+        anyhow::ensure!(time.is_finite(), "line {lineno}: non-finite timestamp");
+        let server = cell(server_col, "server")?.to_string();
+        anyhow::ensure!(!server.is_empty(), "line {lineno}: empty server id");
+        let item_cell = cell(item_col, "item")?;
+        anyhow::ensure!(!item_cell.is_empty(), "line {lineno}: empty item list");
+        let items: Vec<String> = item_cell
+            .split(';')
+            .map(|s| {
+                let s = s.trim();
+                anyhow::ensure!(!s.is_empty(), "line {lineno}: empty item in `{item_cell}`");
+                Ok(s.to_string())
+            })
+            .collect::<anyhow::Result<_>>()?;
+        rows.push((time, server, items));
+    }
+    anyhow::ensure!(!rows.is_empty(), "no data rows in external trace");
+
+    // Per-column id resolution: numeric ids pass through only when the
+    // *entire* column is numeric; otherwise every value is interned in
+    // first-seen (file-order) order. Mixing the two in one column would
+    // let a dense interned index alias a literal numeric id.
+    let resolve = |numeric: bool, map: &mut std::collections::HashMap<String, u32>, raw: &str| {
+        if numeric {
+            raw.parse::<u32>().expect("checked numeric column")
+        } else {
+            let next = map.len() as u32;
+            *map.entry(raw.to_string()).or_insert(next)
+        }
+    };
+    let servers_numeric = rows.iter().all(|(_, s, _)| s.parse::<u32>().is_ok());
+    let items_numeric = rows
+        .iter()
+        .all(|(_, _, items)| items.iter().all(|d| d.parse::<u32>().is_ok()));
+    let mut item_ids = std::collections::HashMap::new();
+    let mut server_ids = std::collections::HashMap::new();
+    let mut resolved: Vec<(f64, u32, Vec<u32>)> = rows
+        .into_iter()
+        .map(|(time, server, items)| {
+            let server = resolve(servers_numeric, &mut server_ids, &server);
+            let items = items
+                .iter()
+                .map(|d| resolve(items_numeric, &mut item_ids, d))
+                .collect();
+            (time, server, items)
+        })
+        .collect();
+
+    // Stable (time, server) sort, then merge identical (time, server)
+    // rows into one request (per-item dump formats emit one row per
+    // item); sorting by server within a timestamp makes equal keys
+    // adjacent even when another server's row lands between them.
+    resolved.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+    let mut requests: Vec<Request> = Vec::with_capacity(resolved.len());
+    for (time, server, items) in resolved {
+        match requests.last_mut() {
+            Some(prev) if prev.time == time && prev.server == server => {
+                let mut merged = prev.items.clone();
+                merged.extend(items);
+                *prev = Request::new(merged, server, time);
+            }
+            _ => requests.push(Request::new(items, server, time)),
+        }
+    }
+
+    let n_items = 1 + requests
+        .iter()
+        .flat_map(|r| r.items.iter().copied())
+        .max()
+        .unwrap_or(0);
+    let n_servers = 1 + requests.iter().map(|r| r.server).max().unwrap_or(0);
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("external")
+        .to_string();
+    let trace = Trace {
+        requests,
+        n_items,
+        n_servers,
+        name,
+    };
+    trace.validate()?;
     Ok(trace)
 }
 
@@ -179,6 +394,117 @@ mod tests {
         let back = read_binary(&p).unwrap();
         assert_eq!(back.requests, t.requests); // bit-exact times
         back.validate().unwrap();
+    }
+
+    #[test]
+    fn csv_errors_carry_line_numbers() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("bad.csv");
+        std::fs::write(&p, "# akpc-trace v1 n_items=10 n_servers=2\n0.5,0,1;2\n1.0,zero,3\n")
+            .unwrap();
+        let err = read_csv(&p).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "error lacks line number: {err}");
+
+        std::fs::write(&p, "0.5,0,\n").unwrap();
+        let err = read_csv(&p).unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("empty item list"), "{err}");
+    }
+
+    #[test]
+    fn csv_validates_items_against_header() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("range.csv");
+        std::fs::write(&p, "# akpc-trace v1 n_items=4 n_servers=2\n0.5,0,1;9\n").unwrap();
+        let err = read_csv(&p).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("out of range"), "{err}");
+        // Without a header the same row is accepted (range unknown).
+        std::fs::write(&p, "0.5,0,1;9\n").unwrap();
+        assert_eq!(read_csv(&p).unwrap().requests.len(), 1);
+    }
+
+    #[test]
+    fn external_csv_ingests_kaggle_shape() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("kaggle.csv");
+        // Out-of-order times, string ids, one row per item.
+        std::fs::write(
+            &p,
+            "timestamp,user_id,track_id\n\
+             3.0,u1,songB\n\
+             1.0,u0,songA\n\
+             1.0,u0,songB\n\
+             2.5,u1,songC;songA\n",
+        )
+        .unwrap();
+        let t = read_external_csv(&p).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.n_servers, 2);
+        assert_eq!(t.n_items, 3);
+        // Rows at (1.0, u0) merged into one request.
+        assert_eq!(t.requests.len(), 3);
+        assert_eq!(t.requests[0].items.len(), 2);
+        assert_eq!(t.name, "kaggle");
+        // Deterministic interning: re-reading yields the identical trace.
+        assert_eq!(read_external_csv(&p).unwrap().requests, t.requests);
+    }
+
+    #[test]
+    fn external_csv_merges_interleaved_and_interns_mixed_columns() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("mixed.csv");
+        // Coarse timestamps interleave servers; the item column mixes a
+        // literal numeric id with names, so the whole column is interned
+        // (numeric passthrough would alias "0" with the first interned
+        // name).
+        std::fs::write(
+            &p,
+            "time,server,item\n\
+             1.0,3,songA\n\
+             1.0,7,songX\n\
+             1.0,3,0\n",
+        )
+        .unwrap();
+        let t = read_external_csv(&p).unwrap();
+        // Both server-3 rows merged despite the interleaved server-7 row.
+        assert_eq!(t.requests.len(), 2);
+        assert_eq!(t.requests[0].server, 3); // numeric column passes through
+        assert_eq!(t.requests[0].items, vec![0, 2]); // songA=0, songX=1, "0"=2
+        assert_eq!(t.n_items, 3);
+        assert_eq!(t.n_servers, 8);
+    }
+
+    #[test]
+    fn external_csv_handles_quoted_commas_and_rejects_empty_tokens() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("quoted.csv");
+        std::fs::write(
+            &p,
+            "time,user_id,track_id\n\
+             1.0,u0,\"Song, Pt. 2\"\n\
+             2.0,u0,\"Song, Pt. 2\"\n\
+             3.0,u1,\"He said \"\"hi\"\"\"\n",
+        )
+        .unwrap();
+        let t = read_external_csv(&p).unwrap();
+        // The quoted comma does not split: one title, re-seen = same id.
+        assert_eq!(t.n_items, 2);
+        assert_eq!(t.requests[0].items, t.requests[1].items);
+
+        let bad = dir.file("empty-token.csv");
+        std::fs::write(&bad, "time,user_id,track_id\n1.0,u0,12;;34\n").unwrap();
+        let err = read_external_csv(&bad).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("empty item"), "{err}");
+    }
+
+    #[test]
+    fn external_csv_rejects_missing_columns() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("nohdr.csv");
+        std::fs::write(&p, "a,b\n1,2\n").unwrap();
+        assert!(read_external_csv(&p).is_err());
+        let empty = dir.file("empty.csv");
+        std::fs::write(&empty, "").unwrap();
+        assert!(read_external_csv(&empty).is_err());
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod io;
 pub mod model;
 pub mod stats;
 
-pub use generator::{netflix_like, spotify_like, GeneratorParams, TraceKind};
+pub use generator::{netflix_like, spotify_like, try_generate, GeneratorParams, TraceKind};
 pub use model::{Request, Trace};

@@ -391,3 +391,44 @@ fn prop_trace_binary_roundtrip() {
         assert_eq!(back.name, trace.name);
     });
 }
+
+#[test]
+fn prop_trace_csv_binary_csv_roundtrip() {
+    // The full format chain CSV → binary → CSV preserves requests (times
+    // included: both formats round-trip f64 exactly — CSV via Rust's
+    // shortest-roundtrip float formatting), metadata, and ordering.
+    forall("trace_format_chain", 40, |rng| {
+        use akpc::trace::io;
+        let n = 5 + rng.below(40) as u32;
+        let m = 1 + rng.below(12) as u32;
+        let len = 1 + rng.below(150);
+        let t0 = rng.f64() * 100.0;
+        let trace = Trace {
+            requests: random_window(rng, len, n, m, t0),
+            n_items: n,
+            n_servers: m,
+            name: format!("chain-{}", rng.below(1000)),
+        };
+        trace.validate().unwrap();
+        let dir = akpc::util::tempdir::TempDir::new("prop-chain").unwrap();
+
+        let csv1 = dir.file("a.csv");
+        io::write_csv(&trace, &csv1).unwrap();
+        let from_csv = io::read_csv(&csv1).unwrap();
+        assert_eq!(from_csv.requests, trace.requests, "CSV read drifted");
+
+        let bin = dir.file("b.bin");
+        io::write_binary(&from_csv, &bin).unwrap();
+        let from_bin = io::read_binary(&bin).unwrap();
+
+        let csv2 = dir.file("c.csv");
+        io::write_csv(&from_bin, &csv2).unwrap();
+        let back = io::read_csv(&csv2).unwrap();
+
+        assert_eq!(back.requests, trace.requests, "chain mangled requests");
+        assert_eq!(back.n_items, trace.n_items);
+        assert_eq!(back.n_servers, trace.n_servers);
+        assert_eq!(back.name, trace.name);
+        back.validate().unwrap();
+    });
+}

@@ -1,0 +1,143 @@
+//! Scenario Lab integration tests: the built-in library is deterministic
+//! and well-formed, and the phased sharded replay is ledger-equivalent to
+//! the single-leader driver while AKPC keeps beating the no-packing
+//! baseline under non-stationary traffic (ISSUE 2 acceptance criteria).
+
+use akpc::algo::{Akpc, NoPacking};
+use akpc::config::AkpcConfig;
+use akpc::runtime::CrmEngine;
+use akpc::scenario::{self, run_phased, run_phased_sharded};
+use akpc::sim::ReplayMode;
+
+/// Every built-in scenario compiles deterministically under its fixed
+/// seed and produces a valid, phase-monotone global timeline.
+#[test]
+fn builtin_scenarios_compile_deterministically() {
+    for name in scenario::builtin_names() {
+        let spec = scenario::builtin(name).expect("builtin resolves");
+        let a = spec.compile(0.02).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let b = spec.compile(0.02).unwrap();
+        assert_eq!(a.phases.len(), b.phases.len(), "{name}");
+        for (pa, pb) in a.phases.iter().zip(&b.phases) {
+            assert_eq!(
+                pa.trace.requests, pb.trace.requests,
+                "{name}/{} not deterministic",
+                pa.label
+            );
+            pa.trace.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        // Phases join into one monotone timeline.
+        a.concat_trace()
+            .validate()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+/// Built-in scenarios run end-to-end through the single-leader driver,
+/// with per-phase ledgers that sum to the run total.
+#[test]
+fn builtin_scenarios_replay_end_to_end() {
+    let cfg = AkpcConfig {
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    for name in scenario::builtin_names() {
+        let sc = scenario::builtin(name).unwrap().compile(0.02).unwrap();
+        let cell_cfg = AkpcConfig {
+            n_items: sc.n_items,
+            n_servers: sc.n_servers,
+            ..cfg.clone()
+        };
+        let run = run_phased(&mut Akpc::new(&cell_cfg), &sc, cell_cfg.batch_size);
+        assert_eq!(
+            run.total.requests as usize,
+            sc.total_requests(),
+            "{name}: dropped requests"
+        );
+        let phase_sum: f64 = run.phases.iter().map(|p| p.ledger.total()).sum();
+        let tol = 1e-9 * run.total_cost().abs().max(1.0);
+        assert!(
+            (phase_sum - run.total_cost()).abs() <= tol,
+            "{name}: phase ledgers sum {phase_sum} != total {}",
+            run.total_cost()
+        );
+    }
+}
+
+/// The ISSUE 2 acceptance check, on the churn-heavy built-in: the phased
+/// sharded replay (1 and 4 shards, ordered mode) matches the
+/// single-leader driver's total within 1e-9 relative, and AKPC beats the
+/// no-packing baseline on total cost.
+#[test]
+fn churn_storm_sharded_matches_single_leader() {
+    let sc = scenario::builtin("churn-storm")
+        .unwrap()
+        .compile(0.15)
+        .unwrap();
+    let cfg = AkpcConfig {
+        n_items: sc.n_items,
+        n_servers: sc.n_servers,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+
+    let single = run_phased(&mut Akpc::new(&cfg), &sc, cfg.batch_size);
+    let no_packing = run_phased(&mut NoPacking::new(&cfg), &sc, cfg.batch_size);
+    assert!(
+        single.total_cost() < no_packing.total_cost(),
+        "AKPC {} not better than NoPacking {}",
+        single.total_cost(),
+        no_packing.total_cost()
+    );
+
+    for n_shards in [1usize, 4] {
+        let sharded = run_phased_sharded(
+            &cfg,
+            CrmEngine::Native,
+            &sc,
+            n_shards,
+            ReplayMode::Ordered,
+        )
+        .unwrap();
+        assert_eq!(sharded.n_shards, n_shards);
+        assert_eq!(sharded.total.requests, single.total.requests);
+        assert_eq!(sharded.total.full_hits, single.total.full_hits);
+        assert_eq!(sharded.total.transfers, single.total.transfers);
+        let tol = 1e-9 * single.total_cost().abs().max(1.0);
+        assert!(
+            (sharded.total_cost() - single.total_cost()).abs() <= tol,
+            "{n_shards}-shard total {} != single-leader {} (diff {:.3e})",
+            sharded.total_cost(),
+            single.total_cost(),
+            (sharded.total_cost() - single.total_cost()).abs()
+        );
+        // Per-phase breakdowns line up too (same request partition).
+        assert_eq!(sharded.phases.len(), single.phases.len());
+        for (s, l) in sharded.phases.iter().zip(&single.phases) {
+            assert_eq!(s.n_requests, l.n_requests, "phase {} request count", s.label);
+            assert_eq!(s.ledger.requests, l.ledger.requests);
+        }
+    }
+}
+
+/// Scenario runs are reproducible: the same spec + seed + policy yields
+/// bit-identical ledgers.
+#[test]
+fn scenario_replay_is_deterministic() {
+    let sc = scenario::builtin("smoke").unwrap().compile(1.0).unwrap();
+    let cfg = AkpcConfig {
+        n_items: sc.n_items,
+        n_servers: sc.n_servers,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let a = run_phased(&mut Akpc::new(&cfg), &sc, cfg.batch_size);
+    let b = run_phased(&mut Akpc::new(&cfg), &sc, cfg.batch_size);
+    assert_eq!(a.total.c_p, b.total.c_p);
+    assert_eq!(a.total.c_t, b.total.c_t);
+    assert_eq!(a.total.full_hits, b.total.full_hits);
+    for (pa, pb) in a.phases.iter().zip(&b.phases) {
+        assert_eq!(pa.ledger.c_t, pb.ledger.c_t);
+        assert_eq!(pa.ledger.c_p, pb.ledger.c_p);
+    }
+}

@@ -49,7 +49,8 @@ fn main() -> anyhow::Result<()> {
     println!(
         "learned cliques: {} live, mean size {:.2}",
         akpc.cliques().len(),
-        rep_akpc.clique_hist.mean()
+        // Baselines that don't pack report None here; AKPC always tracks.
+        rep_akpc.clique_hist.as_ref().map(|h| h.mean()).unwrap_or(0.0)
     );
     Ok(())
 }

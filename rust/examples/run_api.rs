@@ -1,0 +1,100 @@
+//! Unified Run API smoke tour (DESIGN.md §8): the policy registry, the
+//! `RunSpec` builder, both drivers, and the streaming observers — the
+//! release-smoke CI job runs this end to end.
+//!
+//! ```bash
+//! cargo run --release --example run_api
+//! ```
+
+use akpc::config::AkpcConfig;
+use akpc::run::{
+    Observer, PhaseEvent, PolicyRegistry, ProgressPrinter, RunSpec, WindowEvent, Workload,
+};
+use akpc::sim::ReplayMode;
+use akpc::trace::generator::TraceKind;
+
+/// A custom observer: tallies events to show the hook points firing.
+#[derive(Default)]
+struct Tally {
+    windows: u64,
+    phases: usize,
+}
+
+impl Observer for Tally {
+    fn on_window(&mut self, _ev: &WindowEvent<'_>) {
+        self.windows += 1;
+    }
+
+    fn on_phase(&mut self, ev: &PhaseEvent<'_>) {
+        self.phases += 1;
+        println!("  phase `{}` done: total={:.1}", ev.phase.label, ev.phase.ledger.total());
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. The registry: one source of truth for names, factories, and
+    //    capability flags (what `akpc policy list` prints).
+    let registry = PolicyRegistry::builtin();
+    println!("registered policies:");
+    for e in registry.iter() {
+        println!("  {:<20} [{:<14}] {}", e.name(), e.caps().summary(), e.description());
+    }
+
+    let cfg = AkpcConfig {
+        n_items: 60,
+        n_servers: 100,
+        ..Default::default()
+    };
+
+    // 2. Single-leader run with a progress observer.
+    println!("\nsingle-leader AKPC over a generated Netflix-like trace:");
+    let spec = RunSpec::new()
+        .config(cfg.clone())
+        .workload(Workload::Generated {
+            kind: TraceKind::Netflix,
+            n_requests: 20_000,
+        })
+        .policy("akpc");
+    let single = spec.run(&registry, &mut ProgressPrinter::new(50))?;
+    println!("{}", single.row());
+
+    // 3. The same spec, sharded: ordered 2-shard replay lands on the
+    //    single-leader ledger (DESIGN.md §2.3).
+    let sharded = spec
+        .clone()
+        .sharded(2, ReplayMode::Ordered)
+        .execute(&registry)?;
+    println!("{}", sharded.row());
+    let diff = (sharded.total() - single.total()).abs();
+    anyhow::ensure!(
+        diff <= 1e-9 * single.total().max(1.0),
+        "sharded total {} drifted from single-leader {}",
+        sharded.total(),
+        single.total()
+    );
+    println!(
+        "sharded == single-leader (diff {diff:.2e}); per-shard ledgers: {}",
+        sharded.shard_ledgers().len()
+    );
+
+    // 4. A scenario workload with a custom observer on the phase hook.
+    println!("\nsmoke scenario through the facade:");
+    let mut tally = Tally::default();
+    let outcome = RunSpec::new()
+        .scenario(akpc::scenario::builtin("smoke").expect("smoke is built in"), 1.0)
+        .policy("packcache")
+        .run(&registry, &mut tally)?;
+    println!("{}", outcome.row());
+    anyhow::ensure!(tally.phases == outcome.phases.len() && tally.windows > 0);
+
+    // 5. Validation catches driver/policy conflicts before any work.
+    let err = RunSpec::new()
+        .config(cfg)
+        .generated(TraceKind::Netflix, 1_000)
+        .policy("opt")
+        .sharded(2, ReplayMode::Ordered)
+        .execute(&registry)
+        .unwrap_err();
+    println!("\nconflict rejected as expected: {err}");
+    Ok(())
+}

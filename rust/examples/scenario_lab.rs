@@ -1,16 +1,15 @@
 //! Scenario Lab demo: run a non-stationary built-in scenario through the
 //! phased drivers and print the per-phase policy comparison — how AKPC's
 //! adaptive clique machinery behaves when the workload shifts under it
-//! (DESIGN.md §7).
+//! (DESIGN.md §7). Everything goes through the unified Run API
+//! (DESIGN.md §8): policies by registry name, drivers by `RunSpec`.
 //!
 //! ```bash
 //! cargo run --release --example scenario_lab [scenario] [scale]
 //! ```
 
-use akpc::algo::{Akpc, NoPacking};
-use akpc::config::AkpcConfig;
-use akpc::runtime::CrmEngine;
-use akpc::scenario::{self, run_phased, run_phased_sharded};
+use akpc::run::{NullObserver, PolicyRegistry, RunSpec};
+use akpc::scenario;
 use akpc::sim::ReplayMode;
 
 fn main() -> anyhow::Result<()> {
@@ -25,25 +24,19 @@ fn main() -> anyhow::Result<()> {
     let spec = scenario::builtin(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown scenario `{name}` — one of {:?}",
             scenario::builtin_names()))?;
-    let sc = spec.compile(scale)?;
-    println!(
-        "scenario `{}` at scale {scale}: {} phases / {} requests\n",
-        sc.name,
-        sc.phases.len(),
-        sc.total_requests()
-    );
-
-    let cfg = AkpcConfig {
-        n_items: sc.n_items,
-        n_servers: sc.n_servers,
-        ..Default::default()
-    };
+    let registry = PolicyRegistry::builtin();
+    let base = RunSpec::new().scenario(spec, scale);
+    // Materialize once; `with_policy` rebinds without recompiling the
+    // scenario, so the A/B comparison replays the identical workload.
+    let prepared = base.clone().policy("akpc").validate(&registry)?;
+    println!("{}\n", prepared.describe());
 
     // Per-phase adaptive-vs-static comparison through the single-leader
     // driver: the interesting column is how the AKPC advantage moves when
     // the phase regime changes.
-    let akpc = run_phased(&mut Akpc::new(&cfg), &sc, cfg.batch_size);
-    let baseline = run_phased(&mut NoPacking::new(&cfg), &sc, cfg.batch_size);
+    let akpc = prepared.run(&registry, &mut NullObserver)?;
+    let prepared = prepared.with_policy(&registry, "no-packing")?;
+    let baseline = prepared.run(&registry, &mut NullObserver)?;
     print!("{}", akpc.render());
     print!("{}", baseline.render());
     println!("\nper-phase AKPC savings vs NoPacking:");
@@ -57,12 +50,15 @@ fn main() -> anyhow::Result<()> {
 
     // The same timeline through the sharded online coordinator: the
     // ordered 2-shard replay lands on the same ledger (DESIGN.md §7.3).
-    let sharded = run_phased_sharded(&cfg, CrmEngine::Native, &sc, 2, ReplayMode::Ordered)?;
+    let sharded = base
+        .policy("akpc")
+        .sharded(2, ReplayMode::Ordered)
+        .execute(&registry)?;
     println!(
         "\n2-shard ordered replay: total={:.1} (single-leader {:.1}, diff {:.2e})",
-        sharded.total_cost(),
-        akpc.total_cost(),
-        (sharded.total_cost() - akpc.total_cost()).abs()
+        sharded.total(),
+        akpc.total(),
+        (sharded.total() - akpc.total()).abs()
     );
     Ok(())
 }

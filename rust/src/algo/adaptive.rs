@@ -147,7 +147,7 @@ impl CachePolicy for AdaptiveK {
         self.inner.ledger()
     }
 
-    fn clique_sizes(&self) -> Histogram {
+    fn clique_sizes(&self) -> Option<Histogram> {
         self.inner.clique_sizes()
     }
 }

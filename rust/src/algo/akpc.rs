@@ -203,8 +203,8 @@ impl CachePolicy for Akpc {
         &self.core.ledger
     }
 
-    fn clique_sizes(&self) -> Histogram {
-        self.gen.clique_sizes()
+    fn clique_sizes(&self) -> Option<Histogram> {
+        Some(self.gen.clique_sizes())
     }
 }
 
@@ -321,7 +321,7 @@ mod tests {
         let cfg = test_cfg();
         let mut p = Akpc::new(&cfg);
         p.end_batch(&bundle_window(0.0));
-        let h = p.clique_sizes();
+        let h = p.clique_sizes().expect("AKPC tracks clique sizes");
         assert!(h.count() >= 2);
         assert!(h.max() >= 2);
     }

@@ -86,8 +86,8 @@ impl CachePolicy for DpGreedy {
         &self.core.ledger
     }
 
-    fn clique_sizes(&self) -> Histogram {
-        self.hist.clone()
+    fn clique_sizes(&self) -> Option<Histogram> {
+        Some(self.hist.clone())
     }
 }
 

@@ -56,8 +56,11 @@ pub trait CachePolicy {
     fn ledger(&self) -> &CostLedger;
 
     /// Distribution of active clique sizes over window ticks (Fig. 9a).
-    fn clique_sizes(&self) -> Histogram {
-        Histogram::new()
+    /// `None` means the policy does not track packing at all (NoPacking,
+    /// OPT) — distinct from an empty histogram, so reports can say "not
+    /// tracked" instead of rendering a genuinely-empty distribution.
+    fn clique_sizes(&self) -> Option<Histogram> {
+        None
     }
 }
 

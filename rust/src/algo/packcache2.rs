@@ -154,8 +154,8 @@ impl CachePolicy for PackCache2 {
         &self.core.ledger
     }
 
-    fn clique_sizes(&self) -> Histogram {
-        self.hist.clone()
+    fn clique_sizes(&self) -> Option<Histogram> {
+        Some(self.hist.clone())
     }
 }
 

@@ -4,7 +4,7 @@
 //! returns them as structured data so integration tests can assert the
 //! *shape* of each result (who wins, direction of trends, crossovers).
 
-use crate::algo::{Akpc, CachePolicy};
+use crate::algo::Akpc;
 use crate::config::AkpcConfig;
 use crate::sim;
 use crate::trace::generator::{netflix_like, spotify_like};
@@ -469,7 +469,9 @@ pub fn fig9a(opts: &ExpOptions, base: &AkpcConfig) -> Fig9aResult {
             dists.push((
                 ds.label().to_string(),
                 label.to_string(),
-                rep.clique_hist.distribution(),
+                // All Fig. 9a variants are AKPC-based and track cliques;
+                // a None here would mean the variant stopped packing.
+                rep.clique_hist.map(|h| h.distribution()).unwrap_or_default(),
             ));
         }
     }

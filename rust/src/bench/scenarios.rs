@@ -5,6 +5,7 @@
 //! into it.
 
 use crate::config::AkpcConfig;
+use crate::run::{cell_config, PolicyRegistry};
 use crate::scenario::{self, run_phased, ScenarioRun};
 use crate::util::Json;
 
@@ -79,19 +80,17 @@ pub fn scenario_suite(
     engine: EngineChoice,
     scale: f64,
 ) -> anyhow::Result<ScenarioMatrix> {
+    let registry = PolicyRegistry::builtin();
     let mut runs = Vec::with_capacity(names.len() * policies.len());
     let mut policy_names = Vec::new();
     for &name in names {
         let spec = scenario::builtin(name)
             .ok_or_else(|| anyhow::anyhow!("unknown built-in scenario `{name}`"))?;
         let sc = spec.compile(scale)?;
-        let cell_cfg = AkpcConfig {
-            n_items: sc.n_items,
-            n_servers: sc.n_servers,
-            ..cfg.clone()
-        };
+        // The same effective-config derivation RunSpec::validate uses.
+        let cell_cfg = cell_config(cfg, sc.n_items, sc.n_servers);
         for &p in policies {
-            let mut policy = p.build(&cell_cfg, engine);
+            let mut policy = registry.build_choice(p, &cell_cfg, engine);
             let run = run_phased(policy.as_mut(), &sc, cell_cfg.batch_size);
             if policy_names.len() < policies.len() {
                 policy_names.push(run.policy.clone());

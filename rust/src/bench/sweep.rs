@@ -1,7 +1,7 @@
 //! Shared sweep machinery: instantiate policy sets, run them over a trace,
 //! normalize to OPT.
 
-use crate::algo::{Akpc, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
+use crate::algo::CachePolicy;
 use crate::config::AkpcConfig;
 use crate::runtime::CrmEngine;
 use crate::sim::{self, SimReport};
@@ -52,29 +52,29 @@ impl PolicyChoice {
         PolicyChoice::Opt,
     ];
 
+    /// The registry/CLI name of this choice — the bijection between the
+    /// sweep enum and [`crate::run::PolicyRegistry`] names lives here
+    /// and nowhere else.
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            PolicyChoice::NoPacking => "no-packing",
+            PolicyChoice::DpGreedy => "dp-greedy",
+            PolicyChoice::PackCache => "packcache",
+            PolicyChoice::AkpcNoCsNoAcm => "akpc-no-cs-no-acm",
+            PolicyChoice::AkpcNoAcm => "akpc-no-acm",
+            PolicyChoice::Akpc => "akpc",
+            PolicyChoice::Opt => "opt",
+        }
+    }
+
+    /// Instantiate via the policy registry — construction logic lives in
+    /// [`crate::run::PolicyRegistry::builtin`], not here.
     pub fn build(
         self,
         cfg: &AkpcConfig,
         engine: EngineChoice,
     ) -> Box<dyn CachePolicy> {
-        match self {
-            PolicyChoice::NoPacking => Box::new(NoPacking::new(cfg)),
-            PolicyChoice::DpGreedy => Box::new(DpGreedy::new(cfg)),
-            PolicyChoice::PackCache => Box::new(PackCache2::new(cfg)),
-            PolicyChoice::AkpcNoCsNoAcm => Box::new(Akpc::with_builder(
-                &cfg.without_cs_acm(),
-                engine.to_engine().builder(&cfg.artifacts_dir),
-            )),
-            PolicyChoice::AkpcNoAcm => Box::new(Akpc::with_builder(
-                &cfg.without_acm(),
-                engine.to_engine().builder(&cfg.artifacts_dir),
-            )),
-            PolicyChoice::Akpc => Box::new(Akpc::with_builder(
-                cfg,
-                engine.to_engine().builder(&cfg.artifacts_dir),
-            )),
-            PolicyChoice::Opt => Box::new(Opt::new(cfg)),
-        }
+        crate::run::PolicyRegistry::builtin().build_choice(self, cfg, engine)
     }
 }
 

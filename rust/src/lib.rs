@@ -30,6 +30,7 @@
 //! | [`cache`] | per-ESS cache state, expiry queue, cost model & ledger |
 //! | [`algo`] | `CachePolicy` trait: AKPC + NoPacking, PackCache, DP_Greedy, OPT |
 //! | [`scenario`] | Scenario Lab: declarative workload scenarios, trace transformers, phased replay |
+//! | [`run`] | unified Run API: policy registry, `RunSpec` builder, `RunOutcome`, streaming observers |
 //! | [`sim`] | event-driven CDN simulator, sharded replay driver + reports |
 //! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
 //! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker |
@@ -42,6 +43,7 @@ pub mod clique;
 pub mod config;
 pub mod coordinator;
 pub mod crm;
+pub mod run;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;
@@ -49,4 +51,5 @@ pub mod trace;
 pub mod util;
 
 pub use config::AkpcConfig;
+pub use run::{PolicyRegistry, RunOutcome, RunSpec};
 pub use trace::model::{Request, Trace};

@@ -10,6 +10,7 @@
 //!                 fig8c fig9a fig9b adversarial all)
 //!   scenario     Scenario Lab: phased non-stationary workload replays
 //!                (list | suite | <name> | <spec.toml>)
+//!   policy       policy registry introspection (list)
 //!   gen-trace    write a synthetic Netflix/Spotify-like trace to disk
 //!   trace-stats  analyze a trace file
 //!   serve        online sharded coordinator demo (replays a trace)
@@ -19,27 +20,35 @@
 //!   --config <file.toml>      load configuration
 //!   --requests <N>            trace length (default 200000)
 //!   --engine <native|xla>     CRM engine for AKPC (default xla)
-//!   --policy <name>           run/scenario: no-packing|packcache|dp-greedy|
-//!                             akpc|akpc-no-cs-no-acm|opt (default akpc)
+//!   --policy <name>           run/scenario: a registry name — see
+//!                             `akpc policy list` (default akpc)
 //!   --dataset <netflix|spotify>                          (default netflix)
 //!   --trace <file>            run: load a trace file instead
 //!   --out <file|dir>          gen-trace: output path (.bin or .csv);
 //!                             exp/scenario: JSON report directory
 //!   --seed <N>                RNG seed override
-//!   --shards <N>              serve/scenario: shard actor count
-//!   --mode <ordered|parallel> serve/scenario: replay scheduling
+//!   --shards <N>              serve/scenario/run: shard actor count
+//!   --mode <ordered|parallel> serve/scenario/run: replay scheduling
 //!   --scale <F>               scenario: phase-length multiplier (default 1)
+//!   --progress <N>            run/scenario/serve: stderr progress (single-leader:
+//!                             every N windows; sharded scenario: per phase;
+//!                             sharded trace replay: completion only — DESIGN §8.4)
+//!   --jsonl <file>            run/scenario/serve: stream the same events as JSONL
 //! ```
 //!
-//! (The offline build has no clap; flag parsing is in-tree.)
+//! (The offline build has no clap; flag parsing is in-tree. Every
+//! subcommand that executes a policy goes through [`akpc::run::RunSpec`].)
 
-use akpc::algo::{AdaptiveK, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
 use akpc::bench::experiments as exp;
 use akpc::bench::scenarios::scenario_suite;
 use akpc::bench::sweep::{shard_scaling, EngineChoice, PolicyChoice};
 use akpc::config::AkpcConfig;
+use akpc::run::{
+    generated_trace, parse_dataset, Driver, Fanout, JsonlSink, PolicyRegistry, ProgressPrinter,
+    RunSpec, Workload,
+};
 use akpc::scenario::{self, ScenarioSpec};
-use akpc::sim::{replay_sharded, ReplayMode};
+use akpc::sim::ReplayMode;
 use akpc::trace::{generator, io as trace_io, stats};
 
 /// Parsed command line.
@@ -71,20 +80,45 @@ impl Cli {
     fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
+
+    /// Observer stack from `--progress` / `--jsonl`.
+    fn observers(&self) -> anyhow::Result<Fanout> {
+        let mut fan = Fanout::new();
+        if let Some(n) = self.flag("progress") {
+            fan.push(Box::new(ProgressPrinter::new(n.parse()?)));
+        }
+        if let Some(path) = self.flag("jsonl") {
+            fan.push(Box::new(JsonlSink::create(path)?));
+        }
+        Ok(fan)
+    }
+
+    /// `--mode` parsed, with a per-command default.
+    fn replay_mode(&self, default: ReplayMode) -> anyhow::Result<ReplayMode> {
+        match self.flag("mode") {
+            None => Ok(default),
+            Some("ordered") => Ok(ReplayMode::Ordered),
+            Some("parallel") => Ok(ReplayMode::Parallel),
+            Some(m) => anyhow::bail!("unknown replay mode `{m}`"),
+        }
+    }
 }
 
 fn usage() {
     // The module doc is the manual; print its code block.
     println!(
         "akpc — Adaptive K-PackCache (cost-centric clique-packed CDN caching)\n\n\
-         usage: akpc <run|exp|scenario|gen-trace|trace-stats|serve|config> [flags]\n\n\
+         usage: akpc <run|exp|scenario|policy|gen-trace|trace-stats|serve|config> [flags]\n\n\
          flags: --config <toml> --requests <N> --engine <native|xla> --seed <N> --out <dir>\n\
-         run:       --policy <no-packing|packcache|dp-greedy|akpc|akpc-no-cs-no-acm|akpc-adaptive-k|opt>\n\
+         \u{20}      --progress <N> --jsonl <file>\n\
+         run:       --policy <name>   (see `akpc policy list`)\n\
          \u{20}          --dataset <netflix|spotify> | --trace <file>\n\
+         \u{20}          [--shards N [--mode <ordered|parallel>]]\n\
          exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
          \u{20}           fig9a|fig9b|adversarial|ablations|shards|all>\n\
          scenario:  <list|suite|name|spec.toml> [--policy P] [--scale F]\n\
          \u{20}          [--shards N [--mode <ordered|parallel>]] [--out <dir>]\n\
+         policy:    list   (name + description + capabilities)\n\
          gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
          serve:     --dataset <netflix|spotify> [--requests N] [--shards N]\n\
          \u{20}          [--mode <ordered|parallel>]"
@@ -117,46 +151,32 @@ fn main() -> anyhow::Result<()> {
         "xla" => EngineChoice::Xla,
         e => anyhow::bail!("unknown engine `{e}`"),
     };
-    let dataset = cli.flag("dataset").unwrap_or("netflix").to_string();
-    // Fallible generation path: GeneratorParams::validate runs before any
-    // sampling, so a bad --config fails with a message, not a panic.
-    let gen = |cfg: &AkpcConfig, n: usize| -> anyhow::Result<akpc::Trace> {
-        let (mut params, kind) = match dataset.as_str() {
-            "netflix" => (
-                generator::GeneratorParams::netflix(cfg.n_items, cfg.n_servers, n),
-                generator::TraceKind::Netflix,
-            ),
-            "spotify" => (
-                generator::GeneratorParams::spotify(cfg.n_items, cfg.n_servers, n),
-                generator::TraceKind::Spotify,
-            ),
-            d => anyhow::bail!("unknown dataset `{d}`"),
-        };
-        params.seed ^= cfg.seed;
-        generator::try_generate(&params, kind)
-    };
+    let kind = parse_dataset(cli.flag("dataset").unwrap_or("netflix"))?;
+    let registry = PolicyRegistry::builtin();
 
     match cli.cmd.as_str() {
         "run" => {
-            let trace = match cli.flag("trace") {
-                Some(p) if p.ends_with(".csv") => trace_io::read_csv(p)?,
-                Some(p) => trace_io::read_binary(p)?,
-                None => gen(&cfg, n_requests)?,
+            let workload = match cli.flag("trace") {
+                Some(p) => Workload::TraceFile(p.to_string()),
+                None => Workload::Generated { kind, n_requests },
             };
-            trace.validate()?;
-            let mut p: Box<dyn CachePolicy> = match cli.flag("policy").unwrap_or("akpc") {
-                "no-packing" => Box::new(NoPacking::new(&cfg)),
-                "packcache" => Box::new(PackCache2::new(&cfg)),
-                "dp-greedy" => Box::new(DpGreedy::new(&cfg)),
-                "akpc" => PolicyChoice::Akpc.build(&cfg, engine),
-                "akpc-no-cs-no-acm" => PolicyChoice::AkpcNoCsNoAcm.build(&cfg, engine),
-                "akpc-adaptive-k" => Box::new(AdaptiveK::new(&cfg)),
-                "opt" => Box::new(Opt::new(&cfg)),
-                p => anyhow::bail!("unknown policy `{p}`"),
-            };
-            let rep = akpc::sim::run(p.as_mut(), &trace, cfg.batch_size);
-            println!("{}", rep.row());
-            println!("{}", rep.to_json().to_string_pretty());
+            let n_shards: usize = cli
+                .flag("shards")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(0);
+            let mut spec = RunSpec::new()
+                .config(cfg.clone())
+                .engine(engine)
+                .policy(cli.flag("policy").unwrap_or("akpc"))
+                .workload(workload);
+            if n_shards > 0 {
+                spec = spec.sharded(n_shards, cli.replay_mode(ReplayMode::Ordered)?);
+            }
+            let mut obs = cli.observers()?;
+            let outcome = spec.run(&registry, &mut obs)?;
+            println!("{}", outcome.row());
+            println!("{}", outcome.to_json().to_string_pretty());
         }
         "exp" => {
             let id = cli
@@ -191,13 +211,21 @@ fn main() -> anyhow::Result<()> {
             if let Some(d) = &out_dir {
                 std::fs::create_dir_all(d)?;
             }
-            run_scenario_cmd(what, &cli, &cfg, engine, scale, out_dir.as_deref())?;
+            run_scenario_cmd(what, &cli, &registry, &cfg, engine, scale, out_dir.as_deref())?;
+        }
+        "policy" => {
+            let sub = cli.pos.first().map(String::as_str).unwrap_or("list");
+            anyhow::ensure!(sub == "list", "policy supports only `list` (got `{sub}`)");
+            println!("{:<20} {:<16} description", "name", "capabilities");
+            for e in registry.iter() {
+                println!("{:<20} {:<16} {}", e.name(), e.caps().summary(), e.description());
+            }
         }
         "gen-trace" => {
             let out = cli
                 .flag("out")
                 .ok_or_else(|| anyhow::anyhow!("gen-trace needs --out"))?;
-            let trace = gen(&cfg, n_requests)?;
+            let trace = generated_trace(kind, &cfg, n_requests)?;
             if out.ends_with(".csv") {
                 trace_io::write_csv(&trace, out)?;
             } else {
@@ -228,16 +256,22 @@ fn main() -> anyhow::Result<()> {
                 .map(|s| s.parse())
                 .transpose()?
                 .unwrap_or(1);
-            let mode = match cli.flag("mode").unwrap_or("parallel") {
-                "ordered" => ReplayMode::Ordered,
-                "parallel" => ReplayMode::Parallel,
-                m => anyhow::bail!("unknown replay mode `{m}`"),
-            };
-            let trace = gen(&cfg, n)?;
-            let rep = replay_sharded(&cfg, engine.to_engine(), &trace, n_shards, mode)?;
-            println!("{}", rep.metrics.summary());
-            println!("{}", rep.row());
-            println!("{}", rep.metrics.to_json().to_string_pretty());
+            let spec = RunSpec::new()
+                .config(cfg.clone())
+                .engine(engine)
+                .policy("akpc")
+                .workload(Workload::Generated {
+                    kind,
+                    n_requests: n,
+                })
+                .sharded(n_shards, cli.replay_mode(ReplayMode::Parallel)?);
+            let mut obs = cli.observers()?;
+            let outcome = spec.run(&registry, &mut obs)?;
+            if let Some(m) = &outcome.metrics {
+                println!("{}", m.summary());
+            }
+            println!("{}", outcome.row());
+            println!("{}", outcome.to_json().to_string_pretty());
         }
         "config" => {
             println!("{}", cfg.to_toml());
@@ -370,10 +404,13 @@ fn run_experiment(
     Ok(())
 }
 
-/// `akpc scenario <list|suite|name|spec.toml>` — the Scenario Lab CLI.
+/// `akpc scenario <list|suite|name|spec.toml>` — the Scenario Lab CLI,
+/// routed through [`RunSpec`] (driver/policy conflicts surface from the
+/// registry's capability flags, not hand-rolled checks).
 fn run_scenario_cmd(
     what: &str,
     cli: &Cli,
+    registry: &PolicyRegistry,
     cfg: &AkpcConfig,
     engine: EngineChoice,
     scale: f64,
@@ -424,67 +461,42 @@ fn run_scenario_cmd(
             "unknown scenario `{what}` (try `akpc scenario list`, or pass a spec.toml)"
         ),
     };
-    let mut spec = spec;
-    if let Some(s) = cli.flag("seed") {
-        spec.seed = s.parse()?;
-    }
-    let sc = spec.compile(scale)?;
-    println!(
-        "scenario `{}`: {} phases, {} requests, universe {} items × {} servers",
-        sc.name,
-        sc.phases.len(),
-        sc.total_requests(),
-        sc.n_items,
-        sc.n_servers
-    );
 
     let n_shards: usize = cli
         .flag("shards")
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(0);
-    let run = if n_shards > 0 {
-        // Sharded coordinator driver (AKPC, like `akpc serve`). Refuse a
-        // conflicting --policy rather than silently running AKPC.
-        if let Some(p) = cli.flag("policy") {
-            anyhow::ensure!(
-                p == "akpc",
-                "--shards runs the sharded AKPC coordinator; --policy {p} \
-                 is only available in the single-leader driver (drop --shards)"
-            );
+    let driver = if n_shards > 0 {
+        Driver::Sharded {
+            n_shards,
+            mode: cli.replay_mode(ReplayMode::Ordered)?,
         }
-        let mode = match cli.flag("mode").unwrap_or("ordered") {
-            "ordered" => ReplayMode::Ordered,
-            "parallel" => ReplayMode::Parallel,
-            m => anyhow::bail!("unknown replay mode `{m}`"),
-        };
-        scenario::run_phased_sharded(cfg, engine.to_engine(), &sc, n_shards, mode)?
     } else {
-        let cell_cfg = AkpcConfig {
-            n_items: sc.n_items,
-            n_servers: sc.n_servers,
-            ..cfg.clone()
-        };
-        let mut policy: Box<dyn CachePolicy> = match cli.flag("policy").unwrap_or("akpc") {
-            "no-packing" => Box::new(NoPacking::new(&cell_cfg)),
-            "packcache" => Box::new(PackCache2::new(&cell_cfg)),
-            "dp-greedy" => Box::new(DpGreedy::new(&cell_cfg)),
-            "akpc" => PolicyChoice::Akpc.build(&cell_cfg, engine),
-            "akpc-no-cs-no-acm" => PolicyChoice::AkpcNoCsNoAcm.build(&cell_cfg, engine),
-            "akpc-adaptive-k" => Box::new(AdaptiveK::new(&cell_cfg)),
-            "opt" => Box::new(Opt::new(&cell_cfg)),
-            p => anyhow::bail!("unknown policy `{p}`"),
-        };
-        scenario::run_phased(policy.as_mut(), &sc, cell_cfg.batch_size)
+        Driver::SingleLeader
     };
+    let mut rspec = RunSpec::new()
+        .config(cfg.clone())
+        .engine(engine)
+        .policy(cli.flag("policy").unwrap_or("akpc"))
+        .scenario(spec, scale)
+        .driver(driver);
+    if let Some(s) = cli.flag("seed") {
+        rspec = rspec.seed(s.parse()?);
+    }
 
-    print!("{}", run.render());
+    let prepared = rspec.validate(registry)?;
+    println!("{}", prepared.describe());
+    let mut obs = cli.observers()?;
+    let outcome = prepared.run(registry, &mut obs)?;
+
+    print!("{}", outcome.render());
     if let Some(d) = out_dir {
-        let path = format!("{d}/scenario_{}.json", sc.name);
-        std::fs::write(&path, run.to_json().to_string_pretty())?;
+        let path = format!("{d}/scenario_{}.json", outcome.workload);
+        std::fs::write(&path, outcome.to_json().to_string_pretty())?;
         println!("[wrote {path}]");
     } else {
-        println!("{}", run.to_json().to_string_pretty());
+        println!("{}", outcome.to_json().to_string_pretty());
     }
     Ok(())
 }

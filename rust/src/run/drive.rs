@@ -1,0 +1,333 @@
+//! The drivers behind the facade: single-leader trace, single-leader
+//! phased scenario, and sharded phased scenario loops, all instrumented
+//! with [`Observer`] hooks. The legacy entry points (`sim::run`,
+//! `scenario::run_phased`, `scenario::run_phased_sharded`) are thin
+//! shims over these functions with a [`NullObserver`](super::NullObserver),
+//! so facade and legacy runs are the *same code path* — the
+//! facade-equivalence test in `tests/run_api.rs` pins it.
+
+use std::time::Instant;
+
+use crate::algo::CachePolicy;
+use crate::cache::CostLedger;
+use crate::config::AkpcConfig;
+use crate::coordinator::{Coordinator, MetricsSnapshot, ServeRequest, TickMode};
+use crate::runtime::CrmEngine;
+use crate::scenario::driver::phase_cost;
+use crate::scenario::{CompiledScenario, ScenarioRun};
+use crate::sim::{ReplayMode, SimReport};
+use crate::trace::model::Trace;
+
+use super::observe::{Observer, PhaseEvent, WindowEvent};
+
+/// Drive `policy` over `trace` with clique-generation windows of
+/// `batch_size` requests, reporting each closed window to `obs`.
+///
+/// Timeline semantics (paper Fig. 3): requests of batch *i* are served
+/// under the packing computed from batches *< i*; `end_batch` runs after
+/// the batch is fully served; offline policies receive the whole trace
+/// via `prepare` first.
+pub fn drive_trace(
+    policy: &mut dyn CachePolicy,
+    trace: &Trace,
+    batch_size: usize,
+    obs: &mut dyn Observer,
+) -> SimReport {
+    let wall = Instant::now();
+    policy.prepare(trace);
+    let mut window = 0u64;
+    let mut requests_done = 0usize;
+    for batch in trace.batches(batch_size) {
+        for r in batch {
+            policy.handle_request(r);
+        }
+        policy.end_batch(batch);
+        window += 1;
+        requests_done += batch.len();
+        obs.on_window(&WindowEvent {
+            window,
+            requests_done,
+            ledger: policy.ledger(),
+        });
+    }
+    SimReport::collect(policy, trace, wall.elapsed().as_secs_f64())
+}
+
+/// Drive `policy` through a compiled scenario with the single-leader
+/// loop, snapshotting the ledger at each phase boundary. Windows never
+/// span phase boundaries (DESIGN.md §7.3).
+pub fn drive_phased(
+    policy: &mut dyn CachePolicy,
+    sc: &CompiledScenario,
+    batch_size: usize,
+    obs: &mut dyn Observer,
+) -> ScenarioRun {
+    let wall = Instant::now();
+    // Offline policies (OPT, DP_Greedy) see the whole timeline up front.
+    policy.prepare(sc.concat_trace());
+    let mut prev = CostLedger::default();
+    let mut phases = Vec::with_capacity(sc.phases.len());
+    let mut window = 0u64;
+    let mut requests_done = 0usize;
+    for (i, ph) in sc.phases.iter().enumerate() {
+        for batch in ph.trace.batches(batch_size) {
+            for r in batch {
+                policy.handle_request(r);
+            }
+            // The trailing chunk may be partial: windows end at phase
+            // boundaries by construction.
+            policy.end_batch(batch);
+            window += 1;
+            requests_done += batch.len();
+            obs.on_window(&WindowEvent {
+                window,
+                requests_done,
+                ledger: policy.ledger(),
+            });
+        }
+        let cumulative = policy.ledger().clone();
+        let pc = phase_cost(sc, i, &cumulative, &prev);
+        obs.on_phase(&PhaseEvent {
+            index: i,
+            phase: &pc,
+        });
+        phases.push(pc);
+        prev = cumulative;
+    }
+    ScenarioRun {
+        scenario: sc.name.clone(),
+        policy: policy.name(),
+        n_shards: 0,
+        phases,
+        total: policy.ledger().clone(),
+        wall_secs: wall.elapsed().as_secs_f64(),
+    }
+}
+
+/// Drive a compiled scenario through the sharded online coordinator
+/// (AKPC), one coordinator across all phases so cache/ledger state
+/// carries over. `Ordered` replays the global time order from one thread
+/// (deterministic, ledger-equivalent to [`drive_phased`] with AKPC);
+/// `Parallel` replays each shard's subsequence concurrently within every
+/// phase.
+///
+/// `cfg` must already be the *effective* cell config — its
+/// n_items/n_servers matching the scenario universe
+/// ([`cell_config`](super::cell_config) / `RunSpec::validate` derive
+/// it). Returns the run plus the coordinator's shutdown metrics
+/// (per-shard ledgers, latency, clique histogram).
+pub fn drive_phased_sharded(
+    cfg: &AkpcConfig,
+    engine: CrmEngine,
+    sc: &CompiledScenario,
+    n_shards: usize,
+    mode: ReplayMode,
+    obs: &mut dyn Observer,
+) -> anyhow::Result<(ScenarioRun, MetricsSnapshot)> {
+    anyhow::ensure!(
+        cfg.n_items == sc.n_items && cfg.n_servers == sc.n_servers,
+        "drive_phased_sharded needs the effective cell config \
+         ({}×{} given, scenario universe is {}×{}; derive it with \
+         run::cell_config or RunSpec::validate)",
+        cfg.n_items,
+        cfg.n_servers,
+        sc.n_items,
+        sc.n_servers
+    );
+    let tick = match mode {
+        ReplayMode::Ordered => TickMode::Sync,
+        ReplayMode::Parallel => TickMode::Async,
+    };
+    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick);
+    let n_shards = coord.n_shards();
+    let wall = Instant::now();
+
+    let mut prev = CostLedger::default();
+    let mut phases = Vec::with_capacity(sc.phases.len());
+    for (i, ph) in sc.phases.iter().enumerate() {
+        match mode {
+            ReplayMode::Ordered => {
+                for r in &ph.trace.requests {
+                    coord.serve(ServeRequest {
+                        items: r.items.clone(),
+                        server: r.server,
+                        time: Some(r.time),
+                    })?;
+                }
+            }
+            ReplayMode::Parallel => {
+                let mut handles = Vec::with_capacity(n_shards);
+                for shard in 0..n_shards {
+                    let client = coord.client();
+                    let requests: Vec<_> = ph
+                        .trace
+                        .requests
+                        .iter()
+                        .filter(|r| r.server as usize % n_shards == shard)
+                        .cloned()
+                        .collect();
+                    handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+                        for r in requests {
+                            client.serve(ServeRequest {
+                                items: r.items,
+                                server: r.server,
+                                time: Some(r.time),
+                            })?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("scenario replay client panicked"))??;
+                }
+            }
+        }
+        // Windows never span phases (DESIGN.md §7.3).
+        coord.flush_window()?;
+        let m = coord.metrics()?;
+        let pc = phase_cost(sc, i, &m.ledger, &prev);
+        // Streamed as the phase completes — before the shutdown quiesce,
+        // so the final phase event excludes the residual retention rent
+        // the outcome's last PhaseCost includes (observe.rs module docs).
+        obs.on_phase(&PhaseEvent {
+            index: i,
+            phase: &pc,
+        });
+        phases.push(pc);
+        prev = m.ledger;
+    }
+
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let metrics = coord.shutdown();
+    // The shutdown quiesce sweeps retention rent accrued after the last
+    // request (DESIGN.md §2.3); fold the residual into the final phase so
+    // the per-phase ledgers still sum to the run total.
+    if let Some(last) = phases.last_mut() {
+        last.ledger.merge(&metrics.ledger.delta_from(&prev));
+    }
+    let run = ScenarioRun {
+        scenario: sc.name.clone(),
+        policy: metrics.policy.clone(),
+        n_shards,
+        phases,
+        total: metrics.ledger.clone(),
+        wall_secs,
+    };
+    Ok((run, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Akpc;
+    use crate::run::observe::NullObserver;
+    use crate::scenario::ScenarioSpec;
+    use crate::trace::generator::netflix_like;
+
+    struct Counting {
+        windows: u64,
+        phases: usize,
+        last_requests: usize,
+    }
+
+    impl Observer for Counting {
+        fn on_window(&mut self, ev: &WindowEvent<'_>) {
+            self.windows += 1;
+            self.last_requests = ev.requests_done;
+            assert_eq!(self.windows, ev.window, "windows arrive in order");
+        }
+
+        fn on_phase(&mut self, ev: &PhaseEvent<'_>) {
+            assert_eq!(self.phases, ev.index);
+            self.phases += 1;
+        }
+    }
+
+    #[test]
+    fn drive_trace_reports_every_window() {
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        };
+        let trace = netflix_like(30, 12, 1_000, 9);
+        let mut obs = Counting {
+            windows: 0,
+            phases: 0,
+            last_requests: 0,
+        };
+        let rep = drive_trace(&mut Akpc::new(&cfg), &trace, cfg.batch_size, &mut obs);
+        assert_eq!(obs.windows, 5, "1000 requests / batch 200");
+        assert_eq!(obs.last_requests, 1_000);
+        assert_eq!(rep.ledger.requests, 1_000);
+    }
+
+    #[test]
+    fn drive_phased_reports_phases_and_windows() {
+        let sc = ScenarioSpec::from_toml_str(
+            r#"
+            name = "obs"
+            seed = 3
+            n_items = 30
+            n_servers = 12
+
+            [phase]
+            generator = "netflix"
+            requests = 500
+
+            [phase]
+            generator = "netflix"
+            requests = 300
+            "#,
+        )
+        .unwrap()
+        .compile(1.0)
+        .unwrap();
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            ..Default::default()
+        };
+        let mut obs = Counting {
+            windows: 0,
+            phases: 0,
+            last_requests: 0,
+        };
+        let run = drive_phased(&mut Akpc::new(&cfg), &sc, cfg.batch_size, &mut obs);
+        // 500 -> 3 windows (200/200/100), 300 -> 2 windows (200/100).
+        assert_eq!(obs.windows, 5);
+        assert_eq!(obs.phases, 2);
+        assert_eq!(run.phases.len(), 2);
+    }
+
+    #[test]
+    fn drive_phased_sharded_rejects_wrong_cell_config() {
+        let sc = ScenarioSpec::from_toml_str(
+            r#"
+            name = "cfg"
+            n_items = 30
+            n_servers = 12
+            [phase]
+            generator = "netflix"
+            requests = 300
+            "#,
+        )
+        .unwrap()
+        .compile(1.0)
+        .unwrap();
+        // Default cfg is 60×600 — not the scenario universe.
+        let err = drive_phased_sharded(
+            &AkpcConfig::default(),
+            CrmEngine::Native,
+            &sc,
+            2,
+            ReplayMode::Ordered,
+            &mut NullObserver,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("effective cell config"), "{err}");
+    }
+}

@@ -1,0 +1,58 @@
+//! The unified public Run API (DESIGN.md §8) — one facade over every way
+//! of executing a policy against a workload:
+//!
+//! * [`registry`] — [`PolicyRegistry`]: the single source of truth
+//!   mapping policy names ↔ [`PolicyChoice`] ↔ factory closures, with
+//!   capability flags (`supports_sharded`, `needs_offline_trace`) and
+//!   `register()` for downstream extension;
+//! * [`spec`] — [`RunSpec`]: workload (generated | trace file | compiled
+//!   scenario | external CSV) × driver (single-leader |
+//!   sharded{n_shards, mode}) × policy-by-name × config overrides, with
+//!   `validate()` centralizing the effective-config derivation;
+//! * [`outcome`] — [`RunOutcome`]: the one report type (total/transfer/
+//!   memory cost, per-phase deltas, per-shard ledgers, wall time) with
+//!   shared `row()`/`to_json()`;
+//! * [`observe`] — the [`Observer`] trait (`on_window`, `on_phase`,
+//!   `on_done`) with [`NullObserver`], a [`ProgressPrinter`], and a
+//!   [`JsonlSink`] — the hook live serving and future dashboards attach
+//!   to;
+//! * [`drive`] — the instrumented driver loops the legacy entry points
+//!   (`sim::run`, `scenario::run_phased`, `scenario::run_phased_sharded`)
+//!   now shim onto.
+//!
+//! ```
+//! use akpc::config::AkpcConfig;
+//! use akpc::run::{PolicyRegistry, RunSpec, Workload};
+//! use akpc::trace::generator::TraceKind;
+//!
+//! let registry = PolicyRegistry::builtin();
+//! let cfg = AkpcConfig { n_items: 30, n_servers: 12, ..Default::default() };
+//! let spec = RunSpec::new()
+//!     .config(cfg)
+//!     .workload(Workload::Generated { kind: TraceKind::Netflix, n_requests: 1_000 })
+//!     .policy("packcache");
+//! let outcome = spec.execute(&registry).unwrap();
+//! println!("{}", outcome.row());
+//! assert_eq!(outcome.n_shards, 0);
+//! ```
+
+pub mod drive;
+pub mod observe;
+pub mod outcome;
+pub mod registry;
+pub mod spec;
+
+pub use drive::{drive_phased, drive_phased_sharded, drive_trace};
+pub use observe::{
+    Fanout, JsonlSink, NullObserver, Observer, PhaseEvent, ProgressPrinter, WindowEvent,
+};
+pub use outcome::RunOutcome;
+pub use registry::{PolicyCaps, PolicyEntry, PolicyFactory, PolicyRegistry};
+pub use spec::{
+    cell_config, generated_trace, parse_dataset, Driver, PreparedRun, RunSpec, Workload,
+    WorkloadData,
+};
+
+// The engine/policy selectors live with the sweep machinery; re-export
+// them so facade users need only `akpc::run::*`.
+pub use crate::bench::sweep::{EngineChoice, PolicyChoice};

@@ -1,0 +1,258 @@
+//! Streaming run observers: hooks the drivers invoke while a run is in
+//! flight — the attachment point for live progress, metrics sinks, and
+//! (later) dashboards.
+//!
+//! Delivery guarantees by driver:
+//!
+//! * single-leader (trace or scenario): [`Observer::on_window`] after
+//!   every clique-generation window, [`Observer::on_phase`] at each
+//!   scenario phase boundary, [`Observer::on_done`] once;
+//! * sharded scenario: `on_phase` + `on_done` (windows tick inside the
+//!   coordinator's background worker). The final phase event is emitted
+//!   *before* the shutdown quiesce, so its ledger excludes the residual
+//!   retention rent that the outcome's last [`PhaseCost`] includes;
+//! * sharded trace replay: `on_done` only.
+
+use std::io::Write;
+
+use crate::cache::CostLedger;
+use crate::scenario::PhaseCost;
+use crate::util::Json;
+
+use super::outcome::RunOutcome;
+
+/// One clique-generation window closed.
+#[derive(Debug)]
+pub struct WindowEvent<'a> {
+    /// 1-based window index.
+    pub window: u64,
+    /// Requests served so far (cumulative).
+    pub requests_done: usize,
+    /// Cumulative ledger after the window.
+    pub ledger: &'a CostLedger,
+}
+
+/// One scenario phase completed.
+#[derive(Debug)]
+pub struct PhaseEvent<'a> {
+    /// 0-based phase index.
+    pub index: usize,
+    /// The phase's cost delta (not cumulative).
+    pub phase: &'a PhaseCost,
+}
+
+/// Streaming run observer. All hooks default to no-ops so implementors
+/// override only what they need.
+pub trait Observer {
+    fn on_window(&mut self, _ev: &WindowEvent<'_>) {}
+    fn on_phase(&mut self, _ev: &PhaseEvent<'_>) {}
+    fn on_done(&mut self, _outcome: &RunOutcome) {}
+}
+
+/// The do-nothing observer the legacy shims pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// Prints a progress line to stderr every `every` windows (and at every
+/// phase boundary / completion).
+#[derive(Debug)]
+pub struct ProgressPrinter {
+    every: u64,
+}
+
+impl ProgressPrinter {
+    pub fn new(every: u64) -> Self {
+        Self {
+            every: every.max(1),
+        }
+    }
+}
+
+impl Observer for ProgressPrinter {
+    fn on_window(&mut self, ev: &WindowEvent<'_>) {
+        if ev.window % self.every == 0 {
+            eprintln!(
+                "[window {:>6}] {:>9} requests  total={:>12.1}  hit={:>5.1}%",
+                ev.window,
+                ev.requests_done,
+                ev.ledger.total(),
+                ev.ledger.hit_rate() * 100.0,
+            );
+        }
+    }
+
+    fn on_phase(&mut self, ev: &PhaseEvent<'_>) {
+        eprintln!(
+            "[phase {:>2} `{}`] {} requests  total={:.1}",
+            ev.index,
+            ev.phase.label,
+            ev.phase.n_requests,
+            ev.phase.ledger.total(),
+        );
+    }
+
+    fn on_done(&mut self, outcome: &RunOutcome) {
+        eprintln!("[done] {}", outcome.row());
+    }
+}
+
+/// Writes one JSON object per event to `out` — the JSONL metrics sink
+/// (plot pipelines tail it; a dashboard would stream it). Write errors
+/// are swallowed (the sink is diagnostics, never the run's critical
+/// path); callers that need durability should `flush`/inspect the inner
+/// writer via [`JsonlSink::into_inner`].
+#[derive(Debug)]
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl JsonlSink<std::io::BufWriter<std::fs::File>> {
+    /// Create (truncate) a JSONL file sink.
+    pub fn create(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        Ok(Self::new(std::io::BufWriter::new(std::fs::File::create(
+            path.as_ref(),
+        )?)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(out: W) -> Self {
+        Self { out }
+    }
+
+    /// Flush and hand back the inner writer (tests inspect buffers).
+    pub fn into_inner(mut self) -> W {
+        let _ = self.out.flush();
+        self.out
+    }
+
+    fn emit(&mut self, line: Json) {
+        let _ = writeln!(self.out, "{}", line.to_string());
+    }
+}
+
+impl<W: Write> Observer for JsonlSink<W> {
+    fn on_window(&mut self, ev: &WindowEvent<'_>) {
+        self.emit(Json::obj(vec![
+            ("event", Json::Str("window".to_string())),
+            ("window", Json::Num(ev.window as f64)),
+            ("requests_done", Json::Num(ev.requests_done as f64)),
+            ("ledger", ev.ledger.to_json()),
+        ]));
+    }
+
+    fn on_phase(&mut self, ev: &PhaseEvent<'_>) {
+        self.emit(Json::obj(vec![
+            ("event", Json::Str("phase".to_string())),
+            ("index", Json::Num(ev.index as f64)),
+            ("phase", ev.phase.to_json()),
+        ]));
+    }
+
+    fn on_done(&mut self, outcome: &RunOutcome) {
+        self.emit(Json::obj(vec![
+            ("event", Json::Str("done".to_string())),
+            ("outcome", outcome.to_json()),
+        ]));
+        let _ = self.out.flush();
+    }
+}
+
+/// Broadcasts every event to a list of observers (the CLI composes
+/// `--progress` and `--jsonl` with it).
+#[derive(Default)]
+pub struct Fanout {
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl Fanout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, obs: Box<dyn Observer>) {
+        self.observers.push(obs);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.observers.is_empty()
+    }
+}
+
+impl Observer for Fanout {
+    fn on_window(&mut self, ev: &WindowEvent<'_>) {
+        for o in &mut self.observers {
+            o.on_window(ev);
+        }
+    }
+
+    fn on_phase(&mut self, ev: &PhaseEvent<'_>) {
+        for o in &mut self.observers {
+            o.on_phase(ev);
+        }
+    }
+
+    fn on_done(&mut self, outcome: &RunOutcome) {
+        for o in &mut self.observers {
+            o.on_done(outcome);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_sink_emits_parseable_lines() {
+        let mut sink = JsonlSink::new(Vec::new());
+        let ledger = CostLedger::default();
+        sink.on_window(&WindowEvent {
+            window: 1,
+            requests_done: 200,
+            ledger: &ledger,
+        });
+        sink.on_phase(&PhaseEvent {
+            index: 0,
+            phase: &PhaseCost {
+                label: "warm".to_string(),
+                n_requests: 200,
+                t_start: 0.0,
+                t_end: 1.0,
+                ledger: ledger.clone(),
+            },
+        });
+        let buf = sink.into_inner();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = crate::util::json::parse(line).unwrap();
+            assert!(v.get("event").is_some(), "{line}");
+        }
+    }
+
+    #[test]
+    fn fanout_broadcasts() {
+        struct Counter(std::rc::Rc<std::cell::Cell<u64>>);
+        impl Observer for Counter {
+            fn on_window(&mut self, _ev: &WindowEvent<'_>) {
+                self.0.set(self.0.get() + 1);
+            }
+        }
+        let n = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut fan = Fanout::new();
+        assert!(fan.is_empty());
+        fan.push(Box::new(Counter(n.clone())));
+        fan.push(Box::new(Counter(n.clone())));
+        let ledger = CostLedger::default();
+        fan.on_window(&WindowEvent {
+            window: 1,
+            requests_done: 10,
+            ledger: &ledger,
+        });
+        assert_eq!(n.get(), 2);
+    }
+}

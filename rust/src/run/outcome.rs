@@ -1,0 +1,242 @@
+//! [`RunOutcome`] — the one report type every driver produces, unifying
+//! the legacy `SimReport` / `ShardedReport` / `ScenarioRun` triple:
+//! total cost breakdown, per-phase deltas, per-shard ledgers (via the
+//! embedded metrics snapshot), clique histogram, wall time.
+
+use crate::cache::CostLedger;
+use crate::coordinator::MetricsSnapshot;
+use crate::scenario::{PhaseCost, ScenarioRun};
+use crate::sim::{ReplayMode, ShardedReport, SimReport};
+use crate::util::{Histogram, Json};
+
+/// Result of one facade run, whatever the driver.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    /// Policy display name (e.g. "AKPC w/o ACM").
+    pub policy: String,
+    /// Workload identity: trace name or scenario name.
+    pub workload: String,
+    /// Shard actors used; 0 = the in-process single-leader driver.
+    pub n_shards: usize,
+    /// Replay scheduling of a sharded run (None for single-leader).
+    pub mode: Option<ReplayMode>,
+    /// Requests served.
+    pub n_requests: usize,
+    /// Whole-run cost ledger.
+    pub ledger: CostLedger,
+    /// Per-phase ledger deltas (empty for plain trace workloads). They
+    /// sum to `ledger`.
+    pub phases: Vec<PhaseCost>,
+    /// Clique-size distribution; None when the policy does not track
+    /// packing (NoPacking, OPT) or the driver discards it.
+    pub clique_hist: Option<Histogram>,
+    /// Full coordinator metrics (per-shard ledgers, latency quantiles);
+    /// sharded drivers only.
+    pub metrics: Option<MetricsSnapshot>,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+}
+
+impl RunOutcome {
+    /// Total cost C = C_T + C_P.
+    pub fn total(&self) -> f64 {
+        self.ledger.total()
+    }
+
+    /// Per-shard ledgers (empty for single-leader runs).
+    pub fn shard_ledgers(&self) -> Vec<CostLedger> {
+        self.metrics
+            .as_ref()
+            .map(|m| m.per_shard.iter().map(|s| s.ledger.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    fn driver_label(&self) -> String {
+        match (self.n_shards, self.mode) {
+            (0, _) => "single-leader".to_string(),
+            (n, Some(m)) => format!("{n}-shard/{}", format!("{m:?}").to_lowercase()),
+            (n, None) => format!("{n}-shard"),
+        }
+    }
+
+    /// One human-readable summary row (shared across all drivers).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<24} {:<18} total={:>12.1}  C_T={:>12.1}  C_P={:>12.1}  hit={:>5.1}%  eff={:>5.1}%  {:.2}s",
+            self.policy,
+            self.driver_label(),
+            self.total(),
+            self.ledger.c_t,
+            self.ledger.c_p,
+            self.ledger.hit_rate() * 100.0,
+            self.ledger.delivery_efficiency() * 100.0,
+            self.wall_secs,
+        )
+    }
+
+    /// Multi-line report: the summary row plus any per-phase breakdown.
+    pub fn render(&self) -> String {
+        let mut out = format!("workload={}\n{}\n", self.workload, self.row());
+        for p in &self.phases {
+            out.push_str(&p.row());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON export (one schema for every driver).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.clone())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("driver", Json::Str(self.driver_label())),
+            ("n_shards", Json::Num(self.n_shards as f64)),
+            ("n_requests", Json::Num(self.n_requests as f64)),
+            ("ledger", self.ledger.to_json()),
+            (
+                "phases",
+                Json::Arr(self.phases.iter().map(PhaseCost::to_json).collect()),
+            ),
+            (
+                "clique_hist",
+                match &self.clique_hist {
+                    Some(h) => h.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "metrics",
+                match &self.metrics {
+                    Some(m) => m.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("requests_per_sec", Json::Num(self.requests_per_sec)),
+        ])
+    }
+
+    /// From a single-leader trace run.
+    pub fn from_sim(rep: SimReport) -> Self {
+        Self {
+            policy: rep.name,
+            workload: rep.trace,
+            n_shards: 0,
+            mode: None,
+            n_requests: rep.n_requests,
+            ledger: rep.ledger,
+            phases: Vec::new(),
+            clique_hist: rep.clique_hist,
+            metrics: None,
+            wall_secs: rep.wall_secs,
+            requests_per_sec: rep.requests_per_sec,
+        }
+    }
+
+    /// From a sharded trace replay.
+    pub fn from_sharded(rep: ShardedReport, workload: String) -> Self {
+        Self {
+            policy: rep.metrics.policy.clone(),
+            workload,
+            n_shards: rep.n_shards,
+            mode: Some(rep.mode),
+            n_requests: rep.metrics.served as usize,
+            ledger: rep.metrics.ledger.clone(),
+            phases: Vec::new(),
+            clique_hist: Some(rep.metrics.clique_hist.clone()),
+            metrics: Some(rep.metrics),
+            wall_secs: rep.wall_secs,
+            requests_per_sec: rep.requests_per_sec,
+        }
+    }
+
+    /// From a single-leader phased scenario run (the driver captures the
+    /// policy's histogram separately since `ScenarioRun` predates it).
+    pub fn from_scenario(run: ScenarioRun, clique_hist: Option<Histogram>) -> Self {
+        let requests_per_sec = run.total.requests as f64 / run.wall_secs.max(1e-12);
+        Self {
+            policy: run.policy,
+            workload: run.scenario,
+            n_shards: run.n_shards,
+            mode: None,
+            n_requests: run.total.requests as usize,
+            ledger: run.total,
+            phases: run.phases,
+            clique_hist,
+            metrics: None,
+            wall_secs: run.wall_secs,
+            requests_per_sec,
+        }
+    }
+
+    /// From a sharded phased scenario run plus its shutdown metrics.
+    pub fn from_scenario_sharded(
+        run: ScenarioRun,
+        mode: ReplayMode,
+        metrics: MetricsSnapshot,
+    ) -> Self {
+        let requests_per_sec = run.total.requests as f64 / run.wall_secs.max(1e-12);
+        Self {
+            policy: run.policy,
+            workload: run.scenario,
+            n_shards: run.n_shards,
+            mode: Some(mode),
+            n_requests: run.total.requests as usize,
+            ledger: run.total,
+            phases: run.phases,
+            clique_hist: Some(metrics.clique_hist.clone()),
+            metrics: Some(metrics),
+            wall_secs: run.wall_secs,
+            requests_per_sec,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> RunOutcome {
+        let ledger = CostLedger {
+            c_t: 10.0,
+            c_p: 5.0,
+            requests: 100,
+            ..Default::default()
+        };
+        RunOutcome {
+            policy: "AKPC".to_string(),
+            workload: "unit".to_string(),
+            n_shards: 0,
+            mode: None,
+            n_requests: 100,
+            ledger,
+            phases: Vec::new(),
+            clique_hist: None,
+            metrics: None,
+            wall_secs: 0.5,
+            requests_per_sec: 200.0,
+        }
+    }
+
+    #[test]
+    fn row_and_render_include_driver() {
+        let o = outcome();
+        assert!(o.row().contains("single-leader"));
+        assert!(o.render().contains("workload=unit"));
+        let mut sharded = outcome();
+        sharded.n_shards = 4;
+        sharded.mode = Some(ReplayMode::Ordered);
+        assert!(sharded.row().contains("4-shard/ordered"));
+    }
+
+    #[test]
+    fn json_round_trips_with_null_histogram() {
+        let o = outcome();
+        let text = o.to_json().to_string();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("clique_hist"), Some(&Json::Null));
+        assert_eq!(v.get("policy").and_then(Json::as_str), Some("AKPC"));
+        assert!((o.total() - 15.0).abs() < 1e-12);
+        assert!(o.shard_ledgers().is_empty());
+    }
+}

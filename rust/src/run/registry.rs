@@ -1,0 +1,369 @@
+//! The policy registry — the single source of truth mapping policy names
+//! ↔ [`PolicyChoice`] ↔ factory closures.
+//!
+//! Every driver (CLI subcommands, the experiment sweeps, the scenario
+//! suite, the [`RunSpec`](super::RunSpec) facade) constructs policies
+//! here; adding a policy means adding **one** entry instead of editing
+//! four `match` blocks. Entries carry capability flags so driver/policy
+//! conflicts (e.g. `--shards` with an offline baseline) become a lookup,
+//! not a hand-rolled `ensure!` at each call site.
+
+use crate::algo::{AdaptiveK, Akpc, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
+use crate::bench::sweep::{EngineChoice, PolicyChoice};
+use crate::config::AkpcConfig;
+
+/// What a policy can do — consulted by [`RunSpec::validate`]
+/// (super::RunSpec::validate) before any work starts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PolicyCaps {
+    /// The sharded online coordinator can run this policy (today: AKPC
+    /// only — the coordinator *is* the AKPC serving path, DESIGN.md §2.3).
+    pub supports_sharded: bool,
+    /// `prepare` must see the full trace up front (clairvoyant/offline
+    /// policies; meaningless in a live serving deployment).
+    pub needs_offline_trace: bool,
+}
+
+impl PolicyCaps {
+    /// Compact rendering for `akpc policy list`.
+    pub fn summary(&self) -> String {
+        let mut parts = vec![if self.needs_offline_trace {
+            "offline-trace"
+        } else {
+            "online"
+        }];
+        if self.supports_sharded {
+            parts.push("sharded");
+        }
+        parts.join("+")
+    }
+}
+
+/// Factory closure: config × engine → boxed policy.
+pub type PolicyFactory =
+    Box<dyn Fn(&AkpcConfig, EngineChoice) -> Box<dyn CachePolicy> + Send + Sync>;
+
+/// One registered policy.
+pub struct PolicyEntry {
+    name: String,
+    description: String,
+    caps: PolicyCaps,
+    choice: Option<PolicyChoice>,
+    factory: PolicyFactory,
+}
+
+impl PolicyEntry {
+    /// A downstream (non-builtin) entry; it has no [`PolicyChoice`]
+    /// mapping, so experiment sweeps won't pick it up, but `RunSpec`,
+    /// `build`, and the CLI resolve it by name like any builtin.
+    pub fn new(
+        name: impl Into<String>,
+        description: impl Into<String>,
+        caps: PolicyCaps,
+        factory: PolicyFactory,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            description: description.into(),
+            caps,
+            choice: None,
+            factory,
+        }
+    }
+
+    fn builtin(
+        choice: PolicyChoice,
+        description: &str,
+        caps: PolicyCaps,
+        factory: PolicyFactory,
+    ) -> Self {
+        Self {
+            name: choice.cli_name().to_string(),
+            description: description.to_string(),
+            caps,
+            choice: Some(choice),
+            factory,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn description(&self) -> &str {
+        &self.description
+    }
+
+    pub fn caps(&self) -> &PolicyCaps {
+        &self.caps
+    }
+
+    /// The sweep-enum identity of a builtin entry (None for registered
+    /// extensions).
+    pub fn choice(&self) -> Option<PolicyChoice> {
+        self.choice
+    }
+
+    /// Instantiate the policy.
+    pub fn build(&self, cfg: &AkpcConfig, engine: EngineChoice) -> Box<dyn CachePolicy> {
+        (self.factory)(cfg, engine)
+    }
+}
+
+impl std::fmt::Debug for PolicyEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PolicyEntry")
+            .field("name", &self.name)
+            .field("caps", &self.caps)
+            .field("choice", &self.choice)
+            .finish()
+    }
+}
+
+/// Name-keyed policy store. [`PolicyRegistry::builtin`] covers the
+/// paper's full evaluation set; `register` extends it downstream.
+pub struct PolicyRegistry {
+    entries: Vec<PolicyEntry>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry (downstream embedders that want full control).
+    pub fn empty() -> Self {
+        Self {
+            entries: Vec::new(),
+        }
+    }
+
+    /// The built-in set: every policy the paper evaluates plus the
+    /// adaptive-ω controller. Names are the CLI names
+    /// ([`PolicyChoice::cli_name`] keeps the bijection in one place).
+    pub fn builtin() -> Self {
+        let online = PolicyCaps::default();
+        let offline = PolicyCaps {
+            needs_offline_trace: true,
+            ..PolicyCaps::default()
+        };
+        let mut reg = Self::empty();
+        let entries = vec![
+            PolicyEntry::builtin(
+                PolicyChoice::NoPacking,
+                "independent per-item caching, online (Wang et al.)",
+                online,
+                Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                    Box::new(NoPacking::new(cfg))
+                }),
+            ),
+            PolicyEntry::builtin(
+                PolicyChoice::PackCache,
+                "pairwise packing, online (PackCache, Wu et al.)",
+                online,
+                Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                    Box::new(PackCache2::new(cfg))
+                }),
+            ),
+            PolicyEntry::builtin(
+                PolicyChoice::DpGreedy,
+                "pairwise packing from the full offline trace (Huang et al.)",
+                offline,
+                Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                    Box::new(DpGreedy::new(cfg))
+                }),
+            ),
+            PolicyEntry::builtin(
+                PolicyChoice::Akpc,
+                "Adaptive K-PackCache (proposed): K-cliques with CS + ACM",
+                PolicyCaps {
+                    supports_sharded: true,
+                    ..PolicyCaps::default()
+                },
+                Box::new(|cfg: &AkpcConfig, engine: EngineChoice| -> Box<dyn CachePolicy> {
+                    Box::new(Akpc::with_builder(
+                        cfg,
+                        engine.to_engine().builder(&cfg.artifacts_dir),
+                    ))
+                }),
+            ),
+            PolicyEntry::builtin(
+                PolicyChoice::AkpcNoAcm,
+                "AKPC ablation without approximate clique merging (Fig. 9a)",
+                online,
+                Box::new(|cfg: &AkpcConfig, engine: EngineChoice| -> Box<dyn CachePolicy> {
+                    Box::new(Akpc::with_builder(
+                        &cfg.without_acm(),
+                        engine.to_engine().builder(&cfg.artifacts_dir),
+                    ))
+                }),
+            ),
+            PolicyEntry::builtin(
+                PolicyChoice::AkpcNoCsNoAcm,
+                "AKPC ablation without clique splitting or merging (Fig. 5/7/9)",
+                online,
+                Box::new(|cfg: &AkpcConfig, engine: EngineChoice| -> Box<dyn CachePolicy> {
+                    Box::new(Akpc::with_builder(
+                        &cfg.without_cs_acm(),
+                        engine.to_engine().builder(&cfg.artifacts_dir),
+                    ))
+                }),
+            ),
+            PolicyEntry::new(
+                "akpc-adaptive-k",
+                "AKPC with the adaptive-ω epoch controller (future-work item i)",
+                online,
+                Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                    Box::new(AdaptiveK::new(cfg))
+                }),
+            ),
+            PolicyEntry::builtin(
+                PolicyChoice::Opt,
+                "clairvoyant per-request optimal packing (lower bound)",
+                offline,
+                Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                    Box::new(Opt::new(cfg))
+                }),
+            ),
+        ];
+        for e in entries {
+            reg.register(e).expect("builtin names are unique");
+        }
+        reg
+    }
+
+    /// Add a policy; rejects duplicate names.
+    pub fn register(&mut self, entry: PolicyEntry) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.get(entry.name()).is_none(),
+            "policy `{}` is already registered",
+            entry.name()
+        );
+        self.entries.push(entry);
+        Ok(())
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+
+    /// All entries (for `akpc policy list`).
+    pub fn iter(&self) -> impl Iterator<Item = &PolicyEntry> {
+        self.entries.iter()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PolicyEntry> {
+        self.entries.iter().find(|e| e.name() == name)
+    }
+
+    /// Lookup that enumerates the valid names on failure — the CLI's
+    /// unknown-policy error.
+    pub fn resolve(&self, name: &str) -> anyhow::Result<&PolicyEntry> {
+        self.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown policy `{name}` (valid: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Build a policy by name.
+    pub fn build(
+        &self,
+        name: &str,
+        cfg: &AkpcConfig,
+        engine: EngineChoice,
+    ) -> anyhow::Result<Box<dyn CachePolicy>> {
+        Ok(self.resolve(name)?.build(cfg, engine))
+    }
+
+    /// Build a policy from its sweep-enum identity. Panics if `choice`
+    /// has no entry — impossible on a registry containing the builtin
+    /// set, which is the only way sweeps obtain one.
+    pub fn build_choice(
+        &self,
+        choice: PolicyChoice,
+        cfg: &AkpcConfig,
+        engine: EngineChoice,
+    ) -> Box<dyn CachePolicy> {
+        self.entries
+            .iter()
+            .find(|e| e.choice == Some(choice))
+            .unwrap_or_else(|| panic!("no registry entry for {choice:?}"))
+            .build(cfg, engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_are_unique_and_cover_choices() {
+        let reg = PolicyRegistry::builtin();
+        let names = reg.names();
+        let set: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len(), "duplicate names: {names:?}");
+        for &c in PolicyChoice::FIG5.iter().chain(PolicyChoice::SWEEP) {
+            assert!(
+                reg.get(c.cli_name()).is_some(),
+                "{c:?} ({}) missing from registry",
+                c.cli_name()
+            );
+        }
+    }
+
+    #[test]
+    fn every_builtin_builds_a_named_policy() {
+        let reg = PolicyRegistry::builtin();
+        let cfg = AkpcConfig::default();
+        for e in reg.iter() {
+            let p = e.build(&cfg, EngineChoice::Native);
+            assert!(!p.name().is_empty(), "{} built a nameless policy", e.name());
+            assert!(!e.description().is_empty());
+        }
+    }
+
+    #[test]
+    fn resolve_enumerates_valid_names() {
+        let reg = PolicyRegistry::builtin();
+        let err = reg.resolve("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown policy `bogus`"), "{err}");
+        assert!(err.contains("akpc") && err.contains("no-packing"), "{err}");
+    }
+
+    #[test]
+    fn register_extends_and_rejects_duplicates() {
+        let mut reg = PolicyRegistry::builtin();
+        reg.register(PolicyEntry::new(
+            "my-policy",
+            "downstream extension",
+            PolicyCaps::default(),
+            Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                Box::new(NoPacking::new(cfg))
+            }),
+        ))
+        .unwrap();
+        assert!(reg.get("my-policy").is_some());
+        assert!(reg
+            .build("my-policy", &AkpcConfig::default(), EngineChoice::Native)
+            .is_ok());
+        let dup = reg.register(PolicyEntry::new(
+            "akpc",
+            "clash",
+            PolicyCaps::default(),
+            Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                Box::new(NoPacking::new(cfg))
+            }),
+        ));
+        assert!(dup.is_err());
+    }
+
+    #[test]
+    fn capability_flags_match_policy_nature() {
+        let reg = PolicyRegistry::builtin();
+        assert!(reg.get("akpc").unwrap().caps().supports_sharded);
+        assert!(!reg.get("no-packing").unwrap().caps().supports_sharded);
+        assert!(reg.get("opt").unwrap().caps().needs_offline_trace);
+        assert!(reg.get("dp-greedy").unwrap().caps().needs_offline_trace);
+        assert_eq!(reg.get("akpc").unwrap().caps().summary(), "online+sharded");
+        assert_eq!(reg.get("opt").unwrap().caps().summary(), "offline-trace");
+    }
+}

@@ -1,0 +1,531 @@
+//! [`RunSpec`] — the declarative description of one run: workload ×
+//! driver × policy-by-name × config overrides, validated against a
+//! [`PolicyRegistry`] before any work starts.
+//!
+//! `validate()` is the **single place** the effective per-cell config is
+//! derived: n_items/n_servers always come from the materialized workload
+//! (trace header or scenario universe), never from ad-hoc call-site
+//! overrides — sharded and single-leader runs of the same spec are
+//! guaranteed to see identical effective configs.
+
+use std::sync::Arc;
+
+use crate::config::AkpcConfig;
+use crate::scenario::{CompiledScenario, ScenarioSpec};
+use crate::sim::ReplayMode;
+use crate::trace::generator::{self, GeneratorParams, TraceKind};
+use crate::trace::io as trace_io;
+use crate::trace::model::Trace;
+
+use super::drive;
+use super::observe::{NullObserver, Observer};
+use super::outcome::RunOutcome;
+use super::registry::PolicyRegistry;
+use super::EngineChoice;
+
+/// Where the requests come from.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Synthetic trace from one of the built-in generators; the universe
+    /// shape (n_items/n_servers) comes from the spec's base config.
+    Generated { kind: TraceKind, n_requests: usize },
+    /// An `akpc-trace` file (`.csv` via [`trace_io::read_csv`], anything
+    /// else via [`trace_io::read_binary`]).
+    TraceFile(String),
+    /// A Kaggle-style external CSV ([`trace_io::read_external_csv`]).
+    ExternalCsv(String),
+    /// An in-memory trace (library callers, tests). Arc-shared so
+    /// repeated `validate`/`execute` calls on one spec never copy the
+    /// request vector.
+    Inline(Arc<Trace>),
+    /// A declarative scenario, compiled at `scale` during validation.
+    Scenario { spec: ScenarioSpec, scale: f64 },
+}
+
+/// How the run is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Driver {
+    /// In-process simulator loop (any policy, incl. offline baselines).
+    SingleLeader,
+    /// The sharded online coordinator (policies with the
+    /// `supports_sharded` capability).
+    Sharded { n_shards: usize, mode: ReplayMode },
+}
+
+/// Map a CLI dataset name to a generator kind.
+pub fn parse_dataset(name: &str) -> anyhow::Result<TraceKind> {
+    match name {
+        "netflix" => Ok(TraceKind::Netflix),
+        "spotify" => Ok(TraceKind::Spotify),
+        d => anyhow::bail!("unknown dataset `{d}` (expected netflix|spotify)"),
+    }
+}
+
+/// Generate a synthetic workload trace from `cfg`'s universe shape,
+/// folding `cfg.seed` into the generator seed (the one generation path —
+/// `gen-trace`, `RunSpec`, and the serve demo all use it).
+pub fn generated_trace(
+    kind: TraceKind,
+    cfg: &AkpcConfig,
+    n_requests: usize,
+) -> anyhow::Result<Trace> {
+    let mut params = match kind {
+        TraceKind::Netflix => GeneratorParams::netflix(cfg.n_items, cfg.n_servers, n_requests),
+        TraceKind::Spotify => GeneratorParams::spotify(cfg.n_items, cfg.n_servers, n_requests),
+    };
+    params.seed ^= cfg.seed;
+    generator::try_generate(&params, kind)
+}
+
+/// The single source of the per-cell config derivation: the workload's
+/// universe shape overrides the base config's, everything else carries
+/// over. Both replay drivers and the scenario suite go through here.
+pub fn cell_config(base: &AkpcConfig, n_items: u32, n_servers: u32) -> AkpcConfig {
+    AkpcConfig {
+        n_items,
+        n_servers,
+        ..base.clone()
+    }
+}
+
+/// Declarative run description. See the crate-level example in
+/// [`crate::run`].
+///
+/// ```
+/// use akpc::config::AkpcConfig;
+/// use akpc::run::{PolicyRegistry, RunSpec, Workload};
+/// use akpc::trace::generator::TraceKind;
+///
+/// let registry = PolicyRegistry::builtin();
+/// let cfg = AkpcConfig { n_items: 30, n_servers: 12, ..Default::default() };
+/// let outcome = RunSpec::new()
+///     .config(cfg)
+///     .workload(Workload::Generated { kind: TraceKind::Netflix, n_requests: 1_000 })
+///     .policy("no-packing")
+///     .execute(&registry)
+///     .unwrap();
+/// assert_eq!(outcome.ledger.requests, 1_000);
+/// assert!(outcome.total() > 0.0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    workload: Option<Workload>,
+    driver: Driver,
+    policy: String,
+    engine: EngineChoice,
+    base_cfg: AkpcConfig,
+    batch_size: Option<usize>,
+    seed: Option<u64>,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self {
+            workload: None,
+            driver: Driver::SingleLeader,
+            policy: "akpc".to_string(),
+            engine: EngineChoice::Native,
+            base_cfg: AkpcConfig::default(),
+            batch_size: None,
+            seed: None,
+        }
+    }
+}
+
+impl RunSpec {
+    /// A fresh spec: single-leader, `akpc`, native engine, Table-II
+    /// defaults — only the workload is mandatory.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the workload (mandatory).
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.workload = Some(w);
+        self
+    }
+
+    /// Sugar: generated synthetic workload.
+    pub fn generated(self, kind: TraceKind, n_requests: usize) -> Self {
+        self.workload(Workload::Generated { kind, n_requests })
+    }
+
+    /// Sugar: trace file workload.
+    pub fn trace_file(self, path: impl Into<String>) -> Self {
+        self.workload(Workload::TraceFile(path.into()))
+    }
+
+    /// Sugar: in-memory trace workload (wrapped in an `Arc` once here).
+    pub fn inline_trace(self, trace: Trace) -> Self {
+        self.workload(Workload::Inline(Arc::new(trace)))
+    }
+
+    /// Sugar: scenario workload at `scale`.
+    pub fn scenario(self, spec: ScenarioSpec, scale: f64) -> Self {
+        self.workload(Workload::Scenario { spec, scale })
+    }
+
+    /// Select the driver (default: single-leader).
+    pub fn driver(mut self, d: Driver) -> Self {
+        self.driver = d;
+        self
+    }
+
+    /// Sugar: sharded driver.
+    pub fn sharded(self, n_shards: usize, mode: ReplayMode) -> Self {
+        self.driver(Driver::Sharded { n_shards, mode })
+    }
+
+    /// Select the policy by registry name (default: `akpc`).
+    pub fn policy(mut self, name: impl Into<String>) -> Self {
+        self.policy = name.into();
+        self
+    }
+
+    /// CRM engine for AKPC variants (default: native).
+    pub fn engine(mut self, engine: EngineChoice) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Base configuration (default: Table II). The workload's universe
+    /// shape overrides its n_items/n_servers at validation.
+    pub fn config(mut self, cfg: AkpcConfig) -> Self {
+        self.base_cfg = cfg;
+        self
+    }
+
+    /// Override the clique-generation batch size.
+    pub fn batch_size(mut self, batch_size: usize) -> Self {
+        self.batch_size = Some(batch_size);
+        self
+    }
+
+    /// Override every seed in one place: the config seed (generated
+    /// workloads fold it in) and a scenario workload's spec seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Resolve the policy, materialize the workload, and derive the
+    /// effective config. All driver/policy conflicts surface here,
+    /// before any simulation work.
+    pub fn validate(&self, registry: &PolicyRegistry) -> anyhow::Result<PreparedRun> {
+        let entry = registry.resolve(&self.policy)?;
+        if let Driver::Sharded { n_shards, .. } = self.driver {
+            anyhow::ensure!(n_shards >= 1, "sharded driver needs n_shards >= 1");
+            if !entry.caps().supports_sharded {
+                let capable: Vec<&str> = registry
+                    .iter()
+                    .filter(|e| e.caps().supports_sharded)
+                    .map(|e| e.name())
+                    .collect();
+                anyhow::bail!(
+                    "policy `{}` does not support the sharded driver \
+                     (sharded-capable: {}); use the single-leader driver",
+                    entry.name(),
+                    capable.join(", ")
+                );
+            }
+        }
+        let workload = self.workload.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "RunSpec needs a workload (generated | trace file | scenario | external CSV)"
+            )
+        })?;
+
+        // Overrides apply before generation so generated workloads and
+        // scenario compilation follow them.
+        let mut cfg = self.base_cfg.clone();
+        if let Some(s) = self.seed {
+            cfg.seed = s;
+        }
+        if let Some(b) = self.batch_size {
+            cfg.batch_size = b;
+        }
+
+        let data = match workload {
+            Workload::Generated { kind, n_requests } => {
+                WorkloadData::Trace(Arc::new(generated_trace(*kind, &cfg, *n_requests)?))
+            }
+            Workload::TraceFile(path) => {
+                let t = if path.ends_with(".csv") {
+                    trace_io::read_csv(path)?
+                } else {
+                    trace_io::read_binary(path)?
+                };
+                t.validate()?;
+                WorkloadData::Trace(Arc::new(t))
+            }
+            Workload::ExternalCsv(path) => {
+                let t = trace_io::read_external_csv(path)?;
+                t.validate()?;
+                WorkloadData::Trace(Arc::new(t))
+            }
+            Workload::Inline(t) => {
+                t.validate()?;
+                WorkloadData::Trace(Arc::clone(t))
+            }
+            Workload::Scenario { spec, scale } => {
+                let mut spec = spec.clone();
+                if let Some(s) = self.seed {
+                    spec.seed = s;
+                }
+                WorkloadData::Scenario(spec.compile(*scale)?)
+            }
+        };
+
+        // The one place n_items/n_servers derive from the workload.
+        let cfg = match &data {
+            WorkloadData::Trace(t) => cell_config(&cfg, t.n_items, t.n_servers),
+            WorkloadData::Scenario(sc) => cell_config(&cfg, sc.n_items, sc.n_servers),
+        };
+        cfg.validate()?;
+
+        Ok(PreparedRun {
+            policy: entry.name().to_string(),
+            engine: self.engine,
+            driver: self.driver,
+            cfg,
+            data,
+        })
+    }
+
+    /// Validate, then execute with `obs` attached.
+    pub fn run(
+        &self,
+        registry: &PolicyRegistry,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<RunOutcome> {
+        self.validate(registry)?.run(registry, obs)
+    }
+
+    /// Validate, then execute without observers.
+    pub fn execute(&self, registry: &PolicyRegistry) -> anyhow::Result<RunOutcome> {
+        self.run(registry, &mut NullObserver)
+    }
+}
+
+/// The materialized workload a validated spec will replay. The trace is
+/// Arc-shared: cloning a `WorkloadData` (or validating an `Inline`
+/// workload again) never copies the request vector.
+#[derive(Debug, Clone)]
+pub enum WorkloadData {
+    Trace(Arc<Trace>),
+    Scenario(CompiledScenario),
+}
+
+/// A validated, materialized run: effective config derived, policy
+/// resolved, workload compiled. Inspect it (CLI banners, config
+/// regression tests) or [`run`](PreparedRun::run) it.
+#[derive(Debug)]
+pub struct PreparedRun {
+    policy: String,
+    engine: EngineChoice,
+    driver: Driver,
+    cfg: AkpcConfig,
+    data: WorkloadData,
+}
+
+impl PreparedRun {
+    /// The effective config every driver will see: n_items/n_servers
+    /// from the workload, overrides applied.
+    pub fn effective_config(&self) -> &AkpcConfig {
+        &self.cfg
+    }
+
+    /// Resolved policy name.
+    pub fn policy(&self) -> &str {
+        &self.policy
+    }
+
+    /// Rebind the policy without re-materializing the workload — the
+    /// cheap path for A/B comparisons over one compiled scenario or
+    /// generated trace. Re-checks driver capabilities against
+    /// `registry`.
+    pub fn with_policy(
+        mut self,
+        registry: &PolicyRegistry,
+        name: &str,
+    ) -> anyhow::Result<Self> {
+        let entry = registry.resolve(name)?;
+        if matches!(self.driver, Driver::Sharded { .. }) {
+            anyhow::ensure!(
+                entry.caps().supports_sharded,
+                "policy `{}` does not support the sharded driver",
+                entry.name()
+            );
+        }
+        self.policy = entry.name().to_string();
+        Ok(self)
+    }
+
+    pub fn driver(&self) -> Driver {
+        self.driver
+    }
+
+    pub fn workload(&self) -> &WorkloadData {
+        &self.data
+    }
+
+    /// One-line banner describing what is about to run.
+    pub fn describe(&self) -> String {
+        match &self.data {
+            WorkloadData::Trace(t) => format!(
+                "trace `{}`: {} requests, universe {} items × {} servers",
+                t.name,
+                t.len(),
+                t.n_items,
+                t.n_servers
+            ),
+            WorkloadData::Scenario(sc) => format!(
+                "scenario `{}`: {} phases, {} requests, universe {} items × {} servers",
+                sc.name,
+                sc.phases.len(),
+                sc.total_requests(),
+                sc.n_items,
+                sc.n_servers
+            ),
+        }
+    }
+
+    /// Execute the run, streaming events to `obs` and emitting
+    /// `on_done` with the final outcome.
+    pub fn run(
+        &self,
+        registry: &PolicyRegistry,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<RunOutcome> {
+        let entry = registry.resolve(&self.policy)?;
+        let outcome = match (self.driver, &self.data) {
+            (Driver::SingleLeader, WorkloadData::Trace(t)) => {
+                let mut policy = entry.build(&self.cfg, self.engine);
+                let rep = drive::drive_trace(policy.as_mut(), t, self.cfg.batch_size, obs);
+                RunOutcome::from_sim(rep)
+            }
+            (Driver::SingleLeader, WorkloadData::Scenario(sc)) => {
+                let mut policy = entry.build(&self.cfg, self.engine);
+                let run = drive::drive_phased(policy.as_mut(), sc, self.cfg.batch_size, obs);
+                let hist = policy.clique_sizes();
+                RunOutcome::from_scenario(run, hist)
+            }
+            (Driver::Sharded { n_shards, mode }, WorkloadData::Trace(t)) => {
+                let rep = crate::sim::replay_sharded(
+                    &self.cfg,
+                    self.engine.to_engine(),
+                    t,
+                    n_shards,
+                    mode,
+                )?;
+                RunOutcome::from_sharded(rep, t.name.clone())
+            }
+            (Driver::Sharded { n_shards, mode }, WorkloadData::Scenario(sc)) => {
+                let (run, metrics) = drive::drive_phased_sharded(
+                    &self.cfg,
+                    self.engine.to_engine(),
+                    sc,
+                    n_shards,
+                    mode,
+                    obs,
+                )?;
+                RunOutcome::from_scenario_sharded(run, mode, metrics)
+            }
+        };
+        obs.on_done(&outcome);
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn missing_workload_rejected() {
+        let reg = PolicyRegistry::builtin();
+        let err = RunSpec::new().validate(&reg).unwrap_err().to_string();
+        assert!(err.contains("needs a workload"), "{err}");
+    }
+
+    #[test]
+    fn unknown_policy_rejected_with_names() {
+        let reg = PolicyRegistry::builtin();
+        let err = RunSpec::new()
+            .generated(TraceKind::Netflix, 100)
+            .policy("nope")
+            .validate(&reg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown policy `nope`"), "{err}");
+        assert!(err.contains("no-packing"), "{err}");
+    }
+
+    #[test]
+    fn sharded_unsupported_policy_rejected() {
+        let reg = PolicyRegistry::builtin();
+        let err = RunSpec::new()
+            .config(small_cfg())
+            .generated(TraceKind::Netflix, 100)
+            .policy("opt")
+            .sharded(2, ReplayMode::Ordered)
+            .validate(&reg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not support the sharded driver"), "{err}");
+        assert!(err.contains("akpc"), "{err}");
+    }
+
+    #[test]
+    fn effective_config_follows_workload_universe() {
+        let reg = PolicyRegistry::builtin();
+        // Base config is 60×600; the inline trace is 30×12.
+        let trace = crate::trace::generator::netflix_like(30, 12, 400, 7);
+        let prepared = RunSpec::new()
+            .inline_trace(trace)
+            .policy("no-packing")
+            .validate(&reg)
+            .unwrap();
+        assert_eq!(prepared.effective_config().n_items, 30);
+        assert_eq!(prepared.effective_config().n_servers, 12);
+        assert!(prepared.describe().contains("30 items × 12 servers"));
+    }
+
+    #[test]
+    fn seed_override_moves_generated_workload() {
+        let reg = PolicyRegistry::builtin();
+        let base = RunSpec::new()
+            .config(small_cfg())
+            .generated(TraceKind::Netflix, 300)
+            .policy("no-packing");
+        let a = base.clone().seed(1).validate(&reg).unwrap();
+        let b = base.clone().seed(2).validate(&reg).unwrap();
+        let (WorkloadData::Trace(ta), WorkloadData::Trace(tb)) = (a.workload(), b.workload())
+        else {
+            panic!("generated workloads materialize as traces");
+        };
+        assert_ne!(ta.requests, tb.requests);
+        assert_eq!(a.effective_config().seed, 1);
+    }
+
+    #[test]
+    fn batch_size_override_lands_in_effective_config() {
+        let reg = PolicyRegistry::builtin();
+        let prepared = RunSpec::new()
+            .config(small_cfg())
+            .generated(TraceKind::Netflix, 100)
+            .batch_size(50)
+            .validate(&reg)
+            .unwrap();
+        assert_eq!(prepared.effective_config().batch_size, 50);
+    }
+}

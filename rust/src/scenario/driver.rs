@@ -18,13 +18,14 @@
 //! DESIGN.md §2.3 this keeps the two drivers ledger-equivalent within
 //! floating-point summation order — the property
 //! `tests/scenario.rs::churn_storm_sharded_matches_single_leader` pins.
-
-use std::time::Instant;
+//!
+//! **Deprecated shims** (DESIGN.md §8): both entry points now delegate
+//! to the instrumented loops in [`crate::run::drive`] with no observer —
+//! prefer [`crate::run::RunSpec`] for new code.
 
 use crate::algo::CachePolicy;
 use crate::cache::CostLedger;
 use crate::config::AkpcConfig;
-use crate::coordinator::{Coordinator, ServeRequest, TickMode};
 use crate::runtime::CrmEngine;
 use crate::sim::ReplayMode;
 use crate::util::Json;
@@ -53,7 +54,7 @@ impl PhaseCost {
         ])
     }
 
-    fn row(&self) -> String {
+    pub(crate) fn row(&self) -> String {
         format!(
             "  {:<16} reqs={:<8} total={:>12.1}  C_T={:>12.1}  C_P={:>12.1}  hit={:>5.1}%",
             self.label,
@@ -124,7 +125,7 @@ impl ScenarioRun {
     }
 }
 
-fn phase_cost(
+pub(crate) fn phase_cost(
     sc: &CompiledScenario,
     i: usize,
     cumulative: &CostLedger,
@@ -142,37 +143,15 @@ fn phase_cost(
 
 /// Drive `policy` through the scenario with the single-leader loop,
 /// snapshotting the ledger at each phase boundary.
+///
+/// **Deprecated shim**: delegates to [`crate::run::drive_phased`] with
+/// no observer; prefer [`crate::run::RunSpec`].
 pub fn run_phased(
     policy: &mut dyn CachePolicy,
     sc: &CompiledScenario,
     batch_size: usize,
 ) -> ScenarioRun {
-    let wall = Instant::now();
-    // Offline policies (OPT, DP_Greedy) see the whole timeline up front.
-    policy.prepare(sc.concat_trace());
-    let mut prev = CostLedger::default();
-    let mut phases = Vec::with_capacity(sc.phases.len());
-    for (i, ph) in sc.phases.iter().enumerate() {
-        for batch in ph.trace.batches(batch_size) {
-            for r in batch {
-                policy.handle_request(r);
-            }
-            // The trailing chunk may be partial: windows end at phase
-            // boundaries by construction (module docs).
-            policy.end_batch(batch);
-        }
-        let cumulative = policy.ledger().clone();
-        phases.push(phase_cost(sc, i, &cumulative, &prev));
-        prev = cumulative;
-    }
-    ScenarioRun {
-        scenario: sc.name.clone(),
-        policy: policy.name(),
-        n_shards: 0,
-        phases,
-        total: policy.ledger().clone(),
-        wall_secs: wall.elapsed().as_secs_f64(),
-    }
+    crate::run::drive_phased(policy, sc, batch_size, &mut crate::run::NullObserver)
 }
 
 /// Drive the scenario through the sharded online coordinator (AKPC), one
@@ -180,6 +159,12 @@ pub fn run_phased(
 /// `Ordered` replays the global time order from one thread (deterministic,
 /// ledger-equivalent to [`run_phased`] with AKPC); `Parallel` replays each
 /// shard's subsequence concurrently within every phase.
+///
+/// **Deprecated shim**: derives the effective cell config through
+/// [`crate::run::cell_config`] (the same single derivation
+/// `RunSpec::validate` uses) and delegates to
+/// [`crate::run::drive_phased_sharded`], discarding the coordinator
+/// metrics; prefer [`crate::run::RunSpec`], whose outcome keeps them.
 pub fn run_phased_sharded(
     cfg: &AkpcConfig,
     engine: CrmEngine,
@@ -187,81 +172,16 @@ pub fn run_phased_sharded(
     n_shards: usize,
     mode: ReplayMode,
 ) -> anyhow::Result<ScenarioRun> {
-    let mut cfg = cfg.clone();
-    cfg.n_items = sc.n_items;
-    cfg.n_servers = sc.n_servers;
-    let tick = match mode {
-        ReplayMode::Ordered => TickMode::Sync,
-        ReplayMode::Parallel => TickMode::Async,
-    };
-    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick);
-    let n_shards = coord.n_shards();
-    let wall = Instant::now();
-
-    let mut prev = CostLedger::default();
-    let mut phases = Vec::with_capacity(sc.phases.len());
-    for (i, ph) in sc.phases.iter().enumerate() {
-        match mode {
-            ReplayMode::Ordered => {
-                for r in &ph.trace.requests {
-                    coord.serve(ServeRequest {
-                        items: r.items.clone(),
-                        server: r.server,
-                        time: Some(r.time),
-                    })?;
-                }
-            }
-            ReplayMode::Parallel => {
-                let mut handles = Vec::with_capacity(n_shards);
-                for shard in 0..n_shards {
-                    let client = coord.client();
-                    let requests: Vec<_> = ph
-                        .trace
-                        .requests
-                        .iter()
-                        .filter(|r| r.server as usize % n_shards == shard)
-                        .cloned()
-                        .collect();
-                    handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
-                        for r in requests {
-                            client.serve(ServeRequest {
-                                items: r.items,
-                                server: r.server,
-                                time: Some(r.time),
-                            })?;
-                        }
-                        Ok(())
-                    }));
-                }
-                for h in handles {
-                    h.join()
-                        .map_err(|_| anyhow::anyhow!("scenario replay client panicked"))??;
-                }
-            }
-        }
-        // Windows never span phases (module docs).
-        coord.flush_window()?;
-        let m = coord.metrics()?;
-        phases.push(phase_cost(sc, i, &m.ledger, &prev));
-        prev = m.ledger;
-    }
-
-    let wall_secs = wall.elapsed().as_secs_f64();
-    let metrics = coord.shutdown();
-    // The shutdown quiesce sweeps retention rent accrued after the last
-    // request (DESIGN.md §2.3); fold the residual into the final phase so
-    // the per-phase ledgers still sum to the run total.
-    if let Some(last) = phases.last_mut() {
-        last.ledger.merge(&metrics.ledger.delta_from(&prev));
-    }
-    Ok(ScenarioRun {
-        scenario: sc.name.clone(),
-        policy: metrics.policy.clone(),
+    let cell = crate::run::cell_config(cfg, sc.n_items, sc.n_servers);
+    let (run, _metrics) = crate::run::drive_phased_sharded(
+        &cell,
+        engine,
+        sc,
         n_shards,
-        phases,
-        total: metrics.ledger.clone(),
-        wall_secs,
-    })
+        mode,
+        &mut crate::run::NullObserver,
+    )?;
+    Ok(run)
 }
 
 #[cfg(test)]

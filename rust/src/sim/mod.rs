@@ -19,16 +19,14 @@ use crate::trace::model::Trace;
 /// asynchronously on the *closed* window); `end_batch` is invoked after the
 /// batch is fully served. Offline policies receive the whole trace via
 /// `prepare` first.
+///
+/// **Deprecated shim** (DESIGN.md §8): this is now a thin wrapper over
+/// [`crate::run::drive_trace`] with no observer — prefer
+/// [`crate::run::RunSpec`], which adds policy-by-name construction,
+/// workload materialization, and streaming observers on the identical
+/// code path.
 pub fn run(policy: &mut dyn CachePolicy, trace: &Trace, batch_size: usize) -> SimReport {
-    let wall = std::time::Instant::now();
-    policy.prepare(trace);
-    for batch in trace.batches(batch_size) {
-        for r in batch {
-            policy.handle_request(r);
-        }
-        policy.end_batch(batch);
-    }
-    SimReport::collect(policy, trace, wall.elapsed().as_secs_f64())
+    crate::run::drive_trace(policy, trace, batch_size, &mut crate::run::NullObserver)
 }
 
 #[cfg(test)]

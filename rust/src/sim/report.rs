@@ -13,7 +13,9 @@ pub struct SimReport {
     pub trace: String,
     pub n_requests: usize,
     pub ledger: CostLedger,
-    pub clique_hist: Histogram,
+    /// Clique-size distribution; `None` when the policy does not track
+    /// packing (NoPacking, OPT).
+    pub clique_hist: Option<Histogram>,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
 }
@@ -58,7 +60,13 @@ impl SimReport {
             ("trace", Json::Str(self.trace.clone())),
             ("n_requests", Json::Num(self.n_requests as f64)),
             ("ledger", self.ledger.to_json()),
-            ("clique_hist", self.clique_hist.to_json()),
+            (
+                "clique_hist",
+                match &self.clique_hist {
+                    Some(h) => h.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("wall_secs", Json::Num(self.wall_secs)),
             ("requests_per_sec", Json::Num(self.requests_per_sec)),
         ])
@@ -80,8 +88,12 @@ mod tests {
         let row = rep.row();
         assert!(row.contains("NoPacking"));
         assert!(rep.requests_per_sec > 0.0);
+        // NoPacking does not pack: the histogram is "not tracked", not
+        // an empty distribution.
+        assert!(rep.clique_hist.is_none());
         let json = rep.to_json().to_string();
         assert!(json.contains("\"c_t\""));
+        assert!(json.contains("\"clique_hist\":null"));
         crate::util::json::parse(&json).unwrap();
     }
 }

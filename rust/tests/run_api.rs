@@ -1,0 +1,286 @@
+//! Unified Run API acceptance tests (DESIGN.md §8):
+//!
+//! * registry round-trip — every registered name builds, names are
+//!   unique, the FIG5/SWEEP policy sets resolve;
+//! * `RunSpec` validation errors — unknown policy (enumerating valid
+//!   names), sharded driver with an unsupported policy, missing
+//!   workload;
+//! * facade equivalence — `RunSpec` totals pin to the legacy `sim::run`
+//!   entry point within 1e-9 relative, single-leader and 4-shard;
+//! * config-derivation regression — sharded and single-leader runs of
+//!   the same spec see identical effective configs.
+
+use akpc::bench::sweep::{EngineChoice, PolicyChoice};
+use akpc::config::AkpcConfig;
+use akpc::run::{
+    Driver, JsonlSink, Observer, PolicyRegistry, RunSpec, WindowEvent, WorkloadData,
+};
+use akpc::scenario::ScenarioSpec;
+use akpc::sim::{self, ReplayMode};
+use akpc::trace::generator::{netflix_like, TraceKind};
+
+fn small_cfg() -> AkpcConfig {
+    AkpcConfig {
+        n_items: 40,
+        n_servers: 24,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    }
+}
+
+fn small_scenario() -> ScenarioSpec {
+    ScenarioSpec::from_toml_str(
+        r#"
+        name = "api"
+        seed = 11
+        n_items = 30
+        n_servers = 12
+
+        [phase]
+        label = "a"
+        generator = "netflix"
+        requests = 900
+
+        [phase]
+        label = "b"
+        generator = "netflix"
+        requests = 450
+        flash_frac = 0.4
+        flash_items = 3
+        "#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn registry_round_trip_every_name_builds_and_runs() {
+    let registry = PolicyRegistry::builtin();
+    let cfg = small_cfg();
+    let names = registry.names();
+    let unique: std::collections::HashSet<_> = names.iter().collect();
+    assert_eq!(unique.len(), names.len(), "duplicate names: {names:?}");
+
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 600, 5);
+    for name in &names {
+        let mut policy = registry.build(name, &cfg, EngineChoice::Native).unwrap();
+        let rep = sim::run(policy.as_mut(), &trace, cfg.batch_size);
+        assert_eq!(rep.ledger.requests, 600, "{name} dropped requests");
+        assert!(rep.ledger.total() > 0.0, "{name} accrued no cost");
+    }
+
+    // The sweep policy sets resolve to registry entries.
+    for &choice in PolicyChoice::FIG5.iter().chain(PolicyChoice::SWEEP) {
+        let entry = registry
+            .get(choice.cli_name())
+            .unwrap_or_else(|| panic!("{choice:?} ({}) not registered", choice.cli_name()));
+        assert_eq!(entry.choice(), Some(choice));
+    }
+}
+
+#[test]
+fn validation_errors_are_actionable() {
+    let registry = PolicyRegistry::builtin();
+
+    let err = RunSpec::new()
+        .generated(TraceKind::Netflix, 100)
+        .policy("lru")
+        .validate(&registry)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown policy `lru`"), "{err}");
+    assert!(
+        err.contains("no-packing") && err.contains("akpc"),
+        "error should enumerate valid names: {err}"
+    );
+
+    let err = RunSpec::new()
+        .config(small_cfg())
+        .generated(TraceKind::Netflix, 100)
+        .policy("dp-greedy")
+        .sharded(2, ReplayMode::Ordered)
+        .validate(&registry)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("does not support the sharded driver"), "{err}");
+
+    let err = RunSpec::new().validate(&registry).unwrap_err().to_string();
+    assert!(err.contains("needs a workload"), "{err}");
+}
+
+#[test]
+fn facade_matches_legacy_sim_run_single_leader_and_4_shard() {
+    let cfg = small_cfg();
+    let registry = PolicyRegistry::builtin();
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 4_000, 41);
+
+    let mut legacy_policy = akpc::algo::Akpc::new(&cfg);
+    let legacy = sim::run(&mut legacy_policy, &trace, cfg.batch_size);
+    let tol = 1e-9 * legacy.ledger.total().abs().max(1.0);
+
+    let base = RunSpec::new()
+        .config(cfg.clone())
+        .inline_trace(trace.clone())
+        .policy("akpc")
+        .engine(EngineChoice::Native);
+
+    let single = base.clone().execute(&registry).unwrap();
+    assert_eq!(single.n_shards, 0);
+    assert_eq!(single.ledger.requests, legacy.ledger.requests);
+    assert_eq!(single.ledger.transfers, legacy.ledger.transfers);
+    assert!(
+        (single.total() - legacy.ledger.total()).abs() <= tol,
+        "single-leader facade {} vs legacy {}",
+        single.total(),
+        legacy.ledger.total()
+    );
+
+    let sharded = base
+        .sharded(4, ReplayMode::Ordered)
+        .execute(&registry)
+        .unwrap();
+    assert_eq!(sharded.n_shards, 4);
+    assert_eq!(sharded.shard_ledgers().len(), 4);
+    assert!(
+        (sharded.total() - legacy.ledger.total()).abs() <= tol,
+        "4-shard facade {} vs legacy {}",
+        sharded.total(),
+        legacy.ledger.total()
+    );
+}
+
+#[test]
+fn sharded_and_single_leader_specs_derive_identical_configs() {
+    // Regression for the old split derivation: the single-leader
+    // scenario path built cell_cfg at the call site while
+    // run_phased_sharded cloned-and-overrode internally. Both now come
+    // from RunSpec::validate.
+    let registry = PolicyRegistry::builtin();
+    let base = RunSpec::new()
+        .config(small_cfg()) // 40×24 base; scenario universe is 30×12
+        .scenario(small_scenario(), 1.0)
+        .policy("akpc");
+
+    let single = base.clone().validate(&registry).unwrap();
+    let sharded = base
+        .clone()
+        .sharded(4, ReplayMode::Ordered)
+        .validate(&registry)
+        .unwrap();
+    assert_eq!(single.effective_config(), sharded.effective_config());
+    assert_eq!(single.effective_config().n_items, 30);
+    assert_eq!(single.effective_config().n_servers, 12);
+
+    // with_policy rebinds without re-materializing the workload and
+    // still enforces driver capabilities.
+    let rebound = single.with_policy(&registry, "no-packing").unwrap();
+    assert_eq!(rebound.policy(), "no-packing");
+    assert!(sharded.with_policy(&registry, "opt").is_err());
+}
+
+#[test]
+fn scenario_outcome_carries_phases_and_metrics() {
+    let registry = PolicyRegistry::builtin();
+    let base = RunSpec::new()
+        .scenario(small_scenario(), 1.0)
+        .policy("akpc");
+
+    let single = base.clone().execute(&registry).unwrap();
+    assert_eq!(single.phases.len(), 2);
+    assert!(single.metrics.is_none());
+    assert!(single.clique_hist.is_some(), "AKPC tracks cliques");
+    let phase_sum: f64 = single.phases.iter().map(|p| p.ledger.total()).sum();
+    assert!(
+        (phase_sum - single.total()).abs() <= 1e-9 * single.total().abs().max(1.0),
+        "phases {phase_sum} != total {}",
+        single.total()
+    );
+
+    let sharded = base
+        .sharded(2, ReplayMode::Ordered)
+        .execute(&registry)
+        .unwrap();
+    assert_eq!(sharded.phases.len(), 2);
+    assert_eq!(sharded.shard_ledgers().len(), 2);
+    assert!(
+        (sharded.total() - single.total()).abs() <= 1e-9 * single.total().abs().max(1.0),
+        "sharded scenario {} vs single-leader {}",
+        sharded.total(),
+        single.total()
+    );
+    // Both report through the same outcome surface.
+    assert!(sharded.row().contains("2-shard/ordered"));
+    akpc::util::json::parse(&sharded.to_json().to_string()).unwrap();
+    akpc::util::json::parse(&single.to_json().to_string()).unwrap();
+}
+
+#[test]
+fn baseline_policies_report_untracked_histograms() {
+    let registry = PolicyRegistry::builtin();
+    let cfg = small_cfg();
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 1_000, 3);
+    let spec = RunSpec::new()
+        .config(cfg)
+        .inline_trace(trace)
+        .engine(EngineChoice::Native);
+
+    let np = spec.clone().policy("no-packing").execute(&registry).unwrap();
+    assert!(np.clique_hist.is_none(), "NoPacking does not pack");
+    let opt = spec.clone().policy("opt").execute(&registry).unwrap();
+    assert!(opt.clique_hist.is_none(), "OPT's packing is per-request, untracked");
+    let pc = spec.policy("packcache").execute(&registry).unwrap();
+    assert!(pc.clique_hist.is_some(), "PackCache tracks pairs");
+}
+
+#[test]
+fn observers_stream_windows_and_jsonl_parses() {
+    struct Count {
+        windows: u64,
+        done: usize,
+    }
+    impl Observer for Count {
+        fn on_window(&mut self, ev: &WindowEvent<'_>) {
+            self.windows += 1;
+            self.done = ev.requests_done;
+        }
+    }
+
+    let registry = PolicyRegistry::builtin();
+    let cfg = small_cfg();
+    let spec = RunSpec::new()
+        .config(cfg.clone())
+        .generated(TraceKind::Netflix, 1_000)
+        .policy("packcache");
+
+    let mut count = Count { windows: 0, done: 0 };
+    spec.run(&registry, &mut count).unwrap();
+    assert_eq!(count.windows, 5, "1000 requests / batch {}", cfg.batch_size);
+    assert_eq!(count.done, 1_000);
+
+    let mut sink = JsonlSink::new(Vec::new());
+    spec.run(&registry, &mut sink).unwrap();
+    let text = String::from_utf8(sink.into_inner()).unwrap();
+    let lines: Vec<_> = text.lines().collect();
+    assert_eq!(lines.len(), 6, "5 window events + 1 done event");
+    for line in &lines {
+        let v = akpc::util::json::parse(line).unwrap();
+        assert!(v.get("event").is_some());
+    }
+    assert!(lines.last().unwrap().contains("\"done\""));
+}
+
+#[test]
+fn workload_data_exposes_materialization() {
+    let registry = PolicyRegistry::builtin();
+    let prepared = RunSpec::new()
+        .config(small_cfg())
+        .generated(TraceKind::Spotify, 700)
+        .policy("no-packing")
+        .validate(&registry)
+        .unwrap();
+    match prepared.workload() {
+        WorkloadData::Trace(t) => assert_eq!(t.len(), 700),
+        WorkloadData::Scenario(_) => panic!("generated workloads are traces"),
+    }
+    assert!(matches!(prepared.driver(), Driver::SingleLeader));
+    assert_eq!(prepared.policy(), "no-packing");
+}

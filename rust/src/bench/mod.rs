@@ -3,9 +3,11 @@
 //! the paper reports, normalized to OPT = 1 where the paper does.
 
 pub mod experiments;
+pub mod perf;
 pub mod scenarios;
 pub mod sweep;
 
 pub use experiments::*;
+pub use perf::{run_perf, PerfOptions, PerfReport};
 pub use scenarios::{scenario_suite, ScenarioMatrix};
 pub use sweep::{run_policy_set, PolicyChoice, RelativeCosts};

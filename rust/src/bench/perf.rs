@@ -1,0 +1,356 @@
+//! Tracked hot-path performance baseline — the `akpc bench` subcommand.
+//!
+//! Replays the same hot paths `benches/hot_paths.rs` exercises, but as a
+//! *reportable artifact*: one `BENCH_<PR>.json` per PR (EXPERIMENTS.md
+//! §Perf documents the schema), so every future change lands against a
+//! comparable baseline instead of an anecdote. Covered paths:
+//!
+//! * **request_path** — end-to-end policy replay (Algorithm 5 + window
+//!   ticks) through the [`crate::run`] facade, req/s;
+//! * **crm_build** — sparse CSR CRM construction per window at several
+//!   `n_items` points × window lengths (the measured edge density is the
+//!   sparsity coordinate);
+//! * **clique_generate** — one incremental Algorithm-3 pipeline tick
+//!   (adjust → form → split → merge) per window;
+//! * **diff_windows** — the streaming ΔE merge between two windows.
+//!
+//! `scale` shrinks the workloads proportionally (CI smoke uses 0.01); the
+//! checked-in baselines are produced at scale 1.
+
+use std::time::Instant;
+
+use crate::clique::CliqueSet;
+use crate::config::AkpcConfig;
+use crate::crm::{build_native, diff_windows, CrmWindow};
+use crate::run::{PolicyRegistry, RunSpec, Workload};
+use crate::trace::generator::{netflix_like, TraceKind};
+use crate::util::json::Json;
+
+/// Knobs for one baseline run.
+#[derive(Debug, Clone)]
+pub struct PerfOptions {
+    /// Workload multiplier (1.0 = the full checked-in baseline).
+    pub scale: f64,
+    /// Generator seed (folded into every workload).
+    pub seed: u64,
+    /// Item-universe sizes for the per-window benchmarks.
+    pub n_items_points: Vec<u32>,
+}
+
+impl Default for PerfOptions {
+    fn default() -> Self {
+        Self {
+            scale: 1.0,
+            seed: 1,
+            n_items_points: vec![64, 256, 1024],
+        }
+    }
+}
+
+/// One end-to-end policy replay measurement.
+#[derive(Debug, Clone)]
+pub struct RequestPathRow {
+    pub policy: String,
+    pub n_requests: usize,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    pub total_cost: f64,
+}
+
+/// One per-window CRM construction measurement.
+#[derive(Debug, Clone)]
+pub struct CrmBuildRow {
+    pub n_items: u32,
+    pub window_len: usize,
+    /// Kept items k of the built window.
+    pub k: usize,
+    /// Binary edges E of the built window.
+    pub edges: usize,
+    /// Measured sparsity coordinate: `E / (k·(k−1)/2)`.
+    pub density: f64,
+    pub ms_per_window: f64,
+}
+
+/// One incremental clique-generation tick measurement.
+#[derive(Debug, Clone)]
+pub struct CliqueGenRow {
+    pub n_items: u32,
+    pub ms_per_window: f64,
+    pub cliques: usize,
+    pub delta_edges: usize,
+}
+
+/// One window-diff measurement.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    pub n_items: u32,
+    pub us_per_diff: f64,
+    pub delta_edges: usize,
+}
+
+/// The full baseline report (`BENCH_*.json` payload).
+#[derive(Debug, Clone, Default)]
+pub struct PerfReport {
+    pub scale: f64,
+    pub seed: u64,
+    pub request_path: Vec<RequestPathRow>,
+    pub crm_build: Vec<CrmBuildRow>,
+    pub clique_generate: Vec<CliqueGenRow>,
+    pub diff_windows: Vec<DiffRow>,
+}
+
+/// Median wall-clock seconds of `iters` runs of `f`.
+fn time_median<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut samples = Vec::with_capacity(iters);
+    std::hint::black_box(f()); // warm-up
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Run the baseline suite. Every end-to-end replay goes through the
+/// [`RunSpec`] facade so the measured path is the one `akpc run` serves.
+pub fn run_perf(opts: &PerfOptions) -> anyhow::Result<PerfReport> {
+    let registry = PolicyRegistry::builtin();
+    let iters = ((6.0 * opts.scale).ceil() as usize).clamp(3, 6);
+    let mut report = PerfReport {
+        scale: opts.scale,
+        seed: opts.seed,
+        ..Default::default()
+    };
+
+    // -- request_path: end-to-end replay via the run facade.
+    let n_requests = ((100_000.0 * opts.scale).round() as usize).max(2_000);
+    for policy in ["akpc", "no-packing"] {
+        let cfg = AkpcConfig {
+            n_servers: 100,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let outcome = RunSpec::new()
+            .config(cfg)
+            .policy(policy)
+            .workload(Workload::Generated {
+                kind: TraceKind::Netflix,
+                n_requests,
+            })
+            .execute(&registry)?;
+        report.request_path.push(RequestPathRow {
+            policy: policy.to_string(),
+            n_requests: outcome.n_requests,
+            wall_secs: outcome.wall_secs,
+            requests_per_sec: outcome.requests_per_sec,
+            total_cost: outcome.total(),
+        });
+    }
+
+    // -- per-window paths at each n_items point.
+    for &n in &opts.n_items_points {
+        let t1 = netflix_like(n, 10, 1_024, opts.seed);
+        let t2 = netflix_like(n, 10, 1_024, opts.seed + 1);
+
+        // CRM build at two window lengths (density varies with both the
+        // catalog size and the window length — the sparsity axis).
+        for window_len in [256usize, 1_024] {
+            let reqs = &t1.requests[..window_len.min(t1.len())];
+            let secs = time_median(iters, || build_native(reqs, n, 0.2, 1.0));
+            let w = build_native(reqs, n, 0.2, 1.0);
+            let k = w.k();
+            let max_pairs = (k * k.saturating_sub(1) / 2).max(1);
+            report.crm_build.push(CrmBuildRow {
+                n_items: n,
+                window_len: reqs.len(),
+                k,
+                edges: w.edge_count(),
+                density: w.edge_count() as f64 / max_pairs as f64,
+                ms_per_window: secs * 1e3,
+            });
+        }
+
+        // Incremental clique generation (the Algorithm-3 tick) and the
+        // streaming window diff, both over consecutive windows.
+        let w1 = build_native(&t1.requests[..256.min(t1.len())], n, 0.2, 1.0);
+        let w2 = build_native(&t2.requests[..256.min(t2.len())], n, 0.2, 1.0);
+        let prev = CliqueSet::generate(
+            &CliqueSet::new(),
+            &w1,
+            &diff_windows(&CrmWindow::default(), &w1),
+            5,
+            0.85,
+            true,
+            true,
+        );
+        let delta = diff_windows(&w1, &w2);
+        let secs = time_median(iters, || {
+            CliqueSet::generate(&prev, &w2, &delta, 5, 0.85, true, true)
+        });
+        let set = CliqueSet::generate(&prev, &w2, &delta, 5, 0.85, true, true);
+        report.clique_generate.push(CliqueGenRow {
+            n_items: n,
+            ms_per_window: secs * 1e3,
+            cliques: set.len(),
+            delta_edges: delta.len(),
+        });
+
+        let secs = time_median(iters, || diff_windows(&w1, &w2));
+        report.diff_windows.push(DiffRow {
+            n_items: n,
+            us_per_diff: secs * 1e6,
+            delta_edges: delta.len(),
+        });
+    }
+
+    Ok(report)
+}
+
+impl PerfReport {
+    /// Human-readable summary table.
+    pub fn print(&self) {
+        println!("== akpc bench (scale {}, seed {}) ==", self.scale, self.seed);
+        println!("-- request_path (end-to-end via RunSpec)");
+        for r in &self.request_path {
+            println!(
+                "  {:<12} {:>9} reqs  {:>12.0} req/s  total={:.1}",
+                r.policy, r.n_requests, r.requests_per_sec, r.total_cost
+            );
+        }
+        println!("-- crm_build (sparse CSR per window)");
+        for r in &self.crm_build {
+            println!(
+                "  n={:<6} |W|={:<5} k={:<5} E={:<7} density={:.4}  {:>9.3} ms/window",
+                r.n_items, r.window_len, r.k, r.edges, r.density, r.ms_per_window
+            );
+        }
+        println!("-- clique_generate (incremental Algorithm-3 tick)");
+        for r in &self.clique_generate {
+            println!(
+                "  n={:<6} cliques={:<5} dE={:<6} {:>9.3} ms/window",
+                r.n_items, r.cliques, r.delta_edges, r.ms_per_window
+            );
+        }
+        println!("-- diff_windows (streaming edge diff)");
+        for r in &self.diff_windows {
+            println!(
+                "  n={:<6} dE={:<6} {:>9.1} us/diff",
+                r.n_items, r.delta_edges, r.us_per_diff
+            );
+        }
+    }
+
+    /// The `BENCH_*.json` payload (schema: EXPERIMENTS.md §Perf).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("akpc-hot-paths".into())),
+            ("schema_version", Json::Num(1.0)),
+            ("scale", Json::Num(self.scale)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "request_path",
+                Json::Arr(
+                    self.request_path
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("policy", Json::Str(r.policy.clone())),
+                                ("n_requests", Json::Num(r.n_requests as f64)),
+                                ("wall_secs", Json::Num(r.wall_secs)),
+                                ("requests_per_sec", Json::Num(r.requests_per_sec)),
+                                ("total_cost", Json::Num(r.total_cost)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "crm_build",
+                Json::Arr(
+                    self.crm_build
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("n_items", Json::Num(r.n_items as f64)),
+                                ("window_len", Json::Num(r.window_len as f64)),
+                                ("k", Json::Num(r.k as f64)),
+                                ("edges", Json::Num(r.edges as f64)),
+                                ("density", Json::Num(r.density)),
+                                ("ms_per_window", Json::Num(r.ms_per_window)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "clique_generate",
+                Json::Arr(
+                    self.clique_generate
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("n_items", Json::Num(r.n_items as f64)),
+                                ("ms_per_window", Json::Num(r.ms_per_window)),
+                                ("cliques", Json::Num(r.cliques as f64)),
+                                ("delta_edges", Json::Num(r.delta_edges as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "diff_windows",
+                Json::Arr(
+                    self.diff_windows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("n_items", Json::Num(r.n_items as f64)),
+                                ("us_per_diff", Json::Num(r.us_per_diff)),
+                                ("delta_edges", Json::Num(r.delta_edges as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_scale_baseline_runs() {
+        let opts = PerfOptions {
+            scale: 0.002,
+            seed: 3,
+            n_items_points: vec![32, 64],
+        };
+        let rep = run_perf(&opts).unwrap();
+        assert_eq!(rep.request_path.len(), 2);
+        assert_eq!(rep.crm_build.len(), 4);
+        assert_eq!(rep.clique_generate.len(), 2);
+        assert_eq!(rep.diff_windows.len(), 2);
+        for r in &rep.request_path {
+            assert!(r.requests_per_sec > 0.0, "{}", r.policy);
+        }
+        for r in &rep.crm_build {
+            assert!(r.ms_per_window >= 0.0);
+            assert!((0.0..=1.0).contains(&r.density), "{}", r.density);
+        }
+        // JSON payload parses back.
+        let j = rep.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str()),
+            Some("akpc-hot-paths")
+        );
+        assert_eq!(
+            parsed.get("crm_build").and_then(|a| a.as_arr()).map(|a| a.len()),
+            Some(4)
+        );
+    }
+}

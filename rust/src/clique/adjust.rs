@@ -25,7 +25,8 @@ impl CliqueSet {
             if let (Some(cu), Some(cv)) = (cu, cv) {
                 if cu == cv {
                     let items = self.remove(cu).expect("live slot");
-                    let (a, b) = split_on_edge(&items, u, v, crm);
+                    let (a, b) =
+                        super::split::partition_by_affinity(&items, u, v, crm);
                     if a.len() >= 2 {
                         self.insert(a);
                     }
@@ -70,28 +71,6 @@ impl CliqueSet {
         // are picked up by `form_new` right after (see module docs).
         let _ = &delta.added;
     }
-}
-
-/// Split `items` into the `u`-side and `v`-side after edge `(u, v)`
-/// vanished (Algorithm 4 line 7).
-fn split_on_edge(items: &[u32], u: u32, v: u32, crm: &CrmWindow) -> (Vec<u32>, Vec<u32>) {
-    let mut side_u = vec![u];
-    let mut side_v = vec![v];
-    for &d in items {
-        if d == u || d == v {
-            continue;
-        }
-        let wu: f32 = side_u.iter().map(|&m| crm.weight(d, m)).sum();
-        let wv: f32 = side_v.iter().map(|&m| crm.weight(d, m)).sum();
-        if wu > wv || (wu == wv && side_u.len() <= side_v.len()) {
-            side_u.push(d);
-        } else {
-            side_v.push(d);
-        }
-    }
-    side_u.sort_unstable();
-    side_v.sort_unstable();
-    (side_u, side_v)
 }
 
 #[cfg(test)]

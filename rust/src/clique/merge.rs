@@ -34,24 +34,57 @@ pub fn union_density(c1: &[u32], c2: &[u32], crm: &CrmWindow) -> f32 {
 
 impl CliqueSet {
     /// Run one approximate-merging pass.
+    ///
+    /// Candidate enumeration is **size-bucketed**: cliques are grouped by
+    /// `|c|`, and only buckets `s` × `ω − s` are crossed — the pairs with
+    /// `|c1| + |c2| = ω`, which is the paper's merge precondition. The
+    /// all-pairs O(m²) scan this replaces evaluated every pair just to
+    /// discard the size mismatches. Ranking is fully deterministic
+    /// (density desc, slot ids as tie-break); with distinct densities it
+    /// is identical to the previous enumeration.
     pub fn merge_approx(&mut self, crm: &CrmWindow, omega: u32, gamma: f32) {
         let omega = omega as usize;
-        // Collect candidate pairs (|c1|+|c2| == ω since cliques are
-        // disjoint) with their density.
         let ids: Vec<(usize, usize)> = {
             let live: Vec<(usize, &[u32])> = self.iter_ids().collect();
+            // size -> positions in `live` (only sizes < ω can pair up).
+            let mut by_size: std::collections::BTreeMap<usize, Vec<usize>> =
+                Default::default();
+            for (pos, (_, c)) in live.iter().enumerate() {
+                if c.len() < omega {
+                    by_size.entry(c.len()).or_default().push(pos);
+                }
+            }
             let mut pairs = Vec::new();
-            for a in 0..live.len() {
-                for b in (a + 1)..live.len() {
-                    let (ia, ca) = live[a];
-                    let (ib, cb) = live[b];
-                    if ca.len() + cb.len() == omega {
-                        pairs.push((ia, ib, union_density(ca, cb, crm)));
+            for (&s1, b1) in &by_size {
+                let s2 = omega - s1; // both < ω, so s2 >= 1
+                if s2 < s1 {
+                    break; // every remaining bucket pairs downward only
+                }
+                if s1 == s2 {
+                    for x in 0..b1.len() {
+                        for y in (x + 1)..b1.len() {
+                            let (ia, ca) = live[b1[x]];
+                            let (ib, cb) = live[b1[y]];
+                            pairs.push((ia, ib, union_density(ca, cb, crm)));
+                        }
+                    }
+                } else if let Some(b2) = by_size.get(&s2) {
+                    for &x in b1 {
+                        for &y in b2 {
+                            let (ia, ca) = live[x];
+                            let (ib, cb) = live[y];
+                            let d = union_density(ca, cb, crm);
+                            pairs.push((ia.min(ib), ia.max(ib), d));
+                        }
                     }
                 }
             }
             pairs.retain(|&(_, _, d)| d >= gamma);
-            pairs.sort_unstable_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
+            pairs.sort_unstable_by(|x, y| {
+                y.2.partial_cmp(&x.2)
+                    .unwrap()
+                    .then((x.0, x.1).cmp(&(y.0, y.1)))
+            });
             pairs.into_iter().map(|(a, b, _)| (a, b)).collect()
         };
 

@@ -143,24 +143,41 @@ impl CliqueSet {
     /// `cap` bounds growth at ω when splitting is enabled (equivalent to
     /// split-after-grow but cheaper); `None` leaves sizes unbounded (the
     /// "w/o CS" variant).
+    ///
+    /// Degrees are one O(E) sweep over the CSR rows, and growth candidates
+    /// come from the seed's neighbor row (with weights read off the
+    /// entries) — never an O(U²) rescan of the unassigned set. Ordering is
+    /// decision-identical to the dense implementation: both sorts use
+    /// total-order comparators, so the candidate *sequence* does not
+    /// depend on how candidates were enumerated.
     pub fn form_new(&mut self, crm: &CrmWindow, cap: Option<u32>) {
         let k = crm.k();
         if k == 0 {
             return;
         }
-        // Degree per kept item, over unassigned nodes only.
-        let unassigned: Vec<u32> = crm
-            .active
+        // Unassigned kept items (ascending) + row-indexed membership mask.
+        let mut unassigned_row = vec![false; k];
+        let mut unassigned: Vec<u32> = Vec::new();
+        for (row, &d) in crm.active.iter().enumerate() {
+            if !self.item_to_clique.contains_key(&d) {
+                unassigned_row[row] = true;
+                unassigned.push(d);
+            }
+        }
+        // O(E) degrees: binary neighbors that are themselves unassigned.
+        let degs: HashMap<u32, usize> = unassigned
             .iter()
-            .copied()
-            .filter(|d| !self.item_to_clique.contains_key(d))
+            .map(|&u| {
+                let deg = crm
+                    .neighbors(u)
+                    .filter(|&(v, _, is_edge)| {
+                        is_edge && unassigned_row[crm.row_index(v).expect("kept")]
+                    })
+                    .count();
+                (u, deg)
+            })
             .collect();
-        let mut order = unassigned.clone();
-        let degree = |u: u32| -> usize {
-            unassigned.iter().filter(|&&v| crm.edge(u, v)).count()
-        };
-        let degs: HashMap<u32, usize> =
-            unassigned.iter().map(|&u| (u, degree(u))).collect();
+        let mut order = unassigned;
         order.sort_unstable_by(|&a, &b| degs[&b].cmp(&degs[&a]).then(a.cmp(&b)));
 
         let mut assigned: std::collections::HashSet<u32> = Default::default();
@@ -169,19 +186,21 @@ impl CliqueSet {
                 continue;
             }
             let mut members = vec![seed];
-            // Candidate neighbours sorted by weight to the seed, desc.
-            let mut cands: Vec<u32> = unassigned
-                .iter()
-                .copied()
-                .filter(|&v| v != seed && !assigned.contains(&v) && crm.edge(seed, v))
+            // Candidates straight from the seed's CSR row, sorted by
+            // co-access weight to the seed, desc (ties by id).
+            let mut cands: Vec<(u32, f32)> = crm
+                .neighbors(seed)
+                .filter(|&(v, _, is_edge)| {
+                    is_edge
+                        && unassigned_row[crm.row_index(v).expect("kept")]
+                        && !assigned.contains(&v)
+                })
+                .map(|(v, w, _)| (v, w))
                 .collect();
-            cands.sort_unstable_by(|&a, &b| {
-                crm.weight(seed, b)
-                    .partial_cmp(&crm.weight(seed, a))
-                    .unwrap()
-                    .then(a.cmp(&b))
+            cands.sort_unstable_by(|a, b| {
+                b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
             });
-            for v in cands {
+            for (v, _) in cands {
                 if let Some(cap) = cap {
                     if members.len() >= cap as usize {
                         break;

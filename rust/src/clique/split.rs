@@ -54,6 +54,19 @@ fn split_once(items: &[u32], crm: &CrmWindow) -> (Vec<u32>, Vec<u32>) {
             }
         }
     }
+    partition_by_affinity(items, u, v, crm)
+}
+
+/// Partition `items` into a `u`-side and a `v`-side by co-utilization
+/// affinity: each other member joins the side it has the larger total
+/// normalized weight towards. Shared by clique splitting (weakest-edge
+/// bisection) and Algorithm 4's removed-edge split ([`super::adjust`]).
+pub(crate) fn partition_by_affinity(
+    items: &[u32],
+    u: u32,
+    v: u32,
+    crm: &CrmWindow,
+) -> (Vec<u32>, Vec<u32>) {
     let mut side_u = vec![u];
     let mut side_v = vec![v];
     for &d in items {

@@ -1,15 +1,21 @@
 //! Edge-level diff between the binary CRMs of consecutive windows —
 //! the ΔE input of Algorithm 4 (Adjust Previous Cliques).
+//!
+//! Both windows expose sorted CSR neighbor rows, so ΔE is a **linear
+//! merge**: walk the union of kept items, and for each item the union of
+//! its two (sorted) binary-neighbor lists, emitting edges present on one
+//! side only. O(k + k' + E + E') time, no edge set is ever materialized —
+//! the HashSet-difference implementation this replaces built two full
+//! `HashSet<(u32, u32)>`s per window tick.
 
 use super::CrmWindow;
-use std::collections::HashSet;
 
 /// Set of changed edges between `CRM_bin(W-1)` and `CRM_bin(W)`.
 #[derive(Debug, Clone, Default)]
 pub struct EdgeDiff {
-    /// Edges present in W-1 but not in W (item-id pairs, u < v).
+    /// Edges present in W-1 but not in W (item-id pairs, u < v, sorted).
     pub removed: Vec<(u32, u32)>,
-    /// Edges present in W but not in W-1.
+    /// Edges present in W but not in W-1 (sorted).
     pub added: Vec<(u32, u32)>,
 }
 
@@ -23,17 +29,95 @@ impl EdgeDiff {
     }
 }
 
+/// Append every binary edge `(u, v)` with `v > u` of `w`'s row `u` to
+/// `out` (ascending — CSR rows are sorted by id).
+fn push_upper_row(w: &CrmWindow, u: u32, out: &mut Vec<(u32, u32)>) {
+    for (v, _, is_edge) in w.neighbors(u) {
+        if is_edge && v > u {
+            out.push((u, v));
+        }
+    }
+}
+
+/// Merge the upper (`v > u`) binary-neighbor lists of item `u` in both
+/// windows, pushing one-sided edges to the matching output.
+fn merge_rows(
+    prev: &CrmWindow,
+    curr: &CrmWindow,
+    u: u32,
+    removed: &mut Vec<(u32, u32)>,
+    added: &mut Vec<(u32, u32)>,
+) {
+    let mut p = prev.neighbors(u).filter(|&(v, _, e)| e && v > u);
+    let mut c = curr.neighbors(u).filter(|&(v, _, e)| e && v > u);
+    let (mut pv, mut cv) = (p.next(), c.next());
+    loop {
+        match (pv, cv) {
+            (Some((a, ..)), Some((b, ..))) => {
+                if a == b {
+                    pv = p.next();
+                    cv = c.next();
+                } else if a < b {
+                    removed.push((u, a));
+                    pv = p.next();
+                } else {
+                    added.push((u, b));
+                    cv = c.next();
+                }
+            }
+            (Some((a, ..)), None) => {
+                removed.push((u, a));
+                pv = p.next();
+            }
+            (None, Some((b, ..))) => {
+                added.push((u, b));
+                cv = c.next();
+            }
+            (None, None) => break,
+        }
+    }
+}
+
 /// Compute ΔE between two windows. Works on item-id space, so windows with
 /// different kept sets compare correctly (an item leaving the kept set
-/// removes all its edges).
+/// removes all its edges). Outputs are sorted `(u, v)` pairs with `u < v`,
+/// produced directly by the merge — no set difference, no re-sort.
 pub fn diff_windows(prev: &CrmWindow, curr: &CrmWindow) -> EdgeDiff {
-    let prev_edges: HashSet<(u32, u32)> = prev.edges().into_iter().collect();
-    let curr_edges: HashSet<(u32, u32)> = curr.edges().into_iter().collect();
-
-    let mut removed: Vec<(u32, u32)> = prev_edges.difference(&curr_edges).copied().collect();
-    let mut added: Vec<(u32, u32)> = curr_edges.difference(&prev_edges).copied().collect();
-    removed.sort_unstable();
-    added.sort_unstable();
+    let mut removed = Vec::new();
+    let mut added = Vec::new();
+    let (pa, ca) = (&prev.active, &curr.active);
+    let (mut pi, mut ci) = (0usize, 0usize);
+    // Ascending merge of the two kept-item lists: rows ascend, and within
+    // a row neighbors ascend, so outputs come out lexicographically sorted.
+    while pi < pa.len() || ci < ca.len() {
+        let pu = pa.get(pi).copied();
+        let cu = ca.get(ci).copied();
+        match (pu, cu) {
+            (Some(u), Some(v)) if u == v => {
+                merge_rows(prev, curr, u, &mut removed, &mut added);
+                pi += 1;
+                ci += 1;
+            }
+            (Some(u), Some(v)) if u < v => {
+                // Kept only in W-1: all its (upper) edges are removals.
+                push_upper_row(prev, u, &mut removed);
+                pi += 1;
+            }
+            (Some(_), Some(v)) => {
+                push_upper_row(curr, v, &mut added);
+                ci += 1;
+            }
+            (Some(u), None) => {
+                push_upper_row(prev, u, &mut removed);
+                pi += 1;
+            }
+            (None, Some(v)) => {
+                push_upper_row(curr, v, &mut added);
+                ci += 1;
+            }
+            (None, None) => unreachable!("loop condition"),
+        }
+    }
     EdgeDiff { removed, added }
 }
 
@@ -50,6 +134,19 @@ mod tests {
     fn window(pairs: &[(u32, u32)]) -> CrmWindow {
         let reqs: Vec<Request> = pairs.iter().map(|&(a, b)| req(&[a, b])).collect();
         build_native(&reqs, 16, 0.0, 1.0)
+    }
+
+    /// Reference diff via edge-set differences (the implementation this
+    /// module replaced) — the merge must agree exactly.
+    fn diff_reference(prev: &CrmWindow, curr: &CrmWindow) -> EdgeDiff {
+        use std::collections::HashSet;
+        let p: HashSet<(u32, u32)> = prev.edges().into_iter().collect();
+        let c: HashSet<(u32, u32)> = curr.edges().into_iter().collect();
+        let mut removed: Vec<(u32, u32)> = p.difference(&c).copied().collect();
+        let mut added: Vec<(u32, u32)> = c.difference(&p).copied().collect();
+        removed.sort_unstable();
+        added.sort_unstable();
+        EdgeDiff { removed, added }
     }
 
     #[test]
@@ -86,5 +183,33 @@ mod tests {
         let d = diff_windows(&a, &b);
         assert_eq!(d.removed.len(), 3);
         assert_eq!(d.added, vec![(5, 6)]);
+    }
+
+    #[test]
+    fn merge_matches_set_difference_reference() {
+        let cases: &[(&[(u32, u32)], &[(u32, u32)])] = &[
+            (&[(0, 1), (1, 2), (2, 3)], &[(1, 2), (3, 4), (0, 5)]),
+            (&[(0, 9), (4, 7)], &[]),
+            (&[], &[(2, 6), (2, 7), (6, 7)]),
+            (&[(0, 1), (0, 2), (0, 3)], &[(0, 2)]),
+            (&[(1, 3), (5, 8)], &[(1, 3), (5, 8)]),
+        ];
+        for (pa, ca) in cases {
+            let a = window(pa);
+            let b = window(ca);
+            let got = diff_windows(&a, &b);
+            let want = diff_reference(&a, &b);
+            assert_eq!(got.removed, want.removed, "{pa:?} -> {ca:?}");
+            assert_eq!(got.added, want.added, "{pa:?} -> {ca:?}");
+        }
+    }
+
+    #[test]
+    fn outputs_sorted() {
+        let a = window(&[(0, 1), (2, 9), (3, 4), (0, 7)]);
+        let b = window(&[(5, 6), (1, 2), (8, 9)]);
+        let d = diff_windows(&a, &b);
+        assert!(d.removed.windows(2).all(|w| w[0] < w[1]));
+        assert!(d.added.windows(2).all(|w| w[0] < w[1]));
     }
 }

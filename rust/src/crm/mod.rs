@@ -9,17 +9,19 @@
 //!   re-implementation used for sizes with no artifact, for tests, and as
 //!   the ablation baseline in the §Perf comparison.
 //!
-//! Both produce a [`CrmWindow`]: a *compacted* dense matrix over only the
-//! kept (top-p% most frequent) items, which is what the clique machinery
-//! consumes.
+//! Both produce a [`CrmWindow`]: a **sparse CSR adjacency** over only the
+//! kept (top-p% most frequent) items. Realistic CRMs are overwhelmingly
+//! sparse — a window touches O(|W|·d̄²) item pairs, not k² — so the window
+//! stores one sorted neighbor list per kept item (co-access weight +
+//! binary-edge flag per entry) instead of dense `k×k` matrices. Memory is
+//! O(k + E); `edges()`/`edge_count()` are O(E); point probes
+//! (`edge`/`weight`) binary-search one row. See DESIGN.md §9.
 
 pub mod diff;
 pub mod native;
 
 pub use diff::{diff_windows, EdgeDiff};
 pub use native::build_native;
-
-use std::collections::HashMap;
 
 use crate::trace::model::Request;
 
@@ -32,26 +34,62 @@ use crate::trace::model::Request;
 /// one item per request still registers pairwise co-utilization — exactly
 /// the signal Figure 2's timeline describes. Within-request co-access is
 /// a transaction of its own chain trivially.
+///
+/// Item lists are accumulated as borrowed slices and each transaction is
+/// sorted + deduplicated exactly once, when its session *closes* — not
+/// per incoming request.
 pub fn sessionize(window: &[Request], gap: f64) -> Vec<Request> {
-    // (last time, index into out) per server.
-    let mut open: HashMap<u32, (f64, usize)> = HashMap::new();
+    use std::collections::HashMap;
+
+    /// An open session: last arrival, its slot in `out`, and the item
+    /// slices collected so far (borrowed from `window` — nothing is
+    /// copied until the session closes).
+    struct Open<'a> {
+        last_t: f64,
+        idx: usize,
+        parts: Vec<&'a [u32]>,
+    }
+
+    fn close(open: Open<'_>, out: &mut [Request]) {
+        let mut items: Vec<u32> =
+            Vec::with_capacity(open.parts.iter().map(|p| p.len()).sum());
+        for p in open.parts {
+            items.extend_from_slice(p);
+        }
+        items.sort_unstable();
+        items.dedup();
+        out[open.idx].items = items;
+    }
+
+    let mut open: HashMap<u32, Open<'_>> = HashMap::new();
     let mut out: Vec<Request> = Vec::new();
     for r in window {
-        match open.get(&r.server) {
-            Some(&(last_t, idx)) if r.time - last_t <= gap => {
-                let tx = &mut out[idx];
-                tx.items.extend_from_slice(&r.items);
-                open.insert(r.server, (r.time, idx));
-            }
-            _ => {
-                out.push(r.clone());
-                open.insert(r.server, (r.time, out.len() - 1));
+        let continues = matches!(
+            open.get(&r.server),
+            Some(o) if r.time - o.last_t <= gap
+        );
+        if continues {
+            let o = open.get_mut(&r.server).expect("session just probed");
+            o.last_t = r.time;
+            o.parts.push(&r.items);
+        } else {
+            let fresh = Open {
+                last_t: r.time,
+                idx: out.len(),
+                parts: vec![&r.items],
+            };
+            out.push(Request {
+                items: Vec::new(),
+                server: r.server,
+                time: r.time,
+            });
+            if let Some(prev) = open.insert(r.server, fresh) {
+                close(prev, &mut out);
             }
         }
     }
-    for tx in out.iter_mut() {
-        tx.items.sort_unstable();
-        tx.items.dedup();
+    for o in open.into_values() {
+        close(o, &mut out);
     }
     out
 }
@@ -97,22 +135,49 @@ impl CrmBuilder for NativeCrmBuilder {
     }
 }
 
+/// One directed CSR adjacency entry of [`CrmWindow`]: pre-sorted by
+/// `(row, neighbor id)` before assembly.
+///
+/// `is_edge` is the binarization decision (`norm > θ` in the native path,
+/// `bin > 0.5` from the artifact) — kept explicitly so the window does not
+/// need to remember θ and the XLA outputs round-trip losslessly.
+pub(crate) struct CsrEntry {
+    /// Row index into `active` (the *source* item).
+    pub row: u32,
+    /// Neighbor *item id* (not row index).
+    pub id: u32,
+    /// Min-max-normalized co-access weight.
+    pub w: f32,
+    /// Binary CRM membership.
+    pub is_edge: bool,
+}
+
 /// A normalized, thresholded correlation matrix over the kept item set of
-/// one clique-generation window `W`.
+/// one clique-generation window `W`, stored as a CSR adjacency.
+///
+/// Every nonzero co-access pair appears twice (once per direction); each
+/// row's neighbor list is sorted by item id. Pairs that never co-occur are
+/// implicit (weight 0, no edge — exact match with the dense zero entries,
+/// since θ ∈ [0,1] means `0 > θ` is always false). Memory is O(k + E).
 #[derive(Debug, Clone, Default)]
 pub struct CrmWindow {
     /// Kept item ids (top-p% most frequent active items), ascending.
     pub active: Vec<u32>,
-    /// item id → index into `active` / matrix rows.
-    pub index: HashMap<u32, usize>,
-    /// Dense lookup table `item id → index+1` (0 = absent) — the clique
-    /// machinery queries edges per item pair in tight loops, where a
-    /// vector probe beats hashing (§Perf iteration 3).
+    /// Dense lookup table `item id → row+1` (0 = absent) — the clique
+    /// machinery queries rows per item in tight loops, where a vector
+    /// probe beats hashing (§Perf iteration 3). This is also the only
+    /// id→row map: the former `index: HashMap` duplicate is gone.
     lut: Vec<u32>,
-    /// Dense `k×k` min-max-normalized co-access strengths, row-major.
-    pub norm: Vec<f32>,
-    /// Dense `k×k` binary adjacency (`norm > θ`), row-major.
-    pub bin: Vec<bool>,
+    /// CSR row offsets, `len == k + 1`.
+    row_start: Vec<usize>,
+    /// Neighbor item ids, ascending within each row.
+    nbr_id: Vec<u32>,
+    /// Normalized co-access weight per entry.
+    nbr_w: Vec<f32>,
+    /// Binary-CRM membership per entry.
+    nbr_edge: Vec<bool>,
+    /// Undirected binary edge count (precomputed at assembly).
+    n_edges: usize,
 }
 
 impl CrmWindow {
@@ -121,8 +186,46 @@ impl CrmWindow {
         self.active.len()
     }
 
+    /// Assemble from the kept set and directed adjacency entries.
+    /// `entries` must contain both directions of every pair and no
+    /// self-loops; it is sorted here.
+    pub(crate) fn from_entries(active: Vec<u32>, mut entries: Vec<CsrEntry>) -> Self {
+        entries.sort_unstable_by_key(|e| (e.row, e.id));
+        let k = active.len();
+        let mut w = Self {
+            active,
+            lut: Vec::new(),
+            row_start: vec![0; k + 1],
+            nbr_id: Vec::with_capacity(entries.len()),
+            nbr_w: Vec::with_capacity(entries.len()),
+            nbr_edge: Vec::with_capacity(entries.len()),
+            n_edges: 0,
+        };
+        for e in &entries {
+            w.row_start[e.row as usize + 1] += 1;
+        }
+        for i in 0..k {
+            w.row_start[i + 1] += w.row_start[i];
+        }
+        let mut n_edges = 0usize;
+        for e in entries {
+            // Count the u < v direction only, so `edge_count()` equals
+            // `edges().len()` even if a caller-supplied full matrix is
+            // asymmetric (nothing validates symmetry on `from_full`).
+            if e.is_edge && e.id > w.active[e.row as usize] {
+                n_edges += 1;
+            }
+            w.nbr_id.push(e.id);
+            w.nbr_w.push(e.w);
+            w.nbr_edge.push(e.is_edge);
+        }
+        w.n_edges = n_edges;
+        w.build_lut();
+        w
+    }
+
     /// Build the internal item-id lookup table; must be called by every
-    /// constructor after `active`/`index` are final.
+    /// constructor after `active` is final.
     pub(crate) fn build_lut(&mut self) {
         let cap = self
             .active
@@ -143,62 +246,101 @@ impl CrmWindow {
         }
     }
 
+    /// Row index of `item` in `active`, if kept (the id→row map).
+    #[inline]
+    pub fn row_index(&self, item: u32) -> Option<usize> {
+        self.idx(item)
+    }
+
     /// Is `item` part of the kept set?
     #[inline]
     pub fn contains(&self, item: u32) -> bool {
         self.idx(item).is_some()
     }
 
+    #[inline]
+    fn row_range(&self, row: usize) -> std::ops::Range<usize> {
+        self.row_start[row]..self.row_start[row + 1]
+    }
+
+    /// Position of the `(u, v)` entry in the CSR arrays, if present.
+    #[inline]
+    fn entry(&self, u: u32, v: u32) -> Option<usize> {
+        let i = self.idx(u)?;
+        let r = self.row_range(i);
+        self.nbr_id[r.clone()]
+            .binary_search(&v)
+            .ok()
+            .map(|p| r.start + p)
+    }
+
     /// Binary edge between two *item ids* (false if either is not kept).
     #[inline]
     pub fn edge(&self, u: u32, v: u32) -> bool {
-        match (self.idx(u), self.idx(v)) {
-            (Some(i), Some(j)) if i != j => self.bin[i * self.k() + j],
-            _ => false,
+        match self.entry(u, v) {
+            Some(p) => self.nbr_edge[p],
+            None => false,
         }
     }
 
-    /// Normalized co-access weight between two item ids (0 if not kept).
+    /// Normalized co-access weight between two item ids (0 if not kept,
+    /// or never co-accessed in the window).
     #[inline]
     pub fn weight(&self, u: u32, v: u32) -> f32 {
-        match (self.idx(u), self.idx(v)) {
-            (Some(i), Some(j)) if i != j => self.norm[i * self.k() + j],
-            _ => 0.0,
+        match self.entry(u, v) {
+            Some(p) => self.nbr_w[p],
+            None => 0.0,
         }
     }
 
-    /// All binary edges as item-id pairs `(u, v)` with `u < v`.
+    /// The sorted neighbor-id list of `item`'s CSR row (empty slice if
+    /// `item` is not kept). Includes sub-threshold co-access neighbors;
+    /// pair with [`neighbors`](Self::neighbors) for weights/flags.
+    pub fn neighbor_ids(&self, item: u32) -> &[u32] {
+        match self.idx(item) {
+            Some(i) => &self.nbr_id[self.row_range(i)],
+            None => &[],
+        }
+    }
+
+    /// Iterate `item`'s CSR row as `(neighbor id, weight, is_edge)`,
+    /// ascending by id. Empty if `item` is not kept.
+    pub fn neighbors(
+        &self,
+        item: u32,
+    ) -> impl Iterator<Item = (u32, f32, bool)> + '_ {
+        let r = match self.idx(item) {
+            Some(i) => self.row_range(i),
+            None => 0..0,
+        };
+        r.map(move |p| (self.nbr_id[p], self.nbr_w[p], self.nbr_edge[p]))
+    }
+
+    /// All binary edges as item-id pairs `(u, v)` with `u < v`, sorted —
+    /// one O(k + E) sweep over the CSR rows.
     pub fn edges(&self) -> Vec<(u32, u32)> {
-        let k = self.k();
-        let mut out = Vec::new();
-        for i in 0..k {
-            for j in (i + 1)..k {
-                if self.bin[i * k + j] {
-                    out.push((self.active[i], self.active[j]));
+        let mut out = Vec::with_capacity(self.n_edges);
+        for (i, &u) in self.active.iter().enumerate() {
+            for p in self.row_range(i) {
+                if self.nbr_edge[p] && self.nbr_id[p] > u {
+                    out.push((u, self.nbr_id[p]));
                 }
             }
         }
         out
     }
 
-    /// Number of binary edges.
+    /// Number of binary edges (precomputed — O(1)).
     pub fn edge_count(&self) -> usize {
-        let k = self.k();
-        let mut c = 0;
-        for i in 0..k {
-            for j in (i + 1)..k {
-                if self.bin[i * k + j] {
-                    c += 1;
-                }
-            }
-        }
-        c
+        self.n_edges
     }
 
     /// Build from full `n×n` matrices (the XLA artifact's outputs),
     /// compacting to the kept item set. `keep` mirrors the artifact's
     /// internal top-p% rule: an item is kept iff its row/col participates
     /// in the normalized support, i.e. `freq >= kth` among active items.
+    /// Only nonzero entries are materialized — the dense inputs are the
+    /// artifact's interchange format, not the resident representation.
     pub fn from_full(
         norm_full: &[f32],
         bin_full: &[f32],
@@ -211,44 +353,43 @@ impl CrmWindow {
         assert_eq!(freq.len(), n);
         let keep = top_k_keep_mask(freq, top_frac);
         let active: Vec<u32> = (0..n as u32).filter(|&i| keep[i as usize]).collect();
-        let k = active.len();
-        let mut index = HashMap::with_capacity(k);
-        for (ci, &item) in active.iter().enumerate() {
-            index.insert(item, ci);
-        }
-        let mut norm = vec![0.0f32; k * k];
-        let mut bin = vec![false; k * k];
+        let mut entries = Vec::new();
         for (ci, &u) in active.iter().enumerate() {
-            for (cj, &v) in active.iter().enumerate() {
-                norm[ci * k + cj] = norm_full[u as usize * n + v as usize];
-                bin[ci * k + cj] = bin_full[u as usize * n + v as usize] > 0.5;
+            for &v in &active {
+                if u == v {
+                    continue;
+                }
+                let w = norm_full[u as usize * n + v as usize];
+                let is_edge = bin_full[u as usize * n + v as usize] > 0.5;
+                if w != 0.0 || is_edge {
+                    entries.push(CsrEntry {
+                        row: ci as u32,
+                        id: v,
+                        w,
+                        is_edge,
+                    });
+                }
             }
         }
-        let mut w = Self {
-            active,
-            index,
-            lut: Vec::new(),
-            norm,
-            bin,
-        };
-        w.build_lut();
-        w
+        Self::from_entries(active, entries)
     }
 }
 
 /// The top-p% keep rule shared by the native path and `from_full`,
 /// mirroring the L2 graph exactly: keep item iff `freq > 0` and
 /// `freq >= kth`, where `kth` is the `ceil(top_frac · n_active)`-th largest
-/// nonzero frequency (ties at the boundary keep everybody).
+/// nonzero frequency (ties at the boundary keep everybody). The threshold
+/// is found by O(n) selection (`select_nth_unstable_by`), not a full sort.
 pub fn top_k_keep_mask(freq: &[f32], top_frac: f32) -> Vec<bool> {
-    let n_active = freq.iter().filter(|&&f| f > 0.0).count();
-    if n_active == 0 {
+    let mut nonzero: Vec<f32> = freq.iter().copied().filter(|&f| f > 0.0).collect();
+    if nonzero.is_empty() {
         return vec![false; freq.len()];
     }
-    let k = ((top_frac as f64 * n_active as f64).ceil() as usize).max(1);
-    let mut sorted: Vec<f32> = freq.iter().copied().filter(|&f| f > 0.0).collect();
-    sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
-    let kth = sorted[(k - 1).min(sorted.len() - 1)];
+    let k = ((top_frac as f64 * nonzero.len() as f64).ceil() as usize).max(1);
+    let pos = (k - 1).min(nonzero.len() - 1);
+    let (_, kth, _) =
+        nonzero.select_nth_unstable_by(pos, |a, b| b.partial_cmp(a).unwrap());
+    let kth = *kth;
     freq.iter().map(|&f| f > 0.0 && f >= kth).collect()
 }
 
@@ -285,15 +426,42 @@ mod tests {
     }
 
     #[test]
+    fn keep_mask_matches_sort_reference() {
+        // The O(n) selection must agree with the original full-sort rule
+        // on duplicate-heavy inputs (boundary ties keep everybody).
+        let cases: &[&[f32]] = &[
+            &[3.0, 3.0, 3.0, 2.0, 2.0, 1.0, 0.0],
+            &[1.0; 8],
+            &[9.0, 1.0, 1.0, 1.0, 1.0],
+            &[0.5, 4.5, 4.5, 0.5, 7.0],
+        ];
+        for freq in cases {
+            for frac in [0.1f32, 0.25, 0.5, 0.75, 1.0] {
+                let got = top_k_keep_mask(freq, frac);
+                // Reference: full descending sort.
+                let n_active = freq.iter().filter(|&&f| f > 0.0).count();
+                let k = ((frac as f64 * n_active as f64).ceil() as usize).max(1);
+                let mut sorted: Vec<f32> =
+                    freq.iter().copied().filter(|&f| f > 0.0).collect();
+                sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+                let kth = sorted[(k - 1).min(sorted.len() - 1)];
+                let want: Vec<bool> =
+                    freq.iter().map(|&f| f > 0.0 && f >= kth).collect();
+                assert_eq!(got, want, "freq={freq:?} frac={frac}");
+            }
+        }
+    }
+
+    #[test]
     fn from_full_compacts() {
         // n=3, items 0 and 2 kept (freq), 1 inactive.
         let n = 3;
         let mut norm = vec![0.0f32; 9];
         let mut bin = vec![0.0f32; 9];
-        norm[0 * n + 2] = 1.0;
-        norm[2 * n + 0] = 1.0;
-        bin[0 * n + 2] = 1.0;
-        bin[2 * n + 0] = 1.0;
+        norm[2] = 1.0; // [0][2]
+        norm[2 * n] = 1.0; // [2][0]
+        bin[2] = 1.0;
+        bin[2 * n] = 1.0;
         let freq = vec![4.0, 0.0, 4.0];
         let w = CrmWindow::from_full(&norm, &bin, &freq, n, 1.0);
         assert_eq!(w.active, vec![0, 2]);
@@ -302,5 +470,109 @@ mod tests {
         assert_eq!(w.weight(0, 2), 1.0);
         assert_eq!(w.edges(), vec![(0, 2)]);
         assert_eq!(w.edge_count(), 1);
+        assert_eq!(w.neighbor_ids(0), &[2]);
+        assert_eq!(w.neighbor_ids(1), &[] as &[u32]);
+        assert_eq!(w.row_index(2), Some(1));
+    }
+
+    #[test]
+    fn from_full_asymmetric_bin_keeps_count_consistent() {
+        // Nothing validates symmetry on `from_full`; if an artifact ever
+        // emits a one-directional flag, `edge_count()` must still agree
+        // with `edges().len()` (both count the u < v direction).
+        let n = 3;
+        let mut norm = vec![0.0f32; 9];
+        let mut bin = vec![0.0f32; 9];
+        norm[2] = 1.0; // [0][2]
+        norm[2 * n] = 1.0; // [2][0]
+        bin[2] = 1.0; // only the (0,2) direction flagged
+        let freq = vec![4.0, 0.0, 4.0];
+        let w = CrmWindow::from_full(&norm, &bin, &freq, n, 1.0);
+        assert_eq!(w.edge_count(), w.edges().len());
+        assert_eq!(w.edges(), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn csr_rows_sorted_and_symmetric() {
+        let reqs: Vec<Request> = vec![
+            Request::new(vec![0, 1, 2], 0, 0.0),
+            Request::new(vec![1, 2], 0, 0.0),
+            Request::new(vec![0, 3], 0, 0.0),
+        ];
+        let w = build_native(&reqs, 8, 0.2, 1.0);
+        for &u in &w.active {
+            let ids = w.neighbor_ids(u);
+            assert!(ids.windows(2).all(|p| p[0] < p[1]), "row {u} unsorted");
+            for (v, wt, e) in w.neighbors(u) {
+                assert_ne!(u, v, "self loop");
+                assert_eq!(w.weight(v, u), wt, "asymmetric weight ({u},{v})");
+                assert_eq!(w.edge(v, u), e, "asymmetric edge ({u},{v})");
+            }
+        }
+        // edge_count agrees with the materialized list.
+        assert_eq!(w.edge_count(), w.edges().len());
+    }
+
+    /// Reference single-pass sessionizer (the pre-CSR implementation):
+    /// clones every request up front, re-sorts at the end.
+    fn sessionize_reference(window: &[Request], gap: f64) -> Vec<Request> {
+        use std::collections::HashMap;
+        let mut open: HashMap<u32, (f64, usize)> = HashMap::new();
+        let mut out: Vec<Request> = Vec::new();
+        for r in window {
+            match open.get(&r.server) {
+                Some(&(last_t, idx)) if r.time - last_t <= gap => {
+                    let tx = &mut out[idx];
+                    tx.items.extend_from_slice(&r.items);
+                    open.insert(r.server, (r.time, idx));
+                }
+                _ => {
+                    out.push(r.clone());
+                    open.insert(r.server, (r.time, out.len() - 1));
+                }
+            }
+        }
+        for tx in out.iter_mut() {
+            tx.items.sort_unstable();
+            tx.items.dedup();
+        }
+        out
+    }
+
+    #[test]
+    fn sessionize_matches_reference_on_gap_heavy_trace() {
+        // Gap-heavy: inter-arrivals straddle the gap constantly, so
+        // sessions open, close, and interleave across servers.
+        let mut reqs = Vec::new();
+        let mut t = 0.0f64;
+        for i in 0..400u32 {
+            t += match i % 5 {
+                0 => 0.05, // well within gap
+                1 => 0.5,  // exactly at gap boundary
+                2 => 0.51, // just past gap
+                3 => 3.0,  // far past gap
+                _ => 0.49,
+            };
+            let server = i % 3;
+            let items = vec![i % 7, (i * 3 + 1) % 7, (i / 2) % 7];
+            reqs.push(Request::new(items, server, t));
+        }
+        for gap in [0.0, 0.5, 1.0, 10.0] {
+            assert_eq!(
+                sessionize(&reqs, gap),
+                sessionize_reference(&reqs, gap),
+                "gap={gap}"
+            );
+        }
+    }
+
+    #[test]
+    fn sessionize_empty_and_single() {
+        assert!(sessionize(&[], 1.0).is_empty());
+        let one = vec![Request::new(vec![3, 1], 0, 5.0)];
+        let txs = sessionize(&one, 1.0);
+        assert_eq!(txs.len(), 1);
+        assert_eq!(txs[0].items, vec![1, 3]);
+        assert_eq!(txs[0].time, 5.0);
     }
 }

@@ -5,8 +5,15 @@
 //! Semantics must match `python/compile/model.py` bit-for-bit at the
 //! *decision* level (same kept set, same binary edges); the integration
 //! test `integration_runtime.rs` asserts agreement between the two paths.
+//!
+//! Co-occurrence is accumulated **sparsely** — one hash bucket per item
+//! pair that actually co-occurs — and assembled straight into the CSR
+//! window. No `k×k` matrix is ever materialized: memory is O(n + E) and
+//! work is O(|W|·d̄² + E log E) (the paper's Algorithm-2 cost plus the
+//! per-row sort), which is what makes per-window bundle maintenance cheap
+//! relative to serving at CDN catalog scale (DESIGN.md §9).
 
-use super::{top_k_keep_mask, CrmWindow};
+use super::{top_k_keep_mask, CrmWindow, CsrEntry};
 use crate::trace::model::Request;
 use std::collections::HashMap;
 
@@ -33,23 +40,32 @@ pub fn build_native(
     if k == 0 {
         return CrmWindow::default();
     }
-    let mut index = HashMap::with_capacity(k);
+    // id → row map (vector LUT; `active` is ascending so rows are too).
+    let cap = *active.last().unwrap() as usize + 1;
+    let mut row_of = vec![u32::MAX; cap];
     for (ci, &item) in active.iter().enumerate() {
-        index.insert(item, ci);
+        row_of[item as usize] = ci as u32;
     }
 
-    // Pass 2: co-occurrence over kept items only (sparse accumulation —
-    // the request sets are tiny, so this is O(|W|·d̄²) like the paper).
-    let mut raw = vec![0.0f32; k * k];
-    let mut kept_buf: Vec<usize> = Vec::with_capacity(8);
+    // Pass 2: sparse co-occurrence over kept items only — one bucket per
+    // pair that co-occurs, keyed `(min_row << 32) | max_row`. The request
+    // sets are tiny, so this is O(|W|·d̄²) like the paper, and the bucket
+    // count is E, not k².
+    let mut raw: HashMap<u64, f32> = HashMap::new();
+    let mut kept_buf: Vec<u32> = Vec::with_capacity(8);
     for r in window {
         kept_buf.clear();
-        kept_buf.extend(r.items.iter().filter_map(|d| index.get(d).copied()));
+        kept_buf.extend(r.items.iter().filter_map(|&d| {
+            match row_of.get(d as usize) {
+                Some(&row) if row != u32::MAX => Some(row),
+                _ => None,
+            }
+        }));
         for a in 0..kept_buf.len() {
             for b in (a + 1)..kept_buf.len() {
-                let (i, j) = (kept_buf[a], kept_buf[b]);
-                raw[i * k + j] += 1.0;
-                raw[j * k + i] += 1.0;
+                // Request items are strictly ascending, so rows are too.
+                let key = (kept_buf[a] as u64) << 32 | kept_buf[b] as u64;
+                *raw.entry(key).or_insert(0.0) += 1.0;
             }
         }
     }
@@ -58,42 +74,38 @@ pub fn build_native(
     // anchored at zero: the raw CRM of any realistic window is dominated
     // by never-co-accessed (zero) pairs, so min = 0 in practice; anchoring
     // avoids the degenerate all-equal-counts window collapsing to zero
-    // edges (matches the L2 graph — see python/compile/model.py).
+    // edges (matches the L2 graph — see python/compile/model.py). Zero
+    // pairs stay implicit in the CSR: their normalized weight is 0 and
+    // `0 > θ` is false for θ ∈ [0,1], exactly the dense zero entries.
     let lo = 0.0f32;
     let mut hi = f32::NEG_INFINITY;
-    for i in 0..k {
-        for j in 0..k {
-            if i != j {
-                hi = hi.max(raw[i * k + j]);
-            }
-        }
+    for &c in raw.values() {
+        hi = hi.max(c);
     }
     if !hi.is_finite() {
         hi = 0.0;
     }
     let span = (hi - lo).max(1e-9);
 
-    let mut norm = vec![0.0f32; k * k];
-    let mut bin = vec![false; k * k];
-    for i in 0..k {
-        for j in 0..k {
-            if i != j {
-                let v = (raw[i * k + j] - lo) / span;
-                norm[i * k + j] = v;
-                bin[i * k + j] = v > theta;
-            }
-        }
+    let mut entries = Vec::with_capacity(raw.len() * 2);
+    for (key, c) in raw {
+        let (i, j) = ((key >> 32) as u32, key as u32);
+        let v = (c - lo) / span;
+        let is_edge = v > theta;
+        entries.push(CsrEntry {
+            row: i,
+            id: active[j as usize],
+            w: v,
+            is_edge,
+        });
+        entries.push(CsrEntry {
+            row: j,
+            id: active[i as usize],
+            w: v,
+            is_edge,
+        });
     }
-
-    let mut w = CrmWindow {
-        active,
-        index,
-        lut: Vec::new(),
-        norm,
-        bin,
-    };
-    w.build_lut();
-    w
+    CrmWindow::from_entries(active, entries)
 }
 
 #[cfg(test)]
@@ -127,6 +139,7 @@ mod tests {
         let w = build_native(&[], 10, 0.2, 0.1);
         assert_eq!(w.k(), 0);
         assert!(w.edges().is_empty());
+        assert_eq!(w.edge_count(), 0);
     }
 
     #[test]
@@ -171,6 +184,8 @@ mod tests {
         let w = build_native(&reqs, 4, 0.5, 1.0);
         assert!(w.edge(0, 1));
         assert!(!w.edge(0, 2));
+        // Sub-threshold co-access is still probeable by weight.
+        assert!(w.weight(0, 2) > 0.0);
     }
 
     #[test]
@@ -179,8 +194,23 @@ mod tests {
             .map(|i| req(&[(i % 5) as u32, ((i + 1) % 5) as u32]))
             .collect();
         let w = build_native(&reqs, 5, 0.2, 1.0);
-        for &v in &w.norm {
-            assert!((0.0..=1.0).contains(&v), "{v}");
+        for &u in &w.active {
+            for (_, wt, _) in w.neighbors(u) {
+                assert!((0.0..=1.0).contains(&wt), "{wt}");
+            }
         }
+    }
+
+    #[test]
+    fn csr_stores_only_cooccurring_pairs() {
+        // 6 kept items, but only 2 co-access pairs -> 4 directed entries,
+        // not 30: the O(k + E) memory claim, observable through the rows.
+        let reqs = vec![req(&[0, 1]), req(&[2, 3]), req(&[4]), req(&[5])];
+        let w = build_native(&reqs, 8, 0.0, 1.0);
+        assert_eq!(w.k(), 6);
+        let stored: usize = w.active.iter().map(|&u| w.neighbor_ids(u).len()).sum();
+        assert_eq!(stored, 4);
+        assert_eq!(w.edge_count(), 2);
+        assert!(w.neighbor_ids(4).is_empty());
     }
 }

@@ -10,6 +10,8 @@
 //!                 fig8c fig9a fig9b adversarial all)
 //!   scenario     Scenario Lab: phased non-stationary workload replays
 //!                (list | suite | <name> | <spec.toml>)
+//!   bench        tracked hot-path perf baseline; `--json` writes the
+//!                BENCH_*.json payload (EXPERIMENTS.md §Perf schema)
 //!   policy       policy registry introspection (list)
 //!   gen-trace    write a synthetic Netflix/Spotify-like trace to disk
 //!   trace-stats  analyze a trace file
@@ -59,6 +61,10 @@ struct Cli {
 }
 
 impl Cli {
+    /// Valueless switches (probed via `flag(..).is_some()`); every other
+    /// flag still requires a value and errors without one.
+    const BOOL_FLAGS: &'static [&'static str] = &["json"];
+
     fn parse(args: Vec<String>) -> anyhow::Result<Self> {
         let mut it = args.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
@@ -66,9 +72,12 @@ impl Cli {
         let mut flags = std::collections::HashMap::new();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
-                let val = it
-                    .next()
-                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                let val = if Self::BOOL_FLAGS.contains(&name) {
+                    String::new()
+                } else {
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?
+                };
                 flags.insert(name.to_string(), val);
             } else {
                 pos.push(a);
@@ -108,7 +117,7 @@ fn usage() {
     // The module doc is the manual; print its code block.
     println!(
         "akpc — Adaptive K-PackCache (cost-centric clique-packed CDN caching)\n\n\
-         usage: akpc <run|exp|scenario|policy|gen-trace|trace-stats|serve|config> [flags]\n\n\
+         usage: akpc <run|exp|scenario|bench|policy|gen-trace|trace-stats|serve|config> [flags]\n\n\
          flags: --config <toml> --requests <N> --engine <native|xla> --seed <N> --out <dir>\n\
          \u{20}      --progress <N> --jsonl <file>\n\
          run:       --policy <name>   (see `akpc policy list`)\n\
@@ -118,6 +127,7 @@ fn usage() {
          \u{20}           fig9a|fig9b|adversarial|ablations|shards|all>\n\
          scenario:  <list|suite|name|spec.toml> [--policy P] [--scale F]\n\
          \u{20}          [--shards N [--mode <ordered|parallel>]] [--out <dir>]\n\
+         bench:     [--json] [--scale F] [--out <file>]   (default BENCH_4.json)\n\
          policy:    list   (name + description + capabilities)\n\
          gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
          serve:     --dataset <netflix|spotify> [--requests N] [--shards N]\n\
@@ -272,6 +282,34 @@ fn main() -> anyhow::Result<()> {
             }
             println!("{}", outcome.row());
             println!("{}", outcome.to_json().to_string_pretty());
+        }
+        "bench" => {
+            let scale: f64 = cli
+                .flag("scale")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(1.0);
+            anyhow::ensure!(scale > 0.0, "--scale must be positive");
+            let opts = akpc::bench::perf::PerfOptions {
+                scale,
+                seed: cfg.seed,
+                ..Default::default()
+            };
+            let report = akpc::bench::perf::run_perf(&opts)?;
+            report.print();
+            if cli.flag("json").is_some() {
+                let out = match cli.flag("out") {
+                    Some(p) if !p.is_empty() => p.to_string(),
+                    _ => "BENCH_4.json".to_string(),
+                };
+                if let Some(dir) = std::path::Path::new(&out).parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                std::fs::write(&out, report.to_json().to_string_pretty())?;
+                println!("[wrote {out}]");
+            }
         }
         "config" => {
             println!("{}", cfg.to_toml());

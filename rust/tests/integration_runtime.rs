@@ -50,12 +50,15 @@ fn xla_agrees_with_native_on_netflix_windows() {
             let a = xla.build(&txs, 60, theta, frac);
             let b = native.build(&txs, 60, theta, frac);
             assert_eq!(a.active, b.active, "window {i}: kept set differs");
-            assert_eq!(a.bin, b.bin, "window {i}: binary CRM differs");
-            for (x, y) in a.norm.iter().zip(&b.norm) {
-                assert!(
-                    (x - y).abs() < 1e-5,
-                    "window {i}: norm differs: {x} vs {y}"
-                );
+            assert_eq!(a.edges(), b.edges(), "window {i}: binary CRM differs");
+            for &u in &a.active {
+                for &v in &a.active {
+                    let (x, y) = (a.weight(u, v), b.weight(u, v));
+                    assert!(
+                        (x - y).abs() < 1e-5,
+                        "window {i}: norm differs at ({u},{v}): {x} vs {y}"
+                    );
+                }
             }
         }
     }
@@ -74,7 +77,7 @@ fn xla_agrees_with_native_on_spotify_windows() {
         let a = xla.build(&txs, 60, 0.2, 1.0);
         let b = native.build(&txs, 60, 0.2, 1.0);
         assert_eq!(a.active, b.active);
-        assert_eq!(a.bin, b.bin);
+        assert_eq!(a.edges(), b.edges());
     }
 }
 
@@ -88,7 +91,7 @@ fn oversized_windows_fall_back_to_native() {
     let a = xla.build(&txs, 2000, 0.2, 0.1);
     let b = NativeCrmBuilder.build(&txs, 2000, 0.2, 0.1);
     assert_eq!(a.active, b.active);
-    assert_eq!(a.bin, b.bin);
+    assert_eq!(a.edges(), b.edges());
     assert!(xla.native_windows > 0);
 }
 

@@ -7,7 +7,7 @@ use akpc::algo::{Akpc, CachePolicy, NoPacking, Opt, PackCache2};
 use akpc::cache::CacheState;
 use akpc::clique::CliqueSet;
 use akpc::config::AkpcConfig;
-use akpc::crm::{diff_windows, native::build_native, sessionize, CrmWindow};
+use akpc::crm::{diff_windows, native::build_native, sessionize, top_k_keep_mask, CrmWindow};
 use akpc::trace::model::{Request, Trace};
 use akpc::util::{json, Rng};
 
@@ -367,6 +367,185 @@ fn prop_json_roundtrip() {
         assert_eq!(parsed, v);
         let pretty = json::parse(&v.to_string_pretty()).expect("parse pretty");
         assert_eq!(pretty, v);
+    });
+}
+
+/// Dense reference CRM — a direct transcription of the pre-CSR pipeline
+/// over full `n×n` matrices (zero outside kept pairs). The sparse window
+/// must agree with it bit-for-bit: same f32 expressions, same order.
+struct DenseCrm {
+    n: usize,
+    freq: Vec<f32>,
+    keep: Vec<bool>,
+    /// Full `n×n` min-max-normalized weights.
+    norm: Vec<f32>,
+    /// Full `n×n` binarization as 0.0/1.0 (`from_full`'s interchange).
+    bin: Vec<f32>,
+}
+
+impl DenseCrm {
+    fn build(window: &[Request], n_items: u32, theta: f32, top_frac: f32) -> Self {
+        let n = n_items as usize;
+        let mut freq = vec![0.0f32; n];
+        for r in window {
+            for &d in &r.items {
+                freq[d as usize] += 1.0;
+            }
+        }
+        let keep = top_k_keep_mask(&freq, top_frac);
+        let mut raw = vec![0.0f32; n * n];
+        let mut kept_buf: Vec<usize> = Vec::new();
+        for r in window {
+            kept_buf.clear();
+            kept_buf.extend(r.items.iter().map(|&d| d as usize).filter(|&d| keep[d]));
+            for a in 0..kept_buf.len() {
+                for b in (a + 1)..kept_buf.len() {
+                    let (i, j) = (kept_buf[a], kept_buf[b]);
+                    raw[i * n + j] += 1.0;
+                    raw[j * n + i] += 1.0;
+                }
+            }
+        }
+        let lo = 0.0f32;
+        let mut hi = f32::NEG_INFINITY;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && keep[i] && keep[j] {
+                    hi = hi.max(raw[i * n + j]);
+                }
+            }
+        }
+        if !hi.is_finite() {
+            hi = 0.0;
+        }
+        let span = (hi - lo).max(1e-9);
+        let mut norm = vec![0.0f32; n * n];
+        let mut bin = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && keep[i] && keep[j] {
+                    let v = (raw[i * n + j] - lo) / span;
+                    norm[i * n + j] = v;
+                    if v > theta {
+                        bin[i * n + j] = 1.0;
+                    }
+                }
+            }
+        }
+        Self {
+            n,
+            freq,
+            keep,
+            norm,
+            bin,
+        }
+    }
+
+    fn edge(&self, u: u32, v: u32) -> bool {
+        u != v && self.bin[u as usize * self.n + v as usize] > 0.5
+    }
+
+    fn weight(&self, u: u32, v: u32) -> f32 {
+        if u == v {
+            0.0
+        } else {
+            self.norm[u as usize * self.n + v as usize]
+        }
+    }
+
+    fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for u in 0..self.n as u32 {
+            for v in (u + 1)..self.n as u32 {
+                if self.edge(u, v) {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_sparse_crm_matches_dense_oracle() {
+    forall("sparse_vs_dense_crm", 120, |rng| {
+        let n = 16 + rng.below(48) as u32;
+        let theta = (rng.f64() * 0.6) as f32;
+        let top_frac = (0.3 + rng.f64() * 0.7) as f32;
+        let tx1 = sessionize(&random_window(rng, 140, n, 4, 0.0), 1.0);
+        let tx2 = sessionize(&random_window(rng, 140, n, 4, 70.0), 1.0);
+        let s1 = build_native(&tx1, n, theta, top_frac);
+        let s2 = build_native(&tx2, n, theta, top_frac);
+        let d1 = DenseCrm::build(&tx1, n, theta, top_frac);
+        let d2 = DenseCrm::build(&tx2, n, theta, top_frac);
+
+        for (s, d) in [(&s1, &d1), (&s2, &d2)] {
+            let active: Vec<u32> = (0..n).filter(|&i| d.keep[i as usize]).collect();
+            assert_eq!(s.active, active, "kept set");
+            for u in 0..n {
+                for v in 0..n {
+                    assert_eq!(s.edge(u, v), d.edge(u, v), "edge ({u},{v})");
+                    assert_eq!(s.weight(u, v), d.weight(u, v), "weight ({u},{v})");
+                }
+            }
+            assert_eq!(s.edges(), d.edges(), "edge list");
+            assert_eq!(s.edge_count(), d.edges().len(), "edge count");
+        }
+
+        // The streaming ΔE merge vs the dense set-difference reference.
+        let delta = diff_windows(&s1, &s2);
+        let e1: std::collections::HashSet<(u32, u32)> = d1.edges().into_iter().collect();
+        let e2: std::collections::HashSet<(u32, u32)> = d2.edges().into_iter().collect();
+        let mut removed: Vec<(u32, u32)> = e1.difference(&e2).copied().collect();
+        let mut added: Vec<(u32, u32)> = e2.difference(&e1).copied().collect();
+        removed.sort_unstable();
+        added.sort_unstable();
+        assert_eq!(delta.removed, removed, "diff removed");
+        assert_eq!(delta.added, added, "diff added");
+    });
+}
+
+#[test]
+fn prop_clique_generate_agrees_across_crm_constructors() {
+    // `build_native` (sparse accumulation) and `from_full` over the dense
+    // oracle's full matrices must yield decision-identical windows, and
+    // the full Algorithm-3 pipeline must produce the same cliques on both
+    // — the clique-level half of the dense-vs-sparse equivalence bar.
+    forall("generate_equivalence", 60, |rng| {
+        let n = 16 + rng.below(40) as u32;
+        let theta = (rng.f64() * 0.5) as f32;
+        let top_frac = (0.4 + rng.f64() * 0.6) as f32;
+        let omega = 3 + rng.below(4) as u32;
+        let gamma = 0.5 + rng.f64() as f32 * 0.5;
+        let tx1 = sessionize(&random_window(rng, 140, n, 4, 0.0), 1.0);
+        let tx2 = sessionize(&random_window(rng, 140, n, 4, 70.0), 1.0);
+        let s1 = build_native(&tx1, n, theta, top_frac);
+        let s2 = build_native(&tx2, n, theta, top_frac);
+        let d1 = DenseCrm::build(&tx1, n, theta, top_frac);
+        let d2 = DenseCrm::build(&tx2, n, theta, top_frac);
+        let f1 = CrmWindow::from_full(&d1.norm, &d1.bin, &d1.freq, n as usize, top_frac);
+        let f2 = CrmWindow::from_full(&d2.norm, &d2.bin, &d2.freq, n as usize, top_frac);
+        assert_eq!(f1.active, s1.active);
+        assert_eq!(f1.edges(), s1.edges());
+        assert_eq!(f2.edges(), s2.edges());
+
+        let gen_chain = |w1: &CrmWindow, w2: &CrmWindow| -> Vec<Vec<u32>> {
+            let prev = CliqueSet::generate(
+                &CliqueSet::new(),
+                w1,
+                &diff_windows(&CrmWindow::default(), w1),
+                omega,
+                gamma,
+                true,
+                true,
+            );
+            let set = CliqueSet::generate(&prev, w2, &diff_windows(w1, w2), omega, gamma, true, true);
+            set.check_invariants().expect("invariants");
+            let mut v: Vec<Vec<u32>> = set.iter().map(|c| c.to_vec()).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(gen_chain(&s1, &s2), gen_chain(&f1, &f2), "clique sets diverge");
     });
 }
 

@@ -68,6 +68,10 @@ impl CachePolicy for DpGreedy {
         "DP_Greedy".into()
     }
 
+    fn needs_offline_trace(&self) -> bool {
+        true
+    }
+
     fn prepare(&mut self, trace: &Trace) {
         let pairs = Self::pair_offline(trace);
         for _ in &pairs {

@@ -43,6 +43,18 @@ pub trait CachePolicy {
     /// run. Online policies must ignore it.
     fn prepare(&mut self, _trace: &Trace) {}
 
+    /// Whether [`prepare`](CachePolicy::prepare) must see the complete
+    /// trace (clairvoyant/offline policies: OPT, DP_Greedy). The
+    /// streaming driver consults this: online policies replay from a
+    /// bounded [`TraceSource`](crate::trace::stream::TraceSource)
+    /// buffer, while offline policies force the stream to be collected —
+    /// the documented memory cliff (DESIGN.md §10.4). Must agree with
+    /// the registry's `PolicyCaps::needs_offline_trace` (pinned by a
+    /// registry test).
+    fn needs_offline_trace(&self) -> bool {
+        false
+    }
+
     /// Serve one request (Algorithm 1 Event 2 → Algorithm 5), charging the
     /// ledger.
     fn handle_request(&mut self, r: &Request);

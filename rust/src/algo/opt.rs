@@ -93,6 +93,10 @@ impl CachePolicy for Opt {
         "OPT".into()
     }
 
+    fn needs_offline_trace(&self) -> bool {
+        true
+    }
+
     fn prepare(&mut self, trace: &Trace) {
         self.accesses.clear();
         self.per_server.clear();

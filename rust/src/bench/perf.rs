@@ -12,7 +12,11 @@
 //!   sparsity coordinate);
 //! * **clique_generate** — one incremental Algorithm-3 pipeline tick
 //!   (adjust → form → split → merge) per window;
-//! * **diff_windows** — the streaming ΔE merge between two windows.
+//! * **diff_windows** — the streaming ΔE merge between two windows;
+//! * **memory** — resident-bytes of a materialized `Vec<Request>` vs the
+//!   streaming replay path's bounded buffers at the same workload size,
+//!   plus the OS-reported process peak RSS (DESIGN.md §10.6 / schema
+//!   version 2 in EXPERIMENTS.md §Perf).
 //!
 //! `scale` shrinks the workloads proportionally (CI smoke uses 0.01); the
 //! checked-in baselines are produced at scale 1.
@@ -22,8 +26,10 @@ use std::time::Instant;
 use crate::clique::CliqueSet;
 use crate::config::AkpcConfig;
 use crate::crm::{build_native, diff_windows, CrmWindow};
-use crate::run::{PolicyRegistry, RunSpec, Workload};
+use crate::run::{generated_source, PolicyRegistry, RunSpec, Workload};
 use crate::trace::generator::{netflix_like, TraceKind};
+use crate::trace::model::Request;
+use crate::trace::stream::{TraceSource, DEFAULT_CHUNK_LEN};
 use crate::util::json::Json;
 
 /// Knobs for one baseline run.
@@ -88,6 +94,27 @@ pub struct DiffRow {
     pub delta_edges: usize,
 }
 
+/// One bounded-memory measurement (schema v2, EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct MemoryRow {
+    /// Requests in the measured workload.
+    pub n_requests: usize,
+    /// Resident-bytes estimate of the materialized `Vec<Request>` form
+    /// (request struct + item heap), summed over the *actual* generated
+    /// stream — what the pre-streaming replay paths held.
+    pub materialized_bytes: u64,
+    /// Peak resident request-buffer bytes of the streaming replay path:
+    /// the largest source chunk plus one clique-generation window.
+    pub streamed_peak_bytes: u64,
+    /// `materialized_bytes / streamed_peak_bytes` — the headline
+    /// bounded-memory factor (grows linearly with workload size).
+    pub reduction: f64,
+    /// OS-reported process peak RSS (`VmHWM`, Linux `/proc`), sampled
+    /// after the streamed pass; `None` off-Linux. Whole-process, so it
+    /// bounds (not equals) the replay buffers.
+    pub peak_rss_kb: Option<u64>,
+}
+
 /// The full baseline report (`BENCH_*.json` payload).
 #[derive(Debug, Clone, Default)]
 pub struct PerfReport {
@@ -97,6 +124,21 @@ pub struct PerfReport {
     pub crm_build: Vec<CrmBuildRow>,
     pub clique_generate: Vec<CliqueGenRow>,
     pub diff_windows: Vec<DiffRow>,
+    pub memory: Vec<MemoryRow>,
+}
+
+/// Resident footprint of one request in the materialized vector form:
+/// the inline struct plus its item heap allocation.
+fn request_footprint_bytes(r: &Request) -> u64 {
+    (std::mem::size_of::<Request>() + r.items.len() * std::mem::size_of::<u32>()) as u64
+}
+
+/// The process peak RSS in KiB from `/proc/self/status` (`VmHWM`);
+/// `None` when procfs is unavailable (non-Linux hosts).
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
 }
 
 /// Median wall-clock seconds of `iters` runs of `f`.
@@ -204,6 +246,35 @@ pub fn run_perf(opts: &PerfOptions) -> anyhow::Result<PerfReport> {
         });
     }
 
+    // -- memory: one streamed pass over a large generated workload,
+    // accumulating the materialized-footprint sum *without ever
+    // materializing it* (the streaming engine measuring itself).
+    let n_mem = ((1_000_000.0 * opts.scale).round() as usize).max(10_000);
+    let mem_cfg = AkpcConfig {
+        n_servers: 100,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let mut src = generated_source(TraceKind::Netflix, &mem_cfg, n_mem, DEFAULT_CHUNK_LEN)?;
+    let mut buf = Vec::new();
+    let (mut total_bytes, mut peak_chunk_bytes, mut served) = (0u64, 0u64, 0usize);
+    while src.next_chunk(&mut buf)? {
+        let chunk_bytes: u64 = buf.iter().map(request_footprint_bytes).sum();
+        peak_chunk_bytes = peak_chunk_bytes.max(chunk_bytes);
+        total_bytes += chunk_bytes;
+        served += buf.len();
+    }
+    let avg_bytes = total_bytes as f64 / served.max(1) as f64;
+    let window_bytes = (mem_cfg.batch_size as f64 * avg_bytes).ceil() as u64;
+    let streamed_peak = peak_chunk_bytes + window_bytes;
+    report.memory.push(MemoryRow {
+        n_requests: served,
+        materialized_bytes: total_bytes,
+        streamed_peak_bytes: streamed_peak,
+        reduction: total_bytes as f64 / streamed_peak.max(1) as f64,
+        peak_rss_kb: peak_rss_kb(),
+    });
+
     Ok(report)
 }
 
@@ -239,13 +310,25 @@ impl PerfReport {
                 r.n_items, r.delta_edges, r.us_per_diff
             );
         }
+        println!("-- memory (materialized Vec<Request> vs streamed buffers)");
+        for r in &self.memory {
+            let rss = r
+                .peak_rss_kb
+                .map(|k| format!("{k} KiB"))
+                .unwrap_or_else(|| "n/a".to_string());
+            println!(
+                "  {:>9} reqs  materialized={:>12}B  streamed-peak={:>9}B  \
+                 x{:<8.0} peak-rss={rss}",
+                r.n_requests, r.materialized_bytes, r.streamed_peak_bytes, r.reduction
+            );
+        }
     }
 
     /// The `BENCH_*.json` payload (schema: EXPERIMENTS.md §Perf).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("bench", Json::Str("akpc-hot-paths".into())),
-            ("schema_version", Json::Num(1.0)),
+            ("schema_version", Json::Num(2.0)),
             ("scale", Json::Num(self.scale)),
             ("seed", Json::Num(self.seed as f64)),
             (
@@ -314,6 +397,35 @@ impl PerfReport {
                         .collect(),
                 ),
             ),
+            (
+                "memory",
+                Json::Arr(
+                    self.memory
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("n_requests", Json::Num(r.n_requests as f64)),
+                                (
+                                    "materialized_bytes",
+                                    Json::Num(r.materialized_bytes as f64),
+                                ),
+                                (
+                                    "streamed_peak_bytes",
+                                    Json::Num(r.streamed_peak_bytes as f64),
+                                ),
+                                ("reduction", Json::Num(r.reduction)),
+                                (
+                                    "peak_rss_kb",
+                                    match r.peak_rss_kb {
+                                        Some(k) => Json::Num(k as f64),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -341,6 +453,14 @@ mod tests {
             assert!(r.ms_per_window >= 0.0);
             assert!((0.0..=1.0).contains(&r.density), "{}", r.density);
         }
+        // Memory row: the streamed path must be a large constant-factor
+        // win even at the 10k floor, and the analytic sums must be
+        // self-consistent.
+        assert_eq!(rep.memory.len(), 1);
+        let m = &rep.memory[0];
+        assert_eq!(m.n_requests, 10_000);
+        assert!(m.materialized_bytes > m.streamed_peak_bytes);
+        assert!(m.reduction > 1.0, "reduction {}", m.reduction);
         // JSON payload parses back.
         let j = rep.to_json();
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
@@ -351,6 +471,10 @@ mod tests {
         assert_eq!(
             parsed.get("crm_build").and_then(|a| a.as_arr()).map(|a| a.len()),
             Some(4)
+        );
+        assert_eq!(
+            parsed.get("memory").and_then(|a| a.as_arr()).map(|a| a.len()),
+            Some(1)
         );
     }
 }

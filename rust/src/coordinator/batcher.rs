@@ -1,7 +1,10 @@
 //! Window batcher: accumulates served requests into the clique-generation
 //! window (Fig. 3). A window closes when `batch_size` requests have been
 //! collected — the paper's batch semantics — or when explicitly flushed
-//! (idle timeout on the service side).
+//! (idle timeout on the service side). The batcher holds at most one
+//! open window, so a coordinator fed from a streaming replay
+//! (`sim::replay_sharded_stream`, DESIGN.md §10.5) keeps bounded memory
+//! end to end: stream chunk → serve → this window buffer.
 
 use crate::trace::model::Request;
 

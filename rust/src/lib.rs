@@ -24,17 +24,43 @@
 //! |---|---|
 //! | [`util`] | deterministic RNG, Zipf sampler, histograms |
 //! | [`config`] | full config system (paper Table II defaults) |
-//! | [`trace`] | request model, synthetic Netflix/Spotify-like generators, trace IO |
+//! | [`trace`] | request model, synthetic Netflix/Spotify-like generators, trace IO, streaming [`TraceSource`](trace::stream::TraceSource) engine |
 //! | [`crm`] | correlation-matrix construction (native path) + window diffing |
 //! | [`clique`] | disjoint clique store; split / approximate-merge / adjust |
 //! | [`cache`] | per-ESS cache state, expiry queue, cost model & ledger |
 //! | [`algo`] | `CachePolicy` trait: AKPC + NoPacking, PackCache, DP_Greedy, OPT |
-//! | [`scenario`] | Scenario Lab: declarative workload scenarios, trace transformers, phased replay |
+//! | [`scenario`] | Scenario Lab: declarative workload scenarios, trace transformers (materialized + streamed), phased replay |
 //! | [`run`] | unified Run API: policy registry, `RunSpec` builder, `RunOutcome`, streaming observers |
-//! | [`sim`] | event-driven CDN simulator, sharded replay driver + reports |
+//! | [`sim`] | event-driven CDN simulator, sharded replay drivers (materialized + streamed) + reports |
 //! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
 //! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker |
-//! | [`bench`] | the paper's evaluation harness (every table & figure, shard scaling) |
+//! | [`bench`] | the paper's evaluation harness (every table & figure, shard scaling, memory baseline) |
+//!
+//! ## Bounded-memory replays (DESIGN.md §10)
+//!
+//! Million-user workloads replay through a streaming
+//! [`TraceSource`](trace::stream::TraceSource) — chunked binary files,
+//! line-streamed CSV, or on-the-fly generation — so peak memory is one
+//! chunk plus one clique-generation window, independent of trace length:
+//!
+//! ```
+//! use akpc::config::AkpcConfig;
+//! use akpc::algo::Akpc;
+//! use akpc::run::{drive_trace, generated_source, NullObserver};
+//! use akpc::trace::generator::TraceKind;
+//!
+//! let cfg = AkpcConfig { n_items: 30, n_servers: 12, ..Default::default() };
+//! // 10_000 requests sampled chunk by chunk — never materialized.
+//! let mut source = generated_source(TraceKind::Netflix, &cfg, 10_000, 2_048).unwrap();
+//! let report = drive_trace(
+//!     &mut Akpc::new(&cfg),
+//!     &mut source,
+//!     cfg.batch_size,
+//!     &mut NullObserver,
+//! )
+//! .unwrap();
+//! assert_eq!(report.ledger.requests, 10_000);
+//! ```
 
 pub mod algo;
 pub mod bench;

@@ -4,7 +4,9 @@
 //! akpc <command> [flags]
 //!
 //! commands:
-//!   run          simulate one policy over a trace, print the report
+//!   run          simulate one policy over a trace, print the report;
+//!                `--stream` replays through the bounded-memory streaming
+//!                engine (DESIGN.md §10) instead of materializing
 //!   exp <id>     regenerate a paper table/figure
 //!                (table1 fig5 fig6a fig6b fig7a fig7b fig7c fig8a fig8b
 //!                 fig8c fig9a fig9b adversarial all)
@@ -13,7 +15,9 @@
 //!   bench        tracked hot-path perf baseline; `--json` writes the
 //!                BENCH_*.json payload (EXPERIMENTS.md §Perf schema)
 //!   policy       policy registry introspection (list)
-//!   gen-trace    write a synthetic Netflix/Spotify-like trace to disk
+//!   gen-trace    write a synthetic Netflix/Spotify-like trace to disk;
+//!                `--chunked` streams straight to the chunk-framed v2
+//!                binary layout (never holds the trace)
 //!   trace-stats  analyze a trace file
 //!   serve        online sharded coordinator demo (replays a trace)
 //!   config       show the effective configuration (Table II defaults)
@@ -36,6 +40,10 @@
 //!                             every N windows; sharded scenario: per phase;
 //!                             sharded trace replay: completion only — DESIGN §8.4)
 //!   --jsonl <file>            run/scenario/serve: stream the same events as JSONL
+//!   --stream                  run: bounded-memory streaming replay
+//!   --chunked                 gen-trace: write the chunk-framed v2 binary
+//!   --chunk <N>               run --stream / gen-trace --chunked: requests
+//!                             per chunk (default 8192)
 //! ```
 //!
 //! (The offline build has no clap; flag parsing is in-tree. Every
@@ -46,12 +54,12 @@ use akpc::bench::scenarios::scenario_suite;
 use akpc::bench::sweep::{shard_scaling, EngineChoice, PolicyChoice};
 use akpc::config::AkpcConfig;
 use akpc::run::{
-    generated_trace, parse_dataset, Driver, Fanout, JsonlSink, PolicyRegistry, ProgressPrinter,
-    RunSpec, Workload,
+    cell_config, generated_source, generated_trace, parse_dataset, Driver, Fanout, JsonlSink,
+    PolicyRegistry, ProgressPrinter, RunSpec, Workload,
 };
 use akpc::scenario::{self, ScenarioSpec};
 use akpc::sim::ReplayMode;
-use akpc::trace::{generator, io as trace_io, stats};
+use akpc::trace::{generator, io as trace_io, stats, TraceKind};
 
 /// Parsed command line.
 struct Cli {
@@ -63,7 +71,7 @@ struct Cli {
 impl Cli {
     /// Valueless switches (probed via `flag(..).is_some()`); every other
     /// flag still requires a value and errors without one.
-    const BOOL_FLAGS: &'static [&'static str] = &["json"];
+    const BOOL_FLAGS: &'static [&'static str] = &["json", "stream", "chunked"];
 
     fn parse(args: Vec<String>) -> anyhow::Result<Self> {
         let mut it = args.into_iter();
@@ -111,6 +119,19 @@ impl Cli {
             Some(m) => anyhow::bail!("unknown replay mode `{m}`"),
         }
     }
+
+    /// `--chunk` parsed, defaulting to the streaming engine's chunk
+    /// length.
+    fn chunk_len(&self) -> anyhow::Result<usize> {
+        match self.flag("chunk") {
+            None => Ok(akpc::trace::stream::DEFAULT_CHUNK_LEN),
+            Some(s) => {
+                let n: usize = s.parse()?;
+                anyhow::ensure!(n >= 1, "--chunk must be >= 1");
+                Ok(n)
+            }
+        }
+    }
 }
 
 fn usage() {
@@ -123,13 +144,15 @@ fn usage() {
          run:       --policy <name>   (see `akpc policy list`)\n\
          \u{20}          --dataset <netflix|spotify> | --trace <file>\n\
          \u{20}          [--shards N [--mode <ordered|parallel>]]\n\
+         \u{20}          [--stream [--chunk N]]   (bounded-memory replay)\n\
          exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
          \u{20}           fig9a|fig9b|adversarial|ablations|shards|all>\n\
          scenario:  <list|suite|name|spec.toml> [--policy P] [--scale F]\n\
          \u{20}          [--shards N [--mode <ordered|parallel>]] [--out <dir>]\n\
-         bench:     [--json] [--scale F] [--out <file>]   (default BENCH_4.json)\n\
+         bench:     [--json] [--scale F] [--out <file>]   (default BENCH_5.json)\n\
          policy:    list   (name + description + capabilities)\n\
          gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
+         \u{20}          [--chunked [--chunk N]]   (streamed v2 binary)\n\
          serve:     --dataset <netflix|spotify> [--requests N] [--shards N]\n\
          \u{20}          [--mode <ordered|parallel>]"
     );
@@ -165,6 +188,9 @@ fn main() -> anyhow::Result<()> {
     let registry = PolicyRegistry::builtin();
 
     match cli.cmd.as_str() {
+        "run" if cli.flag("stream").is_some() => {
+            run_stream_cmd(&cli, &registry, &cfg, engine, kind, n_requests)?;
+        }
         "run" => {
             let workload = match cli.flag("trace") {
                 Some(p) => Workload::TraceFile(p.to_string()),
@@ -235,13 +261,25 @@ fn main() -> anyhow::Result<()> {
             let out = cli
                 .flag("out")
                 .ok_or_else(|| anyhow::anyhow!("gen-trace needs --out"))?;
-            let trace = generated_trace(kind, &cfg, n_requests)?;
-            if out.ends_with(".csv") {
-                trace_io::write_csv(&trace, out)?;
+            if cli.flag("chunked").is_some() {
+                // Generator → chunk-framed v2 file, one chunk resident:
+                // this path writes 10⁸-request traces on a laptop.
+                anyhow::ensure!(
+                    !out.ends_with(".csv"),
+                    "--chunked writes the v2 binary layout; drop the .csv extension"
+                );
+                let mut source = generated_source(kind, &cfg, n_requests, cli.chunk_len()?)?;
+                let written = trace_io::write_binary_chunked_from(&mut source, out)?;
+                println!("wrote {written} requests to {out} (chunked v2)");
             } else {
-                trace_io::write_binary(&trace, out)?;
+                let trace = generated_trace(kind, &cfg, n_requests)?;
+                if out.ends_with(".csv") {
+                    trace_io::write_csv(&trace, out)?;
+                } else {
+                    trace_io::write_binary(&trace, out)?;
+                }
+                println!("wrote {} requests to {out}", trace.len());
             }
-            println!("wrote {} requests to {out}", trace.len());
         }
         "trace-stats" => {
             let file = cli
@@ -300,7 +338,7 @@ fn main() -> anyhow::Result<()> {
             if cli.flag("json").is_some() {
                 let out = match cli.flag("out") {
                     Some(p) if !p.is_empty() => p.to_string(),
-                    _ => "BENCH_4.json".to_string(),
+                    _ => "BENCH_5.json".to_string(),
                 };
                 if let Some(dir) = std::path::Path::new(&out).parent() {
                     if !dir.as_os_str().is_empty() {
@@ -439,6 +477,84 @@ fn run_experiment(
         matched = true;
     }
     anyhow::ensure!(matched, "unknown experiment id: {id}");
+    Ok(())
+}
+
+/// `akpc run --stream` — the bounded-memory replay path (DESIGN.md §10).
+/// The workload flows as a `TraceSource` end to end: generator or file
+/// chunks → policy windows (single-leader) or coordinator shards
+/// (`--shards`), with nothing materialized unless an offline policy
+/// forces the documented collect.
+///
+/// Deliberately NOT routed through `RunSpec`: its contract materializes
+/// the workload at `validate()` into a clonable/debuggable
+/// `PreparedRun`, which a pull-once streaming source cannot satisfy.
+/// The shared pieces are reused (`PolicyRegistry::resolve` for the
+/// enumerated-names error, `cell_config` for the one effective-config
+/// derivation, the same capability check); folding a streaming workload
+/// variant into `RunSpec` proper is a ROADMAP open item.
+fn run_stream_cmd(
+    cli: &Cli,
+    registry: &PolicyRegistry,
+    cfg: &AkpcConfig,
+    engine: EngineChoice,
+    kind: TraceKind,
+    n_requests: usize,
+) -> anyhow::Result<()> {
+    use akpc::trace::stream::{BinaryStreamSource, CsvStreamSource, TraceSource};
+
+    let chunk = cli.chunk_len()?;
+    let mut source: Box<dyn TraceSource> = match cli.flag("trace") {
+        Some(p) if p.ends_with(".csv") => Box::new(CsvStreamSource::open(p, chunk)?),
+        Some(p) => Box::new(BinaryStreamSource::open(p, chunk)?),
+        None => Box::new(generated_source(kind, cfg, n_requests, chunk)?),
+    };
+    let meta = source.meta().clone();
+    let cell = cell_config(cfg, meta.n_items, meta.n_servers);
+    cell.validate()?;
+    println!(
+        "streaming `{}`: {} requests, universe {} items × {} servers (chunk {chunk})",
+        meta.name,
+        meta.est_len
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| "?".into()),
+        meta.n_items,
+        meta.n_servers
+    );
+
+    let entry = registry.resolve(cli.flag("policy").unwrap_or("akpc"))?;
+    let n_shards: usize = cli
+        .flag("shards")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    if n_shards > 0 {
+        anyhow::ensure!(
+            entry.caps().supports_sharded,
+            "policy `{}` does not support the sharded driver",
+            entry.name()
+        );
+        let rep = akpc::sim::replay_sharded_stream(
+            &cell,
+            engine.to_engine(),
+            source.as_mut(),
+            n_shards,
+            cli.replay_mode(ReplayMode::Ordered)?,
+        )?;
+        println!("{}", rep.metrics.summary());
+        println!("{}", rep.row());
+    } else {
+        let mut policy = entry.build(&cell, engine);
+        let mut obs = cli.observers()?;
+        let rep = akpc::run::drive_trace(
+            policy.as_mut(),
+            source.as_mut(),
+            cell.batch_size,
+            &mut obs,
+        )?;
+        println!("{}", rep.row());
+        println!("{}", rep.to_json().to_string_pretty());
+    }
     Ok(())
 }
 

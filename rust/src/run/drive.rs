@@ -16,41 +16,101 @@ use crate::runtime::CrmEngine;
 use crate::scenario::driver::phase_cost;
 use crate::scenario::{CompiledScenario, ScenarioRun};
 use crate::sim::{ReplayMode, SimReport};
-use crate::trace::model::Trace;
+use crate::trace::model::Request;
+use crate::trace::stream::{MemorySource, TraceSource};
 
 use super::observe::{Observer, PhaseEvent, WindowEvent};
 
-/// Drive `policy` over `trace` with clique-generation windows of
-/// `batch_size` requests, reporting each closed window to `obs`.
+/// Drive `policy` over a streaming [`TraceSource`] with clique-generation
+/// windows of `batch_size` requests, reporting each closed window to
+/// `obs`.
 ///
 /// Timeline semantics (paper Fig. 3): requests of batch *i* are served
 /// under the packing computed from batches *< i*; `end_batch` runs after
-/// the batch is fully served; offline policies receive the whole trace
-/// via `prepare` first.
+/// the batch is fully served. Peak memory is one chunk plus one window —
+/// independent of trace length — **except** for offline policies
+/// (`needs_offline_trace`): their `prepare` must see the whole timeline,
+/// so the stream is collected first, re-materializing the memory cliff
+/// this driver otherwise avoids (DESIGN.md §10.4). Sources that already
+/// sit on an in-memory trace ([`MemorySource`]) lend it to `prepare`
+/// without a second copy.
+///
+/// The window boundaries are identical to the materialized
+/// `Trace::batches` walk regardless of how the source chunks its
+/// requests, so streamed and materialized replays of the same stream are
+/// ledger-identical (pinned at 1e-9 by `tests/stream.rs`).
 pub fn drive_trace(
     policy: &mut dyn CachePolicy,
-    trace: &Trace,
+    source: &mut dyn TraceSource,
     batch_size: usize,
     obs: &mut dyn Observer,
-) -> SimReport {
+) -> anyhow::Result<SimReport> {
     let wall = Instant::now();
-    policy.prepare(trace);
+    if policy.needs_offline_trace() {
+        if let Some(t) = source.as_trace() {
+            policy.prepare(t);
+        } else {
+            // The documented memory cliff: an offline policy over a
+            // file/generator stream collects it whole.
+            let collected = source.collect()?;
+            policy.prepare(&collected);
+            let mut mem = MemorySource::new(&collected);
+            return stream_windows(policy, &mut mem, batch_size, obs, wall);
+        }
+    }
+    stream_windows(policy, source, batch_size, obs, wall)
+}
+
+/// The bounded-memory window loop shared by both `drive_trace` paths:
+/// re-batches arbitrary source chunks into exact `batch_size` windows
+/// (trailing partial window included), holding at most one window plus
+/// one chunk.
+fn stream_windows(
+    policy: &mut dyn CachePolicy,
+    source: &mut dyn TraceSource,
+    batch_size: usize,
+    obs: &mut dyn Observer,
+    wall: Instant,
+) -> anyhow::Result<SimReport> {
+    // Mirror the `Trace::batches` clamp so batch_size == 0 windows match.
+    let batch = batch_size.max(1);
+    let name = source.meta().name.clone();
+    let mut chunk: Vec<Request> = Vec::new();
+    let mut window_buf: Vec<Request> = Vec::with_capacity(batch);
     let mut window = 0u64;
     let mut requests_done = 0usize;
-    for batch in trace.batches(batch_size) {
-        for r in batch {
-            policy.handle_request(r);
-        }
-        policy.end_batch(batch);
+    let mut close_window = |policy: &mut dyn CachePolicy,
+                            window_buf: &mut Vec<Request>,
+                            obs: &mut dyn Observer| {
+        policy.end_batch(window_buf);
         window += 1;
-        requests_done += batch.len();
+        requests_done += window_buf.len();
         obs.on_window(&WindowEvent {
             window,
             requests_done,
             ledger: policy.ledger(),
         });
+        window_buf.clear();
+    };
+    while source.next_chunk(&mut chunk)? {
+        for r in chunk.drain(..) {
+            policy.handle_request(&r);
+            window_buf.push(r);
+            if window_buf.len() == batch {
+                close_window(policy, &mut window_buf, obs);
+            }
+        }
     }
-    SimReport::collect(policy, trace, wall.elapsed().as_secs_f64())
+    if !window_buf.is_empty() {
+        close_window(policy, &mut window_buf, obs);
+    }
+    drop(close_window);
+    Ok(SimReport::from_parts(
+        policy,
+        &name,
+        requests_done,
+        wall.elapsed().as_secs_f64(),
+    ))
 }
 
 /// Drive `policy` through a compiled scenario with the single-leader
@@ -63,8 +123,13 @@ pub fn drive_phased(
     obs: &mut dyn Observer,
 ) -> ScenarioRun {
     let wall = Instant::now();
-    // Offline policies (OPT, DP_Greedy) see the whole timeline up front.
-    policy.prepare(sc.concat_trace());
+    // Offline policies (OPT, DP_Greedy) see the whole timeline up front;
+    // for everyone else the flattened trace is never built (the concat
+    // is lazy — DESIGN.md §10.4), so phased replays of online policies
+    // hold one phase at a time plus cache state.
+    if policy.needs_offline_trace() {
+        policy.prepare(sc.concat_trace());
+    }
     let mut prev = CostLedger::default();
     let mut phases = Vec::with_capacity(sc.phases.len());
     let mut window = 0u64;
@@ -258,10 +323,54 @@ mod tests {
             phases: 0,
             last_requests: 0,
         };
-        let rep = drive_trace(&mut Akpc::new(&cfg), &trace, cfg.batch_size, &mut obs);
+        // A chunk length coprime to the batch size: the re-batcher must
+        // still close exact batch_size windows.
+        let mut src = MemorySource::new(&trace).with_chunk_len(137);
+        let rep =
+            drive_trace(&mut Akpc::new(&cfg), &mut src, cfg.batch_size, &mut obs).unwrap();
         assert_eq!(obs.windows, 5, "1000 requests / batch 200");
         assert_eq!(obs.last_requests, 1_000);
         assert_eq!(rep.ledger.requests, 1_000);
+        assert_eq!(rep.n_requests, 1_000);
+        assert_eq!(rep.trace, trace.name);
+    }
+
+    #[test]
+    fn drive_trace_collects_for_offline_policies_without_as_trace() {
+        // An offline policy over a pure stream (no as_trace) must see
+        // the full timeline via the collect fallback and still match
+        // the borrowed-trace path exactly.
+        use crate::algo::DpGreedy;
+        use crate::trace::generator::GeneratorParams;
+        use crate::trace::stream::GeneratorSource;
+        use crate::trace::TraceKind;
+
+        let cfg = AkpcConfig {
+            n_items: 30,
+            n_servers: 12,
+            ..Default::default()
+        };
+        let p = GeneratorParams::netflix(30, 12, 800);
+        let mut gen_src = GeneratorSource::new(&p, TraceKind::Netflix, 100).unwrap();
+        let streamed = drive_trace(
+            &mut DpGreedy::new(&cfg),
+            &mut gen_src,
+            cfg.batch_size,
+            &mut NullObserver,
+        )
+        .unwrap();
+
+        let trace = crate::trace::generator::generate(&p, TraceKind::Netflix);
+        let mut mem = MemorySource::new(&trace);
+        let borrowed = drive_trace(
+            &mut DpGreedy::new(&cfg),
+            &mut mem,
+            cfg.batch_size,
+            &mut NullObserver,
+        )
+        .unwrap();
+        assert_eq!(streamed.ledger.c_t, borrowed.ledger.c_t);
+        assert_eq!(streamed.ledger.c_p, borrowed.ledger.c_p);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!   to;
 //! * [`drive`] — the instrumented driver loops the legacy entry points
 //!   (`sim::run`, `scenario::run_phased`, `scenario::run_phased_sharded`)
-//!   now shim onto.
+//!   now shim onto; [`drive_trace`] consumes a streaming
+//!   [`TraceSource`](crate::trace::stream::TraceSource), so replays are
+//!   bounded-memory end to end (DESIGN.md §10).
 //!
 //! ```
 //! use akpc::config::AkpcConfig;
@@ -49,8 +51,8 @@ pub use observe::{
 pub use outcome::RunOutcome;
 pub use registry::{PolicyCaps, PolicyEntry, PolicyFactory, PolicyRegistry};
 pub use spec::{
-    cell_config, generated_trace, parse_dataset, Driver, PreparedRun, RunSpec, Workload,
-    WorkloadData,
+    cell_config, generated_source, generated_trace, parse_dataset, Driver, PreparedRun, RunSpec,
+    Workload, WorkloadData,
 };
 
 // The engine/policy selectors live with the sweep machinery; re-export

@@ -12,8 +12,9 @@ use crate::algo::{AdaptiveK, Akpc, CachePolicy, DpGreedy, NoPacking, Opt, PackCa
 use crate::bench::sweep::{EngineChoice, PolicyChoice};
 use crate::config::AkpcConfig;
 
-/// What a policy can do — consulted by [`RunSpec::validate`]
-/// (super::RunSpec::validate) before any work starts.
+/// What a policy can do — consulted by
+/// [`RunSpec::validate`](super::RunSpec::validate) before any work
+/// starts.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PolicyCaps {
     /// The sharded online coordinator can run this policy (today: AKPC
@@ -354,6 +355,24 @@ mod tests {
             }),
         ));
         assert!(dup.is_err());
+    }
+
+    #[test]
+    fn registry_caps_agree_with_policy_instances() {
+        // `PolicyCaps::needs_offline_trace` (the registry's static flag)
+        // and `CachePolicy::needs_offline_trace` (what the streaming
+        // driver consults) must never drift apart.
+        let reg = PolicyRegistry::builtin();
+        let cfg = AkpcConfig::default();
+        for e in reg.iter() {
+            let p = e.build(&cfg, EngineChoice::Native);
+            assert_eq!(
+                e.caps().needs_offline_trace,
+                p.needs_offline_trace(),
+                "registry/instance offline flag disagrees for `{}`",
+                e.name()
+            );
+        }
     }
 
     #[test]

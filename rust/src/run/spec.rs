@@ -16,6 +16,7 @@ use crate::sim::ReplayMode;
 use crate::trace::generator::{self, GeneratorParams, TraceKind};
 use crate::trace::io as trace_io;
 use crate::trace::model::Trace;
+use crate::trace::stream::{GeneratorSource, MemorySource};
 
 use super::drive;
 use super::observe::{NullObserver, Observer};
@@ -61,6 +62,17 @@ pub fn parse_dataset(name: &str) -> anyhow::Result<TraceKind> {
     }
 }
 
+/// The one derivation of generator parameters from a config: preset
+/// shape from `kind`, universe from `cfg`, `cfg.seed` folded in.
+fn generator_params(kind: TraceKind, cfg: &AkpcConfig, n_requests: usize) -> GeneratorParams {
+    let mut params = match kind {
+        TraceKind::Netflix => GeneratorParams::netflix(cfg.n_items, cfg.n_servers, n_requests),
+        TraceKind::Spotify => GeneratorParams::spotify(cfg.n_items, cfg.n_servers, n_requests),
+    };
+    params.seed ^= cfg.seed;
+    params
+}
+
 /// Generate a synthetic workload trace from `cfg`'s universe shape,
 /// folding `cfg.seed` into the generator seed (the one generation path —
 /// `gen-trace`, `RunSpec`, and the serve demo all use it).
@@ -69,12 +81,20 @@ pub fn generated_trace(
     cfg: &AkpcConfig,
     n_requests: usize,
 ) -> anyhow::Result<Trace> {
-    let mut params = match kind {
-        TraceKind::Netflix => GeneratorParams::netflix(cfg.n_items, cfg.n_servers, n_requests),
-        TraceKind::Spotify => GeneratorParams::spotify(cfg.n_items, cfg.n_servers, n_requests),
-    };
-    params.seed ^= cfg.seed;
-    generator::try_generate(&params, kind)
+    generator::try_generate(&generator_params(kind, cfg, n_requests), kind)
+}
+
+/// The streaming form of [`generated_trace`]: same parameters, same
+/// request stream, but pulled chunk by chunk through a
+/// [`GeneratorSource`] instead of materialized (`akpc run --stream` /
+/// `gen-trace --chunked`).
+pub fn generated_source(
+    kind: TraceKind,
+    cfg: &AkpcConfig,
+    n_requests: usize,
+    chunk_len: usize,
+) -> anyhow::Result<GeneratorSource> {
+    GeneratorSource::new(&generator_params(kind, cfg, n_requests), kind, chunk_len)
 }
 
 /// The single source of the per-cell config derivation: the workload's
@@ -401,7 +421,11 @@ impl PreparedRun {
         let outcome = match (self.driver, &self.data) {
             (Driver::SingleLeader, WorkloadData::Trace(t)) => {
                 let mut policy = entry.build(&self.cfg, self.engine);
-                let rep = drive::drive_trace(policy.as_mut(), t, self.cfg.batch_size, obs);
+                // Lend the Arc-shared trace through the streaming driver;
+                // `as_trace` hands offline policies the same allocation.
+                let mut source = MemorySource::new(Arc::clone(t));
+                let rep =
+                    drive::drive_trace(policy.as_mut(), &mut source, self.cfg.batch_size, obs)?;
                 RunOutcome::from_sim(rep)
             }
             (Driver::SingleLeader, WorkloadData::Scenario(sc)) => {

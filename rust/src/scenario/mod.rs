@@ -12,7 +12,9 @@
 //!   `[phase]` tables) and its compiler to globally-timed traces;
 //! * [`transform`] — the trace-transformer combinator pipeline (flash
 //!   crowd, diurnal modulation, bundle churn, outage re-routing, catalog
-//!   rollover, rate scaling);
+//!   rollover, rate scaling), each also available in a bounded-state
+//!   streaming form ([`StreamedTransform`] / [`TransformedSource`],
+//!   DESIGN.md §10.3);
 //! * [`driver`] — phased replay through the single-leader simulator and
 //!   the sharded coordinator, with per-phase cost breakdowns;
 //! * [`library`] — the built-in named scenarios (`akpc scenario <name>`;
@@ -26,4 +28,4 @@ pub mod transform;
 pub use driver::{run_phased, run_phased_sharded, PhaseCost, ScenarioRun};
 pub use library::{builtin, builtin_names, describe, suite_names};
 pub use spec::{CompiledPhase, CompiledScenario, PhaseBase, PhaseSpec, ScenarioSpec};
-pub use transform::Transform;
+pub use transform::{StreamedTransform, Transform, TransformedSource};

@@ -374,23 +374,12 @@ impl ScenarioSpec {
                 trace,
             });
         }
-        // Flatten the timeline once here; every policy's `prepare` and the
-        // export paths borrow it instead of re-concatenating per run.
-        let full = Trace {
-            requests: phases
-                .iter()
-                .flat_map(|p| p.trace.requests.iter().cloned())
-                .collect(),
-            n_items: self.n_items,
-            n_servers: self.n_servers,
-            name: self.name.clone(),
-        };
         Ok(CompiledScenario {
             name: self.name.clone(),
             n_items: self.n_items,
             n_servers: self.n_servers,
             phases,
-            full,
+            full: std::sync::OnceLock::new(),
         })
     }
 }
@@ -413,8 +402,11 @@ pub struct CompiledScenario {
     pub n_items: u32,
     pub n_servers: u32,
     pub phases: Vec<CompiledPhase>,
-    /// The flattened timeline, built once at compile time.
-    full: Trace,
+    /// The flattened timeline, built lazily on first use (DESIGN.md
+    /// §10.4): online-policy replays walk phase by phase and never pay
+    /// for the second copy of the whole timeline; only offline
+    /// `prepare` and export/stats paths force it.
+    full: std::sync::OnceLock<Trace>,
 }
 
 impl CompiledScenario {
@@ -423,9 +415,20 @@ impl CompiledScenario {
     }
 
     /// The whole timeline as one flat trace (offline policies' `prepare`,
-    /// `trace-stats`, export).
+    /// `trace-stats`, export). **Materializes the full concat on first
+    /// call** — doubles the scenario's resident requests; phased replay
+    /// of online policies deliberately never calls it.
     pub fn concat_trace(&self) -> &Trace {
-        &self.full
+        self.full.get_or_init(|| Trace {
+            requests: self
+                .phases
+                .iter()
+                .flat_map(|p| p.trace.requests.iter().cloned())
+                .collect(),
+            n_items: self.n_items,
+            n_servers: self.n_servers,
+            name: self.name.clone(),
+        })
     }
 }
 

@@ -298,6 +298,270 @@ pub fn sort_canonical(transforms: &mut [Transform]) {
     transforms.sort_by_key(|t| t.rank());
 }
 
+/// Per-variant bounded state of a streaming transform application.
+#[derive(Debug, Clone)]
+enum StreamState {
+    /// Pure per-request map (rate scale, bundle churn).
+    Stateless,
+    /// Λ⁻¹ bisection warm-started from the previous arrival.
+    Diurnal { prev_u: f64, prev_t: f64 },
+    /// Hot set drawn once at stream start.
+    FlashCrowd { hot: Vec<u32>, w_lo: f64, w_hi: f64 },
+    /// Rollover bijection drawn once at stream start.
+    Rollover {
+        map: std::collections::HashMap<u32, u32>,
+        t_cut: f64,
+    },
+    /// Down block drawn once at stream start.
+    Outage {
+        first_down: u32,
+        w_lo: f64,
+        w_hi: f64,
+    },
+}
+
+/// The streaming form of one [`Transform`] (DESIGN.md §10.3): applied
+/// request by request with **bounded state** — the setup randomness
+/// (flash hot set, rollover bijection, outage block) is drawn once at
+/// construction, the per-request randomness comes from the same `rng`
+/// stream in arrival order, and only O(1)–O(n_items) state persists
+/// between requests. Given the phase's true `(t0, span)` and an `rng` at
+/// the same state, a single streamed transform produces bit-identical
+/// requests to the materialized [`Transform::apply`] pass (pinned by a
+/// unit test below).
+///
+/// Chaining caveat: a materialized *pipeline* applies each transform in
+/// a full pass (so later transforms see earlier ones' rewritten times
+/// and a sequentially-shared rng). A streamed chain interleaves per
+/// request instead — deterministic, but not bit-identical to the
+/// materialized pipeline for ≥ 2 random transforms. Scenario
+/// compilation therefore keeps the materialized per-phase pipeline
+/// (bounded by one phase, DESIGN.md §10.3); [`TransformedSource`] is the
+/// adapter for streaming single-transform workloads.
+#[derive(Debug, Clone)]
+pub struct StreamedTransform {
+    kind: Transform,
+    t0: f64,
+    state: StreamState,
+}
+
+impl Transform {
+    /// Begin a streaming application over a stream with universe shape
+    /// `(n_items, n_servers)` spanning `[t0, t0 + span)`. The setup
+    /// randomness is drawn from `rng` here, in exactly the order the
+    /// materialized `apply` draws it before its pass — so a single
+    /// transform streamed with the same starting rng state is
+    /// draw-for-draw identical to the materialized pass.
+    pub fn streamed(
+        &self,
+        t0: f64,
+        span: f64,
+        n_items: u32,
+        n_servers: u32,
+        rng: &mut Rng,
+    ) -> StreamedTransform {
+        let span = span.max(f64::MIN_POSITIVE);
+        let state = match *self {
+            Transform::RateScale { .. } | Transform::BundleChurn { .. } => {
+                StreamState::Stateless
+            }
+            Transform::Diurnal { .. } => StreamState::Diurnal {
+                prev_u: 0.0,
+                prev_t: 0.0,
+            },
+            Transform::FlashCrowd {
+                start_frac,
+                end_frac,
+                n_hot,
+                ..
+            } => {
+                let mut hot: Vec<u32> = rng
+                    .sample_distinct(n_items as usize, n_hot)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                hot.sort_unstable();
+                StreamState::FlashCrowd {
+                    hot,
+                    w_lo: t0 + start_frac * span,
+                    w_hi: t0 + end_frac * span,
+                }
+            }
+            Transform::CatalogRollover { at_frac, frac } => {
+                let rolled: Vec<u32> = (0..n_items).filter(|_| rng.chance(frac)).collect();
+                let mut replacement = rolled.clone();
+                rng.shuffle(&mut replacement);
+                StreamState::Rollover {
+                    map: rolled.iter().copied().zip(replacement).collect(),
+                    t_cut: t0 + at_frac * span,
+                }
+            }
+            Transform::Outage {
+                start_frac,
+                end_frac,
+                ..
+            } => StreamState::Outage {
+                first_down: rng.below(n_servers as usize) as u32,
+                w_lo: t0 + start_frac * span,
+                w_hi: t0 + end_frac * span,
+            },
+        };
+        StreamedTransform {
+            kind: self.clone(),
+            t0,
+            state,
+        }
+    }
+}
+
+impl StreamedTransform {
+    /// Apply to one request, drawing per-request randomness from `rng`
+    /// in arrival order (matches the materialized pass draw for draw).
+    /// `n_items`/`n_servers` are the stream's universe shape.
+    pub fn apply(&mut self, r: &mut Request, rng: &mut Rng, n_items: u32, n_servers: u32) {
+        let t0 = self.t0;
+        match (&self.kind, &mut self.state) {
+            (Transform::RateScale { factor }, StreamState::Stateless) => {
+                r.time = t0 + (r.time - t0) / factor;
+            }
+            (
+                Transform::Diurnal { period, amplitude },
+                StreamState::Diurnal { prev_u, prev_t },
+            ) => {
+                let two_pi = std::f64::consts::TAU;
+                let lam = |u: f64| {
+                    u + amplitude * period / two_pi * (1.0 - (two_pi * u / period).cos())
+                };
+                let t = r.time - t0;
+                let mut lo = *prev_u;
+                let mut hi = *prev_u + (t - *prev_t) / (1.0 - amplitude) + 1e-12;
+                for _ in 0..64 {
+                    let mid = 0.5 * (lo + hi);
+                    if lam(mid) < t {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                *prev_u = 0.5 * (lo + hi);
+                *prev_t = t;
+                r.time = t0 + *prev_u;
+            }
+            (
+                Transform::FlashCrowd { frac, n_hot, .. },
+                StreamState::FlashCrowd { hot, w_lo, w_hi },
+            ) => {
+                if r.time < *w_lo || r.time >= *w_hi {
+                    return;
+                }
+                if rng.chance(*frac) {
+                    let k = r.items.len().min(*n_hot);
+                    let off = rng.below(*n_hot);
+                    let items: Vec<u32> = (0..k).map(|j| hot[(off + j) % *n_hot]).collect();
+                    *r = Request::new(items, r.server, r.time);
+                }
+            }
+            (Transform::BundleChurn { period, shift }, StreamState::Stateless) => {
+                let n = n_items;
+                let epoch = ((r.time - t0) / period).floor() as u64;
+                let rot = (epoch.wrapping_mul(*shift as u64) % n as u64) as u32;
+                if rot == 0 {
+                    return;
+                }
+                let items: Vec<u32> = r
+                    .items
+                    .iter()
+                    .map(|&d| ((d as u64 + rot as u64) % n as u64) as u32)
+                    .collect();
+                *r = Request::new(items, r.server, r.time);
+            }
+            (Transform::CatalogRollover { .. }, StreamState::Rollover { map, t_cut }) => {
+                if r.time < *t_cut || map.is_empty() {
+                    return;
+                }
+                if r.items.iter().any(|d| map.contains_key(d)) {
+                    let items: Vec<u32> = r
+                        .items
+                        .iter()
+                        .map(|d| map.get(d).copied().unwrap_or(*d))
+                        .collect();
+                    *r = Request::new(items, r.server, r.time);
+                }
+            }
+            (
+                Transform::Outage { n_down, .. },
+                StreamState::Outage {
+                    first_down,
+                    w_lo,
+                    w_hi,
+                },
+            ) => {
+                let m = n_servers;
+                if r.time < *w_lo || r.time >= *w_hi {
+                    return;
+                }
+                if (r.server + m - *first_down) % m < *n_down {
+                    r.server = (r.server + *n_down) % m;
+                }
+            }
+            _ => unreachable!("state/kind mismatch"),
+        }
+    }
+}
+
+/// A [`TraceSource`](crate::trace::stream::TraceSource) adapter applying
+/// streamed transforms per request — the scenario layer's bounded-memory
+/// composition point (DESIGN.md §10.3). Each stage carries its own
+/// deterministically derived rng stream; time-warping stages keep the
+/// stream time-ordered, so downstream validation still holds.
+pub struct TransformedSource<S: crate::trace::stream::TraceSource> {
+    inner: S,
+    stages: Vec<(StreamedTransform, Rng)>,
+    meta: crate::trace::stream::TraceMeta,
+}
+
+impl<S: crate::trace::stream::TraceSource> TransformedSource<S> {
+    /// Wrap `inner`, applying `transforms` (already in canonical order)
+    /// over the known stream bounds `[t0, t0 + span)`. Stage *i* draws
+    /// from `Rng::new(seed ^ i·golden)` — deterministic from `seed`.
+    pub fn new(inner: S, transforms: &[Transform], t0: f64, span: f64, seed: u64) -> Self {
+        let meta = inner.meta().clone();
+        let stages = transforms
+            .iter()
+            .enumerate()
+            .map(|(i, tr)| {
+                let mut rng =
+                    Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let st = tr.streamed(t0, span, meta.n_items, meta.n_servers, &mut rng);
+                (st, rng)
+            })
+            .collect();
+        Self {
+            inner,
+            stages,
+            meta,
+        }
+    }
+}
+
+impl<S: crate::trace::stream::TraceSource> crate::trace::stream::TraceSource
+    for TransformedSource<S>
+{
+    fn meta(&self) -> &crate::trace::stream::TraceMeta {
+        &self.meta
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<Request>) -> anyhow::Result<bool> {
+        let more = self.inner.next_chunk(buf)?;
+        for r in buf.iter_mut() {
+            for (stage, rng) in self.stages.iter_mut() {
+                stage.apply(r, rng, self.meta.n_items, self.meta.n_servers);
+            }
+        }
+        Ok(more)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -481,6 +745,82 @@ mod tests {
             let b = apply(t, 42);
             assert_eq!(a.requests, b.requests);
         }
+    }
+
+    #[test]
+    fn streamed_single_transform_matches_materialized() {
+        // One streamed transform with the same starting rng state is
+        // draw-for-draw identical to the materialized pass — the
+        // bounded-state claim of DESIGN.md §10.3, per variant.
+        let variants = [
+            Transform::RateScale { factor: 3.0 },
+            Transform::Diurnal {
+                period: 0.7,
+                amplitude: 0.6,
+            },
+            Transform::FlashCrowd {
+                start_frac: 0.2,
+                end_frac: 0.8,
+                frac: 0.5,
+                n_hot: 4,
+            },
+            Transform::BundleChurn {
+                period: 0.4,
+                shift: 7,
+            },
+            Transform::CatalogRollover {
+                at_frac: 0.5,
+                frac: 0.6,
+            },
+            Transform::Outage {
+                start_frac: 0.1,
+                end_frac: 0.9,
+                n_down: 3,
+            },
+        ];
+        for tr in variants {
+            let mut materialized = base();
+            let t0 = materialized.requests[0].time;
+            let span = (materialized.requests.last().unwrap().time - t0)
+                .max(f64::MIN_POSITIVE);
+            let (n_items, n_servers) = (materialized.n_items, materialized.n_servers);
+            let mut rng_a = Rng::new(99);
+            tr.apply(&mut materialized, &mut rng_a);
+
+            let mut streamed = base();
+            let mut rng_b = Rng::new(99);
+            let mut st = tr.streamed(t0, span, n_items, n_servers, &mut rng_b);
+            for r in streamed.requests.iter_mut() {
+                st.apply(r, &mut rng_b, n_items, n_servers);
+            }
+            assert_eq!(
+                streamed.requests,
+                materialized.requests,
+                "streamed {} diverged from materialized",
+                tr.name()
+            );
+            streamed.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn transformed_source_streams_per_chunk() {
+        use crate::trace::stream::{MemorySource, TraceSource};
+        let t = base();
+        let t0 = t.requests[0].time;
+        let span = t.requests.last().unwrap().time - t0;
+        let tr = Transform::RateScale { factor: 2.0 };
+
+        // Materialized reference with the same derived stage rng.
+        let mut reference = t.clone();
+        let mut rng = Rng::new(7 ^ 0x9E37_79B9_7F4A_7C15);
+        tr.apply(&mut reference, &mut rng);
+
+        let inner = MemorySource::new(&t).with_chunk_len(97);
+        let mut src = TransformedSource::new(inner, &[tr], t0, span, 7);
+        assert_eq!(src.meta().n_items, t.n_items);
+        let streamed = src.collect().unwrap();
+        assert_eq!(streamed.requests, reference.requests);
     }
 
     #[test]

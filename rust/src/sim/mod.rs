@@ -5,7 +5,7 @@
 pub mod replay;
 pub mod report;
 
-pub use replay::{replay_sharded, ReplayMode, ShardedReport};
+pub use replay::{replay_sharded, replay_sharded_stream, ReplayMode, ShardedReport};
 pub use report::SimReport;
 
 use crate::algo::CachePolicy;
@@ -21,12 +21,15 @@ use crate::trace::model::Trace;
 /// `prepare` first.
 ///
 /// **Deprecated shim** (DESIGN.md §8): this is now a thin wrapper over
-/// [`crate::run::drive_trace`] with no observer — prefer
-/// [`crate::run::RunSpec`], which adds policy-by-name construction,
-/// workload materialization, and streaming observers on the identical
-/// code path.
+/// [`crate::run::drive_trace`] with the trace lent through a
+/// [`MemorySource`](crate::trace::stream::MemorySource) and no observer —
+/// prefer [`crate::run::RunSpec`], which adds policy-by-name
+/// construction, workload materialization, and streaming observers on
+/// the identical code path.
 pub fn run(policy: &mut dyn CachePolicy, trace: &Trace, batch_size: usize) -> SimReport {
-    crate::run::drive_trace(policy, trace, batch_size, &mut crate::run::NullObserver)
+    let mut source = crate::trace::stream::MemorySource::new(trace);
+    crate::run::drive_trace(policy, &mut source, batch_size, &mut crate::run::NullObserver)
+        .expect("in-memory trace replay cannot fail")
 }
 
 #[cfg(test)]

@@ -18,6 +18,12 @@ use crate::config::AkpcConfig;
 use crate::coordinator::{Coordinator, MetricsSnapshot, ServeRequest, TickMode};
 use crate::runtime::CrmEngine;
 use crate::trace::model::Trace;
+use crate::trace::stream::{MemorySource, TraceSource};
+
+/// Bounded per-shard routing queue for the streaming parallel replay:
+/// deep enough to keep shard threads busy, shallow enough that the
+/// in-flight request memory stays a constant per shard.
+pub const SHARD_CHANNEL_CAP: usize = 1_024;
 
 /// Replay scheduling strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,11 +79,35 @@ impl ShardedReport {
 }
 
 /// Replay `trace` through an `n_shards` coordinator; returns the final
-/// metrics (the coordinator is shut down before returning).
+/// metrics (the coordinator is shut down before returning). Thin
+/// materialized wrapper over [`replay_sharded_stream`].
 pub fn replay_sharded(
     cfg: &AkpcConfig,
     engine: CrmEngine,
     trace: &Trace,
+    n_shards: usize,
+    mode: ReplayMode,
+) -> anyhow::Result<ShardedReport> {
+    let mut source = MemorySource::new(trace);
+    replay_sharded_stream(cfg, engine, &mut source, n_shards, mode)
+}
+
+/// Replay a streaming [`TraceSource`] through an `n_shards` coordinator —
+/// the coordinator's `WindowBatcher` fills straight from the stream, so
+/// peak replay-side memory is one chunk plus the bounded routing queues
+/// (DESIGN.md §10.5).
+///
+/// * `Ordered` — the driver thread pulls chunks and submits every
+///   request in global time order through the synchronous window
+///   barrier; ledger-equivalent to a single-leader streamed replay.
+/// * `Parallel` — one client thread per shard; the driver routes each
+///   request to its shard's bounded channel (capacity
+///   [`SHARD_CHANNEL_CAP`]), preserving per-shard time order while
+///   shards serve concurrently.
+pub fn replay_sharded_stream(
+    cfg: &AkpcConfig,
+    engine: CrmEngine,
+    source: &mut dyn TraceSource,
     n_shards: usize,
     mode: ReplayMode,
 ) -> anyhow::Result<ShardedReport> {
@@ -88,30 +118,32 @@ pub fn replay_sharded(
     let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick);
     let n_shards = coord.n_shards();
     let wall = std::time::Instant::now();
+    let mut served = 0usize;
+    let mut chunk = Vec::new();
 
     match mode {
         ReplayMode::Ordered => {
-            for r in &trace.requests {
-                coord.serve(ServeRequest {
-                    items: r.items.clone(),
-                    server: r.server,
-                    time: Some(r.time),
-                })?;
+            while source.next_chunk(&mut chunk)? {
+                for r in chunk.drain(..) {
+                    coord.serve(ServeRequest {
+                        items: r.items,
+                        server: r.server,
+                        time: Some(r.time),
+                    })?;
+                    served += 1;
+                }
             }
         }
         ReplayMode::Parallel => {
+            let mut txs = Vec::with_capacity(n_shards);
             let mut handles = Vec::with_capacity(n_shards);
-            for shard in 0..n_shards {
+            for _ in 0..n_shards {
+                let (tx, rx) = std::sync::mpsc::sync_channel::<crate::trace::model::Request>(
+                    SHARD_CHANNEL_CAP,
+                );
                 let client = coord.client();
-                // Each thread owns its shard's time-ordered subsequence.
-                let requests: Vec<_> = trace
-                    .requests
-                    .iter()
-                    .filter(|r| r.server as usize % n_shards == shard)
-                    .cloned()
-                    .collect();
                 handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
-                    for r in requests {
+                    for r in rx {
                         client.serve(ServeRequest {
                             items: r.items,
                             server: r.server,
@@ -120,11 +152,28 @@ pub fn replay_sharded(
                     }
                     Ok(())
                 }));
+                txs.push(tx);
             }
+            // Route in global order; each shard's channel preserves its
+            // subsequence order. A send error means the shard thread
+            // died — stop routing and surface its error via join.
+            let mut routing_broken = false;
+            'route: while source.next_chunk(&mut chunk)? {
+                for r in chunk.drain(..) {
+                    let shard = r.server as usize % n_shards;
+                    if txs[shard].send(r).is_err() {
+                        routing_broken = true;
+                        break 'route;
+                    }
+                    served += 1;
+                }
+            }
+            drop(txs);
             for h in handles {
                 h.join()
                     .map_err(|_| anyhow::anyhow!("replay client panicked"))??;
             }
+            anyhow::ensure!(!routing_broken, "replay client exited early");
         }
     }
 
@@ -135,7 +184,7 @@ pub fn replay_sharded(
         n_shards,
         mode,
         wall_secs,
-        requests_per_sec: trace.len() as f64 / wall_secs.max(1e-12),
+        requests_per_sec: served as f64 / wall_secs.max(1e-12),
     })
 }
 

@@ -22,12 +22,24 @@ pub struct SimReport {
 
 impl SimReport {
     pub fn collect(policy: &dyn CachePolicy, trace: &Trace, wall_secs: f64) -> Self {
+        Self::from_parts(policy, &trace.name, trace.len(), wall_secs)
+    }
+
+    /// Build a report without a materialized trace — the streaming
+    /// driver's form: provenance and request count come from the stream
+    /// ([`TraceMeta`](crate::trace::stream::TraceMeta) + served count).
+    pub fn from_parts(
+        policy: &dyn CachePolicy,
+        trace_name: &str,
+        n_requests: usize,
+        wall_secs: f64,
+    ) -> Self {
         let ledger: CostLedger = policy.ledger().clone();
         Self {
             name: policy.name(),
-            trace: trace.name.clone(),
-            n_requests: trace.len(),
-            requests_per_sec: trace.len() as f64 / wall_secs.max(1e-12),
+            trace: trace_name.to_string(),
+            n_requests,
+            requests_per_sec: n_requests as f64 / wall_secs.max(1e-12),
             ledger,
             clique_hist: policy.clique_sizes(),
             wall_secs,

@@ -28,6 +28,16 @@ pub enum TraceKind {
     Spotify,
 }
 
+impl TraceKind {
+    /// The provenance name generated traces carry (`Trace::name`).
+    pub fn trace_name(&self) -> &'static str {
+        match self {
+            TraceKind::Netflix => "netflix-like",
+            TraceKind::Spotify => "spotify-like",
+        }
+    }
+}
+
 /// All knobs of the synthetic generator.
 #[derive(Debug, Clone)]
 pub struct GeneratorParams {
@@ -200,92 +210,166 @@ pub fn generate(params: &GeneratorParams, kind: TraceKind) -> Trace {
 }
 
 fn generate_unchecked(params: &GeneratorParams, kind: TraceKind) -> Trace {
-    let mut rng = Rng::new(params.seed);
-    let bundles = Bundles::generate(params, &mut rng);
-    let n_bundles = bundles.groups.len();
-
-    let bundle_zipf = ZipfSampler::new(n_bundles, params.zipf_bundles);
-    let server_zipf = ZipfSampler::new(params.n_servers as usize, params.zipf_servers);
-
-    // Popularity rotation (churn): bundle rank r maps to bundle
-    // (r + offset) % n_bundles.
-    let mut churn_offset = 0usize;
-
-    let mut t = 0.0f64;
-    let mean_gap = 1.0 / params.req_rate;
+    let mut gen = TraceGenerator::new_unchecked(params, kind);
     let mut requests = Vec::with_capacity(params.n_requests);
-
-    // Session state: a user browses one bundle at one server through a
-    // short sequence of requests (the paper's motivating pattern — reels /
-    // brief news: "accessing a news article often leads to viewing related
-    // content shortly after"). The session *walks* the bundle's items
-    // without replacement, mostly one item per view, occasionally a small
-    // multi-item request (article + its pictures). This sequential
-    // co-access within Δt at one server is exactly what makes anticipatory
-    // packed caching profitable.
-    struct Session {
-        server: u32,
-        /// Bundle items not yet viewed, in viewing order.
-        remaining: Vec<u32>,
-        bursts_left: usize,
+    while let Some(r) = gen.next_request() {
+        requests.push(r);
     }
-    let mut session: Option<Session> = None;
+    Trace {
+        requests,
+        n_items: params.n_items,
+        n_servers: params.n_servers,
+        name: kind.trace_name().into(),
+    }
+}
 
-    for i in 0..params.n_requests {
-        if params.churn_every > 0 && i > 0 && i % params.churn_every == 0 {
-            churn_offset = (churn_offset + params.churn_shift) % n_bundles;
-            session = None;
+/// Session state: a user browses one bundle at one server through a
+/// short sequence of requests (the paper's motivating pattern — reels /
+/// brief news: "accessing a news article often leads to viewing related
+/// content shortly after"). The session *walks* the bundle's items
+/// without replacement, mostly one item per view, occasionally a small
+/// multi-item request (article + its pictures). This sequential
+/// co-access within Δt at one server is exactly what makes anticipatory
+/// packed caching profitable.
+struct Session {
+    server: u32,
+    /// Bundle items not yet viewed, in viewing order.
+    remaining: Vec<u32>,
+    bursts_left: usize,
+}
+
+/// Resumable request generator — the streaming form of [`generate`].
+///
+/// Holds the full sampling state (RNG, latent bundles, churn offset, the
+/// open session) between calls, so requests can be pulled one at a time
+/// or chunk by chunk ([`crate::trace::stream::GeneratorSource`]) without
+/// ever materializing the trace. Draining a fresh generator yields the
+/// request stream of [`generate`] with the same parameters, bit for bit
+/// (pinned by a unit test below).
+pub struct TraceGenerator {
+    params: GeneratorParams,
+    kind: TraceKind,
+    rng: Rng,
+    bundles: Bundles,
+    bundle_zipf: ZipfSampler,
+    server_zipf: ZipfSampler,
+    /// Popularity rotation (churn): bundle rank r maps to bundle
+    /// (r + offset) % n_bundles.
+    churn_offset: usize,
+    t: f64,
+    session: Option<Session>,
+    /// Requests generated so far (the loop index of the batch form).
+    emitted: usize,
+}
+
+impl TraceGenerator {
+    /// Validate `params` and build a generator positioned at request 0.
+    pub fn new(params: &GeneratorParams, kind: TraceKind) -> anyhow::Result<Self> {
+        params.validate()?;
+        Ok(Self::new_unchecked(params, kind))
+    }
+
+    fn new_unchecked(params: &GeneratorParams, kind: TraceKind) -> Self {
+        let mut rng = Rng::new(params.seed);
+        let bundles = Bundles::generate(params, &mut rng);
+        let n_bundles = bundles.groups.len();
+        let bundle_zipf = ZipfSampler::new(n_bundles, params.zipf_bundles);
+        let server_zipf = ZipfSampler::new(params.n_servers as usize, params.zipf_servers);
+        Self {
+            params: params.clone(),
+            kind,
+            rng,
+            bundles,
+            bundle_zipf,
+            server_zipf,
+            churn_offset: 0,
+            t: 0.0,
+            session: None,
+            emitted: 0,
         }
-        t += rng.exp(mean_gap);
+    }
 
-        let need_new = match &session {
+    /// The preset this generator follows.
+    pub fn kind(&self) -> TraceKind {
+        self.kind
+    }
+
+    /// The generator's parameter set.
+    pub fn params(&self) -> &GeneratorParams {
+        &self.params
+    }
+
+    /// Requests not yet emitted.
+    pub fn remaining(&self) -> usize {
+        self.params.n_requests - self.emitted
+    }
+
+    /// Emit the next request, or `None` once `n_requests` have been
+    /// produced.
+    pub fn next_request(&mut self) -> Option<Request> {
+        if self.emitted >= self.params.n_requests {
+            return None;
+        }
+        // Scalar knobs copied out so `self.rng` can be borrowed mutably.
+        let GeneratorParams {
+            n_items,
+            d_max,
+            noise,
+            req_rate,
+            p_continue,
+            session_max,
+            churn_every,
+            churn_shift,
+            ..
+        } = self.params;
+        let n_bundles = self.bundles.groups.len();
+        let i = self.emitted;
+        if churn_every > 0 && i > 0 && i % churn_every == 0 {
+            self.churn_offset = (self.churn_offset + churn_shift) % n_bundles;
+            self.session = None;
+        }
+        self.t += self.rng.exp(1.0 / req_rate);
+
+        let need_new = match &self.session {
             Some(s) => s.bursts_left == 0 || s.remaining.is_empty(),
             None => true,
         };
         if need_new {
-            let rank = bundle_zipf.sample(&mut rng);
-            let b = (rank + churn_offset) % n_bundles;
-            let server = server_zipf.sample(&mut rng) as u32;
-            let mut remaining = bundles.groups[b].clone();
-            rng.shuffle(&mut remaining);
+            let rank = self.bundle_zipf.sample(&mut self.rng);
+            let b = (rank + self.churn_offset) % n_bundles;
+            let server = self.server_zipf.sample(&mut self.rng) as u32;
+            let mut remaining = self.bundles.groups[b].clone();
+            self.rng.shuffle(&mut remaining);
             let mut bursts = 1usize;
-            while bursts < params.session_max && rng.chance(params.p_continue) {
+            while bursts < session_max && self.rng.chance(p_continue) {
                 bursts += 1;
             }
-            session = Some(Session {
+            self.session = Some(Session {
                 server,
                 remaining,
                 bursts_left: bursts,
             });
         }
-        let s = session.as_mut().expect("session exists");
+        let s = self.session.as_mut().expect("session exists");
         s.bursts_left -= 1;
 
         // Burst size: usually 1 item, sometimes a small set.
         let mut k = 1usize;
-        while k < params.d_max.min(s.remaining.len()) && rng.chance(0.25) {
+        while k < d_max.min(s.remaining.len()) && self.rng.chance(0.25) {
             k += 1;
         }
         let mut items: Vec<u32> = s.remaining.drain(..k.min(s.remaining.len())).collect();
+        let server = s.server;
 
         // Cross-bundle noise.
         for item in items.iter_mut() {
-            if rng.chance(params.noise) {
-                *item = rng.below(params.n_items as usize) as u32;
+            if self.rng.chance(noise) {
+                *item = self.rng.below(n_items as usize) as u32;
             }
         }
 
-        requests.push(Request::new(items, s.server, t));
-    }
-
-    Trace {
-        requests,
-        n_items: params.n_items,
-        n_servers: params.n_servers,
-        name: match kind {
-            TraceKind::Netflix => "netflix-like".into(),
-            TraceKind::Spotify => "spotify-like".into(),
-        },
+        self.emitted += 1;
+        Some(Request::new(items, server, self.t))
     }
 }
 
@@ -437,6 +521,27 @@ mod tests {
             assert!(p.validate().is_err(), "accepted bad params {p:?}");
             assert!(try_generate(&p, TraceKind::Netflix).is_err());
         }
+    }
+
+    #[test]
+    fn resumable_generator_matches_batch_form() {
+        // The streaming generator is the same sampler, restructured: a
+        // full drain must be bit-identical to `generate`, and pulling
+        // one request at a time must not disturb the stream.
+        let mut p = GeneratorParams::spotify(60, 20, 5_000);
+        p.churn_every = 1_000; // exercise the churn reset path too
+        p.churn_shift = 3;
+        let batch = generate(&p, TraceKind::Spotify);
+        let mut gen = TraceGenerator::new(&p, TraceKind::Spotify).unwrap();
+        assert_eq!(gen.remaining(), 5_000);
+        assert_eq!(gen.kind(), TraceKind::Spotify);
+        let mut streamed = Vec::new();
+        while let Some(r) = gen.next_request() {
+            streamed.push(r);
+        }
+        assert!(gen.next_request().is_none(), "exhausted generator yields None");
+        assert_eq!(gen.remaining(), 0);
+        assert_eq!(streamed, batch.requests);
     }
 
     #[test]

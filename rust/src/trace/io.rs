@@ -1,16 +1,33 @@
 //! Trace file IO: a human-readable CSV form and a compact binary form.
 //!
 //! CSV (one request per line): `time,server,item[;item...]`
-//! Binary: little-endian framed records, magic `AKPT`, version 1 — about
-//! 6x smaller and 10x faster to load for the 1M-request evaluation traces.
+//! Binary: little-endian framed records, magic `AKPT` — about 6x smaller
+//! and 10x faster to load for the 1M-request evaluation traces. Two
+//! versions share the header layout (DESIGN.md §10.2):
+//!
+//! * **v1 (flat)** — the header's `n_reqs` records back to back;
+//! * **v2 (chunked)** — records grouped into length-prefixed frames
+//!   (`u32` record count per frame), so a reader can pull one bounded
+//!   chunk at a time ([`BinaryStreamSource`]) and a writer can emit a
+//!   trace it never holds ([`write_binary_chunked_from`]).
+//!
+//! [`BinaryStreamSource`]: super::stream::BinaryStreamSource
+//!
+//! Every CSV row error carries the 1-based line number *and* the row's
+//! starting byte offset, so a bad row in a multi-gigabyte dump can be
+//! located with `dd`/`tail -c` instead of a line-counting pass.
 
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use super::model::{Request, Trace};
+use super::stream::{MemorySource, TraceSource};
 
 const MAGIC: &[u8; 4] = b"AKPT";
-const VERSION: u32 = 1;
+/// Flat record layout (the original format).
+pub(crate) const VERSION_FLAT: u32 = 1;
+/// Chunk-framed layout ([`write_binary_chunked`]).
+pub(crate) const VERSION_CHUNKED: u32 = 2;
 
 /// Write a trace as CSV (with a `#` header carrying metadata).
 pub fn write_csv(trace: &Trace, path: impl AsRef<Path>) -> anyhow::Result<()> {
@@ -33,68 +50,121 @@ pub fn write_csv(trace: &Trace, path: impl AsRef<Path>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse the `#`-prefixed metadata header tokens.
+/// Returns `(name, n_items, n_servers)` — each present only if its
+/// `key=` token appeared.
+pub(crate) fn parse_csv_header(
+    hdr: &str,
+    lineno: usize,
+    byte_off: u64,
+) -> anyhow::Result<(Option<String>, Option<u32>, Option<u32>)> {
+    let (mut name, mut n_items, mut n_servers) = (None, None, None);
+    for tok in hdr.split_whitespace() {
+        if let Some(v) = tok.strip_prefix("name=") {
+            name = Some(v.to_string());
+        } else if let Some(v) = tok.strip_prefix("n_items=") {
+            n_items = Some(v.parse().map_err(|e| {
+                anyhow::anyhow!("line {lineno} (byte {byte_off}): bad n_items `{v}`: {e}")
+            })?);
+        } else if let Some(v) = tok.strip_prefix("n_servers=") {
+            n_servers = Some(v.parse().map_err(|e| {
+                anyhow::anyhow!("line {lineno} (byte {byte_off}): bad n_servers `{v}`: {e}")
+            })?);
+        }
+    }
+    Ok((name, n_items, n_servers))
+}
+
+/// Parse one `time,server,item[;item...]` data row. When `n_items > 0`
+/// every item id is validated against it. Errors carry the 1-based line
+/// number and the row's starting byte offset.
+pub(crate) fn parse_csv_data_row(
+    line: &str,
+    lineno: usize,
+    byte_off: u64,
+    n_items: u32,
+) -> anyhow::Result<Request> {
+    let mut parts = line.splitn(3, ',');
+    let time: f64 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("line {lineno} (byte {byte_off}): missing time"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("line {lineno} (byte {byte_off}): bad time: {e}"))?;
+    let server: u32 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("line {lineno} (byte {byte_off}): missing server"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("line {lineno} (byte {byte_off}): bad server: {e}"))?;
+    let items_field = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("line {lineno} (byte {byte_off}): missing items"))?;
+    anyhow::ensure!(
+        !items_field.is_empty(),
+        "line {lineno} (byte {byte_off}): empty item list"
+    );
+    let items: Vec<u32> = items_field
+        .split(';')
+        .map(|s| {
+            s.parse::<u32>().map_err(|e| {
+                anyhow::anyhow!("line {lineno} (byte {byte_off}): bad item `{s}`: {e}")
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    if n_items > 0 {
+        if let Some(&bad) = items.iter().find(|&&d| d >= n_items) {
+            anyhow::bail!(
+                "line {lineno} (byte {byte_off}): item {bad} out of range \
+                 (header n_items={n_items})"
+            );
+        }
+    }
+    Ok(Request::new(items, server, time))
+}
+
 /// Read a CSV trace written by [`write_csv`].
 ///
-/// Malformed rows are rejected with their 1-based line number; empty item
-/// lists are errors, and when the `#` header carries `n_items=`, every
-/// item id is validated against it.
+/// Malformed rows are rejected with their 1-based line number and byte
+/// offset; empty item lists are errors, and when the `#` header carries
+/// `n_items=`, every item id is validated against it. Header-less files
+/// are accepted for legacy compatibility (the universe shape stays 0 —
+/// the streaming reader
+/// [`CsvStreamSource`](super::stream::CsvStreamSource) is stricter
+/// because it must know the shape up front).
 pub fn read_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
     let f = std::fs::File::open(path)?;
-    let r = BufReader::new(f);
+    let mut r = BufReader::new(f);
     let mut trace = Trace::default();
-    for (i, line) in r.lines().enumerate() {
-        let lineno = i + 1;
-        let line = line?;
-        if line.is_empty() {
+    let mut line = String::new();
+    let (mut lineno, mut byte_off) = (0usize, 0u64);
+    loop {
+        line.clear();
+        let n = r.read_line(&mut line)?;
+        if n == 0 {
+            break;
+        }
+        lineno += 1;
+        let start = byte_off;
+        byte_off += n as u64;
+        let text = line.trim_end_matches(['\n', '\r']);
+        if text.is_empty() {
             continue;
         }
-        if let Some(hdr) = line.strip_prefix('#') {
-            for tok in hdr.split_whitespace() {
-                if let Some(v) = tok.strip_prefix("name=") {
-                    trace.name = v.to_string();
-                } else if let Some(v) = tok.strip_prefix("n_items=") {
-                    trace.n_items = v
-                        .parse()
-                        .map_err(|e| anyhow::anyhow!("line {lineno}: bad n_items `{v}`: {e}"))?;
-                } else if let Some(v) = tok.strip_prefix("n_servers=") {
-                    trace.n_servers = v.parse().map_err(|e| {
-                        anyhow::anyhow!("line {lineno}: bad n_servers `{v}`: {e}")
-                    })?;
-                }
+        if let Some(hdr) = text.strip_prefix('#') {
+            let (name, n_items, n_servers) = parse_csv_header(hdr, lineno, start)?;
+            if let Some(v) = name {
+                trace.name = v;
+            }
+            if let Some(v) = n_items {
+                trace.n_items = v;
+            }
+            if let Some(v) = n_servers {
+                trace.n_servers = v;
             }
             continue;
         }
-        let mut parts = line.splitn(3, ',');
-        let time: f64 = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing time"))?
-            .parse()
-            .map_err(|e| anyhow::anyhow!("line {lineno}: bad time: {e}"))?;
-        let server: u32 = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing server"))?
-            .parse()
-            .map_err(|e| anyhow::anyhow!("line {lineno}: bad server: {e}"))?;
-        let items_field = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing items"))?;
-        anyhow::ensure!(!items_field.is_empty(), "line {lineno}: empty item list");
-        let items: Vec<u32> = items_field
-            .split(';')
-            .map(|s| {
-                s.parse::<u32>()
-                    .map_err(|e| anyhow::anyhow!("line {lineno}: bad item `{s}`: {e}"))
-            })
-            .collect::<anyhow::Result<_>>()?;
-        if trace.n_items > 0 {
-            if let Some(&bad) = items.iter().find(|&&d| d >= trace.n_items) {
-                anyhow::bail!(
-                    "line {lineno}: item {bad} out of range (header n_items={})",
-                    trace.n_items
-                );
-            }
-        }
-        trace.requests.push(Request::new(items, server, time));
+        trace
+            .requests
+            .push(parse_csv_data_row(text, lineno, start, trace.n_items)?);
     }
     Ok(trace)
 }
@@ -118,6 +188,11 @@ pub fn read_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
 /// (stable), rows with identical `(time, server)` merge into one
 /// multi-item request, and `n_items` / `n_servers` are inferred from the
 /// data.
+///
+/// This reader is **inherently materializing** (DESIGN.md §10.4): the
+/// all-or-nothing id interning and the global `(time, server)` sort both
+/// need the whole file, so there is no streaming form — wrap the result
+/// in a [`MemorySource`] to feed the streaming drivers.
 /// Split one CSV row on commas, honoring double-quoted fields (commas
 /// inside `"..."` do not separate; `""` inside a quoted field is an
 /// escaped quote). Cells come back trimmed and unquoted.
@@ -147,75 +222,95 @@ fn split_csv_row(line: &str) -> Vec<String> {
 
 pub fn read_external_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
     let path = path.as_ref();
-    let f = std::fs::File::open(path)?;
-    let r = BufReader::new(f);
-    let mut lines = r.lines().enumerate();
-
-    // Locate + parse the header row.
+    // One read_line pass tracking (lineno, byte offset) — only the
+    // parsed `rows` stay resident (the raw text does not; the function
+    // is "materializing" in the §10.4 sense because of the id-interning
+    // and sort phases below, not because of the file read).
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut line = String::new();
+    let (mut lineno, mut byte_off) = (0usize, 0u64);
     let (mut time_col, mut server_col, mut item_col) = (None, None, None);
-    for (i, line) in lines.by_ref() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        for (col, name) in split_csv_row(&line).into_iter().enumerate() {
-            match name.to_ascii_lowercase().as_str() {
-                "time" | "timestamp" | "t" | "ts" => time_col = Some(col),
-                "server" | "server_id" | "ess" | "region" | "user_id" | "user" => {
-                    server_col = Some(col)
-                }
-                "item" | "item_id" | "items" | "track_id" | "movie_id" | "title_id" => {
-                    item_col = Some(col)
-                }
-                _ => {}
-            }
-        }
-        anyhow::ensure!(
-            time_col.is_some() && server_col.is_some() && item_col.is_some(),
-            "line {}: header must name time/server/item columns (got `{line}`)",
-            i + 1
-        );
-        break;
-    }
-    let (time_col, server_col, item_col) = match (time_col, server_col, item_col) {
-        (Some(t), Some(s), Some(d)) => (t, s, d),
-        _ => anyhow::bail!("empty file: no header row"),
-    };
-
-    // First pass: collect raw cells (id resolution is per-column,
-    // all-or-nothing, so it must wait until the whole file is read).
+    let mut header_found = false;
     let mut rows: Vec<(f64, String, Vec<String>)> = Vec::new();
-    for (i, line) in lines {
-        let lineno = i + 1;
-        let line = line?;
-        if line.trim().is_empty() {
+    loop {
+        line.clear();
+        let n = r.read_line(&mut line)?;
+        if n == 0 {
+            break;
+        }
+        lineno += 1;
+        let start = byte_off;
+        byte_off += n as u64;
+        let text = line.trim_end_matches(['\n', '\r']);
+        if text.trim().is_empty() {
             continue;
         }
-        let cells = split_csv_row(&line);
-        let cell = |col: usize, what: &str| -> anyhow::Result<&str> {
+
+        if !header_found {
+            // Locate + parse the header row.
+            for (col, name) in split_csv_row(text).into_iter().enumerate() {
+                match name.to_ascii_lowercase().as_str() {
+                    "time" | "timestamp" | "t" | "ts" => time_col = Some(col),
+                    "server" | "server_id" | "ess" | "region" | "user_id" | "user" => {
+                        server_col = Some(col)
+                    }
+                    "item" | "item_id" | "items" | "track_id" | "movie_id" | "title_id" => {
+                        item_col = Some(col)
+                    }
+                    _ => {}
+                }
+            }
+            anyhow::ensure!(
+                time_col.is_some() && server_col.is_some() && item_col.is_some(),
+                "line {lineno} (byte {start}): header must name time/server/item \
+                 columns (got `{text}`)"
+            );
+            header_found = true;
+            continue;
+        }
+
+        // Data row: collect raw cells (id resolution is per-column,
+        // all-or-nothing, so it must wait until the whole file is read).
+        let cells = split_csv_row(text);
+        let cell = |col: Option<usize>, what: &str| -> anyhow::Result<&str> {
             cells
-                .get(col)
+                .get(col.expect("header checked"))
                 .map(|s| s.as_str())
-                .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing {what} column"))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("line {lineno} (byte {start}): missing {what} column")
+                })
         };
-        let time: f64 = cell(time_col, "time")?
-            .parse()
-            .map_err(|e| anyhow::anyhow!("line {lineno}: bad time: {e}"))?;
-        anyhow::ensure!(time.is_finite(), "line {lineno}: non-finite timestamp");
+        let time: f64 = cell(time_col, "time")?.parse().map_err(|e| {
+            anyhow::anyhow!("line {lineno} (byte {start}): bad time: {e}")
+        })?;
+        anyhow::ensure!(
+            time.is_finite(),
+            "line {lineno} (byte {start}): non-finite timestamp"
+        );
         let server = cell(server_col, "server")?.to_string();
-        anyhow::ensure!(!server.is_empty(), "line {lineno}: empty server id");
+        anyhow::ensure!(
+            !server.is_empty(),
+            "line {lineno} (byte {start}): empty server id"
+        );
         let item_cell = cell(item_col, "item")?;
-        anyhow::ensure!(!item_cell.is_empty(), "line {lineno}: empty item list");
+        anyhow::ensure!(
+            !item_cell.is_empty(),
+            "line {lineno} (byte {start}): empty item list"
+        );
         let items: Vec<String> = item_cell
             .split(';')
             .map(|s| {
                 let s = s.trim();
-                anyhow::ensure!(!s.is_empty(), "line {lineno}: empty item in `{item_cell}`");
+                anyhow::ensure!(
+                    !s.is_empty(),
+                    "line {lineno} (byte {start}): empty item in `{item_cell}`"
+                );
                 Ok(s.to_string())
             })
             .collect::<anyhow::Result<_>>()?;
         rows.push((time, server, items));
     }
+    anyhow::ensure!(header_found, "empty file: no header row");
     anyhow::ensure!(!rows.is_empty(), "no data rows in external trace");
 
     // Per-column id resolution: numeric ids pass through only when the
@@ -290,74 +385,259 @@ pub fn read_external_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
     Ok(trace)
 }
 
-/// Write the compact binary form.
-pub fn write_binary(trace: &Trace, path: impl AsRef<Path>) -> anyhow::Result<()> {
-    let f = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&trace.n_items.to_le_bytes())?;
-    w.write_all(&trace.n_servers.to_le_bytes())?;
-    let name = trace.name.as_bytes();
-    w.write_all(&(name.len() as u32).to_le_bytes())?;
-    w.write_all(name)?;
-    w.write_all(&(trace.requests.len() as u64).to_le_bytes())?;
-    for r in &trace.requests {
-        w.write_all(&r.time.to_le_bytes())?;
-        w.write_all(&r.server.to_le_bytes())?;
-        w.write_all(&(r.items.len() as u16).to_le_bytes())?;
-        for &d in &r.items {
-            w.write_all(&d.to_le_bytes())?;
+// ---------------------------------------------------------------------
+// Binary format: shared byte-level helpers
+// ---------------------------------------------------------------------
+
+/// `read_exact` with EOF mapped to the canonical truncation error.
+fn fill(r: &mut impl Read, buf: &mut [u8]) -> anyhow::Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            anyhow::anyhow!("truncated trace file")
+        } else {
+            anyhow::Error::from(e)
         }
+    })
+}
+
+fn read_u16(r: &mut impl Read) -> anyhow::Result<u16> {
+    let mut b = [0u8; 2];
+    fill(r, &mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    fill(r, &mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    fill(r, &mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64(r: &mut impl Read) -> anyhow::Result<f64> {
+    let mut b = [0u8; 8];
+    fill(r, &mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// The parsed fixed header both binary versions share.
+#[derive(Debug, Clone)]
+pub(crate) struct BinaryHeader {
+    pub version: u32,
+    pub n_items: u32,
+    pub n_servers: u32,
+    pub name: String,
+    pub n_reqs: u64,
+}
+
+/// Read and validate the versioned header (magic, version, universe
+/// shape, name, request count). Corruption errors name what was
+/// expected so a mis-pointed path fails with a self-explaining message.
+pub(crate) fn read_binary_header(r: &mut impl Read) -> anyhow::Result<BinaryHeader> {
+    let mut magic = [0u8; 4];
+    fill(r, &mut magic)?;
+    anyhow::ensure!(
+        &magic == MAGIC,
+        "bad magic `{}`: not an `AKPT` binary trace file",
+        String::from_utf8_lossy(&magic).escape_default()
+    );
+    let version = read_u32(r)?;
+    anyhow::ensure!(
+        version == VERSION_FLAT || version == VERSION_CHUNKED,
+        "unsupported version {version} (supported: {VERSION_FLAT} flat, \
+         {VERSION_CHUNKED} chunked)"
+    );
+    let n_items = read_u32(r)?;
+    let n_servers = read_u32(r)?;
+    let name_len = read_u32(r)? as usize;
+    anyhow::ensure!(
+        name_len <= 1 << 16,
+        "corrupt header: name length {name_len} exceeds 64KiB"
+    );
+    let mut name_bytes = vec![0u8; name_len];
+    fill(r, &mut name_bytes)?;
+    let name = String::from_utf8(name_bytes)?;
+    let n_reqs = read_u64(r)?;
+    Ok(BinaryHeader {
+        version,
+        n_items,
+        n_servers,
+        name,
+        n_reqs,
+    })
+}
+
+/// Read one v2 frame header: the record count of the next chunk.
+pub(crate) fn read_frame_header(r: &mut impl Read) -> anyhow::Result<u32> {
+    read_u32(r)
+}
+
+/// Read one `(time, server, k, items...)` record (identical in v1/v2).
+pub(crate) fn read_binary_record(r: &mut impl Read) -> anyhow::Result<Request> {
+    let time = read_f64(r)?;
+    let server = read_u32(r)?;
+    let k = read_u16(r)? as usize;
+    let mut items = Vec::with_capacity(k);
+    for _ in 0..k {
+        items.push(read_u32(r)?);
+    }
+    Ok(Request {
+        items,
+        server,
+        time,
+    })
+}
+
+fn write_record(w: &mut impl Write, r: &Request) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        r.items.len() <= u16::MAX as usize,
+        "request has {} items (format limit {})",
+        r.items.len(),
+        u16::MAX
+    );
+    w.write_all(&r.time.to_le_bytes())?;
+    w.write_all(&r.server.to_le_bytes())?;
+    w.write_all(&(r.items.len() as u16).to_le_bytes())?;
+    for &d in &r.items {
+        w.write_all(&d.to_le_bytes())?;
     }
     Ok(())
 }
 
-/// Read the compact binary form.
-pub fn read_binary(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
-    let mut data = Vec::new();
-    std::fs::File::open(path)?.read_to_end(&mut data)?;
-    let mut pos = 0usize;
+fn write_header(
+    w: &mut impl Write,
+    version: u32,
+    n_items: u32,
+    n_servers: u32,
+    name: &str,
+    n_reqs: u64,
+) -> anyhow::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&version.to_le_bytes())?;
+    w.write_all(&n_items.to_le_bytes())?;
+    w.write_all(&n_servers.to_le_bytes())?;
+    let name = name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    w.write_all(&n_reqs.to_le_bytes())?;
+    Ok(())
+}
 
-    let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
-        anyhow::ensure!(*pos + n <= data.len(), "truncated trace file");
-        let s = &data[*pos..*pos + n];
-        *pos += n;
-        Ok(s)
-    };
-    let u32_at = |pos: &mut usize| -> anyhow::Result<u32> {
-        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
-    };
+/// Byte offset of the `n_reqs` field ([`write_binary_chunked_from`]
+/// patches it after streaming).
+fn n_reqs_offset(name: &str) -> u64 {
+    (4 + 4 + 4 + 4 + 4 + name.len()) as u64
+}
 
-    anyhow::ensure!(take(&mut pos, 4)? == MAGIC, "bad magic");
-    let ver = u32_at(&mut pos)?;
-    anyhow::ensure!(ver == VERSION, "unsupported version {ver}");
-    let n_items = u32_at(&mut pos)?;
-    let n_servers = u32_at(&mut pos)?;
-    let name_len = u32_at(&mut pos)? as usize;
-    let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
-    let n_reqs = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+/// Write the compact binary form (flat v1 layout).
+pub fn write_binary(trace: &Trace, path: impl AsRef<Path>) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    write_header(
+        &mut w,
+        VERSION_FLAT,
+        trace.n_items,
+        trace.n_servers,
+        &trace.name,
+        trace.requests.len() as u64,
+    )?;
+    for r in &trace.requests {
+        write_record(&mut w, r)?;
+    }
+    w.flush()?;
+    Ok(())
+}
 
-    let mut requests = Vec::with_capacity(n_reqs);
-    for _ in 0..n_reqs {
-        let time = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let server = u32_at(&mut pos)?;
-        let k = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
-        let mut items = Vec::with_capacity(k);
-        for _ in 0..k {
-            items.push(u32_at(&mut pos)?);
+/// Write the chunk-framed v2 layout from an in-memory trace, `chunk_len`
+/// requests per frame.
+pub fn write_binary_chunked(
+    trace: &Trace,
+    path: impl AsRef<Path>,
+    chunk_len: usize,
+) -> anyhow::Result<()> {
+    let mut src = MemorySource::new(trace).with_chunk_len(chunk_len);
+    write_binary_chunked_from(&mut src, path)?;
+    Ok(())
+}
+
+/// Stream a [`TraceSource`] straight to a chunk-framed v2 file — the
+/// writer never holds more than one chunk (`akpc gen-trace --chunked`
+/// produces 10⁸-request traces through here). Each pulled chunk becomes
+/// one frame; the header's `n_reqs` is patched in after the stream ends,
+/// so sources with unknown length (`est_len: None`) work too. Returns
+/// the number of requests written.
+pub fn write_binary_chunked_from(
+    source: &mut dyn TraceSource,
+    path: impl AsRef<Path>,
+) -> anyhow::Result<u64> {
+    let meta = source.meta().clone();
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    write_header(
+        &mut w,
+        VERSION_CHUNKED,
+        meta.n_items,
+        meta.n_servers,
+        &meta.name,
+        0, // patched below once the true count is known
+    )?;
+    let mut total = 0u64;
+    let mut buf = Vec::new();
+    while source.next_chunk(&mut buf)? {
+        w.write_all(&(buf.len() as u32).to_le_bytes())?;
+        for r in &buf {
+            write_record(&mut w, r)?;
         }
-        requests.push(Request {
-            items,
-            server,
-            time,
-        });
+        total += buf.len() as u64;
+    }
+    w.flush()?;
+    let f = w.get_mut();
+    f.seek(SeekFrom::Start(n_reqs_offset(&meta.name)))?;
+    f.write_all(&total.to_le_bytes())?;
+    f.flush()?;
+    Ok(total)
+}
+
+/// Read the compact binary form (v1 flat or v2 chunked) into memory.
+/// For bounded-memory consumption use
+/// [`BinaryStreamSource`](super::stream::BinaryStreamSource) instead.
+pub fn read_binary(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let hdr = read_binary_header(&mut r)?;
+    // Cap the pre-allocation so a corrupt count cannot OOM before the
+    // truncation check fires.
+    let mut requests = Vec::with_capacity((hdr.n_reqs as usize).min(1 << 22));
+    match hdr.version {
+        VERSION_FLAT => {
+            for _ in 0..hdr.n_reqs {
+                requests.push(read_binary_record(&mut r)?);
+            }
+        }
+        _ => {
+            let mut seen = 0u64;
+            while seen < hdr.n_reqs {
+                let n = read_frame_header(&mut r)? as u64;
+                anyhow::ensure!(
+                    n >= 1 && n <= hdr.n_reqs - seen,
+                    "corrupt chunk frame: {n} records framed, {} remaining",
+                    hdr.n_reqs - seen
+                );
+                for _ in 0..n {
+                    requests.push(read_binary_record(&mut r)?);
+                }
+                seen += n;
+            }
+        }
     }
     Ok(Trace {
         requests,
-        n_items,
-        n_servers,
-        name,
+        n_items: hdr.n_items,
+        n_servers: hdr.n_servers,
+        name: hdr.name,
     })
 }
 
@@ -397,17 +677,37 @@ mod tests {
     }
 
     #[test]
-    fn csv_errors_carry_line_numbers() {
+    fn chunked_binary_roundtrip_exact() {
+        let t = netflix_like(30, 10, 500, 4);
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("t.akpt");
+        write_binary_chunked(&t, &p, 64).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(back.requests, t.requests);
+        assert_eq!(back.n_items, t.n_items);
+        assert_eq!(back.n_servers, t.n_servers);
+        assert_eq!(back.name, t.name);
+    }
+
+    #[test]
+    fn csv_errors_carry_line_numbers_and_byte_offsets() {
         let dir = TempDir::new("io").unwrap();
         let p = dir.file("bad.csv");
-        std::fs::write(&p, "# akpc-trace v1 n_items=10 n_servers=2\n0.5,0,1;2\n1.0,zero,3\n")
-            .unwrap();
+        let header = "# akpc-trace v1 n_items=10 n_servers=2\n";
+        let row2 = "0.5,0,1;2\n";
+        std::fs::write(&p, format!("{header}{row2}1.0,zero,3\n")).unwrap();
         let err = read_csv(&p).unwrap_err().to_string();
         assert!(err.contains("line 3"), "error lacks line number: {err}");
+        let expect_off = header.len() + row2.len();
+        assert!(
+            err.contains(&format!("byte {expect_off}")),
+            "error lacks byte offset {expect_off}: {err}"
+        );
 
         std::fs::write(&p, "0.5,0,\n").unwrap();
         let err = read_csv(&p).unwrap_err().to_string();
         assert!(err.contains("line 1") && err.contains("empty item list"), "{err}");
+        assert!(err.contains("byte 0"), "{err}");
     }
 
     #[test]
@@ -494,6 +794,8 @@ mod tests {
         std::fs::write(&bad, "time,user_id,track_id\n1.0,u0,12;;34\n").unwrap();
         let err = read_external_csv(&bad).unwrap_err().to_string();
         assert!(err.contains("line 2") && err.contains("empty item"), "{err}");
+        // Byte offset of the bad row = the header line's length.
+        assert!(err.contains("byte 22"), "{err}");
     }
 
     #[test]
@@ -508,21 +810,52 @@ mod tests {
     }
 
     #[test]
-    fn binary_rejects_garbage() {
+    fn binary_rejects_garbage_naming_expected_magic() {
         let dir = TempDir::new("io").unwrap();
         let p = dir.file("bad.bin");
         std::fs::write(&p, b"not a trace").unwrap();
-        assert!(read_binary(&p).is_err());
+        let err = read_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("AKPT"), "magic error should name the format: {err}");
+    }
+
+    #[test]
+    fn binary_rejects_unsupported_version_and_corrupt_frames() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.file("v9.bin");
+        let mut bytes = b"AKPT".to_vec();
+        bytes.extend_from_slice(&9u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("unsupported version 9"), "{err}");
+
+        // A v2 frame claiming more records than the header leaves.
+        let t = netflix_like(10, 5, 20, 1);
+        let p2 = dir.file("frame.akpt");
+        write_binary_chunked(&t, &p2, 20).unwrap();
+        let mut data = std::fs::read(&p2).unwrap();
+        let frame_off = (4 + 4 + 4 + 4 + 4 + t.name.len() + 8) as usize;
+        data[frame_off..frame_off + 4].copy_from_slice(&999u32.to_le_bytes());
+        std::fs::write(&p2, &data).unwrap();
+        let err = read_binary(&p2).unwrap_err().to_string();
+        assert!(err.contains("corrupt chunk frame"), "{err}");
     }
 
     #[test]
     fn binary_rejects_truncated() {
         let t = netflix_like(10, 5, 100, 3);
         let dir = TempDir::new("io").unwrap();
-        let p = dir.file("t.bin");
-        write_binary(&t, &p).unwrap();
-        let data = std::fs::read(&p).unwrap();
-        std::fs::write(&p, &data[..data.len() / 2]).unwrap();
-        assert!(read_binary(&p).is_err());
+        for (file, chunked) in [("t.bin", false), ("t.akpt", true)] {
+            let p = dir.file(file);
+            if chunked {
+                write_binary_chunked(&t, &p, 32).unwrap();
+            } else {
+                write_binary(&t, &p).unwrap();
+            }
+            let data = std::fs::read(&p).unwrap();
+            std::fs::write(&p, &data[..data.len() / 2]).unwrap();
+            let err = read_binary(&p).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "{err}");
+        }
     }
 }

@@ -1,11 +1,19 @@
 //! Workload traces: the request model, synthetic trace generators standing
-//! in for the paper's Netflix/Spotify Kaggle traces (see DESIGN.md §2), and
-//! trace file IO.
+//! in for the paper's Netflix/Spotify Kaggle traces (see DESIGN.md §2),
+//! trace file IO, and the streaming [`TraceSource`](stream::TraceSource)
+//! engine for bounded-memory replays (DESIGN.md §10).
 
 pub mod generator;
 pub mod io;
 pub mod model;
 pub mod stats;
+pub mod stream;
 
-pub use generator::{netflix_like, spotify_like, try_generate, GeneratorParams, TraceKind};
+pub use generator::{
+    netflix_like, spotify_like, try_generate, GeneratorParams, TraceGenerator, TraceKind,
+};
 pub use model::{Request, Trace};
+pub use stream::{
+    BinaryStreamSource, CsvStreamSource, GeneratorSource, MemorySource, TraceMeta, TraceSource,
+    DEFAULT_CHUNK_LEN,
+};

@@ -72,6 +72,11 @@ impl Trace {
 
     /// Iterate the trace in consecutive batches of `batch_size` (the
     /// clique-generation window granularity, Fig. 3).
+    ///
+    /// `batch_size == 0` is clamped to 1 — every request becomes its own
+    /// window — rather than panicking (`slice::chunks` rejects 0). The
+    /// streaming driver re-batcher mirrors this clamp so materialized
+    /// and streamed replays window identically at every `batch_size`.
     pub fn batches(&self, batch_size: usize) -> impl Iterator<Item = &[Request]> {
         self.requests.chunks(batch_size.max(1))
     }
@@ -138,5 +143,21 @@ mod tests {
         };
         let sizes: Vec<usize> = t.batches(4).map(|b| b.len()).collect();
         assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn batches_zero_clamps_to_singletons() {
+        // batch_size == 0 must not panic: it degrades to one-request
+        // windows (documented clamp).
+        let t = Trace {
+            requests: (0..3)
+                .map(|i| Request::new(vec![0], 0, i as f64))
+                .collect(),
+            n_items: 1,
+            n_servers: 1,
+            name: "t".into(),
+        };
+        let sizes: Vec<usize> = t.batches(0).map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![1, 1, 1]);
     }
 }

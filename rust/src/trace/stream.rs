@@ -1,0 +1,633 @@
+//! Streaming trace sources (DESIGN.md §10): pull-based, bounded-memory
+//! suppliers of time-ordered [`Request`] chunks.
+//!
+//! Every workload path used to materialize the full trace as a
+//! `Trace { requests: Vec<Request> }` before the first window ran, so a
+//! Netflix/Spotify-scale replay (10⁸ requests) was memory-bound before it
+//! was compute-bound. A [`TraceSource`] replaces the vector with a
+//! cursor: an up-front [`TraceMeta`] header (universe shape + estimated
+//! length) and a `next_chunk` pump that refills a caller-owned buffer —
+//! peak memory is one chunk plus whatever the consumer buffers (the
+//! replay drivers keep one clique-generation window), independent of
+//! trace length.
+//!
+//! Implementations:
+//!
+//! * [`MemorySource`] — adapter over an in-memory [`Trace`] (borrowed or
+//!   `Arc`-shared); full backward compatibility for the materialized
+//!   paths.
+//! * [`GeneratorSource`] — on-the-fly synthetic generation via the
+//!   resumable [`TraceGenerator`]; nothing is ever materialized.
+//! * [`CsvStreamSource`] — line-streamed `akpc-trace` CSV (the
+//!   [`write_csv`](super::io::write_csv) format; the `#` metadata header
+//!   is mandatory here because the universe shape must be known up
+//!   front).
+//! * [`BinaryStreamSource`] — record-streamed binary traces, both the
+//!   flat v1 layout and the chunk-framed v2 layout written by
+//!   [`write_binary_chunked`](super::io::write_binary_chunked).
+//!
+//! Sources validate incrementally (time order, universe bounds) so a
+//! malformed tail fails at its chunk, not after an hour of replay. The
+//! offline-policy caveat — `needs_offline_trace` policies must still see
+//! the whole timeline and therefore collect the stream — lives in
+//! [`crate::run::drive::drive_trace`] (DESIGN.md §10.4).
+//!
+//! ```
+//! use akpc::trace::generator::netflix_like;
+//! use akpc::trace::stream::{MemorySource, TraceSource};
+//!
+//! let trace = netflix_like(30, 12, 500, 7);
+//! let mut src = MemorySource::new(&trace).with_chunk_len(128);
+//! assert_eq!(src.meta().est_len, Some(500));
+//! let (mut total, mut buf) = (0, Vec::new());
+//! while src.next_chunk(&mut buf).unwrap() {
+//!     assert!(buf.len() <= 128, "chunks are bounded");
+//!     total += buf.len();
+//! }
+//! assert_eq!(total, 500);
+//! ```
+
+use std::borrow::Borrow;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use super::generator::{GeneratorParams, TraceGenerator, TraceKind};
+use super::io as trace_io;
+use super::model::{Request, Trace};
+
+/// Default requests per chunk. Small enough that a chunk of worst-case
+/// requests stays well under a megabyte, large enough to amortize the
+/// per-chunk call overhead.
+pub const DEFAULT_CHUNK_LEN: usize = 8_192;
+
+/// The up-front stream header: what a consumer may rely on before the
+/// first chunk arrives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceMeta {
+    /// Item-universe size n = |U|.
+    pub n_items: u32,
+    /// Server count m = |S|.
+    pub n_servers: u32,
+    /// Total requests the stream will yield, when known up front
+    /// (generator: exact; binary: exact from the header; CSV: `None`).
+    pub est_len: Option<usize>,
+    /// Human-readable provenance (mirrors `Trace::name`).
+    pub name: String,
+}
+
+impl TraceMeta {
+    /// Copy the shape fields out of an in-memory trace.
+    pub fn of_trace(t: &Trace) -> Self {
+        Self {
+            n_items: t.n_items,
+            n_servers: t.n_servers,
+            est_len: Some(t.len()),
+            name: t.name.clone(),
+        }
+    }
+}
+
+/// A pull-based supplier of time-ordered request chunks.
+///
+/// Contract: `next_chunk` clears `buf`, fills it with the next chunk (at
+/// least one request) and returns `Ok(true)`, or leaves it empty and
+/// returns `Ok(false)` once the stream is exhausted. Chunks are
+/// time-ordered within and across calls; the universe bounds of
+/// [`meta`](TraceSource::meta) hold for every request. Callers reuse
+/// `buf` across calls so steady-state replay allocates nothing per
+/// chunk.
+pub trait TraceSource {
+    /// The stream header (available before any chunk is pulled).
+    fn meta(&self) -> &TraceMeta;
+
+    /// Pull the next chunk into `buf`. `Ok(false)` = end of stream.
+    fn next_chunk(&mut self, buf: &mut Vec<Request>) -> anyhow::Result<bool>;
+
+    /// The in-memory trace behind this source, if there is one.
+    ///
+    /// Lets [`drive_trace`](crate::run::drive::drive_trace) hand offline
+    /// policies (`needs_offline_trace`) the existing vector instead of
+    /// collecting a second copy. File/generator sources return `None`.
+    fn as_trace(&self) -> Option<&Trace> {
+        None
+    }
+
+    /// Drain the remaining stream into a materialized [`Trace`].
+    ///
+    /// **This is the memory cliff the streaming engine exists to avoid**
+    /// — O(total requests) resident. It is the documented fallback for
+    /// offline policies and for small traces; never call it on a
+    /// million-user stream you intend to replay online.
+    fn collect(&mut self) -> anyhow::Result<Trace> {
+        let meta = self.meta().clone();
+        let mut requests = Vec::with_capacity(meta.est_len.unwrap_or(0));
+        let mut buf = Vec::new();
+        while self.next_chunk(&mut buf)? {
+            requests.append(&mut buf);
+        }
+        Ok(Trace {
+            requests,
+            n_items: meta.n_items,
+            n_servers: meta.n_servers,
+            name: meta.name,
+        })
+    }
+}
+
+/// Incremental chunk validation shared by the file-backed sources: time
+/// order across chunk boundaries, universe bounds, non-empty
+/// strictly-ascending item sets — the `Trace::validate` invariants,
+/// checked per chunk. Binary records arrive exactly as stored (no
+/// `Request::new` re-sort), so the ascending check is what catches a
+/// corrupt or foreign file before its items index out of bounds deep in
+/// the replay.
+fn check_chunk(
+    meta: &TraceMeta,
+    last_t: &mut f64,
+    start_index: usize,
+    buf: &[Request],
+) -> anyhow::Result<()> {
+    for (i, r) in buf.iter().enumerate() {
+        let idx = start_index + i;
+        anyhow::ensure!(!r.items.is_empty(), "request {idx}: empty item set");
+        anyhow::ensure!(
+            r.items.windows(2).all(|w| w[0] < w[1]),
+            "request {idx}: items not strictly ascending"
+        );
+        anyhow::ensure!(
+            r.time >= *last_t,
+            "request {idx}: out of time order ({} after {})",
+            r.time,
+            last_t
+        );
+        anyhow::ensure!(
+            r.server < meta.n_servers,
+            "request {idx}: server {} out of range (n_servers={})",
+            r.server,
+            meta.n_servers
+        );
+        if meta.n_items > 0 {
+            // Ascending already checked, so the last item is the max.
+            let last = *r.items.last().unwrap();
+            anyhow::ensure!(
+                last < meta.n_items,
+                "request {idx}: item {last} out of range (n_items={})",
+                meta.n_items
+            );
+        }
+        *last_t = r.time;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// In-memory adapter
+// ---------------------------------------------------------------------
+
+/// [`TraceSource`] over an in-memory trace — the backward-compatibility
+/// adapter the materialized entry points (`sim::run`, `RunSpec`) wrap
+/// around their `&Trace` / `Arc<Trace>`.
+///
+/// Generic over [`Borrow<Trace>`] so both borrowed and shared traces
+/// work without copying the request vector.
+#[derive(Debug)]
+pub struct MemorySource<B: Borrow<Trace>> {
+    trace: B,
+    meta: TraceMeta,
+    pos: usize,
+    chunk_len: usize,
+}
+
+impl<B: Borrow<Trace>> MemorySource<B> {
+    /// Wrap `trace` with the [`DEFAULT_CHUNK_LEN`].
+    pub fn new(trace: B) -> Self {
+        let meta = TraceMeta::of_trace(trace.borrow());
+        Self {
+            trace,
+            meta,
+            pos: 0,
+            chunk_len: DEFAULT_CHUNK_LEN,
+        }
+    }
+
+    /// Override the chunk length (clamped to ≥ 1).
+    pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
+        self.chunk_len = chunk_len.max(1);
+        self
+    }
+}
+
+impl<B: Borrow<Trace>> TraceSource for MemorySource<B> {
+    fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<Request>) -> anyhow::Result<bool> {
+        buf.clear();
+        let reqs = &self.trace.borrow().requests;
+        if self.pos >= reqs.len() {
+            return Ok(false);
+        }
+        let end = (self.pos + self.chunk_len).min(reqs.len());
+        buf.extend_from_slice(&reqs[self.pos..end]);
+        self.pos = end;
+        Ok(true)
+    }
+
+    fn as_trace(&self) -> Option<&Trace> {
+        Some(self.trace.borrow())
+    }
+}
+
+// ---------------------------------------------------------------------
+// On-the-fly generation
+// ---------------------------------------------------------------------
+
+/// [`TraceSource`] over the resumable synthetic generator: requests are
+/// sampled per chunk, so a 10⁸-request workload costs one chunk of
+/// memory.
+pub struct GeneratorSource {
+    gen: TraceGenerator,
+    meta: TraceMeta,
+    chunk_len: usize,
+}
+
+impl GeneratorSource {
+    /// Validate `params` and open the stream.
+    pub fn new(params: &GeneratorParams, kind: TraceKind, chunk_len: usize) -> anyhow::Result<Self> {
+        let gen = TraceGenerator::new(params, kind)?;
+        let meta = TraceMeta {
+            n_items: params.n_items,
+            n_servers: params.n_servers,
+            est_len: Some(params.n_requests),
+            name: kind.trace_name().to_string(),
+        };
+        Ok(Self {
+            gen,
+            meta,
+            chunk_len: chunk_len.max(1),
+        })
+    }
+}
+
+impl TraceSource for GeneratorSource {
+    fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<Request>) -> anyhow::Result<bool> {
+        buf.clear();
+        while buf.len() < self.chunk_len {
+            match self.gen.next_request() {
+                Some(r) => buf.push(r),
+                None => break,
+            }
+        }
+        Ok(!buf.is_empty())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Line-streamed CSV
+// ---------------------------------------------------------------------
+
+/// [`TraceSource`] over the `akpc-trace` CSV form, read line by line.
+///
+/// The `#` metadata header must be the first non-blank line and must
+/// carry `n_items=`/`n_servers=` (a streaming consumer needs the
+/// universe shape before the data arrives;
+/// [`read_csv`](super::io::read_csv) stays lenient for legacy
+/// header-less files). Later `#` lines are skipped as comments. Row
+/// errors carry the 1-based line number *and* the row's starting byte
+/// offset.
+pub struct CsvStreamSource {
+    rdr: BufReader<std::fs::File>,
+    meta: TraceMeta,
+    chunk_len: usize,
+    /// 1-based number of the last line read.
+    lineno: usize,
+    /// Byte offset of the next unread line.
+    byte_off: u64,
+    /// Requests yielded so far (error indexing).
+    yielded: usize,
+    last_t: f64,
+    line: String,
+}
+
+impl CsvStreamSource {
+    /// Open `path` and parse the metadata header.
+    pub fn open(path: impl AsRef<Path>, chunk_len: usize) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let mut rdr = BufReader::new(std::fs::File::open(path)?);
+        let mut lineno = 0usize;
+        let mut byte_off = 0u64;
+        let mut line = String::new();
+        let mut meta: Option<TraceMeta> = None;
+        loop {
+            line.clear();
+            let n = rdr.read_line(&mut line)?;
+            if n == 0 {
+                break;
+            }
+            lineno += 1;
+            let start = byte_off;
+            byte_off += n as u64;
+            let text = line.trim_end_matches(['\n', '\r']);
+            if text.is_empty() {
+                continue;
+            }
+            let Some(hdr) = text.strip_prefix('#') else {
+                anyhow::bail!(
+                    "line {lineno} (byte {start}): streaming CSV needs a leading \
+                     `# akpc-trace ...` header with n_items/n_servers (got `{text}`)"
+                );
+            };
+            let (name, n_items, n_servers) = trace_io::parse_csv_header(hdr, lineno, start)?;
+            let n_items = n_items.ok_or_else(|| {
+                anyhow::anyhow!("line {lineno} (byte {start}): header lacks n_items=")
+            })?;
+            let n_servers = n_servers.ok_or_else(|| {
+                anyhow::anyhow!("line {lineno} (byte {start}): header lacks n_servers=")
+            })?;
+            meta = Some(TraceMeta {
+                n_items,
+                n_servers,
+                est_len: None,
+                name: name.unwrap_or_else(|| "csv".to_string()),
+            });
+            break;
+        }
+        let meta = meta.ok_or_else(|| anyhow::anyhow!("empty CSV trace: no header line"))?;
+        Ok(Self {
+            rdr,
+            meta,
+            chunk_len: chunk_len.max(1),
+            lineno,
+            byte_off,
+            yielded: 0,
+            last_t: f64::NEG_INFINITY,
+            line,
+        })
+    }
+}
+
+impl TraceSource for CsvStreamSource {
+    fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<Request>) -> anyhow::Result<bool> {
+        buf.clear();
+        while buf.len() < self.chunk_len {
+            self.line.clear();
+            let n = self.rdr.read_line(&mut self.line)?;
+            if n == 0 {
+                break;
+            }
+            self.lineno += 1;
+            let start = self.byte_off;
+            self.byte_off += n as u64;
+            let text = self.line.trim_end_matches(['\n', '\r']);
+            if text.is_empty() || text.starts_with('#') {
+                continue;
+            }
+            buf.push(trace_io::parse_csv_data_row(
+                text,
+                self.lineno,
+                start,
+                self.meta.n_items,
+            )?);
+        }
+        check_chunk(&self.meta, &mut self.last_t, self.yielded, buf)?;
+        self.yielded += buf.len();
+        Ok(!buf.is_empty())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Record-streamed binary
+// ---------------------------------------------------------------------
+
+/// [`TraceSource`] over the binary trace forms: the flat v1 layout
+/// streams `chunk_len` records per pull, the chunk-framed v2 layout
+/// ([`write_binary_chunked`](super::io::write_binary_chunked)) streams
+/// one frame per pull.
+pub struct BinaryStreamSource {
+    rdr: BufReader<std::fs::File>,
+    meta: TraceMeta,
+    version: u32,
+    /// Records not yet yielded.
+    remaining: u64,
+    chunk_len: usize,
+    yielded: usize,
+    last_t: f64,
+}
+
+impl BinaryStreamSource {
+    /// Open `path` and parse the versioned header.
+    pub fn open(path: impl AsRef<Path>, chunk_len: usize) -> anyhow::Result<Self> {
+        let mut rdr = BufReader::new(std::fs::File::open(path.as_ref())?);
+        let hdr = trace_io::read_binary_header(&mut rdr)?;
+        let meta = TraceMeta {
+            n_items: hdr.n_items,
+            n_servers: hdr.n_servers,
+            est_len: Some(hdr.n_reqs as usize),
+            name: hdr.name,
+        };
+        Ok(Self {
+            rdr,
+            meta,
+            version: hdr.version,
+            remaining: hdr.n_reqs,
+            chunk_len: chunk_len.max(1),
+            yielded: 0,
+            last_t: f64::NEG_INFINITY,
+        })
+    }
+}
+
+impl TraceSource for BinaryStreamSource {
+    fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<Request>) -> anyhow::Result<bool> {
+        buf.clear();
+        if self.remaining == 0 {
+            return Ok(false);
+        }
+        let take = match self.version {
+            trace_io::VERSION_FLAT => self.chunk_len.min(self.remaining as usize),
+            _ => {
+                // v2: one frame per pull, framed by its record count.
+                let n = trace_io::read_frame_header(&mut self.rdr)? as usize;
+                anyhow::ensure!(
+                    n >= 1 && n as u64 <= self.remaining,
+                    "corrupt chunk frame: {n} records framed, {} remaining",
+                    self.remaining
+                );
+                n
+            }
+        };
+        buf.reserve(take);
+        for _ in 0..take {
+            buf.push(trace_io::read_binary_record(&mut self.rdr)?);
+        }
+        self.remaining -= take as u64;
+        check_chunk(&self.meta, &mut self.last_t, self.yielded, buf)?;
+        self.yielded += buf.len();
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::netflix_like;
+    use crate::util::tempdir::TempDir;
+
+    fn small() -> Trace {
+        netflix_like(30, 12, 1_000, 5)
+    }
+
+    #[test]
+    fn memory_source_roundtrips_and_exposes_trace() {
+        let t = small();
+        let mut src = MemorySource::new(&t).with_chunk_len(100);
+        assert_eq!(src.meta(), &TraceMeta::of_trace(&t));
+        assert!(src.as_trace().is_some());
+        let back = src.collect().unwrap();
+        assert_eq!(back.requests, t.requests);
+        // Exhausted source keeps returning false.
+        let mut buf = Vec::new();
+        assert!(!src.next_chunk(&mut buf).unwrap());
+    }
+
+    #[test]
+    fn arc_memory_source_shares_without_copy() {
+        let t = std::sync::Arc::new(small());
+        let mut src = MemorySource::new(std::sync::Arc::clone(&t));
+        assert_eq!(src.collect().unwrap().requests, t.requests);
+    }
+
+    #[test]
+    fn generator_source_matches_materialized_generation() {
+        let p = GeneratorParams::netflix(30, 12, 2_000);
+        let mut src = GeneratorSource::new(&p, TraceKind::Netflix, 300).unwrap();
+        assert_eq!(src.meta().est_len, Some(2_000));
+        let streamed = src.collect().unwrap();
+        let batch = crate::trace::generator::generate(&p, TraceKind::Netflix);
+        assert_eq!(streamed.requests, batch.requests);
+        assert_eq!(streamed.name, "netflix-like");
+    }
+
+    #[test]
+    fn csv_source_streams_written_file() {
+        let t = small();
+        let dir = TempDir::new("stream").unwrap();
+        let p = dir.file("t.csv");
+        crate::trace::io::write_csv(&t, &p).unwrap();
+        let mut src = CsvStreamSource::open(&p, 128).unwrap();
+        assert_eq!(src.meta().n_items, 30);
+        assert_eq!(src.meta().est_len, None);
+        let back = src.collect().unwrap();
+        assert_eq!(back.requests.len(), t.requests.len());
+        for (a, b) in t.requests.iter().zip(&back.requests) {
+            assert_eq!(a.items, b.items);
+            assert_eq!(a.server, b.server);
+        }
+    }
+
+    #[test]
+    fn csv_source_requires_header() {
+        let dir = TempDir::new("stream").unwrap();
+        let p = dir.file("nohdr.csv");
+        std::fs::write(&p, "0.5,0,1;2\n").unwrap();
+        let err = CsvStreamSource::open(&p, 16).unwrap_err().to_string();
+        assert!(err.contains("header"), "{err}");
+        let p2 = dir.file("nometa.csv");
+        std::fs::write(&p2, "# akpc-trace v1 name=x\n0.5,0,1\n").unwrap();
+        let err = CsvStreamSource::open(&p2, 16).unwrap_err().to_string();
+        assert!(err.contains("n_items"), "{err}");
+    }
+
+    #[test]
+    fn csv_source_rejects_disordered_tail_with_offset() {
+        let dir = TempDir::new("stream").unwrap();
+        let p = dir.file("dis.csv");
+        std::fs::write(
+            &p,
+            "# akpc-trace v1 n_items=10 n_servers=2\n1.0,0,1\n0.5,0,2\n",
+        )
+        .unwrap();
+        let mut src = CsvStreamSource::open(&p, 16).unwrap();
+        let err = src.collect().unwrap_err().to_string();
+        assert!(err.contains("out of time order"), "{err}");
+    }
+
+    #[test]
+    fn binary_source_streams_v1_files() {
+        let t = small();
+        let dir = TempDir::new("stream").unwrap();
+        let p = dir.file("t.bin");
+        crate::trace::io::write_binary(&t, &p).unwrap();
+        let mut src = BinaryStreamSource::open(&p, 100).unwrap();
+        assert_eq!(src.meta().est_len, Some(t.len()));
+        let mut buf = Vec::new();
+        assert!(src.next_chunk(&mut buf).unwrap());
+        assert_eq!(buf.len(), 100, "v1 streams chunk_len records per pull");
+        let rest = src.collect().unwrap();
+        assert_eq!(rest.requests.len(), t.len() - 100);
+    }
+
+    #[test]
+    fn binary_source_rejects_unsorted_record_items() {
+        // Binary records are read as stored (no Request::new re-sort), so
+        // a corrupt file with descending items must die in chunk
+        // validation, not as an index panic deep in replay.
+        let dir = TempDir::new("stream").unwrap();
+        let p = dir.file("unsorted.bin");
+        let mut bytes = b"AKPT".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        bytes.extend_from_slice(&10u32.to_le_bytes()); // n_items
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // n_servers
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // name_len
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // n_reqs
+        bytes.extend_from_slice(&0.0f64.to_le_bytes()); // time
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // server
+        bytes.extend_from_slice(&2u16.to_le_bytes()); // k
+        bytes.extend_from_slice(&7u32.to_le_bytes()); // items[0]
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // items[1] < items[0]
+        std::fs::write(&p, &bytes).unwrap();
+        let mut src = BinaryStreamSource::open(&p, 16).unwrap();
+        let err = src.collect().unwrap_err().to_string();
+        assert!(err.contains("not strictly ascending"), "{err}");
+    }
+
+    #[test]
+    fn chunk_validation_catches_universe_violations() {
+        let mut meta = TraceMeta {
+            n_items: 4,
+            n_servers: 2,
+            est_len: None,
+            name: "x".into(),
+        };
+        let mut last_t = f64::NEG_INFINITY;
+        let ok = [Request::new(vec![0, 3], 1, 0.5)];
+        check_chunk(&meta, &mut last_t, 0, &ok).unwrap();
+        let bad_item = [Request::new(vec![9], 0, 1.0)];
+        assert!(check_chunk(&meta, &mut last_t, 1, &bad_item)
+            .unwrap_err()
+            .to_string()
+            .contains("out of range"));
+        let bad_server = [Request::new(vec![0], 7, 1.0)];
+        assert!(check_chunk(&meta, &mut last_t, 1, &bad_server)
+            .unwrap_err()
+            .to_string()
+            .contains("server"));
+        // n_items == 0 disables the item bound (header-less provenance).
+        meta.n_items = 0;
+        meta.n_servers = 100;
+        check_chunk(&meta, &mut last_t, 1, &[Request::new(vec![99], 0, 2.0)]).unwrap();
+    }
+}

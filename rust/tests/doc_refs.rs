@@ -1,0 +1,119 @@
+//! Documentation-citation checker (the CI `docs` job runs this): every
+//! section citation in the Rust sources — e.g. `DESIGN.md §7.3` or
+//! `EXPERIMENTS.md §Perf` — must point at a heading that actually
+//! exists, so module docs can never drift ahead of (or outlive) the
+//! design documents.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Collect the `§`-tokens of every markdown heading (`## §7 ...`,
+/// `### §7.3 ...`, `## §Perf`).
+fn headings(md: &str) -> BTreeSet<String> {
+    md.lines()
+        .filter(|l| l.trim_start().starts_with('#'))
+        .filter_map(|l| {
+            let tail = l.split('§').nth(1)?;
+            let tok: String = tail
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '.')
+                .collect();
+            let tok = tok.trim_end_matches('.').to_string();
+            (!tok.is_empty()).then(|| format!("§{tok}"))
+        })
+        .collect()
+}
+
+/// Extract every `<DOC> §TOKEN` citation from a source text.
+/// Both `DESIGN.md §7.3` and the shorthand `DESIGN §8.4` count.
+fn citations(src: &str, doc: &str) -> Vec<String> {
+    let mut found = Vec::new();
+    for pat in [format!("{doc}.md §"), format!("{doc} §")] {
+        for (idx, _) in src.match_indices(&pat) {
+            let tail = &src[idx + pat.len()..];
+            let tok: String = tail
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '.')
+                .collect();
+            let tok = tok.trim_end_matches('.').to_string();
+            if !tok.is_empty() {
+                found.push(format!("§{tok}"));
+            }
+        }
+    }
+    found
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn every_design_and_experiments_citation_resolves() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = manifest.parent().expect("rust/ sits under the repo root");
+
+    let docs = [
+        ("DESIGN", repo_root.join("DESIGN.md")),
+        ("EXPERIMENTS", repo_root.join("EXPERIMENTS.md")),
+    ];
+    let mut missing = Vec::new();
+    let mut total_citations = 0usize;
+
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "examples", "benches"] {
+        rust_files(&manifest.join(sub), &mut files);
+    }
+    assert!(files.len() > 30, "walker found too few sources: {}", files.len());
+
+    for (doc_name, doc_path) in &docs {
+        let md = std::fs::read_to_string(doc_path)
+            .unwrap_or_else(|e| panic!("{} must exist: {e}", doc_path.display()));
+        let sections = headings(&md);
+        assert!(
+            !sections.is_empty(),
+            "{doc_name}.md has no §-headings — checker misconfigured?"
+        );
+        for file in &files {
+            let src = std::fs::read_to_string(file).unwrap();
+            for cite in citations(&src, doc_name) {
+                total_citations += 1;
+                if !sections.contains(&cite) {
+                    missing.push(format!(
+                        "{}: cites {doc_name}.md {cite}, which has no such heading \
+                         (have: {})",
+                        file.display(),
+                        sections.iter().cloned().collect::<Vec<_>>().join(" ")
+                    ));
+                }
+            }
+        }
+    }
+    assert!(
+        total_citations > 20,
+        "only {total_citations} citations found — extraction misconfigured?"
+    );
+    assert!(missing.is_empty(), "dangling doc citations:\n{}", missing.join("\n"));
+}
+
+#[test]
+fn extraction_helpers_work() {
+    let md = "# T\n## §1 One\n### §2.3 Two point three\n## §Perf\ntext §9 not a heading\n";
+    let h = headings(md);
+    assert!(h.contains("§1") && h.contains("§2.3") && h.contains("§Perf"));
+    assert!(!h.contains("§9"));
+
+    let src = "see DESIGN.md §2.3, and DESIGN §8.4; but EXPERIMENTS.md §Perf too.";
+    assert_eq!(citations(src, "DESIGN"), vec!["§2.3", "§8.4"]);
+    assert_eq!(citations(src, "EXPERIMENTS"), vec!["§Perf"]);
+}

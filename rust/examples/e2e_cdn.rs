@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Online serving through the sharded coordinator ----
     let t0 = std::time::Instant::now();
-    let coord = Coordinator::start(cfg.clone(), CrmEngine::Xla, 4);
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Xla, 4)?;
     let mut delivered_total: u64 = 0;
     for r in &trace.requests {
         let resp = coord.serve(ServeRequest {

@@ -118,7 +118,7 @@ mod tests {
         for i in 0..8 {
             reqs.push(Request::new(vec![5, 6], 1, i as f64 * 5.0 + 1.0));
         }
-        reqs.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+        reqs.sort_by(|a, b| a.time.total_cmp(&b.time));
         let t = trace_of(reqs);
         let pairs = DpGreedy::pair_offline(&t);
         assert!(pairs.contains(&[1, 2]));

@@ -93,10 +93,8 @@ impl PackCache2 {
             .filter(|&(_, &c)| c >= MIN_SUPPORT)
             .map(|(&k, &c)| (k, c))
             .collect();
-        // Deterministic: by count desc, then pair asc.
-        pairs.sort_unstable_by(|a, b| {
-            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
-        });
+        // Deterministic: by count desc (total order — L1), then pair asc.
+        pairs.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
 
         let mut used = std::collections::HashSet::new();
         let mut matching = Vec::new();

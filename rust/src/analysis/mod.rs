@@ -1,0 +1,443 @@
+//! akpc-lint — the repo's own invariant checker (DESIGN.md §11).
+//!
+//! A dependency-free static-analysis pass over `rust/src/**` that enforces
+//! the determinism, panic-freedom and backpressure invariants the
+//! equivalence suites rely on. The paper's claims are replayed as exact
+//! cost equalities (1e-9 tolerance across single-leader / sharded /
+//! streamed drivers), which makes the codebase unusually sensitive to a
+//! specific set of Rust footguns: NaN-unsound float sorts, hash-order
+//! iteration in decision paths, panics inside coordinator actors,
+//! unbounded mailboxes, and accidental materialization of streaming
+//! traces. Those are exactly the five rules in [`rules::RULES`].
+//!
+//! Run it as `akpc lint` (CI blocks on it) or through `cargo test -q
+//! --test lint`. Suppress a finding with a justified escape hatch:
+//!
+//! ```text
+//! // akpc-lint: allow(L2) -- bucket drain order is immaterial here
+//! for (k, v) in map { ... }
+//! ```
+//!
+//! The justification after `--` is mandatory; an allow without one is
+//! itself a diagnostic. Every suppression is counted in the report so
+//! reviewers see the full escape-hatch surface.
+
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+use scanner::PreparedSource;
+
+/// One confirmed violation.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Rule id (`L1`..`L5`, or `A0` for a malformed allow comment).
+    pub rule: String,
+    /// Path relative to the scanned root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+}
+
+/// One justified suppression that matched a finding.
+#[derive(Debug, Clone)]
+pub struct AllowRecord {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub justification: String,
+}
+
+/// Aggregated result of a lint run.
+#[derive(Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub diagnostics: Vec<Diagnostic>,
+    pub allows: Vec<AllowRecord>,
+}
+
+impl LintReport {
+    /// No violations (suppressions are fine — they are justified).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-readable report, one diagnostic per block, then the
+    /// suppression inventory and a PASS/FAIL trailer.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "akpc-lint: {} file(s) scanned, {} violation(s), {} justified allow(s)\n",
+            self.files_scanned,
+            self.diagnostics.len(),
+            self.allows.len()
+        ));
+        for d in &self.diagnostics {
+            s.push_str(&format!(
+                "{}:{} [{}] {}\n    {}\n",
+                d.file, d.line, d.rule, d.message, d.excerpt
+            ));
+        }
+        if !self.allows.is_empty() {
+            s.push_str("suppressions:\n");
+            for a in &self.allows {
+                s.push_str(&format!(
+                    "{}:{} [{}] -- {}\n",
+                    a.file, a.line, a.rule, a.justification
+                ));
+            }
+        }
+        s.push_str(if self.is_clean() {
+            "akpc-lint: PASS\n"
+        } else {
+            "akpc-lint: FAIL\n"
+        });
+        s
+    }
+}
+
+/// A parsed `akpc-lint: allow(<rule>) -- <justification>` comment.
+struct Allow {
+    rule: String,
+    /// Line the allowance covers: its own line (trailing form) and the
+    /// next line (standalone-comment-above form).
+    line: usize,
+    justification: String,
+}
+
+const ALLOW_MARK: &str = "akpc-lint:";
+
+/// Parse the allow comments of one file. Malformed markers (unknown rule,
+/// missing `--` justification) become `A0` diagnostics — a suppression
+/// that cannot be audited is itself a violation.
+fn parse_allows(
+    rel_path: &str,
+    src: &PreparedSource,
+) -> (Vec<Allow>, Vec<Diagnostic>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for (line, text) in src.comments() {
+        // A directive must *lead* the comment (after doc-comment markers
+        // `/`/`!`); rustdoc prose that merely mentions `akpc-lint:` is
+        // not an allow attempt and must not be diagnosed as one.
+        let head = text.trim_start_matches(['/', '!', ' ', '\t']);
+        let Some(rest) = head.strip_prefix(ALLOW_MARK) else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let mut fail = |why: &str| {
+            bad.push(Diagnostic {
+                rule: "A0".into(),
+                file: rel_path.into(),
+                line: *line,
+                message: format!("malformed akpc-lint allow: {why}"),
+                excerpt: src.line_text(*line).trim().to_string(),
+            });
+        };
+        let Some(args) = rest.strip_prefix("allow(") else {
+            fail("expected `allow(<rule>)`");
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            fail("unclosed `allow(`");
+            continue;
+        };
+        let rule = args[..close].trim().to_string();
+        if !rules::known_rule(&rule) {
+            fail(&format!("unknown rule `{rule}`"));
+            continue;
+        }
+        let tail = args[close + 1..].trim_start();
+        let Some(justification) = tail.strip_prefix("--") else {
+            fail("missing ` -- <justification>`");
+            continue;
+        };
+        let justification = justification.trim().to_string();
+        if justification.is_empty() {
+            fail("empty justification");
+            continue;
+        }
+        allows.push(Allow {
+            rule,
+            line: *line,
+            justification,
+        });
+    }
+    (allows, bad)
+}
+
+/// Lint one file's text. Returns the surviving diagnostics and the
+/// suppressions that actually matched a finding.
+pub fn lint_source(rel_path: &str, text: &str) -> (Vec<Diagnostic>, Vec<AllowRecord>) {
+    let src = PreparedSource::prepare(text);
+    let (allows, mut diags) = parse_allows(rel_path, &src);
+    let mut used = Vec::new();
+    for raw in rules::check_file(rel_path, &src) {
+        let covering = allows.iter().find(|a| {
+            a.rule == raw.rule && (a.line == raw.line || a.line + 1 == raw.line)
+        });
+        match covering {
+            Some(a) => used.push(AllowRecord {
+                rule: a.rule.clone(),
+                file: rel_path.into(),
+                line: raw.line,
+                justification: a.justification.clone(),
+            }),
+            None => diags.push(Diagnostic {
+                rule: raw.rule.into(),
+                file: rel_path.into(),
+                line: raw.line,
+                message: raw.message,
+                excerpt: src.line_text(raw.line).trim().to_string(),
+            }),
+        }
+    }
+    diags.sort_by(|a, b| (a.line, a.rule.clone()).cmp(&(b.line, b.rule.clone())));
+    (diags, used)
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for determinism.
+fn rust_files(root: &Path) -> anyhow::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)
+            .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?
+        {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `src_root` and aggregate.
+pub fn lint_tree(src_root: &Path) -> anyhow::Result<LintReport> {
+    let mut report = LintReport::default();
+    for path in rust_files(src_root)? {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let (diags, allows) = lint_source(&rel, &text);
+        report.files_scanned += 1;
+        report.diagnostics.extend(diags);
+        report.allows.extend(allows);
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------
+// Fixture self-tests: every rule must trip on its bad fixture and stay
+// quiet on the near-miss. These fixtures are the rule's spec.
+// ---------------------------------------------------------------------
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags(path: &str, text: &str) -> Vec<Diagnostic> {
+        lint_source(path, text).0
+    }
+
+    fn rules_of(ds: &[Diagnostic]) -> Vec<&str> {
+        ds.iter().map(|d| d.rule.as_str()).collect()
+    }
+
+    // ---- L1 ----
+
+    #[test]
+    fn l1_trips_on_partial_cmp_unwrap() {
+        let bad = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let ds = diags("algo/x.rs", bad);
+        assert_eq!(rules_of(&ds), vec!["L1"], "{ds:?}");
+        assert_eq!(ds[0].line, 2);
+        let expect = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).expect(\"nan\"));\n}\n";
+        assert_eq!(rules_of(&diags("algo/x.rs", expect)), vec!["L1"]);
+        let or = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));\n}\n";
+        assert_eq!(rules_of(&diags("algo/x.rs", or)), vec!["L1"]);
+    }
+
+    #[test]
+    fn l1_near_misses_pass() {
+        // total_cmp, Option-aware partial_cmp, and a partial_cmp trait
+        // impl are all fine; so is an unwrap inside #[cfg(test)].
+        let ok = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n    let c = 1.0f64.partial_cmp(&2.0);\n    if c.is_none() { return; }\n}\nimpl PartialOrd for X {\n    fn partial_cmp(&self, o: &X) -> Option<std::cmp::Ordering> { None }\n}\n#[cfg(test)]\nmod tests {\n    fn t(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n}\n";
+        assert!(diags("algo/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn l1_masked_text_never_trips() {
+        let ok = "// a.partial_cmp(b).unwrap() in prose\nconst S: &str = \"a.partial_cmp(b).unwrap()\";\n";
+        assert!(diags("algo/x.rs", ok).is_empty());
+    }
+
+    // ---- L2 ----
+
+    #[test]
+    fn l2_trips_on_hash_iteration_in_scoped_dirs() {
+        let bad = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f32>) -> Vec<u32> {\n    m.keys().copied().collect::<Vec<_>>()\n}\n";
+        let ds = diags("crm/x.rs", bad);
+        assert_eq!(rules_of(&ds), vec!["L2"], "{ds:?}");
+        // Same text outside the scoped dirs: no finding.
+        assert!(diags("run/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn l2_trips_on_for_loop_over_hash() {
+        let bad = "use std::collections::HashMap;\nfn f(m: HashMap<u32, u32>, out: &mut Vec<u32>) {\n    for (k, _) in &m {\n        out.push(*k);\n    }\n}\n";
+        assert_eq!(rules_of(&diags("cache/x.rs", bad)), vec!["L2"]);
+    }
+
+    #[test]
+    fn l2_near_misses_pass() {
+        // Commutative reductions, sorted collects, hash-to-hash rebuilds
+        // and BTreeMap iteration are all order-safe.
+        let ok = concat!(
+            "use std::collections::{BTreeMap, HashMap};\n",
+            "fn f(m: &HashMap<u32, f32>, b: &BTreeMap<u32, u32>) -> f32 {\n",
+            "    let mut hi = 0.0f32;\n",
+            "    for &v in m.values() {\n",
+            "        hi = hi.max(v);\n",
+            "    }\n",
+            "    let total: f32 = m.values().sum();\n",
+            "    let mut ks: Vec<u32> = m.keys().copied().collect();\n",
+            "    ks.sort_unstable();\n",
+            "    let rebuilt: HashMap<u32, f32> = m.iter().map(|(k, v)| (*k, *v)).collect();\n",
+            "    for (_k, _v) in b {\n",
+            "    }\n",
+            "    hi + total + ks.len() as f32 + rebuilt.len() as f32\n",
+            "}\n",
+        );
+        let ds = diags("clique/x.rs", ok);
+        assert!(ds.is_empty(), "{ds:?}");
+    }
+
+    // ---- L3 ----
+
+    #[test]
+    fn l3_trips_on_panics_in_coordinator() {
+        let bad = "fn f(x: Option<u32>) -> u32 {\n    let v = x.unwrap();\n    if v > 9 { panic!(\"big\"); }\n    v\n}\n";
+        let ds = diags("coordinator/x.rs", bad);
+        assert_eq!(rules_of(&ds), vec!["L3", "L3"], "{ds:?}");
+        // The same file outside coordinator/ is out of scope.
+        assert!(diags("bench/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn l3_near_misses_pass() {
+        let ok = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    let g = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    let d = Some(3).unwrap_or(7);\n    *g + d\n}\n#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
+        let ds = diags("coordinator/x.rs", ok);
+        assert!(ds.is_empty(), "{ds:?}");
+    }
+
+    // ---- L4 ----
+
+    #[test]
+    fn l4_trips_on_unbounded_channel() {
+        let bad = "use std::sync::mpsc;\nfn f() {\n    let (tx, rx) = mpsc::channel::<u32>();\n    let (a, b) = mpsc::channel();\n    drop((tx, rx, a, b));\n}\n";
+        assert_eq!(rules_of(&diags("coordinator/x.rs", bad)), vec!["L4", "L4"]);
+    }
+
+    #[test]
+    fn l4_sync_channel_passes() {
+        let ok = "use std::sync::mpsc;\nfn f() {\n    let (tx, rx) = mpsc::sync_channel::<u32>(8);\n    drop((tx, rx));\n}\n";
+        assert!(diags("coordinator/x.rs", ok).is_empty());
+    }
+
+    // ---- L5 ----
+
+    #[test]
+    fn l5_trips_on_ungated_collect() {
+        let bad = "fn f(source: &mut dyn TraceSource) -> anyhow::Result<Trace> {\n    let t = source.collect()?;\n    Ok(t)\n}\n";
+        assert_eq!(rules_of(&diags("run/x.rs", bad)), vec!["L5"]);
+    }
+
+    #[test]
+    fn l5_gated_collect_passes() {
+        let ok = "fn f(policy: &P, source: &mut dyn TraceSource) -> anyhow::Result<Trace> {\n    if policy.needs_offline_trace() {\n        let t = source.collect()?;\n        return Ok(t);\n    }\n    anyhow::bail!(\"streaming\")\n}\n";
+        assert!(diags("run/x.rs", ok).is_empty());
+        // An iterator collect on a non-stream receiver never trips.
+        let iter = "fn g(v: &[u32]) -> Vec<u32> {\n    let out: Vec<u32> = v.iter().copied().collect();\n    out\n}\n";
+        assert!(diags("run/x.rs", iter).is_empty());
+    }
+
+    // ---- allow escape hatch ----
+
+    #[test]
+    fn allow_with_justification_suppresses_and_is_counted() {
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, u32>, out: &mut Vec<u32>) {\n    // akpc-lint: allow(L2) -- order is re-sorted downstream\n    for (k, _) in m {\n        out.push(*k);\n    }\n}\n";
+        let (ds, allows) = lint_source("cache/x.rs", src);
+        assert!(ds.is_empty(), "{ds:?}");
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].rule, "L2");
+        assert_eq!(allows[0].justification, "order is re-sorted downstream");
+    }
+
+    #[test]
+    fn trailing_allow_form_works() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // akpc-lint: allow(L3) -- prototype; see #42\n}\n";
+        let (ds, allows) = lint_source("coordinator/x.rs", src);
+        assert!(ds.is_empty(), "{ds:?}");
+        assert_eq!(allows.len(), 1);
+    }
+
+    #[test]
+    fn allow_without_justification_is_an_error() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // akpc-lint: allow(L3)\n    x.unwrap()\n}\n";
+        let ds = diags("coordinator/x.rs", src);
+        // The malformed allow is A0 AND the violation still stands.
+        assert_eq!(rules_of(&ds), vec!["A0", "L3"], "{ds:?}");
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_an_error() {
+        let src = "fn f() {\n    // akpc-lint: allow(L9) -- wishful\n}\n";
+        assert_eq!(rules_of(&diags("run/x.rs", src)), vec!["A0"]);
+    }
+
+    #[test]
+    fn prose_mention_of_the_marker_is_not_a_directive() {
+        // Rustdoc that *talks about* the escape hatch (this module's own
+        // docs do) must not be diagnosed as a malformed allow.
+        let src = "//! Suppress with `akpc-lint: allow(<rule>) -- <why>`.\n//! | `analysis` | akpc-lint: the invariant checker |\nfn f() {}\n";
+        let (ds, allows) = lint_source("trace/doc.rs", src);
+        assert!(ds.is_empty(), "{ds:?}");
+        assert!(allows.is_empty());
+    }
+
+    #[test]
+    fn allow_for_wrong_rule_does_not_suppress() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // akpc-lint: allow(L4) -- wrong rule\n    x.unwrap()\n}\n";
+        assert_eq!(rules_of(&diags("coordinator/x.rs", src)), vec!["L3"]);
+    }
+
+    #[test]
+    fn report_renders_and_counts() {
+        let mut rep = LintReport::default();
+        rep.files_scanned = 2;
+        assert!(rep.is_clean());
+        assert!(rep.render().contains("PASS"));
+        rep.diagnostics.push(Diagnostic {
+            rule: "L1".into(),
+            file: "algo/x.rs".into(),
+            line: 3,
+            message: "m".into(),
+            excerpt: "e".into(),
+        });
+        assert!(!rep.is_clean());
+        let r = rep.render();
+        assert!(r.contains("algo/x.rs:3 [L1]") && r.contains("FAIL"));
+    }
+}

@@ -1,0 +1,470 @@
+//! The akpc-lint rule catalog (DESIGN.md §11).
+//!
+//! Five repo-specific invariants, each born from a class of bug this
+//! codebase actually hit or structurally risks:
+//!
+//! | id | name | scope |
+//! |---|---|---|
+//! | L1 | no-float-partial-unwrap | all of `src/` |
+//! | L2 | no-hash-iter-decision | `algo/ clique/ crm/ cache/` |
+//! | L3 | no-panic-hot-path | `coordinator/` |
+//! | L4 | bounded-channels-only | `coordinator/` |
+//! | L5 | no-stream-collect | all of `src/` |
+//!
+//! Every check is a token scan over [`PreparedSource::masked`] — comments
+//! and literals can never trip a rule — and every check skips
+//! `#[cfg(test)]` regions: unit tests may unwrap, iterate hashes, and
+//! collect streams freely. Rules report candidates; the engine in
+//! [`super`] applies `akpc-lint: allow(...)` suppressions afterwards.
+
+use super::scanner::PreparedSource;
+
+/// A catalog entry.
+pub struct Rule {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The enforced invariants, in severity order.
+pub const RULES: [Rule; 5] = [
+    Rule {
+        id: "L1",
+        name: "no-float-partial-unwrap",
+        summary: "float comparisons must use total_cmp (util::order), not \
+                  partial_cmp + unwrap/expect/unwrap_or: NaN either panics \
+                  or silently breaks strict weak ordering",
+    },
+    Rule {
+        id: "L2",
+        name: "no-hash-iter-decision",
+        summary: "algorithmic code must not iterate HashMap/HashSet where \
+                  order can leak into decisions; sort first, use a BTree \
+                  map, or reduce commutatively",
+    },
+    Rule {
+        id: "L3",
+        name: "no-panic-hot-path",
+        summary: "coordinator actors must not unwrap/expect/panic: a \
+                  poisoned shard deadlocks every client blocked on its \
+                  mailbox",
+    },
+    Rule {
+        id: "L4",
+        name: "bounded-channels-only",
+        summary: "coordinator mailboxes must be bounded sync_channels so a \
+                  slow actor exerts backpressure instead of buffering \
+                  without limit",
+    },
+    Rule {
+        id: "L5",
+        name: "no-stream-collect",
+        summary: "TraceSource::collect defeats bounded-memory replay; only \
+                  needs_offline_trace-gated code may materialize a stream",
+    },
+];
+
+/// A candidate violation (pre-allow-filtering).
+pub struct RawDiag {
+    pub rule: &'static str,
+    pub line: usize,
+    pub message: String,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of every occurrence of `pat` in `hay`.
+fn find_all(hay: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(pat) {
+        out.push(from + rel);
+        from += rel + pat.len();
+    }
+    out
+}
+
+/// Run every rule whose scope covers `rel_path` over one prepared file.
+pub fn check_file(rel_path: &str, src: &PreparedSource) -> Vec<RawDiag> {
+    let path = rel_path.replace('\\', "/");
+    let mut out = Vec::new();
+    l1_no_float_partial_unwrap(src, &mut out);
+    if ["algo/", "clique/", "crm/", "cache/"]
+        .iter()
+        .any(|d| path.contains(d))
+    {
+        l2_no_hash_iter_decision(src, &mut out);
+    }
+    if path.contains("coordinator/") {
+        l3_no_panic_hot_path(src, &mut out);
+        l4_bounded_channels_only(src, &mut out);
+    }
+    l5_no_stream_collect(src, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// L1 — `.partial_cmp(..)` followed (in the same statement) by
+/// `.unwrap()` / `.expect(` / `.unwrap_or`. The leading dot keeps
+/// `fn partial_cmp` trait impls out; `Option`-aware uses (`match`,
+/// `is_none`, `?`) pass.
+fn l1_no_float_partial_unwrap(src: &PreparedSource, out: &mut Vec<RawDiag>) {
+    let m = src.masked();
+    for at in find_all(m, ".partial_cmp(") {
+        let line = src.line_of(at);
+        if src.in_test_region(line) {
+            continue;
+        }
+        let (_, end) = src.statement_window(at);
+        let tail = &m[at..end];
+        if [".unwrap()", ".expect(", ".unwrap_or"]
+            .iter()
+            .any(|t| tail.contains(t))
+        {
+            out.push(RawDiag {
+                rule: "L1",
+                line,
+                message: "partial_cmp unwrapped on a float comparison; use \
+                          total_cmp or util::order::total_f64"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Iteration-order-sensitive hash accesses L2 looks for.
+const HASH_ITER_TOKENS: [&str; 9] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+];
+
+/// Order-insensitive reductions that exonerate a hash iteration when they
+/// terminate the same statement.
+const COMMUTATIVE_SINKS: [&str; 10] = [
+    ".sum()",
+    ".sum::",
+    ".count()",
+    ".len()",
+    ".min(",
+    ".max(",
+    ".all(",
+    ".any(",
+    ".contains",
+    ".product()",
+];
+
+/// Loop-body assignments that make a `for` over a hash map harmless.
+const COMMUTATIVE_BODY_OPS: [&str; 6] = [".max(", ".min(", "+=", "*=", "|=", "&="];
+
+/// L2 — order-sensitive iteration over `HashMap`/`HashSet` in algorithmic
+/// code. Two passes: collect the identifiers bound with a hash type in
+/// this file (let bindings, params, struct fields), then flag iteration
+/// tokens whose receiver is one of them — unless the statement reduces
+/// commutatively, collects back into a hash/ordered container, or sorts
+/// the collected buffer within the next few lines.
+fn l2_no_hash_iter_decision(src: &PreparedSource, out: &mut Vec<RawDiag>) {
+    let m = src.masked();
+    let hash_bound = hash_bound_idents(m);
+    if hash_bound.is_empty() {
+        return;
+    }
+
+    // Method-token sites.
+    for tok in HASH_ITER_TOKENS {
+        for at in find_all(m, tok) {
+            let line = src.line_of(at);
+            if src.in_test_region(line) {
+                continue;
+            }
+            let recv = match src.receiver_ident(at) {
+                Some(r) => r.to_string(),
+                None => continue,
+            };
+            if !hash_bound.contains(&recv) {
+                continue;
+            }
+            let (start, end) = src.statement_window(at);
+            let stmt = &m[start..end];
+            if COMMUTATIVE_SINKS.iter().any(|s| stmt.contains(s)) {
+                continue;
+            }
+            if stmt.contains(".collect") {
+                // Collecting into another hash (order re-scrambled, not
+                // consumed) or an ordered map is fine; so is collecting a
+                // buffer that is sorted immediately after.
+                if ["HashMap", "HashSet", "BTreeMap", "BTreeSet"]
+                    .iter()
+                    .any(|t| stmt.contains(t))
+                {
+                    continue;
+                }
+                let stmt_end_line = src.line_of(end.min(m.len().saturating_sub(1)));
+                if (stmt_end_line..=stmt_end_line + 6)
+                    .any(|l| src.line_text(l).contains(".sort"))
+                {
+                    continue;
+                }
+            }
+            // Inside a `for` header the loop body is the statement's
+            // continuation: allow commutative accumulation bodies.
+            if stmt.trim_start().starts_with("for ")
+                && body_is_commutative(src, end)
+            {
+                continue;
+            }
+            out.push(RawDiag {
+                rule: "L2",
+                line,
+                message: format!(
+                    "hash-order iteration over `{recv}` can leak bucket \
+                     order into decisions; sort first or reduce \
+                     commutatively"
+                ),
+            });
+        }
+    }
+
+    // Bare `for pat in [&[mut ]]name {` loops (no method token).
+    for at in find_all(m, "for ") {
+        if at > 0 && is_ident(m.as_bytes()[at - 1]) {
+            continue;
+        }
+        let line = src.line_of(at);
+        if src.in_test_region(line) {
+            continue;
+        }
+        let (_, end) = src.statement_window(at);
+        let header = &m[at..end];
+        let Some(in_pos) = header.find(" in ") else {
+            continue;
+        };
+        let expr = header[in_pos + 4..].trim();
+        let expr = expr
+            .trim_start_matches('&')
+            .trim_start_matches("mut ")
+            .trim_start_matches("self.")
+            .trim();
+        if expr.bytes().all(is_ident)
+            && !expr.is_empty()
+            && hash_bound.contains(expr)
+            && !body_is_commutative(src, end)
+        {
+            out.push(RawDiag {
+                rule: "L2",
+                line,
+                message: format!(
+                    "hash-order `for` loop over `{expr}`; iterate a sorted \
+                     view instead"
+                ),
+            });
+        }
+    }
+}
+
+/// Identifiers declared with a `HashMap`/`HashSet` type in this file:
+/// `name: HashMap<..>` (params, fields, annotated lets, `&`/`&mut`
+/// borrows) and `name = HashMap::new()` style initializers.
+fn hash_bound_idents(masked: &str) -> std::collections::BTreeSet<String> {
+    let mut found = std::collections::BTreeSet::new();
+    let b = masked.as_bytes();
+    for ty in ["HashMap", "HashSet"] {
+        for at in find_all(masked, ty) {
+            if at > 0 && is_ident(b[at - 1]) {
+                continue; // part of a longer identifier
+            }
+            // Walk back over path prefixes (`std::collections::`),
+            // borrows and whitespace to the `:` or `=` introducer.
+            let mut i = at;
+            loop {
+                while i > 0 && (b[i - 1] as char).is_whitespace() {
+                    i -= 1;
+                }
+                if i >= 2 && &masked[i - 2..i] == "::" {
+                    i -= 2;
+                    while i > 0 && is_ident(b[i - 1]) {
+                        i -= 1;
+                    }
+                    continue;
+                }
+                if i > 0 && (b[i - 1] == b'&' || b[i - 1] == b'<') {
+                    i -= 1;
+                    continue;
+                }
+                if i >= 4 && &masked[i - 4..i] == "mut " {
+                    i -= 4;
+                    continue;
+                }
+                break;
+            }
+            if i == 0 || (b[i - 1] != b':' && b[i - 1] != b'=') {
+                continue;
+            }
+            i -= 1;
+            if b[i] == b':' && i > 0 && b[i - 1] == b':' {
+                continue; // `::HashMap` with no binding — a bare path use
+            }
+            while i > 0 && (b[i - 1] as char).is_whitespace() {
+                i -= 1;
+            }
+            let end = i;
+            while i > 0 && is_ident(b[i - 1]) {
+                i -= 1;
+            }
+            let name = &masked[i..end];
+            if !name.is_empty() && !name.chars().next().is_some_and(|c| c.is_ascii_digit())
+            {
+                found.insert(name.to_string());
+            }
+        }
+    }
+    // `let name = HashMap::new()` binds through `=`; the backward walk
+    // above lands on `=` and extracts `name` the same way, but strip the
+    // keywords that can precede a pattern.
+    found.remove("let");
+    found.remove("mut");
+    found.remove("in");
+    found
+}
+
+/// True when the three lines after a `for` header's `{` only accumulate
+/// commutatively (`+=`, `|=`, `.max(` ...).
+fn body_is_commutative(src: &PreparedSource, header_end: usize) -> bool {
+    let open_line = src.line_of(header_end.min(src.masked().len().saturating_sub(1)));
+    (open_line..open_line + 3).any(|l| {
+        let t = src.line_text(l);
+        COMMUTATIVE_BODY_OPS.iter().any(|op| t.contains(op))
+    })
+}
+
+/// L3 — panicking constructs in the coordinator's actor/hot path.
+/// `.unwrap()` is matched exactly, so `unwrap_or_else` (the poison-safe
+/// mutex idiom) passes; `std::panic::resume_unwind` (re-raising a worker
+/// panic at the join) is deliberately not in the list.
+fn l3_no_panic_hot_path(src: &PreparedSource, out: &mut Vec<RawDiag>) {
+    let m = src.masked();
+    for tok in [
+        ".unwrap()",
+        ".expect(",
+        "panic!(",
+        "unreachable!(",
+        "todo!(",
+        "unimplemented!(",
+    ] {
+        for at in find_all(m, tok) {
+            if at > 0 && !tok.starts_with('.') && is_ident(m.as_bytes()[at - 1]) {
+                continue;
+            }
+            let line = src.line_of(at);
+            if src.in_test_region(line) {
+                continue;
+            }
+            out.push(RawDiag {
+                rule: "L3",
+                line,
+                message: format!(
+                    "`{}` in coordinator hot path; return a typed error or \
+                     degrade (a panicked actor deadlocks its clients)",
+                    tok.trim_end_matches('(')
+                ),
+            });
+        }
+    }
+}
+
+/// L4 — unbounded `mpsc::channel()` in the coordinator. Matches the bare
+/// `channel` identifier in call position; `sync_channel` has an ident
+/// byte before the token and never matches.
+fn l4_bounded_channels_only(src: &PreparedSource, out: &mut Vec<RawDiag>) {
+    let m = src.masked();
+    for at in find_all(m, "channel") {
+        let b = m.as_bytes();
+        if at > 0 && is_ident(b[at - 1]) {
+            continue;
+        }
+        let after = &m[at + "channel".len()..];
+        let call = after.starts_with('(') || after.starts_with("::<");
+        if !call {
+            continue;
+        }
+        let line = src.line_of(at);
+        if src.in_test_region(line) {
+            continue;
+        }
+        out.push(RawDiag {
+            rule: "L4",
+            line,
+            message: "unbounded mpsc::channel() in the coordinator; use \
+                      sync_channel with an explicit depth (backpressure, \
+                      not unbounded buffering)"
+                .into(),
+        });
+    }
+}
+
+/// L5 — materializing a streaming `TraceSource` outside the documented
+/// offline gate. Receivers named `source`/`src`, or bound in this file
+/// with a type mentioning `TraceSource`, calling `.collect()`, must have
+/// a `needs_offline_trace` check within the preceding 25 lines.
+fn l5_no_stream_collect(src: &PreparedSource, out: &mut Vec<RawDiag>) {
+    let m = src.masked();
+    let mut stream_idents: std::collections::BTreeSet<String> =
+        ["source", "src"].iter().map(|s| s.to_string()).collect();
+    for at in find_all(m, "TraceSource") {
+        // `name: &mut dyn TraceSource` / `name: impl TraceSource` /
+        // `name: Box<dyn TraceSource>` — take the ident before the `:`.
+        let head_start = m[..at]
+            .rfind(&['\n', ';', '{', '(', ','][..])
+            .map_or(0, |p| p + 1);
+        let head = &m[head_start..at];
+        if let Some(colon) = head.find(':') {
+            let name: String = head[..colon]
+                .trim()
+                .trim_start_matches("mut ")
+                .to_string();
+            if !name.is_empty() && name.bytes().all(is_ident) {
+                stream_idents.insert(name);
+            }
+        }
+    }
+    for at in find_all(m, ".collect()") {
+        let line = src.line_of(at);
+        if src.in_test_region(line) {
+            continue;
+        }
+        let recv = match src.receiver_ident(at) {
+            Some(r) => r.to_string(),
+            None => continue,
+        };
+        if !stream_idents.contains(&recv) {
+            continue;
+        }
+        let gated = (line.saturating_sub(25)..=line)
+            .any(|l| src.line_text(l).contains("needs_offline_trace"));
+        if gated {
+            continue;
+        }
+        out.push(RawDiag {
+            rule: "L5",
+            line,
+            message: format!(
+                "`{recv}.collect()` materializes a TraceSource outside a \
+                 needs_offline_trace gate; bounded-memory replay is the \
+                 default contract (DESIGN.md §10)"
+            ),
+        });
+    }
+}
+
+/// True when `id` names a cataloged rule.
+pub fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}

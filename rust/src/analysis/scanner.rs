@@ -1,0 +1,371 @@
+//! Lexical source preparation for the lint rules (DESIGN.md §11).
+//!
+//! The rules in [`super::rules`] are token scans, not a parse: this module
+//! gives them a view of the source where they cannot be fooled by
+//! lookalike text. [`PreparedSource::prepare`] walks the file once with a
+//! small state machine and produces
+//!
+//! * `masked` — the source with comment and string/char-literal *bytes*
+//!   blanked to spaces (newlines preserved, so offsets and line numbers
+//!   are identical to the original). A rule that greps `masked` for
+//!   `.unwrap()` can never match a doc comment or a fixture string.
+//! * test regions — the line spans of `#[cfg(test)]` / `#[test]` items,
+//!   found by brace-matching on the masked text. Unit tests may unwrap.
+//! * comments — the text of every `//` comment with its line number, for
+//!   the `akpc-lint: allow(...)` escape-hatch parser.
+//!
+//! The same hand-rolled style as `tests/doc_refs.rs`: no `syn`, no regex —
+//! the only crate dependency anywhere in `analysis/` is `anyhow`, which
+//! the build already vendors.
+
+/// A source file preprocessed for rule scans.
+pub struct PreparedSource {
+    text: String,
+    masked: String,
+    /// Byte offset of the start of each line (line 1 first).
+    line_starts: Vec<usize>,
+    /// 1-based inclusive line spans covered by test-only items.
+    test_regions: Vec<(usize, usize)>,
+    /// `(line, comment text after the `//` marker)`.
+    comments: Vec<(usize, String)>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+impl PreparedSource {
+    /// Run the masking pass and locate test regions.
+    pub fn prepare(text: &str) -> PreparedSource {
+        let bytes = text.as_bytes();
+        let mut masked = bytes.to_vec();
+        let mut comments = Vec::new();
+        let mut line_starts = vec![0usize];
+        let mut line = 1usize;
+
+        let blank = |m: &mut [u8], range: std::ops::Range<usize>| {
+            for b in &mut m[range] {
+                if *b != b'\n' {
+                    *b = b' ';
+                }
+            }
+        };
+
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let b = bytes[i];
+            if b == b'\n' {
+                line += 1;
+                line_starts.push(i + 1);
+                i += 1;
+            } else if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                // Line comment (also doc comments). Record its text for
+                // the allow-parser, then blank it.
+                let start = i;
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+                comments.push((
+                    line,
+                    String::from_utf8_lossy(&bytes[start + 2..i]).into_owned(),
+                ));
+                blank(&mut masked, start..i);
+            } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                // Block comment (nests in Rust).
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < bytes.len() && depth > 0 {
+                    if bytes[i] == b'\n' {
+                        line += 1;
+                        line_starts.push(i + 1);
+                        i += 1;
+                    } else if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                blank(&mut masked, start..i);
+            } else if b == b'"' {
+                // String literal: blank the contents, keep the quotes.
+                let start = i;
+                i += 1;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => {
+                            // `\<newline>` continuation still ends a line.
+                            if bytes.get(i + 1) == Some(&b'\n') {
+                                line += 1;
+                                line_starts.push(i + 2);
+                            }
+                            i += 2;
+                        }
+                        b'"' => break,
+                        b'\n' => {
+                            line += 1;
+                            line_starts.push(i + 1);
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                i = (i + 1).min(bytes.len());
+                blank(&mut masked, start + 1..i.saturating_sub(1));
+            } else if b == b'r'
+                && !matches!(i.checked_sub(1).map(|p| bytes[p]), Some(p) if is_ident(p))
+                && matches!(bytes.get(i + 1), Some(&b'"') | Some(&b'#'))
+            {
+                // Raw string r"..." / r#"..."# (any hash count).
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while bytes.get(j) == Some(&b'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if bytes.get(j) == Some(&b'"') {
+                    let content_start = j + 1;
+                    let mut k = content_start;
+                    'raw: while k < bytes.len() {
+                        if bytes[k] == b'\n' {
+                            line += 1;
+                            line_starts.push(k + 1);
+                        } else if bytes[k] == b'"' {
+                            let mut h = 0usize;
+                            while bytes.get(k + 1 + h) == Some(&b'#') {
+                                h += 1;
+                            }
+                            if h >= hashes {
+                                blank(&mut masked, content_start..k);
+                                i = k + 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        k += 1;
+                    }
+                    if k >= bytes.len() {
+                        blank(&mut masked, content_start..bytes.len());
+                        i = bytes.len();
+                    }
+                } else {
+                    i += 1; // plain identifier starting with `r`
+                }
+            } else if b == b'\'' {
+                // Char literal vs lifetime. `'\...'` or `'X'` is a char;
+                // anything else (`'a`, `'static`) is a lifetime label.
+                if bytes.get(i + 1) == Some(&b'\\') {
+                    let start = i;
+                    i += 2;
+                    while i < bytes.len() && bytes[i] != b'\'' {
+                        i += 1;
+                    }
+                    i = (i + 1).min(bytes.len());
+                    blank(&mut masked, start + 1..i.saturating_sub(1));
+                } else if bytes.get(i + 2) == Some(&b'\'') {
+                    blank(&mut masked, i + 1..i + 2);
+                    i += 3;
+                } else {
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        let masked = String::from_utf8_lossy(&masked).into_owned();
+        let mut prepared = PreparedSource {
+            text: text.to_string(),
+            masked,
+            line_starts,
+            test_regions: Vec::new(),
+            comments,
+        };
+        prepared.test_regions = prepared.find_test_regions();
+        prepared
+    }
+
+    /// The masked text rules scan. Same byte length as the original.
+    pub fn masked(&self) -> &str {
+        &self.masked
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Original text of a 1-based line (no trailing newline).
+    pub fn line_text(&self, line: usize) -> &str {
+        let start = match self.line_starts.get(line - 1) {
+            Some(&s) => s,
+            None => return "",
+        };
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|&e| e.saturating_sub(1))
+            .unwrap_or(self.text.len());
+        self.text.get(start..end).unwrap_or("")
+    }
+
+    /// Number of lines in the file.
+    pub fn n_lines(&self) -> usize {
+        self.line_starts.len()
+    }
+
+    /// True when the line falls inside a `#[cfg(test)]` / `#[test]` item.
+    pub fn in_test_region(&self, line: usize) -> bool {
+        self.test_regions
+            .iter()
+            .any(|&(lo, hi)| lo <= line && line <= hi)
+    }
+
+    /// Every `//` comment with its 1-based line.
+    pub fn comments(&self) -> &[(usize, String)] {
+        &self.comments
+    }
+
+    /// Line spans of test-only items: each `#[cfg(test)]`/`#[test]`
+    /// attribute, through the matching `}` of its item's body.
+    fn find_test_regions(&self) -> Vec<(usize, usize)> {
+        let m = self.masked.as_bytes();
+        let mut regions = Vec::new();
+        for pat in ["#[cfg(test)]", "#[test]"] {
+            let mut from = 0usize;
+            while let Some(rel) = self.masked[from..].find(pat) {
+                let at = from + rel;
+                from = at + pat.len();
+                // Skip any further attributes/whitespace to the item's
+                // opening brace, then brace-match in masked text.
+                let mut j = at + pat.len();
+                let mut depth = 0usize;
+                let mut opened = false;
+                while j < m.len() {
+                    match m[j] {
+                        b'{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        b'}' => {
+                            depth = depth.saturating_sub(1);
+                            if opened && depth == 0 {
+                                break;
+                            }
+                        }
+                        b';' if !opened => break, // e.g. `#[cfg(test)] use ...;`
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                regions.push((self.line_of(at), self.line_of(j.min(m.len() - 1))));
+            }
+        }
+        regions
+    }
+
+    /// Logical-statement window around `offset` in the masked text:
+    /// backward to just past the previous `;`/`{`/`}`, forward to the
+    /// next `;`/`{`/`}` (inclusive of neither). Heuristic — good enough
+    /// for "does this call chain end in an unwrap / a collect".
+    pub fn statement_window(&self, offset: usize) -> (usize, usize) {
+        let m = self.masked.as_bytes();
+        let mut start = offset;
+        while start > 0 && !matches!(m[start - 1], b';' | b'{' | b'}') {
+            start -= 1;
+        }
+        let mut end = offset;
+        while end < m.len() && !matches!(m[end], b';' | b'{' | b'}') {
+            end += 1;
+        }
+        (start, end)
+    }
+
+    /// The identifier a method call at `dot_offset` is invoked on: scans
+    /// backward over whitespace (method chains may break the line before
+    /// the dot), then reads one identifier. `self.copies.iter()` yields
+    /// `copies` — the final path segment. Returns `None` for complex
+    /// receivers (`)`/`]` — call results, index expressions).
+    pub fn receiver_ident(&self, dot_offset: usize) -> Option<&str> {
+        let m = self.masked.as_bytes();
+        let mut i = dot_offset;
+        while i > 0 && (m[i - 1] as char).is_whitespace() {
+            i -= 1;
+        }
+        if i == 0 || !is_ident(m[i - 1]) {
+            return None;
+        }
+        let end = i;
+        while i > 0 && is_ident(m[i - 1]) {
+            i -= 1;
+        }
+        self.masked.get(i..end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let src = "let a = \"x.unwrap()\"; // .unwrap() here\nlet b = 1;\n";
+        let p = PreparedSource::prepare(src);
+        assert!(!p.masked().contains("unwrap"));
+        assert_eq!(p.masked().len(), src.len());
+        assert_eq!(p.comments().len(), 1);
+        assert!(p.comments()[0].1.contains(".unwrap() here"));
+    }
+
+    #[test]
+    fn masks_raw_strings_and_char_literals() {
+        let src = "let s = r#\"a.expect(\"boom\")\"#;\nlet c = 'p'; let l: &'static str = \"\";\n";
+        let p = PreparedSource::prepare(src);
+        assert!(!p.masked().contains("expect"));
+        assert!(!p.masked().contains('p'), "char literal content masked");
+        assert!(p.masked().contains("static"), "lifetime left intact");
+    }
+
+    #[test]
+    fn line_numbers_survive_masking() {
+        let src = "/* a\nb\nc */\nlet x = 1;\n";
+        let p = PreparedSource::prepare(src);
+        let off = p.masked().find("let x").unwrap();
+        assert_eq!(p.line_of(off), 4);
+        assert_eq!(p.line_text(4), "let x = 1;");
+    }
+
+    #[test]
+    fn test_regions_cover_test_mods() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let p = PreparedSource::prepare(src);
+        assert!(!p.in_test_region(1));
+        assert!(p.in_test_region(4));
+        assert!(!p.in_test_region(6));
+    }
+
+    #[test]
+    fn receiver_crosses_line_breaks() {
+        let src = "let v = counts\n    .iter();\n";
+        let p = PreparedSource::prepare(src);
+        let dot = p.masked().find(".iter").unwrap();
+        assert_eq!(p.receiver_ident(dot), Some("counts"));
+    }
+
+    #[test]
+    fn statement_window_stops_at_separators() {
+        let src = "a.b(); c.partial_cmp(&d).unwrap(); e.f();\n";
+        let p = PreparedSource::prepare(src);
+        let at = p.masked().find("partial_cmp").unwrap();
+        let (s, e) = p.statement_window(at);
+        let w = &p.masked()[s..e];
+        assert!(w.contains("partial_cmp") && w.contains(".unwrap()"));
+        assert!(!w.contains("a.b") && !w.contains("e.f"));
+    }
+}

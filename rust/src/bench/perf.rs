@@ -150,7 +150,7 @@ fn time_median<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
         std::hint::black_box(f());
         samples.push(t0.elapsed().as_secs_f64());
     }
-    samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_unstable_by(crate::util::order::total_f64);
     samples[samples.len() / 2]
 }
 

@@ -264,6 +264,7 @@ impl CacheState {
         for &(key, _server) in self.expiry.keys() {
             *counts.entry(key).or_insert(0) += 1;
         }
+        // akpc-lint: allow(L2) -- order-independent conjunction of per-key checks; test-only helper
         for (key, &g) in &self.copies {
             anyhow::ensure!(
                 counts.get(key) == Some(&g),

@@ -80,10 +80,10 @@ impl CliqueSet {
                 }
             }
             pairs.retain(|&(_, _, d)| d >= gamma);
+            // Density desc under a total order (akpc-lint L1), slot ids
+            // as the deterministic tie-break.
             pairs.sort_unstable_by(|x, y| {
-                y.2.partial_cmp(&x.2)
-                    .unwrap()
-                    .then((x.0, x.1).cmp(&(y.0, y.1)))
+                y.2.total_cmp(&x.2).then((x.0, x.1).cmp(&(y.0, y.1)))
             });
             pairs.into_iter().map(|(a, b, _)| (a, b)).collect()
         };

@@ -197,9 +197,7 @@ impl CliqueSet {
                 })
                 .map(|(v, w, _)| (v, w))
                 .collect();
-            cands.sort_unstable_by(|a, b| {
-                b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
-            });
+            cands.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
             for (v, _) in cands {
                 if let Some(cap) = cap {
                     if members.len() >= cap as usize {

@@ -24,7 +24,10 @@
 //!
 //! (The offline build environment has no tokio; the async facade is a
 //! blocking-channel actor system instead — same topology, same
-//! single-writer semantics. See DESIGN.md §2.)
+//! single-writer semantics. See DESIGN.md §2.) Every mailbox is a
+//! **bounded** `sync_channel` (DESIGN.md §11, rule L4): a slow actor
+//! pushes back on its producers instead of letting queues grow without
+//! limit.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -40,6 +43,19 @@ use super::batcher::WindowBatcher;
 use super::metrics::{GenStats, MetricsSnapshot, ShardStats};
 use super::snapshot::CliqueSnapshot;
 use crate::util::Histogram;
+
+/// Depth of each shard actor's mailbox. Every coordinator channel is
+/// bounded (akpc-lint L4): a slow shard applies backpressure to its
+/// submitters instead of queueing unboundedly. Matches
+/// [`crate::sim::replay`]'s `SHARD_CHANNEL_CAP` so the service and the
+/// replay harness exert the same admission behavior.
+const SHARD_QUEUE_DEPTH: usize = 1024;
+
+/// Depth of the clique-generation worker's mailbox: one window in flight
+/// plus one queued. In [`TickMode::Async`] a further window close blocks
+/// the closing client until the worker catches up — bounded lag by
+/// construction, instead of an unbounded backlog of stale windows.
+const GEN_QUEUE_DEPTH: usize = 2;
 
 /// A request submitted to the coordinator.
 #[derive(Debug)]
@@ -76,15 +92,15 @@ pub enum TickMode {
 }
 
 enum ShardMsg {
-    Serve(Request, mpsc::Sender<ServeResponse>),
+    Serve(Request, mpsc::SyncSender<ServeResponse>),
     /// Install a new snapshot. The `f64` is the closed window's end time:
     /// the shard first sweeps its expiry events up to it under the *old*
     /// clique set — exactly when the single leader processed them —
     /// before swapping in the new one (retention decisions depend on
     /// `current_keys` at sweep time, so a lagging shard must not process
     /// old events under a newer snapshot).
-    Install(Arc<CliqueSnapshot>, f64, mpsc::Sender<f64>),
-    Metrics(mpsc::Sender<ShardStats>),
+    Install(Arc<CliqueSnapshot>, f64, mpsc::SyncSender<f64>),
+    Metrics(mpsc::SyncSender<ShardStats>),
     /// Advance expiry processing to the global end time (shutdown
     /// barrier): a shard sweeps only at its own request times, so without
     /// this, retention rent accrued on its servers after its last request
@@ -94,8 +110,8 @@ enum ShardMsg {
 }
 
 enum GenMsg {
-    Window(Vec<Request>, Option<mpsc::Sender<()>>),
-    Metrics(mpsc::Sender<GenStats>),
+    Window(Vec<Request>, Option<mpsc::SyncSender<()>>),
+    Metrics(mpsc::SyncSender<GenStats>),
     Shutdown,
 }
 
@@ -109,8 +125,8 @@ struct Shared {
 /// Cloneable, `Send` submission handle (no lifecycle control). Each clone
 /// carries its own channel senders; only the window batcher is shared.
 pub struct CoordinatorClient {
-    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
-    gen_tx: mpsc::Sender<GenMsg>,
+    shard_txs: Vec<mpsc::SyncSender<ShardMsg>>,
+    gen_tx: mpsc::SyncSender<GenMsg>,
     shared: Arc<Shared>,
 }
 
@@ -135,7 +151,9 @@ impl CoordinatorClient {
             .time
             .unwrap_or_else(|| self.shared.start.elapsed().as_secs_f64());
         let r = Request::new(req.items, req.server, time);
-        let (rtx, rrx) = mpsc::channel();
+        // Rendezvous-sized: the caller is already blocked on `recv`, so
+        // the shard's send never waits.
+        let (rtx, rrx) = mpsc::sync_channel(1);
         self.shard_txs[self.route(r.server)]
             .send(ShardMsg::Serve(r.clone(), rtx))
             .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
@@ -173,7 +191,7 @@ impl CoordinatorClient {
     fn dispatch_window(&self, batch: Vec<Request>) -> anyhow::Result<()> {
         match self.shared.tick_mode {
             TickMode::Sync => {
-                let (dtx, drx) = mpsc::channel();
+                let (dtx, drx) = mpsc::sync_channel(1);
                 self.gen_tx
                     .send(GenMsg::Window(batch, Some(dtx)))
                     .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
@@ -191,14 +209,14 @@ impl CoordinatorClient {
 
     /// Pull an aggregated metrics snapshot.
     pub fn metrics(&self) -> anyhow::Result<MetricsSnapshot> {
-        let (gtx, grx) = mpsc::channel();
+        let (gtx, grx) = mpsc::sync_channel(1);
         self.gen_tx
             .send(GenMsg::Metrics(gtx))
             .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
         let gen = grx.recv()?;
         let mut shards = Vec::with_capacity(self.shard_txs.len());
         for tx in &self.shard_txs {
-            let (stx, srx) = mpsc::channel();
+            let (stx, srx) = mpsc::sync_channel(1);
             tx.send(ShardMsg::Metrics(stx))
                 .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
             shards.push(srx.recv()?);
@@ -218,18 +236,32 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start `n_shards` shard actors plus the clique-generation worker,
     /// with the deterministic [`TickMode::Sync`] window barrier.
-    pub fn start(cfg: AkpcConfig, engine: CrmEngine, n_shards: usize) -> Self {
+    ///
+    /// # Errors
+    ///
+    /// Fails if the OS refuses to spawn an actor thread (resource
+    /// exhaustion); already-spawned actors are torn down by `Drop`.
+    pub fn start(
+        cfg: AkpcConfig,
+        engine: CrmEngine,
+        n_shards: usize,
+    ) -> anyhow::Result<Self> {
         Self::start_with(cfg, engine, n_shards, TickMode::Sync)
     }
 
     /// Start with an explicit [`TickMode`]. `n_shards` is clamped to ≥ 1;
     /// requests route to shard `server % n_shards`.
+    ///
+    /// # Errors
+    ///
+    /// Fails if the OS refuses to spawn an actor thread (resource
+    /// exhaustion); already-spawned actors are torn down by `Drop`.
     pub fn start_with(
         cfg: AkpcConfig,
         engine: CrmEngine,
         n_shards: usize,
         tick_mode: TickMode,
-    ) -> Self {
+    ) -> anyhow::Result<Self> {
         let n_shards = n_shards.max(1);
         // The retention board is cross-shard state; a lone shard's local
         // G[c] already *is* the global rule, so skip the mutex entirely.
@@ -238,18 +270,18 @@ impl Coordinator {
         let mut shard_txs = Vec::with_capacity(n_shards);
         let mut shard_joins = Vec::with_capacity(n_shards);
         for shard in 0..n_shards {
-            let (tx, rx) = mpsc::channel::<ShardMsg>();
+            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(SHARD_QUEUE_DEPTH);
             let cfg = cfg.clone();
             let board = board.clone();
             let join = std::thread::Builder::new()
                 .name(format!("akpc-shard-{shard}"))
                 .spawn(move || shard_loop(shard, &cfg, board, rx))
-                .expect("spawn shard");
+                .map_err(|e| anyhow::anyhow!("spawn shard {shard}: {e}"))?;
             shard_txs.push(tx);
             shard_joins.push(Some(join));
         }
 
-        let (gen_tx, gen_rx) = mpsc::channel::<GenMsg>();
+        let (gen_tx, gen_rx) = mpsc::sync_channel::<GenMsg>(GEN_QUEUE_DEPTH);
         let gen_join = {
             let cfg = cfg.clone();
             let board = board.clone();
@@ -257,7 +289,7 @@ impl Coordinator {
             std::thread::Builder::new()
                 .name("akpc-cliquegen".into())
                 .spawn(move || gen_loop(&cfg, engine, board, txs, gen_rx))
-                .expect("spawn clique-gen worker")
+                .map_err(|e| anyhow::anyhow!("spawn clique-gen worker: {e}"))?
         };
 
         let client = CoordinatorClient {
@@ -269,11 +301,11 @@ impl Coordinator {
                 start: Instant::now(),
             }),
         };
-        Self {
+        Ok(Self {
             client,
             shard_joins,
             gen_join: Some(gen_join),
-        }
+        })
     }
 
     /// Number of shard actors.
@@ -321,7 +353,7 @@ impl Coordinator {
         // leader whose clock advances on every request.
         let mut t_end = f64::NEG_INFINITY;
         for tx in &self.client.shard_txs {
-            let (stx, srx) = mpsc::channel();
+            let (stx, srx) = mpsc::sync_channel(1);
             if tx.send(ShardMsg::Metrics(stx)).is_ok() {
                 if let Ok(s) = srx.recv() {
                     t_end = t_end.max(s.last_time);
@@ -351,7 +383,13 @@ impl Coordinator {
     /// Graceful shutdown; returns the final aggregated metrics. Re-raises
     /// if an actor thread panicked.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.stop(false).expect("coordinator already stopped")
+        // `stop` returns None only after a prior stop, which consuming
+        // `self` makes unreachable; fall back to empty metrics anyway
+        // rather than panicking in a teardown path (akpc-lint L3).
+        match self.stop(false) {
+            Some(m) => m,
+            None => MetricsSnapshot::aggregate(GenStats::default(), Vec::new()),
+        }
     }
 }
 
@@ -460,7 +498,7 @@ fn gen_loop(
     cfg: &AkpcConfig,
     engine: CrmEngine,
     board: Option<Arc<CopyBoard>>,
-    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    shard_txs: Vec<mpsc::SyncSender<ShardMsg>>,
     rx: mpsc::Receiver<GenMsg>,
 ) -> GenStats {
     // Thread-affine construction: a PJRT client never crosses threads.
@@ -491,8 +529,9 @@ fn gen_loop(
                 ));
                 // Broadcast; collect every shard's sweep clock so stale
                 // board tombstones can be pruned behind the global
-                // watermark (see CopyBoard::prune).
-                let (ctx, crx) = mpsc::channel();
+                // watermark (see CopyBoard::prune). Capacity = shard
+                // count: each shard acks exactly once, so no send blocks.
+                let (ctx, crx) = mpsc::sync_channel(shard_txs.len().max(1));
                 let mut expected = 0usize;
                 for tx in &shard_txs {
                     if tx
@@ -543,7 +582,7 @@ mod tests {
 
     #[test]
     fn serves_and_learns_cliques() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native, 1);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 1).unwrap();
         // Two windows of a strong {1,2} bundle.
         for i in 0..20 {
             let resp = coord
@@ -577,7 +616,7 @@ mod tests {
         // Same bundle workload, but spread over 4 shards: the snapshot is
         // published to all of them, so a shard that never saw the bundle
         // still serves the whole pack.
-        let coord = Coordinator::start(cfg(), CrmEngine::Native, 4);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 4).unwrap();
         assert_eq!(coord.n_shards(), 4);
         for i in 0..20 {
             coord
@@ -609,7 +648,7 @@ mod tests {
 
     #[test]
     fn flush_window_forces_tick() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2).unwrap();
         for i in 0..5 {
             coord
                 .serve(ServeRequest {
@@ -626,7 +665,7 @@ mod tests {
 
     #[test]
     fn cost_deltas_accumulate_to_ledger() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2).unwrap();
         let mut sum = 0.0;
         for i in 0..10u32 {
             let r = coord
@@ -644,7 +683,7 @@ mod tests {
 
     #[test]
     fn concurrent_clients() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2).unwrap();
         let mut handles = Vec::new();
         for c in 0..8u32 {
             let client = coord.client();
@@ -670,7 +709,7 @@ mod tests {
 
     #[test]
     fn shutdown_is_idempotent_via_drop() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native, 3);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 3).unwrap();
         coord
             .serve(ServeRequest {
                 items: vec![1],
@@ -683,7 +722,7 @@ mod tests {
 
     #[test]
     fn zero_shards_clamps_to_one() {
-        let coord = Coordinator::start(cfg(), CrmEngine::Native, 0);
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 0).unwrap();
         assert_eq!(coord.n_shards(), 1);
         coord
             .serve(ServeRequest {
@@ -699,7 +738,8 @@ mod tests {
     #[test]
     fn async_tick_mode_still_installs() {
         let coord =
-            Coordinator::start_with(cfg(), CrmEngine::Native, 2, TickMode::Async);
+            Coordinator::start_with(cfg(), CrmEngine::Native, 2, TickMode::Async)
+                .unwrap();
         for i in 0..30 {
             coord
                 .serve(ServeRequest {

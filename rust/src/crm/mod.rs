@@ -88,7 +88,13 @@ pub fn sessionize(window: &[Request], gap: f64) -> Vec<Request> {
             }
         }
     }
-    for o in open.into_values() {
+    // Close the still-open sessions in first-seen order (akpc-lint L2):
+    // each close writes a disjoint `out[idx]` slot, but draining the map
+    // in hash order would still be the exact iteration hazard the lint
+    // bans from decision paths, so the drain is sorted explicitly.
+    let mut remaining: Vec<Open<'_>> = open.into_values().collect();
+    remaining.sort_unstable_by_key(|o| o.idx);
+    for o in remaining {
         close(o, &mut out);
     }
     out
@@ -388,7 +394,7 @@ pub fn top_k_keep_mask(freq: &[f32], top_frac: f32) -> Vec<bool> {
     let k = ((top_frac as f64 * nonzero.len() as f64).ceil() as usize).max(1);
     let pos = (k - 1).min(nonzero.len() - 1);
     let (_, kth, _) =
-        nonzero.select_nth_unstable_by(pos, |a, b| b.partial_cmp(a).unwrap());
+        nonzero.select_nth_unstable_by(pos, crate::util::order::desc_f32);
     let kth = *kth;
     freq.iter().map(|&f| f > 0.0 && f >= kth).collect()
 }
@@ -443,7 +449,7 @@ mod tests {
                 let k = ((frac as f64 * n_active as f64).ceil() as usize).max(1);
                 let mut sorted: Vec<f32> =
                     freq.iter().copied().filter(|&f| f > 0.0).collect();
-                sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+                sorted.sort_unstable_by(crate::util::order::desc_f32);
                 let kth = sorted[(k - 1).min(sorted.len() - 1)];
                 let want: Vec<bool> =
                     freq.iter().map(|&f| f > 0.0 && f >= kth).collect();

@@ -88,6 +88,7 @@ pub fn build_native(
     let span = (hi - lo).max(1e-9);
 
     let mut entries = Vec::with_capacity(raw.len() * 2);
+    // akpc-lint: allow(L2) -- from_entries sorts by (row, id); bucket drain order is immaterial
     for (key, c) in raw {
         let (i, j) = ((key >> 32) as u32, key as u32);
         let v = (c - lo) / span;

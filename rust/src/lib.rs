@@ -22,7 +22,8 @@
 //!
 //! | module | contents |
 //! |---|---|
-//! | [`util`] | deterministic RNG, Zipf sampler, histograms |
+//! | [`util`] | deterministic RNG, Zipf sampler, histograms, total float orderings |
+//! | [`analysis`] | akpc-lint: the repo's own invariant checker (`akpc lint`, DESIGN.md §11) |
 //! | [`config`] | full config system (paper Table II defaults) |
 //! | [`trace`] | request model, synthetic Netflix/Spotify-like generators, trace IO, streaming [`TraceSource`](trace::stream::TraceSource) engine |
 //! | [`crm`] | correlation-matrix construction (native path) + window diffing |
@@ -63,6 +64,7 @@
 //! ```
 
 pub mod algo;
+pub mod analysis;
 pub mod bench;
 pub mod cache;
 pub mod clique;

@@ -20,6 +20,9 @@
 //!                binary layout (never holds the trace)
 //!   trace-stats  analyze a trace file
 //!   serve        online sharded coordinator demo (replays a trace)
+//!   lint         akpc-lint: scan src/ for invariant violations
+//!                (determinism / panic-freedom / backpressure —
+//!                DESIGN.md §11); nonzero exit on any violation
 //!   config       show the effective configuration (Table II defaults)
 //!
 //! flags:
@@ -41,6 +44,8 @@
 //!                             sharded trace replay: completion only — DESIGN §8.4)
 //!   --jsonl <file>            run/scenario/serve: stream the same events as JSONL
 //!   --stream                  run: bounded-memory streaming replay
+//!   --root <dir>              lint: source root to scan (default: this
+//!                             crate's src/)
 //!   --chunked                 gen-trace: write the chunk-framed v2 binary
 //!   --chunk <N>               run --stream / gen-trace --chunked: requests
 //!                             per chunk (default 8192)
@@ -138,7 +143,7 @@ fn usage() {
     // The module doc is the manual; print its code block.
     println!(
         "akpc — Adaptive K-PackCache (cost-centric clique-packed CDN caching)\n\n\
-         usage: akpc <run|exp|scenario|bench|policy|gen-trace|trace-stats|serve|config> [flags]\n\n\
+         usage: akpc <run|exp|scenario|bench|policy|gen-trace|trace-stats|serve|lint|config> [flags]\n\n\
          flags: --config <toml> --requests <N> --engine <native|xla> --seed <N> --out <dir>\n\
          \u{20}      --progress <N> --jsonl <file>\n\
          run:       --policy <name>   (see `akpc policy list`)\n\
@@ -154,7 +159,8 @@ fn usage() {
          gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
          \u{20}          [--chunked [--chunk N]]   (streamed v2 binary)\n\
          serve:     --dataset <netflix|spotify> [--requests N] [--shards N]\n\
-         \u{20}          [--mode <ordered|parallel>]"
+         \u{20}          [--mode <ordered|parallel>]\n\
+         lint:      [--root <dir>]   (invariant checker, DESIGN.md §11)"
     );
 }
 
@@ -348,6 +354,17 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(&out, report.to_json().to_string_pretty())?;
                 println!("[wrote {out}]");
             }
+        }
+        "lint" => {
+            let default_root = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+            let root = cli.flag("root").unwrap_or(default_root);
+            let report = akpc::analysis::lint_tree(std::path::Path::new(root))?;
+            print!("{}", report.render());
+            anyhow::ensure!(
+                report.is_clean(),
+                "akpc-lint found {} violation(s)",
+                report.diagnostics.len()
+            );
         }
         "config" => {
             println!("{}", cfg.to_toml());

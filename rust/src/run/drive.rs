@@ -203,7 +203,7 @@ pub fn drive_phased_sharded(
         ReplayMode::Ordered => TickMode::Sync,
         ReplayMode::Parallel => TickMode::Async,
     };
-    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick);
+    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick)?;
     let n_shards = coord.n_shards();
     let wall = Instant::now();
 

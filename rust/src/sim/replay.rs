@@ -115,7 +115,7 @@ pub fn replay_sharded_stream(
         ReplayMode::Ordered => TickMode::Sync,
         ReplayMode::Parallel => TickMode::Async,
     };
-    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick);
+    let coord = Coordinator::start_with(cfg.clone(), engine, n_shards, tick)?;
     let n_shards = coord.n_shards();
     let wall = std::time::Instant::now();
     let mut served = 0usize;

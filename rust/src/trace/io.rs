@@ -346,12 +346,12 @@ pub fn read_external_csv(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
     // Stable (time, server) sort, then merge identical (time, server)
     // rows into one request (per-item dump formats emit one row per
     // item); sorting by server within a timestamp makes equal keys
-    // adjacent even when another server's row lands between them.
-    resolved.sort_by(|a, b| {
-        a.0.partial_cmp(&b.0)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.1.cmp(&b.1))
-    });
+    // adjacent even when another server's row lands between them. The
+    // time key uses `total_cmp` (akpc-lint L1): the old
+    // `partial_cmp(..).unwrap_or(Equal)` fallback broke strict weak
+    // ordering on NaN timestamps, which `sort_by` may answer with an
+    // arbitrary permutation.
+    resolved.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     let mut requests: Vec<Request> = Vec::with_capacity(resolved.len());
     for (time, server, items) in resolved {
         match requests.last_mut() {

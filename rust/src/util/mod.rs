@@ -6,6 +6,7 @@
 pub mod benchkit;
 pub mod hist;
 pub mod json;
+pub mod order;
 pub mod rng;
 pub mod tempdir;
 

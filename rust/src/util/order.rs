@@ -1,0 +1,93 @@
+//! Total-order float comparators — the only sanctioned way to sort or
+//! select on `f32`/`f64` keys in this crate.
+//!
+//! Every equivalence claim the test suite pins (sharded == single-leader,
+//! sparse == dense oracle, streamed == materialized) assumes that float
+//! orderings are *total*: `partial_cmp(..).unwrap()` panics on NaN, and
+//! `unwrap_or(Equal)` silently violates strict weak ordering, which
+//! `sort_by` is allowed to answer with an arbitrary permutation (or a
+//! panic). Both failure modes have bitten this repo before (the PR-1
+//! `ExpEvent` heap order, the PR-4 merge ties), so `akpc-lint` rule L1
+//! (DESIGN.md §11) bans them outright and points here.
+//!
+//! The comparators wrap [`f64::total_cmp`]/[`f32::total_cmp`] (IEEE 754
+//! `totalOrder`): NaN sorts above +∞ (and `-NaN` below −∞) instead of
+//! poisoning the comparison, `-0.0 < +0.0`, and the order is consistent
+//! for every input pair. Function-pointer-shaped so they drop straight
+//! into `sort_by`/`binary_search_by`/`select_nth_unstable_by`:
+//!
+//! ```
+//! use akpc::util::order;
+//!
+//! let mut xs = vec![2.0f64, f64::NAN, 1.0];
+//! xs.sort_by(order::total_f64);            // no panic: [1.0, 2.0, NaN]
+//! assert_eq!(xs[0], 1.0);
+//! let mut ys = vec![0.5f32, 2.5, 1.5];
+//! ys.sort_by(order::desc_f32);             // descending: [2.5, 1.5, 0.5]
+//! assert_eq!(ys[0], 2.5);
+//! ```
+
+use std::cmp::Ordering;
+
+/// Ascending total order on `f64` (`a` before `b` when `a < b`).
+#[inline]
+pub fn total_f64(a: &f64, b: &f64) -> Ordering {
+    a.total_cmp(b)
+}
+
+/// Ascending total order on `f32`.
+#[inline]
+pub fn total_f32(a: &f32, b: &f32) -> Ordering {
+    a.total_cmp(b)
+}
+
+/// Descending total order on `f64` (largest first).
+#[inline]
+pub fn desc_f64(a: &f64, b: &f64) -> Ordering {
+    b.total_cmp(a)
+}
+
+/// Descending total order on `f32` (largest first).
+#[inline]
+pub fn desc_f32(a: &f32, b: &f32) -> Ordering {
+    b.total_cmp(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nan_never_panics_and_sorts_last_ascending() {
+        let mut xs = vec![3.0f64, f64::NAN, 1.0, 2.0];
+        xs.sort_by(total_f64);
+        assert_eq!(&xs[..3], &[1.0, 2.0, 3.0]);
+        assert!(xs[3].is_nan());
+    }
+
+    #[test]
+    fn descending_is_reverse_of_ascending() {
+        let mut up = vec![0.25f32, -1.5, 7.0, 0.0];
+        let mut down = up.clone();
+        up.sort_by(total_f32);
+        down.sort_by(desc_f32);
+        up.reverse();
+        assert_eq!(up, down);
+    }
+
+    #[test]
+    fn total_order_is_antisymmetric_on_zeros() {
+        // total_cmp distinguishes -0.0 from +0.0 — consistently.
+        assert_eq!(total_f64(&-0.0, &0.0), Ordering::Less);
+        assert_eq!(desc_f64(&-0.0, &0.0), Ordering::Greater);
+    }
+
+    #[test]
+    fn binary_search_with_nan_table_terminates() {
+        // A degenerate table (all NaN) still yields a well-defined
+        // insertion point instead of panicking mid-search.
+        let cdf = vec![f64::NAN; 5];
+        let r = cdf.binary_search_by(|p| p.total_cmp(&0.5));
+        assert!(matches!(r, Err(0)), "NaN > every finite in total order");
+    }
+}

@@ -117,13 +117,15 @@ impl ZipfSampler {
     }
 
     /// Draw a rank in `[0, n)`.
+    ///
+    /// The search comparator is `f64::total_cmp` (akpc-lint L1): a weight
+    /// table degenerated to NaN (e.g. a NaN exponent flowing through
+    /// `powf`) must map every draw to a well-defined rank, not panic
+    /// mid-`binary_search` the way `partial_cmp(..).unwrap()` did.
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self
-            .cdf
-            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
-        {
+        match self.cdf.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
@@ -226,6 +228,22 @@ mod tests {
         let lo = *counts.iter().min().unwrap() as f64;
         let hi = *counts.iter().max().unwrap() as f64;
         assert!(hi / lo < 1.2, "counts {counts:?}");
+    }
+
+    #[test]
+    fn zipf_degenerate_nan_weights_never_panic() {
+        // Regression (akpc-lint L1): a NaN exponent degenerates the whole
+        // CDF to NaN through `powf` + normalization. The old
+        // `partial_cmp(..).unwrap()` comparator panicked on the first
+        // draw; with `total_cmp`, NaN sorts above every u ∈ [0, 1), so
+        // every draw lands deterministically on rank 0.
+        let z = ZipfSampler::new(8, f64::NAN);
+        let mut r = Rng::new(9);
+        for _ in 0..1_000 {
+            let rank = z.sample(&mut r);
+            assert!(rank < 8);
+            assert_eq!(rank, 0, "NaN CDF must resolve deterministically");
+        }
     }
 
     #[test]

@@ -127,7 +127,7 @@ fn coordinator_replay_matches_simulator() {
     };
     let trace = netflix_like(cfg.n_items, cfg.n_servers, 5_000, 23);
 
-    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 1);
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 1).unwrap();
     for r in &trace.requests {
         coord
             .serve(ServeRequest {

@@ -550,6 +550,85 @@ fn prop_clique_generate_agrees_across_crm_constructors() {
 }
 
 #[test]
+fn prop_clique_pipeline_deterministic_under_relabeling() {
+    // The akpc-lint L1/L2 sweep exists so that no decision in the
+    // sessionize → CRM → clique pipeline depends on float partial orders
+    // or hash-bucket iteration order. This property pins that down two
+    // ways, over 100 random workloads:
+    //
+    // 1. Rerun: the same input yields byte-identical cliques. `HashMap`'s
+    //    per-instance `RandomState` reseeds on every construction, so any
+    //    surviving hash-order dependence flakes *within* one process.
+    // 2. Monotone relabeling: mapping every item id `d → 3d + 5` permutes
+    //    every hash bucket assignment while preserving the id *order*
+    //    that legitimate tie-breaks use. The relabeled run must produce
+    //    exactly the relabeled cliques.
+    forall("relabel_determinism", 100, |rng| {
+        let n = 20 + rng.below(30) as u32;
+        let omega = 3 + rng.below(4) as u32;
+        let gamma = 0.5 + rng.f64() as f32 * 0.5;
+        let w1 = random_window(rng, 150, n, 4, 0.0);
+        let w2 = random_window(rng, 150, n, 4, 100.0);
+
+        let relabel = |d: u32| d * 3 + 5;
+        let relabel_reqs = |rs: &[Request]| -> Vec<Request> {
+            rs.iter()
+                .map(|r| {
+                    Request::new(
+                        r.items.iter().map(|&d| relabel(d)).collect(),
+                        r.server,
+                        r.time,
+                    )
+                })
+                .collect()
+        };
+
+        let run = |wa: &[Request], wb: &[Request], n: u32| -> Vec<Vec<u32>> {
+            let c1 = build_native(&sessionize(wa, 1.0), n, 0.2, 1.0);
+            let c2 = build_native(&sessionize(wb, 1.0), n, 0.2, 1.0);
+            let prev = CliqueSet::generate(
+                &CliqueSet::new(),
+                &c1,
+                &diff_windows(&CrmWindow::default(), &c1),
+                omega,
+                gamma,
+                true,
+                true,
+            );
+            let set = CliqueSet::generate(
+                &prev,
+                &c2,
+                &diff_windows(&c1, &c2),
+                omega,
+                gamma,
+                true,
+                true,
+            );
+            set.check_invariants().expect("invariants");
+            let mut v: Vec<Vec<u32>> = set.iter().map(|c| c.to_vec()).collect();
+            v.sort();
+            v
+        };
+
+        let base = run(&w1, &w2, n);
+        let again = run(&w1, &w2, n);
+        assert_eq!(base, again, "same input, different cliques (rerun)");
+
+        let n_rel = relabel(n - 1) + 1;
+        let rel = run(&relabel_reqs(&w1), &relabel_reqs(&w2), n_rel);
+        let mut expected: Vec<Vec<u32>> = base
+            .iter()
+            .map(|c| c.iter().map(|&d| relabel(d)).collect())
+            .collect();
+        expected.sort();
+        assert_eq!(
+            rel, expected,
+            "item relabeling changed the clique decisions"
+        );
+    });
+}
+
+#[test]
 fn prop_trace_binary_roundtrip() {
     forall("trace_io_roundtrip", 50, |rng| {
         let n = 10 + rng.below(50) as u32;

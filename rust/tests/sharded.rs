@@ -157,7 +157,7 @@ fn concurrent_clients_across_shards() {
         crm_top_frac: 1.0,
         ..Default::default()
     };
-    let coord = Coordinator::start(cfg, CrmEngine::Native, 4);
+    let coord = Coordinator::start(cfg, CrmEngine::Native, 4).unwrap();
     let mut handles = Vec::new();
     for c in 0..12u32 {
         let client = coord.client();
@@ -200,7 +200,7 @@ fn shutdown_with_n_shards_is_clean() {
     };
 
     // Explicit shutdown returns aggregated finals.
-    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 8);
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 8).unwrap();
     for i in 0..8u32 {
         coord
             .serve(ServeRequest {
@@ -215,7 +215,7 @@ fn shutdown_with_n_shards_is_clean() {
     assert_eq!(m.per_shard.len(), 8);
 
     // Drop without explicit shutdown must not hang or panic.
-    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 8);
+    let coord = Coordinator::start(cfg.clone(), CrmEngine::Native, 8).unwrap();
     coord
         .serve(ServeRequest {
             items: vec![1],
@@ -226,7 +226,7 @@ fn shutdown_with_n_shards_is_clean() {
     drop(coord);
 
     // A surviving client observes a clean "down" error after shutdown.
-    let coord = Coordinator::start(cfg, CrmEngine::Native, 3);
+    let coord = Coordinator::start(cfg, CrmEngine::Native, 3).unwrap();
     let client = coord.client();
     coord.shutdown();
     let err = client
@@ -290,10 +290,11 @@ fn start_defaults_to_sync_ticks() {
                 .unwrap();
         }
     };
-    let a = Coordinator::start(cfg.clone(), CrmEngine::Native, 3);
+    let a = Coordinator::start(cfg.clone(), CrmEngine::Native, 3).unwrap();
     serve_all(&a);
     let ma = a.shutdown();
-    let b = Coordinator::start_with(cfg, CrmEngine::Native, 3, TickMode::Sync);
+    let b = Coordinator::start_with(cfg, CrmEngine::Native, 3, TickMode::Sync)
+        .unwrap();
     serve_all(&b);
     let mb = b.shutdown();
     assert_eq!(ma.ledger.c_t, mb.ledger.c_t);

@@ -331,7 +331,9 @@ mod tests {
         let bad = "fn f(x: Option<u32>) -> u32 {\n    let v = x.unwrap();\n    if v > 9 { panic!(\"big\"); }\n    v\n}\n";
         let ds = diags("coordinator/x.rs", bad);
         assert_eq!(rules_of(&ds), vec!["L3", "L3"], "{ds:?}");
-        // The same file outside coordinator/ is out of scope.
+        // The serving daemon is hot-path too (live clients block on it).
+        assert_eq!(rules_of(&diags("serve/x.rs", bad)), vec!["L3", "L3"]);
+        // The same file outside coordinator//serve/ is out of scope.
         assert!(diags("bench/x.rs", bad).is_empty());
     }
 
@@ -348,6 +350,7 @@ mod tests {
     fn l4_trips_on_unbounded_channel() {
         let bad = "use std::sync::mpsc;\nfn f() {\n    let (tx, rx) = mpsc::channel::<u32>();\n    let (a, b) = mpsc::channel();\n    drop((tx, rx, a, b));\n}\n";
         assert_eq!(rules_of(&diags("coordinator/x.rs", bad)), vec!["L4", "L4"]);
+        assert_eq!(rules_of(&diags("serve/x.rs", bad)), vec!["L4", "L4"]);
     }
 
     #[test]

@@ -169,7 +169,21 @@ impl AkpcConfig {
     pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
         let map = toml_lite::parse(text)?;
         let mut cfg = Self::default();
-        for (k, v) in &map {
+        cfg.apply_toml_map(&map)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed key/value table onto this config. Shared by
+    /// [`from_toml_str`](Self::from_toml_str) and embedders that carry an
+    /// `[akpc]` sub-table inside their own TOML document (the serving
+    /// daemon's `ServeConfig`, DESIGN.md §12.3): both get the same key
+    /// set, the same coercions, and the same unknown-key rejection.
+    pub fn apply_toml_map(
+        &mut self,
+        map: &std::collections::BTreeMap<String, toml_lite::Value>,
+    ) -> anyhow::Result<()> {
+        let cfg = self;
+        for (k, v) in map {
             let num = || {
                 v.as_f64()
                     .ok_or_else(|| anyhow::anyhow!("`{k}` must be a number"))
@@ -207,7 +221,7 @@ impl AkpcConfig {
                 _ => anyhow::bail!("unknown config key `{k}`"),
             }
         }
-        Ok(cfg)
+        Ok(())
     }
 
     /// Load from a TOML file.

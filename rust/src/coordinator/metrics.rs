@@ -157,6 +157,98 @@ impl MetricsSnapshot {
         )
     }
 
+    /// Render the snapshot in the Prometheus text exposition format
+    /// (version 0.0.4): `# HELP`/`# TYPE` preamble per family, one
+    /// sample per line, `{shard="i"}` labels for the per-shard series.
+    /// This is what the serving daemon's `GET /metrics` endpoint
+    /// returns (DESIGN.md §12.3).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        let mut counter = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        counter(
+            "akpc_requests_served_total",
+            "Requests served since start",
+            self.served as f64,
+        );
+        counter(
+            "akpc_cost_transfer_total",
+            "Cumulative transfer cost C_T (paper Eq. 5)",
+            self.ledger.c_t,
+        );
+        counter(
+            "akpc_cost_caching_total",
+            "Cumulative caching cost C_P (paper Eq. 5)",
+            self.ledger.c_p,
+        );
+        counter(
+            "akpc_full_hits_total",
+            "Requests fully served from local cache",
+            self.ledger.full_hits as f64,
+        );
+        counter(
+            "akpc_misses_total",
+            "Requests that triggered at least one transfer",
+            self.ledger.misses as f64,
+        );
+        counter(
+            "akpc_transfers_total",
+            "Packed-group transfers performed",
+            self.ledger.transfers as f64,
+        );
+        counter(
+            "akpc_retentions_total",
+            "Forced Algorithm-6 retentions across shards",
+            self.retentions() as f64,
+        );
+        counter(
+            "akpc_clique_windows_total",
+            "Clique-generation windows executed",
+            self.windows as f64,
+        );
+        counter(
+            "akpc_clique_gen_seconds_total",
+            "Cumulative seconds spent in clique generation",
+            self.clique_gen_secs,
+        );
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+            ));
+        };
+        gauge(
+            "akpc_live_cliques",
+            "Live cliques after the last window tick",
+            self.live_cliques as f64,
+        );
+        gauge(
+            "akpc_shards",
+            "Shard actors in the coordinator",
+            self.per_shard.len().max(1) as f64,
+        );
+        for q in [0.5, 0.9, 0.99] {
+            gauge(
+                &format!("akpc_latency_us_q{}", (q * 100.0) as u32),
+                "Per-request service latency quantile (microseconds)",
+                f64::from(self.latency_us.quantile(q)),
+            );
+        }
+        out.push_str(
+            "# HELP akpc_shard_served_total Requests served by one shard\n\
+             # TYPE akpc_shard_served_total counter\n",
+        );
+        for s in &self.per_shard {
+            out.push_str(&format!(
+                "akpc_shard_served_total{{shard=\"{}\"}} {}\n",
+                s.shard, s.served
+            ));
+        }
+        out
+    }
+
     /// JSON export.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -234,6 +326,33 @@ mod tests {
         assert_eq!(m.per_shard[0].shard, 0);
         assert_eq!(m.per_shard[1].shard, 1);
         crate::util::json::parse(&m.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn prometheus_export_renders_all_families() {
+        let m = MetricsSnapshot::aggregate(
+            GenStats {
+                windows: 3,
+                live_cliques: 2,
+                ..Default::default()
+            },
+            vec![shard(0, 3.0, 7), shard(1, 2.0, 5)],
+        );
+        let text = m.to_prometheus();
+        assert!(text.contains("# TYPE akpc_requests_served_total counter"));
+        assert!(text.contains("akpc_requests_served_total 12"));
+        assert!(text.contains("akpc_cost_transfer_total 5"));
+        assert!(text.contains("akpc_shard_served_total{shard=\"1\"} 5"));
+        assert!(text.contains("# TYPE akpc_live_cliques gauge"));
+        assert!(text.contains("akpc_latency_us_q99"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.split_whitespace();
+            let (name, val) = (parts.next().unwrap(), parts.next().unwrap());
+            assert!(name.starts_with("akpc_"), "{line}");
+            val.parse::<f64>().unwrap();
+            assert!(parts.next().is_none(), "{line}");
+        }
     }
 
     #[test]

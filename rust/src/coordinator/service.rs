@@ -333,6 +333,35 @@ impl Coordinator {
         self.client.flush_window()
     }
 
+    /// The drain barrier: sweep every shard's expiry clock forward to the
+    /// global maximum request time, so per-shard ledgers account
+    /// retention rent exactly like a single leader whose clock advances
+    /// on every request. [`shutdown`](Self::shutdown) runs it
+    /// automatically; the serving daemon's graceful drain (DESIGN.md
+    /// §12.4) can also invoke it before a final metrics pull — shard
+    /// mailboxes are FIFO, so a `metrics()` issued afterwards observes
+    /// the swept state.
+    pub fn quiesce(&self) {
+        Self::quiesce_shards(&self.client.shard_txs);
+    }
+
+    fn quiesce_shards(shard_txs: &[mpsc::SyncSender<ShardMsg>]) {
+        let mut t_end = f64::NEG_INFINITY;
+        for tx in shard_txs {
+            let (stx, srx) = mpsc::sync_channel(1);
+            if tx.send(ShardMsg::Metrics(stx)).is_ok() {
+                if let Ok(s) = srx.recv() {
+                    t_end = t_end.max(s.last_time);
+                }
+            }
+        }
+        if t_end.is_finite() {
+            for tx in shard_txs {
+                let _ = tx.send(ShardMsg::Quiesce(t_end));
+            }
+        }
+    }
+
     /// Stop every actor; returns `None` when already stopped. With
     /// `tolerate_panics` (the Drop path — possibly already unwinding), a
     /// panicked actor yields default stats instead of re-raising; the
@@ -348,23 +377,7 @@ impl Coordinator {
             Err(payload) => std::panic::resume_unwind(payload),
         };
 
-        // Quiesce barrier: sweep every shard to the global end time so
-        // per-shard ledgers account retention rent exactly like a single
-        // leader whose clock advances on every request.
-        let mut t_end = f64::NEG_INFINITY;
-        for tx in &self.client.shard_txs {
-            let (stx, srx) = mpsc::sync_channel(1);
-            if tx.send(ShardMsg::Metrics(stx)).is_ok() {
-                if let Ok(s) = srx.recv() {
-                    t_end = t_end.max(s.last_time);
-                }
-            }
-        }
-        if t_end.is_finite() {
-            for tx in &self.client.shard_txs {
-                let _ = tx.send(ShardMsg::Quiesce(t_end));
-            }
-        }
+        Self::quiesce_shards(&self.client.shard_txs);
 
         let mut shards = Vec::with_capacity(self.shard_joins.len());
         for (tx, join) in self.client.shard_txs.iter().zip(&mut self.shard_joins) {

@@ -32,6 +32,7 @@
 //! | [`algo`] | `CachePolicy` trait: AKPC + NoPacking, PackCache, DP_Greedy, OPT |
 //! | [`scenario`] | Scenario Lab: declarative workload scenarios, trace transformers (materialized + streamed), phased replay |
 //! | [`run`] | unified Run API: policy registry, `RunSpec` builder, `RunOutcome`, streaming observers |
+//! | [`serve`] | live serving daemon: TCP ingest, admission/reorder, `/metrics`, hot-reload, graceful drain (DESIGN.md §12) |
 //! | [`sim`] | event-driven CDN simulator, sharded replay drivers (materialized + streamed) + reports |
 //! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
 //! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker |
@@ -74,6 +75,7 @@ pub mod crm;
 pub mod run;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod util;

@@ -19,7 +19,11 @@
 //!                `--chunked` streams straight to the chunk-framed v2
 //!                binary layout (never holds the trace)
 //!   trace-stats  analyze a trace file
-//!   serve        online sharded coordinator demo (replays a trace)
+//!   serve        live ingest daemon when `--listen` is given (admission,
+//!                `/metrics`, hot-reload, graceful drain — DESIGN.md §12);
+//!                otherwise the offline sharded-coordinator demo
+//!   ingest       stream a trace (file or generated) into a running
+//!                `akpc serve --listen` daemon over TCP
 //!   lint         akpc-lint: scan src/ for invariant violations
 //!                (determinism / panic-freedom / backpressure —
 //!                DESIGN.md §11); nonzero exit on any violation
@@ -47,8 +51,16 @@
 //!   --root <dir>              lint: source root to scan (default: this
 //!                             crate's src/)
 //!   --chunked                 gen-trace: write the chunk-framed v2 binary
-//!   --chunk <N>               run --stream / gen-trace --chunked: requests
-//!                             per chunk (default 8192)
+//!   --chunk <N>               run --stream / gen-trace --chunked / ingest:
+//!                             requests per chunk (default 8192)
+//!   --listen <addr>           serve: bind the ingest daemon (`:0` = any port)
+//!   --http <addr>             serve: bind the /metrics /healthz /drain
+//!                             /reload endpoint
+//!   --serve-config <file>     serve: TOML daemon config, re-read on reload
+//!   --slack <F>               serve: admission reorder window override
+//!   --to <addr>               ingest: daemon address to stream into
+//!   --binary                  ingest: pipe the trace file's AKPT bytes
+//!                             verbatim instead of text frames
 //! ```
 //!
 //! (The offline build has no clap; flag parsing is in-tree. Every
@@ -59,8 +71,8 @@ use akpc::bench::scenarios::scenario_suite;
 use akpc::bench::sweep::{shard_scaling, EngineChoice, PolicyChoice};
 use akpc::config::AkpcConfig;
 use akpc::run::{
-    cell_config, generated_source, generated_trace, parse_dataset, Driver, Fanout, JsonlSink,
-    PolicyRegistry, ProgressPrinter, RunSpec, Workload,
+    generated_source, generated_trace, parse_dataset, Driver, Fanout, JsonlSink, PolicyRegistry,
+    ProgressPrinter, RunSpec, StreamInput, Workload,
 };
 use akpc::scenario::{self, ScenarioSpec};
 use akpc::sim::ReplayMode;
@@ -76,7 +88,7 @@ struct Cli {
 impl Cli {
     /// Valueless switches (probed via `flag(..).is_some()`); every other
     /// flag still requires a value and errors without one.
-    const BOOL_FLAGS: &'static [&'static str] = &["json", "stream", "chunked"];
+    const BOOL_FLAGS: &'static [&'static str] = &["json", "stream", "chunked", "binary"];
 
     fn parse(args: Vec<String>) -> anyhow::Result<Self> {
         let mut it = args.into_iter();
@@ -143,7 +155,7 @@ fn usage() {
     // The module doc is the manual; print its code block.
     println!(
         "akpc — Adaptive K-PackCache (cost-centric clique-packed CDN caching)\n\n\
-         usage: akpc <run|exp|scenario|bench|policy|gen-trace|trace-stats|serve|lint|config> [flags]\n\n\
+         usage: akpc <run|exp|scenario|bench|policy|gen-trace|trace-stats|serve|ingest|lint|config> [flags]\n\n\
          flags: --config <toml> --requests <N> --engine <native|xla> --seed <N> --out <dir>\n\
          \u{20}      --progress <N> --jsonl <file>\n\
          run:       --policy <name>   (see `akpc policy list`)\n\
@@ -158,8 +170,11 @@ fn usage() {
          policy:    list   (name + description + capabilities)\n\
          gen-trace: --dataset <netflix|spotify> --out <file.bin|file.csv>\n\
          \u{20}          [--chunked [--chunk N]]   (streamed v2 binary)\n\
-         serve:     --dataset <netflix|spotify> [--requests N] [--shards N]\n\
+         serve:     daemon: --listen <addr> [--http <addr>] [--serve-config <toml>]\n\
+         \u{20}          [--slack F] [--shards N] [--policy P] [--engine E]\n\
+         \u{20}          demo:   --dataset <netflix|spotify> [--requests N] [--shards N]\n\
          \u{20}          [--mode <ordered|parallel>]\n\
+         ingest:    --to <addr> [--trace <file> [--binary] | --dataset D --requests N]\n\
          lint:      [--root <dir>]   (invariant checker, DESIGN.md §11)"
     );
 }
@@ -194,13 +209,21 @@ fn main() -> anyhow::Result<()> {
     let registry = PolicyRegistry::builtin();
 
     match cli.cmd.as_str() {
-        "run" if cli.flag("stream").is_some() => {
-            run_stream_cmd(&cli, &registry, &cfg, engine, kind, n_requests)?;
-        }
         "run" => {
-            let workload = match cli.flag("trace") {
-                Some(p) => Workload::TraceFile(p.to_string()),
-                None => Workload::Generated { kind, n_requests },
+            // `--stream` swaps the materialized workload for the
+            // bounded-memory streaming variant (DESIGN.md §10); the
+            // rest of the spec — policy, engine, driver — is identical.
+            let workload = match (cli.flag("stream").is_some(), cli.flag("trace")) {
+                (true, Some(p)) => Workload::Streamed {
+                    input: StreamInput::File(p.to_string()),
+                    chunk: cli.chunk_len()?,
+                },
+                (true, None) => Workload::Streamed {
+                    input: StreamInput::Generated { kind, n_requests },
+                    chunk: cli.chunk_len()?,
+                },
+                (false, Some(p)) => Workload::TraceFile(p.to_string()),
+                (false, None) => Workload::Generated { kind, n_requests },
             };
             let n_shards: usize = cli
                 .flag("shards")
@@ -299,6 +322,9 @@ fn main() -> anyhow::Result<()> {
             };
             println!("{}", stats::analyze(&trace).to_json().to_string_pretty());
         }
+        "serve" if cli.flag("listen").is_some() => {
+            serve_daemon_cmd(&cli, &cfg, engine)?;
+        }
         "serve" => {
             let n = cli
                 .flag("requests")
@@ -354,6 +380,9 @@ fn main() -> anyhow::Result<()> {
                 std::fs::write(&out, report.to_json().to_string_pretty())?;
                 println!("[wrote {out}]");
             }
+        }
+        "ingest" => {
+            ingest_cmd(&cli, &cfg, kind, n_requests)?;
         }
         "lint" => {
             let default_root = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
@@ -497,28 +526,102 @@ fn run_experiment(
     Ok(())
 }
 
-/// `akpc run --stream` — the bounded-memory replay path (DESIGN.md §10).
-/// The workload flows as a `TraceSource` end to end: generator or file
-/// chunks → policy windows (single-leader) or coordinator shards
-/// (`--shards`), with nothing materialized unless an offline policy
-/// forces the documented collect.
-///
-/// Deliberately NOT routed through `RunSpec`: its contract materializes
-/// the workload at `validate()` into a clonable/debuggable
-/// `PreparedRun`, which a pull-once streaming source cannot satisfy.
-/// The shared pieces are reused (`PolicyRegistry::resolve` for the
-/// enumerated-names error, `cell_config` for the one effective-config
-/// derivation, the same capability check); folding a streaming workload
-/// variant into `RunSpec` proper is a ROADMAP open item.
-fn run_stream_cmd(
+/// `akpc serve --listen <addr>` — the live ingest daemon (DESIGN.md
+/// §12). Config resolution: `--serve-config` file if given (also the
+/// file `POST /reload` re-reads), else defaults seeded from the global
+/// `--config`; explicit CLI flags override either.
+fn serve_daemon_cmd(cli: &Cli, cfg: &AkpcConfig, engine: EngineChoice) -> anyhow::Result<()> {
+    use akpc::serve::{ServeConfig, ServeDaemon, ServeOptions};
+
+    let mut scfg = match cli.flag("serve-config") {
+        Some(p) => ServeConfig::from_toml_file(p)?,
+        None => ServeConfig {
+            akpc: cfg.clone(),
+            ..Default::default()
+        },
+    };
+    if cli.flag("engine").is_some() {
+        scfg.engine = engine;
+    }
+    if let Some(p) = cli.flag("policy") {
+        scfg.policy = p.to_string();
+    }
+    if let Some(s) = cli.flag("shards") {
+        scfg.shards = s.parse()?;
+    }
+    if let Some(s) = cli.flag("slack") {
+        scfg.slack = s.parse()?;
+    }
+    if let Some(s) = cli.flag("chunk") {
+        scfg.chunk = s.parse()?;
+    }
+
+    let listen = cli
+        .flag("listen")
+        .ok_or_else(|| anyhow::anyhow!("serve daemon mode needs --listen <addr>"))?;
+    let daemon = ServeDaemon::start(
+        scfg,
+        ServeOptions {
+            listen: listen.to_string(),
+            http: cli.flag("http").map(str::to_string),
+            config_path: cli.flag("serve-config").map(str::to_string),
+        },
+    )?;
+    // Parseable ready lines (CI greps the ports out of these).
+    println!("akpc-serve: ingest on {}", daemon.ingest_addr());
+    if let Some(a) = daemon.http_addr() {
+        println!("akpc-serve: http on {a}");
+    }
+    println!("akpc-serve: ready (drain with SIGTERM or POST /drain)");
+    let report = daemon.join()?;
+    println!("{}", report.metrics.summary());
+    println!(
+        "akpc-serve: drained: epochs={} admitted={} rejected_late={} \
+         rejected_malformed={} forced_releases={} req/s={:.0} wall={:.1}s",
+        report.epochs,
+        report.admission.admitted,
+        report.admission.rejected_late,
+        report.admission.rejected_malformed,
+        report.admission.forced_releases,
+        report.requests_per_sec,
+        report.wall_secs
+    );
+    Ok(())
+}
+
+/// `akpc ingest --to <addr>` — stream a workload into a running daemon.
+/// Text frames by default (any `TraceSource`: file or generated);
+/// `--binary --trace <file.akpt>` pipes the file's bytes verbatim so the
+/// daemon exercises its binary wire path.
+fn ingest_cmd(
     cli: &Cli,
-    registry: &PolicyRegistry,
     cfg: &AkpcConfig,
-    engine: EngineChoice,
     kind: TraceKind,
     n_requests: usize,
 ) -> anyhow::Result<()> {
     use akpc::trace::stream::{BinaryStreamSource, CsvStreamSource, TraceSource};
+    use std::io::Write;
+
+    let to = cli
+        .flag("to")
+        .ok_or_else(|| anyhow::anyhow!("ingest needs --to <addr>"))?;
+    let mut stream = std::net::TcpStream::connect(to)
+        .map_err(|e| anyhow::anyhow!("connect {to}: {e}"))?;
+
+    if cli.flag("binary").is_some() {
+        let path = cli
+            .flag("trace")
+            .ok_or_else(|| anyhow::anyhow!("--binary needs --trace <file.akpt>"))?;
+        anyhow::ensure!(
+            !path.ends_with(".csv"),
+            "--binary pipes the AKPT binary layout; `{path}` is CSV"
+        );
+        let mut f = std::fs::File::open(path)?;
+        let n = std::io::copy(&mut f, &mut stream)?;
+        stream.shutdown(std::net::Shutdown::Write)?;
+        println!("ingest: piped {n} binary bytes from {path} to {to}");
+        return Ok(());
+    }
 
     let chunk = cli.chunk_len()?;
     let mut source: Box<dyn TraceSource> = match cli.flag("trace") {
@@ -526,52 +629,25 @@ fn run_stream_cmd(
         Some(p) => Box::new(BinaryStreamSource::open(p, chunk)?),
         None => Box::new(generated_source(kind, cfg, n_requests, chunk)?),
     };
-    let meta = source.meta().clone();
-    let cell = cell_config(cfg, meta.n_items, meta.n_servers);
-    cell.validate()?;
-    println!(
-        "streaming `{}`: {} requests, universe {} items × {} servers (chunk {chunk})",
-        meta.name,
-        meta.est_len
-            .map(|n| n.to_string())
-            .unwrap_or_else(|| "?".into()),
-        meta.n_items,
-        meta.n_servers
-    );
-
-    let entry = registry.resolve(cli.flag("policy").unwrap_or("akpc"))?;
-    let n_shards: usize = cli
-        .flag("shards")
-        .map(|s| s.parse())
-        .transpose()?
-        .unwrap_or(0);
-    if n_shards > 0 {
-        anyhow::ensure!(
-            entry.caps().supports_sharded,
-            "policy `{}` does not support the sharded driver",
-            entry.name()
-        );
-        let rep = akpc::sim::replay_sharded_stream(
-            &cell,
-            engine.to_engine(),
-            source.as_mut(),
-            n_shards,
-            cli.replay_mode(ReplayMode::Ordered)?,
-        )?;
-        println!("{}", rep.metrics.summary());
-        println!("{}", rep.row());
-    } else {
-        let mut policy = entry.build(&cell, engine);
-        let mut obs = cli.observers()?;
-        let rep = akpc::run::drive_trace(
-            policy.as_mut(),
-            source.as_mut(),
-            cell.batch_size,
-            &mut obs,
-        )?;
-        println!("{}", rep.row());
-        println!("{}", rep.to_json().to_string_pretty());
+    let mut out = std::io::BufWriter::new(&stream);
+    let mut buf = Vec::new();
+    let mut sent = 0u64;
+    while source.next_chunk(&mut buf)? {
+        for r in &buf {
+            // `{}` on f64 prints the shortest round-tripping decimal,
+            // so the daemon parses back the identical timestamp.
+            write!(out, "{} {}", r.time, r.server)?;
+            for it in &r.items {
+                write!(out, " {it}")?;
+            }
+            writeln!(out)?;
+        }
+        sent += buf.len() as u64;
     }
+    out.flush()?;
+    drop(out);
+    stream.shutdown(std::net::Shutdown::Write)?;
+    println!("ingest: sent {sent} text frames to {to}");
     Ok(())
 }
 

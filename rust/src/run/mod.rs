@@ -6,9 +6,12 @@
 //!   capability flags (`supports_sharded`, `needs_offline_trace`) and
 //!   `register()` for downstream extension;
 //! * [`spec`] — [`RunSpec`]: workload (generated | trace file | compiled
-//!   scenario | external CSV) × driver (single-leader |
+//!   scenario | external CSV | streamed source) × driver (single-leader |
 //!   sharded{n_shards, mode}) × policy-by-name × config overrides, with
 //!   `validate()` centralizing the effective-config derivation;
+//!   [`Workload::Streamed`] covers both `akpc run --stream` and the
+//!   serving daemon's live ingest ([`SourceHandle`] is the consume-once
+//!   wrapper around an opened stream);
 //! * [`outcome`] — [`RunOutcome`]: the one report type (total/transfer/
 //!   memory cost, per-phase deltas, per-shard ledgers, wall time) with
 //!   shared `row()`/`to_json()`;
@@ -52,7 +55,7 @@ pub use outcome::RunOutcome;
 pub use registry::{PolicyCaps, PolicyEntry, PolicyFactory, PolicyRegistry};
 pub use spec::{
     cell_config, generated_source, generated_trace, parse_dataset, Driver, PreparedRun, RunSpec,
-    Workload, WorkloadData,
+    SourceHandle, StreamInput, Workload, WorkloadData,
 };
 
 // The engine/policy selectors live with the sweep machinery; re-export

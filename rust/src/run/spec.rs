@@ -8,7 +8,7 @@
 //! overrides — sharded and single-leader runs of the same spec are
 //! guaranteed to see identical effective configs.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::config::AkpcConfig;
 use crate::scenario::{CompiledScenario, ScenarioSpec};
@@ -16,7 +16,10 @@ use crate::sim::ReplayMode;
 use crate::trace::generator::{self, GeneratorParams, TraceKind};
 use crate::trace::io as trace_io;
 use crate::trace::model::Trace;
-use crate::trace::stream::{GeneratorSource, MemorySource};
+use crate::trace::stream::{
+    BinaryStreamSource, CsvStreamSource, GeneratorSource, MemorySource, TraceMeta, TraceSource,
+    DEFAULT_CHUNK_LEN,
+};
 
 use super::drive;
 use super::observe::{NullObserver, Observer};
@@ -41,6 +44,80 @@ pub enum Workload {
     Inline(Arc<Trace>),
     /// A declarative scenario, compiled at `scale` during validation.
     Scenario { spec: ScenarioSpec, scale: f64 },
+    /// A lazily-pulled streaming workload: requests never materialize as
+    /// a full `Trace`; validation opens a [`TraceSource`] and the run
+    /// drains it chunk by chunk (bounded memory, DESIGN.md §10). This is
+    /// the spec-level home of `akpc run --stream` and of the serving
+    /// daemon's live ingest (DESIGN.md §12).
+    Streamed { input: StreamInput, chunk: usize },
+}
+
+/// Where a [`Workload::Streamed`] run pulls its requests from.
+#[derive(Debug, Clone)]
+pub enum StreamInput {
+    /// Chunk-by-chunk synthetic generation ([`generated_source`]).
+    Generated { kind: TraceKind, n_requests: usize },
+    /// A trace file streamed record by record (`.csv` via
+    /// [`CsvStreamSource`], anything else via [`BinaryStreamSource`]).
+    File(String),
+    /// A caller-supplied live source — e.g. the serving daemon's
+    /// [`ChannelSource`](crate::trace::stream::ChannelSource) over its
+    /// admission queue.
+    Source(SourceHandle),
+}
+
+/// A cloneable, consume-once handle around a boxed [`TraceSource`].
+///
+/// `RunSpec` and `Workload` are `Clone` so specs can be reused across
+/// policies; a live stream, however, can be drained only once. The
+/// handle squares that circle: clones share one interior slot, the
+/// stream [`TraceMeta`] stays inspectable forever, and the first run
+/// [`take`](Self::take)s the source while later runs fail with a clear
+/// error instead of silently replaying nothing.
+#[derive(Clone)]
+pub struct SourceHandle {
+    meta: TraceMeta,
+    inner: Arc<Mutex<Option<Box<dyn TraceSource + Send>>>>,
+}
+
+impl SourceHandle {
+    /// Wrap `source`, capturing its header for later inspection.
+    pub fn new(source: Box<dyn TraceSource + Send>) -> Self {
+        let meta = source.meta().clone();
+        Self {
+            meta,
+            inner: Arc::new(Mutex::new(Some(source))),
+        }
+    }
+
+    /// The stream header (outlives the consumed source).
+    pub fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    /// Take ownership of the source; errors once a previous run already
+    /// consumed it.
+    pub fn take(&self) -> anyhow::Result<Box<dyn TraceSource + Send>> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .take()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "stream source `{}` already consumed — a live stream \
+                     replays once; build a fresh source for another run",
+                    self.meta.name
+                )
+            })
+    }
+}
+
+impl std::fmt::Debug for SourceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SourceHandle")
+            .field("meta", &self.meta)
+            .finish_non_exhaustive()
+    }
 }
 
 /// How the run is executed.
@@ -185,6 +262,29 @@ impl RunSpec {
         self.workload(Workload::Scenario { spec, scale })
     }
 
+    /// Sugar: streaming workload with the default chunk length.
+    pub fn streamed(self, input: StreamInput) -> Self {
+        self.workload(Workload::Streamed {
+            input,
+            chunk: DEFAULT_CHUNK_LEN,
+        })
+    }
+
+    /// Sugar: chunked synthetic generation, never materialized.
+    pub fn stream_generated(self, kind: TraceKind, n_requests: usize) -> Self {
+        self.streamed(StreamInput::Generated { kind, n_requests })
+    }
+
+    /// Sugar: record-streamed trace file.
+    pub fn stream_file(self, path: impl Into<String>) -> Self {
+        self.streamed(StreamInput::File(path.into()))
+    }
+
+    /// Sugar: caller-supplied live source (consume-once).
+    pub fn stream_source(self, handle: SourceHandle) -> Self {
+        self.streamed(StreamInput::Source(handle))
+    }
+
     /// Select the driver (default: single-leader).
     pub fn driver(mut self, d: Driver) -> Self {
         self.driver = d;
@@ -294,12 +394,31 @@ impl RunSpec {
                 }
                 WorkloadData::Scenario(spec.compile(*scale)?)
             }
+            Workload::Streamed { input, chunk } => {
+                let chunk = (*chunk).max(1);
+                let handle = match input {
+                    StreamInput::Generated { kind, n_requests } => SourceHandle::new(
+                        Box::new(generated_source(*kind, &cfg, *n_requests, chunk)?),
+                    ),
+                    StreamInput::File(path) => {
+                        let src: Box<dyn TraceSource + Send> = if path.ends_with(".csv") {
+                            Box::new(CsvStreamSource::open(path, chunk)?)
+                        } else {
+                            Box::new(BinaryStreamSource::open(path, chunk)?)
+                        };
+                        SourceHandle::new(src)
+                    }
+                    StreamInput::Source(handle) => handle.clone(),
+                };
+                WorkloadData::Stream(handle)
+            }
         };
 
         // The one place n_items/n_servers derive from the workload.
         let cfg = match &data {
             WorkloadData::Trace(t) => cell_config(&cfg, t.n_items, t.n_servers),
             WorkloadData::Scenario(sc) => cell_config(&cfg, sc.n_items, sc.n_servers),
+            WorkloadData::Stream(h) => cell_config(&cfg, h.meta().n_items, h.meta().n_servers),
         };
         cfg.validate()?;
 
@@ -334,6 +453,10 @@ impl RunSpec {
 pub enum WorkloadData {
     Trace(Arc<Trace>),
     Scenario(CompiledScenario),
+    /// An opened streaming source. Consume-once: cloning the data clones
+    /// the [`SourceHandle`], not the stream — the first `run()` drains
+    /// it, later runs fail with the handle's "already consumed" error.
+    Stream(SourceHandle),
 }
 
 /// A validated, materialized run: effective config derived, policy
@@ -407,6 +530,16 @@ impl PreparedRun {
                 sc.n_items,
                 sc.n_servers
             ),
+            WorkloadData::Stream(h) => {
+                let m = h.meta();
+                let len = m
+                    .est_len
+                    .map_or_else(|| "unbounded".to_string(), |n| n.to_string());
+                format!(
+                    "stream `{}`: {} requests, universe {} items × {} servers",
+                    m.name, len, m.n_items, m.n_servers
+                )
+            }
         }
     }
 
@@ -454,6 +587,28 @@ impl PreparedRun {
                     obs,
                 )?;
                 RunOutcome::from_scenario_sharded(run, mode, metrics)
+            }
+            (Driver::SingleLeader, WorkloadData::Stream(h)) => {
+                let mut policy = entry.build(&self.cfg, self.engine);
+                let mut source = h.take()?;
+                let rep = drive::drive_trace(
+                    policy.as_mut(),
+                    source.as_mut(),
+                    self.cfg.batch_size,
+                    obs,
+                )?;
+                RunOutcome::from_sim(rep)
+            }
+            (Driver::Sharded { n_shards, mode }, WorkloadData::Stream(h)) => {
+                let mut source = h.take()?;
+                let rep = crate::sim::replay_sharded_stream(
+                    &self.cfg,
+                    self.engine.to_engine(),
+                    source.as_mut(),
+                    n_shards,
+                    mode,
+                )?;
+                RunOutcome::from_sharded(rep, h.meta().name.clone())
             }
         };
         obs.on_done(&outcome);
@@ -539,6 +694,53 @@ mod tests {
         };
         assert_ne!(ta.requests, tb.requests);
         assert_eq!(a.effective_config().seed, 1);
+    }
+
+    #[test]
+    fn streamed_generated_matches_materialized_run() {
+        let reg = PolicyRegistry::builtin();
+        let base = RunSpec::new().config(small_cfg()).policy("no-packing");
+        let mat = base
+            .clone()
+            .generated(TraceKind::Netflix, 500)
+            .execute(&reg)
+            .unwrap();
+        let streamed = base
+            .stream_generated(TraceKind::Netflix, 500)
+            .execute(&reg)
+            .unwrap();
+        assert_eq!(streamed.ledger.requests, 500);
+        let rel = (streamed.total() - mat.total()).abs() / mat.total().max(1e-12);
+        assert!(rel < 1e-9, "streamed {} vs {}", streamed.total(), mat.total());
+    }
+
+    #[test]
+    fn streamed_sharded_runs_and_reports_shards() {
+        let reg = PolicyRegistry::builtin();
+        let out = RunSpec::new()
+            .config(small_cfg())
+            .stream_generated(TraceKind::Netflix, 400)
+            .sharded(2, ReplayMode::Ordered)
+            .execute(&reg)
+            .unwrap();
+        assert_eq!(out.n_shards, 2);
+        assert_eq!(out.ledger.requests, 400);
+    }
+
+    #[test]
+    fn stream_source_is_consume_once() {
+        let reg = PolicyRegistry::builtin();
+        let cfg = small_cfg();
+        let src = generated_source(TraceKind::Netflix, &cfg, 200, 64).unwrap();
+        let handle = SourceHandle::new(Box::new(src));
+        assert_eq!(handle.meta().est_len, Some(200));
+        let spec = RunSpec::new()
+            .config(cfg)
+            .stream_source(handle)
+            .policy("no-packing");
+        spec.execute(&reg).unwrap();
+        let err = spec.execute(&reg).unwrap_err().to_string();
+        assert!(err.contains("already consumed"), "{err}");
     }
 
     #[test]

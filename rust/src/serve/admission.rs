@@ -1,0 +1,402 @@
+//! The admission layer (DESIGN.md §12.2): validation plus a bounded
+//! timestamp-reorder buffer between the socket handlers and the replay
+//! thread.
+//!
+//! The downstream contract is strict — every
+//! [`TraceSource`](crate::trace::stream::TraceSource) chunk must be
+//! time-ordered within and across chunks — but live arrivals from many
+//! connections interleave with bounded skew. Admission squares the two
+//! with a *slack window*: a min-heap holds arrivals until the watermark
+//! `w` (the largest admitted timestamp) has moved `slack` past them;
+//! anything older than `w - slack` on arrival (or older than the floor
+//! already released downstream) is deterministically rejected as late.
+//! Releases therefore leave the heap in nondecreasing time order, which
+//! is exactly what [`ChannelSource`](crate::trace::stream::ChannelSource)
+//! re-validates on the consumer side.
+//!
+//! Boundedness (akpc-lint L4 spirit): the heap is capped at
+//! `reorder_capacity` (overflow force-releases the oldest entries —
+//! counted, never dropped), released requests ship in `chunk_len`
+//! batches over the bounded channel behind `ChannelSource`, and a full
+//! channel blocks the offering connection — backpressure, not buffering.
+//!
+//! Locking: one mutex serializes offers from all connections; the
+//! channel send happens **under** it, because two racing offers must not
+//! reorder their released chunks. A slow replay thread therefore stalls
+//! ingest (and momentarily the stats scrape) — the intended behavior for
+//! an ingest server at capacity.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{mpsc, Mutex, PoisonError};
+
+use crate::trace::model::Request;
+use crate::trace::stream::{ChannelSource, TraceMeta};
+
+use super::framing::validate_frame;
+
+/// What [`Admission::offer`] decided about one frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Accepted into the reorder buffer.
+    Admitted,
+    /// Timestamp regressed beyond the slack window (or behind the
+    /// already-released floor).
+    RejectedLate,
+    /// Failed validation (universe bounds, size cap, non-finite time).
+    RejectedMalformed,
+}
+
+/// Monotone counters exported at `/metrics` and in the final report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Frames accepted into the reorder buffer.
+    pub admitted: u64,
+    /// Frames rejected for regressing beyond the slack window.
+    pub rejected_late: u64,
+    /// Frames rejected by validation (parse errors included).
+    pub rejected_malformed: u64,
+    /// Entries released early because the reorder buffer hit capacity.
+    pub forced_releases: u64,
+}
+
+/// Min-heap entry ordered by `(time, seq)`. `total_cmp` keeps the order
+/// total (L1: no partial_cmp-unwrap on floats); the admission sequence
+/// number breaks ties so equal-time arrivals release in arrival order.
+struct HeapEntry {
+    seq: u64,
+    req: Request,
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.req
+            .time
+            .total_cmp(&other.req.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+struct Inner {
+    slack: f64,
+    chunk_len: usize,
+    max_items: usize,
+    capacity: usize,
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    /// Released, not yet shipped (always time-ordered).
+    pending: Vec<Request>,
+    /// Largest admitted timestamp.
+    watermark: f64,
+    /// Largest timestamp released downstream; arrivals below it would
+    /// break the stream contract and are rejected as late.
+    floor: f64,
+    seq: u64,
+    stats: AdmissionStats,
+    /// `None` after [`Admission::finish`]: the stream is closed.
+    tx: Option<mpsc::SyncSender<Vec<Request>>>,
+}
+
+/// The shared admission front door. One instance per daemon, shared by
+/// every connection handler; the paired [`ChannelSource`] is the replay
+/// thread's [`TraceSource`](crate::trace::stream::TraceSource).
+pub struct Admission {
+    meta: TraceMeta,
+    inner: Mutex<Inner>,
+}
+
+impl Admission {
+    /// Build the admission layer and its paired consumer source.
+    /// `queue_depth` chunks may be in flight before offers block.
+    pub fn new(
+        meta: TraceMeta,
+        slack: f64,
+        capacity: usize,
+        chunk_len: usize,
+        queue_depth: usize,
+    ) -> (Self, ChannelSource) {
+        let (tx, source) = ChannelSource::bounded(meta.clone(), queue_depth);
+        let admission = Self {
+            meta,
+            inner: Mutex::new(Inner {
+                slack: slack.max(0.0),
+                chunk_len: chunk_len.max(1),
+                max_items: usize::MAX,
+                capacity: capacity.max(1),
+                heap: BinaryHeap::new(),
+                pending: Vec::new(),
+                watermark: f64::NEG_INFINITY,
+                floor: f64::NEG_INFINITY,
+                seq: 0,
+                stats: AdmissionStats::default(),
+                tx: Some(tx),
+            }),
+        };
+        (admission, source)
+    }
+
+    /// Cap the per-request item count (frames above it are malformed).
+    pub fn set_max_items(&self, max_items: usize) {
+        self.lock().max_items = max_items.max(1);
+    }
+
+    /// The universe the daemon validates frames against.
+    pub fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Offer one validated-or-not frame. `Ok(verdict)` for the normal
+    /// admit/reject outcomes; `Err` only when the daemon is draining
+    /// (stream closed) or the replay side is gone — the connection
+    /// handler should hang up.
+    pub fn offer(&self, req: Request) -> anyhow::Result<Verdict> {
+        let mut g = self.lock();
+        anyhow::ensure!(g.tx.is_some(), "admission closed (daemon draining)");
+        if validate_frame(&req, &self.meta, g.max_items).is_err() {
+            g.stats.rejected_malformed += 1;
+            return Ok(Verdict::RejectedMalformed);
+        }
+        let t = req.time;
+        if t < g.floor || t < g.watermark - g.slack {
+            g.stats.rejected_late += 1;
+            return Ok(Verdict::RejectedLate);
+        }
+        if t > g.watermark {
+            g.watermark = t;
+        }
+        g.seq += 1;
+        let seq = g.seq;
+        g.heap.push(Reverse(HeapEntry { seq, req }));
+        g.stats.admitted += 1;
+
+        // Overflow: force-release the oldest entries. They pop in time
+        // order, so the stream stays sorted — the cost is only that a
+        // straggler older than them now counts as late.
+        while g.heap.len() > g.capacity {
+            if let Some(Reverse(e)) = g.heap.pop() {
+                g.floor = g.floor.max(e.req.time);
+                g.pending.push(e.req);
+                g.stats.forced_releases += 1;
+            }
+        }
+        Self::release_ready(&mut g);
+        Self::ship(&mut g, false)?;
+        Ok(Verdict::Admitted)
+    }
+
+    /// Count a frame that failed before reaching [`offer`](Self::offer)
+    /// (text parse errors at the framing layer).
+    pub fn note_malformed(&self) {
+        self.lock().stats.rejected_malformed += 1;
+    }
+
+    /// Snapshot of the admission counters.
+    pub fn stats(&self) -> AdmissionStats {
+        self.lock().stats
+    }
+
+    /// Entries currently held in the reorder buffer (tests, status).
+    pub fn buffered(&self) -> usize {
+        let g = self.lock();
+        g.heap.len() + g.pending.len()
+    }
+
+    /// Update the slack window (hot-reload). Shrinking it releases the
+    /// newly eligible entries immediately.
+    pub fn set_slack(&self, slack: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            slack.is_finite() && slack >= 0.0,
+            "admission slack must be finite and >= 0, got {slack}"
+        );
+        let mut g = self.lock();
+        g.slack = slack;
+        Self::release_ready(&mut g);
+        Self::ship(&mut g, false)
+    }
+
+    /// Update the shipping chunk length (hot-reload).
+    pub fn set_chunk_len(&self, chunk_len: usize) {
+        self.lock().chunk_len = chunk_len.max(1);
+    }
+
+    /// Release everything buffered and ship it, keeping the stream open
+    /// (idle flush).
+    pub fn flush(&self) -> anyhow::Result<()> {
+        let mut g = self.lock();
+        Self::drain_heap(&mut g);
+        Self::ship(&mut g, true)
+    }
+
+    /// Final flush + close: ships every buffered request and drops the
+    /// sender so the paired [`ChannelSource`] ends its stream. Offers
+    /// after this fail. Idempotent.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let mut g = self.lock();
+        Self::drain_heap(&mut g);
+        let res = Self::ship(&mut g, true);
+        g.tx = None;
+        res
+    }
+
+    /// Pop every heap entry whose release the watermark justifies.
+    fn release_ready(g: &mut Inner) {
+        let cutoff = g.watermark - g.slack;
+        while let Some(Reverse(e)) = g.heap.peek() {
+            if e.req.time > cutoff {
+                break;
+            }
+            if let Some(Reverse(e)) = g.heap.pop() {
+                g.floor = g.floor.max(e.req.time);
+                g.pending.push(e.req);
+            }
+        }
+    }
+
+    /// Pop everything regardless of slack (drain path).
+    fn drain_heap(g: &mut Inner) {
+        while let Some(Reverse(e)) = g.heap.pop() {
+            g.floor = g.floor.max(e.req.time);
+            g.pending.push(e.req);
+        }
+    }
+
+    /// Ship pending requests downstream in `chunk_len` batches; with
+    /// `all`, ship the trailing partial batch too.
+    fn ship(g: &mut Inner, all: bool) -> anyhow::Result<()> {
+        while g.pending.len() >= g.chunk_len || (all && !g.pending.is_empty()) {
+            let take = g.chunk_len.min(g.pending.len());
+            let rest = g.pending.split_off(take);
+            let chunk = std::mem::replace(&mut g.pending, rest);
+            let Some(tx) = &g.tx else {
+                anyhow::bail!("admission closed (daemon draining)");
+            };
+            tx.send(chunk)
+                .map_err(|_| anyhow::anyhow!("live replay stopped; closing ingest"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stream::TraceSource;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            n_items: 100,
+            n_servers: 8,
+            est_len: None,
+            name: "live".into(),
+        }
+    }
+
+    fn req(t: f64, server: u32, item: u32) -> Request {
+        Request::new(vec![item], server, t)
+    }
+
+    #[test]
+    fn in_slack_reorder_is_repaired() {
+        let (adm, mut src) = Admission::new(meta(), 1.0, 1024, 4, 16);
+        // 0.9 arrives after 1.0 but within slack 1.0 — admitted and
+        // re-sorted ahead of 1.0 on release.
+        for (t, it) in [(1.0, 1), (0.9, 2), (2.5, 3), (2.6, 4)] {
+            assert_eq!(adm.offer(req(t, 0, it)).unwrap(), Verdict::Admitted);
+        }
+        adm.finish().unwrap();
+        let out = src.collect().unwrap();
+        let times: Vec<f64> = out.requests.iter().map(|r| r.time).collect();
+        assert_eq!(times, vec![0.9, 1.0, 2.5, 2.6]);
+        assert_eq!(adm.stats().admitted, 4);
+        assert_eq!(adm.stats().rejected_late, 0);
+    }
+
+    #[test]
+    fn regression_beyond_slack_rejected() {
+        let (adm, mut src) = Admission::new(meta(), 0.5, 1024, 4, 16);
+        assert_eq!(adm.offer(req(5.0, 0, 1)).unwrap(), Verdict::Admitted);
+        // 4.2 < 5.0 - 0.5: deterministic rejection.
+        assert_eq!(adm.offer(req(4.2, 0, 2)).unwrap(), Verdict::RejectedLate);
+        // 4.6 is within slack.
+        assert_eq!(adm.offer(req(4.6, 0, 3)).unwrap(), Verdict::Admitted);
+        adm.finish().unwrap();
+        assert_eq!(src.collect().unwrap().len(), 2);
+        let s = adm.stats();
+        assert_eq!((s.admitted, s.rejected_late), (2, 1));
+    }
+
+    #[test]
+    fn malformed_frames_counted_not_shipped() {
+        let (adm, mut src) = Admission::new(meta(), 1.0, 1024, 4, 16);
+        adm.set_max_items(3);
+        assert_eq!(
+            adm.offer(req(0.0, 99, 1)).unwrap(), // server out of range
+            Verdict::RejectedMalformed
+        );
+        assert_eq!(
+            adm.offer(Request::new((0..5).collect(), 0, 0.0)).unwrap(),
+            Verdict::RejectedMalformed
+        );
+        adm.note_malformed();
+        adm.finish().unwrap();
+        assert_eq!(src.collect().unwrap().len(), 0);
+        assert_eq!(adm.stats().rejected_malformed, 3);
+    }
+
+    #[test]
+    fn capacity_overflow_force_releases_in_order() {
+        let (adm, mut src) = Admission::new(meta(), 1e9, 4, 2, 16);
+        // Slack is huge, so nothing releases voluntarily; capacity 4
+        // forces the oldest out once a fifth arrives.
+        for i in 0..6u32 {
+            adm.offer(req(f64::from(i), 0, i)).unwrap();
+        }
+        assert!(adm.stats().forced_releases >= 2);
+        adm.finish().unwrap();
+        let out = src.collect().unwrap();
+        assert_eq!(out.len(), 6, "forced releases are not drops");
+        assert!(out.requests.windows(2).all(|w| w[0].time <= w[1].time));
+    }
+
+    #[test]
+    fn shrinking_slack_releases_immediately() {
+        let (adm, mut src) = Admission::new(meta(), 100.0, 1024, 1, 16);
+        adm.offer(req(1.0, 0, 1)).unwrap();
+        adm.offer(req(5.0, 0, 2)).unwrap();
+        assert_eq!(adm.buffered(), 2);
+        adm.set_slack(1.0).unwrap();
+        assert_eq!(adm.buffered(), 1, "1.0 <= 5.0 - 1.0 released");
+        assert!(adm.set_slack(-1.0).is_err());
+        assert!(adm.set_slack(f64::NAN).is_err());
+        adm.finish().unwrap();
+        assert_eq!(src.collect().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn offers_after_finish_fail() {
+        let (adm, src) = Admission::new(meta(), 1.0, 1024, 4, 16);
+        adm.finish().unwrap();
+        let err = adm.offer(req(0.0, 0, 1)).unwrap_err().to_string();
+        assert!(err.contains("draining"), "{err}");
+        drop(src);
+        // Idempotent.
+        adm.finish().unwrap();
+    }
+}

@@ -1,0 +1,231 @@
+//! Daemon configuration (DESIGN.md §12.3): a small TOML file with the
+//! serving knobs at the root and the full cost-model block in an
+//! `[akpc]` table, parsed by the same `toml_lite` reader as `akpc
+//! sweep` configs.
+//!
+//! ```toml
+//! policy = "akpc"
+//! engine = "native"
+//! shards = 4
+//! slack = 1.0            # admission reorder window (time units)
+//! reorder_capacity = 65536
+//! chunk = 8192           # replay chunk length
+//! max_items = 64         # per-request item cap
+//! queue_depth = 64       # admission -> replay chunks in flight
+//!
+//! [akpc]
+//! n_servers = 600
+//! n_items = 60
+//! ```
+//!
+//! Validation is delegated, not duplicated: [`ServeConfig::validate`]
+//! builds a one-request probe [`RunSpec`](crate::run::RunSpec) with the
+//! configured policy/engine/shards/cost-model and runs it through
+//! `RunSpec::validate()`, so the daemon accepts exactly the specs the
+//! offline runner would — hot-reload (`reload.rs`) re-runs the same
+//! check before swapping anything in.
+
+use crate::bench::sweep::EngineChoice;
+use crate::config::{toml_lite, AkpcConfig};
+use crate::run::{PolicyRegistry, RunSpec};
+use crate::sim::ReplayMode;
+use crate::trace::model::{Request, Trace};
+use crate::trace::stream::DEFAULT_CHUNK_LEN;
+
+/// Everything `akpc serve` needs to run: serving knobs + cost model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Policy name resolved against the registry (default `"akpc"`).
+    pub policy: String,
+    /// CRM engine backing the coordinator shards.
+    pub engine: EngineChoice,
+    /// Shard-actor count for the live coordinator.
+    pub shards: usize,
+    /// Admission slack window in trace-time units (see §12.2).
+    pub slack: f64,
+    /// Reorder-buffer capacity before force-release kicks in.
+    pub reorder_capacity: usize,
+    /// Chunk length shipped from admission to the replay thread.
+    pub chunk: usize,
+    /// Per-request item-count cap enforced at admission.
+    pub max_items: usize,
+    /// Bounded admission→replay channel depth, in chunks.
+    pub queue_depth: usize,
+    /// The cost-model / universe block (the `[akpc]` table).
+    pub akpc: AkpcConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            policy: "akpc".into(),
+            engine: EngineChoice::Native,
+            shards: 1,
+            slack: 1.0,
+            reorder_capacity: 65_536,
+            chunk: DEFAULT_CHUNK_LEN,
+            max_items: 64,
+            queue_depth: 64,
+            akpc: AkpcConfig::default(),
+        }
+    }
+}
+
+fn num_field(key: &str, v: &toml_lite::Value) -> anyhow::Result<usize> {
+    let n = v
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("serve config: `{key}` must be a number"))?;
+    anyhow::ensure!(
+        n.is_finite() && n >= 0.0 && n.fract() == 0.0,
+        "serve config: `{key}` must be a non-negative integer, got {n}"
+    );
+    Ok(n as usize)
+}
+
+impl ServeConfig {
+    /// Parse from TOML text. Unknown keys are errors in both the root
+    /// block and the `[akpc]` table — a typo'd knob must not silently
+    /// run with its default.
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
+        let doc = toml_lite::parse_doc(text)?;
+        let mut cfg = Self::default();
+        for (key, v) in &doc.root {
+            match key.as_str() {
+                "policy" => {
+                    cfg.policy = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("serve config: `policy` must be a string"))?
+                        .to_string();
+                }
+                "engine" => {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("serve config: `engine` must be a string"))?;
+                    cfg.engine = match name {
+                        "native" => EngineChoice::Native,
+                        "xla" => EngineChoice::Xla,
+                        other => anyhow::bail!("serve config: unknown engine `{other}`"),
+                    };
+                }
+                "shards" => cfg.shards = num_field(key, v)?,
+                "reorder_capacity" => cfg.reorder_capacity = num_field(key, v)?,
+                "chunk" => cfg.chunk = num_field(key, v)?,
+                "max_items" => cfg.max_items = num_field(key, v)?,
+                "queue_depth" => cfg.queue_depth = num_field(key, v)?,
+                "slack" => {
+                    cfg.slack = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("serve config: `slack` must be a number"))?;
+                }
+                other => anyhow::bail!("serve config: unknown key `{other}`"),
+            }
+        }
+        for (name, table) in &doc.tables {
+            match name.as_str() {
+                "akpc" => cfg.akpc.apply_toml_map(table)?,
+                other => anyhow::bail!("serve config: unknown table `[{other}]`"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from a TOML file on disk.
+    pub fn from_toml_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read serve config {path}: {e}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Validate the serving knobs, then prove the policy/engine/shard
+    /// combination viable by validating a one-request probe `RunSpec`
+    /// against `registry` — the single source of truth for what the
+    /// runner accepts.
+    pub fn validate(&self, registry: &PolicyRegistry) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.slack.is_finite() && self.slack >= 0.0,
+            "serve config: slack must be finite and >= 0, got {}",
+            self.slack
+        );
+        for (key, v) in [
+            ("shards", self.shards),
+            ("reorder_capacity", self.reorder_capacity),
+            ("chunk", self.chunk),
+            ("max_items", self.max_items),
+            ("queue_depth", self.queue_depth),
+        ] {
+            anyhow::ensure!(v >= 1, "serve config: `{key}` must be >= 1");
+        }
+        let probe = Trace {
+            requests: vec![Request::new(vec![0], 0, 0.0)],
+            n_items: self.akpc.n_items,
+            n_servers: self.akpc.n_servers,
+            name: "serve-validate-probe".into(),
+        };
+        RunSpec::new()
+            .config(self.akpc.clone())
+            .inline_trace(probe)
+            .policy(&self.policy)
+            .engine(self.engine)
+            .sharded(self.shards, ReplayMode::Ordered)
+            .validate(registry)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config_with_akpc_table() {
+        let cfg = ServeConfig::from_toml_str(
+            "policy = \"no-packing\"\nengine = \"xla\"\nshards = 4\n\
+             slack = 2.5\nreorder_capacity = 128\nchunk = 16\n\
+             max_items = 8\nqueue_depth = 3\n\n[akpc]\nn_servers = 40\nn_items = 20\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.policy, "no-packing");
+        assert_eq!(cfg.engine, EngineChoice::Xla);
+        assert_eq!((cfg.shards, cfg.chunk, cfg.queue_depth), (4, 16, 3));
+        assert_eq!(cfg.slack, 2.5);
+        assert_eq!(cfg.akpc.n_servers, 40);
+        assert_eq!(cfg.akpc.n_items, 20);
+    }
+
+    #[test]
+    fn defaults_survive_empty_input() {
+        let cfg = ServeConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg, ServeConfig::default());
+        cfg.validate(&PolicyRegistry::builtin()).unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_tables() {
+        assert!(ServeConfig::from_toml_str("slacc = 1.0\n").is_err());
+        assert!(ServeConfig::from_toml_str("[akcp]\nn_servers = 4\n").is_err());
+        assert!(ServeConfig::from_toml_str("[akpc]\nn_srvrs = 4\n").is_err());
+        assert!(ServeConfig::from_toml_str("engine = \"cuda\"\n").is_err());
+        assert!(ServeConfig::from_toml_str("shards = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let reg = PolicyRegistry::builtin();
+        let mut cfg = ServeConfig::default();
+        cfg.slack = f64::NAN;
+        assert!(cfg.validate(&reg).is_err());
+
+        let mut cfg = ServeConfig::default();
+        cfg.shards = 0;
+        assert!(cfg.validate(&reg).is_err());
+
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "no-such-policy".into();
+        assert!(cfg.validate(&reg).is_err());
+
+        // An invalid cost model must be caught by the RunSpec probe.
+        let mut cfg = ServeConfig::default();
+        cfg.akpc.mu = -1.0;
+        assert!(cfg.validate(&reg).is_err());
+    }
+}

@@ -1,0 +1,480 @@
+//! Daemon lifecycle (DESIGN.md §12): wiring, the control loop, and the
+//! graceful-drain sequence.
+//!
+//! Thread roster (all spawned by [`ServeDaemon::start`], all joined by
+//! drain):
+//!
+//! * `akpc-serve-accept` — ingest acceptor ([`super::listener`]).
+//! * `akpc-serve-conn` (×N) — per-connection frame pumps.
+//! * `akpc-serve-replay` — drains the admission [`ChannelSource`] and
+//!   issues the per-request `serve` loop against the coordinator, the
+//!   exact loop `replay_sharded_stream` runs offline. It locks the
+//!   client mutex **per chunk**, so hot-reload's epoch swap (which
+//!   holds the same mutex) lands only at chunk boundaries.
+//! * `akpc-serve-http` — the status endpoint ([`super::http`]).
+//! * `akpc-serve-control` — owns the drain sequence; everything else
+//!   reaches it through one bounded [`ControlMsg`] channel.
+//!
+//! Drain ordering (SIGTERM or `POST /drain`), each step a happens-before
+//! edge: stop accepting → close + join connections (their final offers
+//! complete because the replay thread is still consuming) → close the
+//! admission stream (flushing the reorder buffer) → join replay (every
+//! admitted request now served) → coordinator `shutdown()` (quiesce
+//! barrier sweeps retention rent to the global max time) → final
+//! merged-epoch snapshot. The trailing partial clique-generation window
+//! is deliberately **not** flushed: offline sharded replay never
+//! dispatches it either, and the live-vs-replay ledger equivalence
+//! (`tests/serve.rs`) depends on both sides agreeing.
+//!
+//! [`ChannelSource`]: crate::trace::stream::ChannelSource
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, CoordinatorClient, MetricsSnapshot, ServeRequest, TickMode};
+use crate::run::PolicyRegistry;
+use crate::trace::stream::{TraceMeta, TraceSource};
+
+use super::admission::{Admission, AdmissionStats};
+use super::config::ServeConfig;
+use super::listener::ConnRegistry;
+use super::reload::{apply_reload, merge_epochs};
+
+/// Requests the HTTP endpoint (and tests) send to the control loop.
+pub(crate) enum ControlMsg {
+    /// Render the live Prometheus text and reply on the channel.
+    Scrape(mpsc::SyncSender<String>),
+    /// Begin the graceful-drain sequence.
+    Drain,
+    /// Re-read the config file; reply `Ok(summary)` or `Err(reason)`.
+    Reload(mpsc::SyncSender<Result<String, String>>),
+}
+
+/// Shared daemon state: the admission layer plus the current
+/// coordinator epoch. `client` is the replay thread's handle — swapping
+/// it (hot-reload) requires its mutex, which replay holds per chunk.
+pub(crate) struct DaemonState {
+    cfg: Mutex<ServeConfig>,
+    pub(crate) admission: Arc<Admission>,
+    pub(crate) client: Mutex<CoordinatorClient>,
+    pub(crate) coordinator: Mutex<Option<Coordinator>>,
+    /// Final snapshots of coordinator epochs retired by hot-reload.
+    pub(crate) prior: Mutex<Vec<MetricsSnapshot>>,
+    config_path: Option<String>,
+}
+
+impl DaemonState {
+    pub(crate) fn config(&self) -> ServeConfig {
+        self.cfg
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+
+    pub(crate) fn set_config(&self, cfg: ServeConfig) {
+        *self.cfg.lock().unwrap_or_else(PoisonError::into_inner) = cfg;
+    }
+
+    /// Render the merged-epoch Prometheus text plus the admission and
+    /// daemon-level families.
+    fn render_metrics(&self) -> anyhow::Result<String> {
+        // Clone the client out of the lock so a slow scrape never
+        // stalls the replay thread.
+        let client = self
+            .client
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone();
+        let live = client.metrics()?;
+        let prior = self.prior.lock().unwrap_or_else(PoisonError::into_inner);
+        let merged = merge_epochs(&prior, live);
+        let epochs = prior.len() + 1;
+        drop(prior);
+        let mut out = merged.to_prometheus();
+        let s = self.admission.stats();
+        for (name, help, v) in [
+            (
+                "akpc_admission_admitted_total",
+                "Frames admitted into the reorder buffer",
+                s.admitted,
+            ),
+            (
+                "akpc_admission_rejected_late_total",
+                "Frames rejected for regressing beyond the slack window",
+                s.rejected_late,
+            ),
+            (
+                "akpc_admission_rejected_malformed_total",
+                "Frames rejected by validation or parsing",
+                s.rejected_malformed,
+            ),
+            (
+                "akpc_admission_forced_releases_total",
+                "Reorder-buffer entries force-released at capacity",
+                s.forced_releases,
+            ),
+        ] {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "# HELP akpc_serve_epochs Coordinator epochs (1 + completed hot-reload swaps)\n\
+             # TYPE akpc_serve_epochs gauge\nakpc_serve_epochs {epochs}\n"
+        ));
+        Ok(out)
+    }
+}
+
+/// Listener/endpoint addresses and the optional reloadable config file.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Ingest listen address, e.g. `127.0.0.1:4780` (`:0` = ephemeral).
+    pub listen: String,
+    /// Status-endpoint listen address; `None` disables HTTP.
+    pub http: Option<String>,
+    /// TOML config path re-read on `POST /reload` / `reload()`.
+    pub config_path: Option<String>,
+}
+
+/// What a drained daemon hands back.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Final metrics, merged across all coordinator epochs.
+    pub metrics: MetricsSnapshot,
+    /// Coordinator epochs run (1 + hot-reload restarts).
+    pub epochs: usize,
+    /// Final admission counters.
+    pub admission: AdmissionStats,
+    /// Wall-clock seconds from start to drain completion.
+    pub wall_secs: f64,
+    /// Served requests per wall-clock second.
+    pub requests_per_sec: f64,
+}
+
+/// A running `akpc serve` daemon. Dropping it drains gracefully.
+pub struct ServeDaemon {
+    state: Arc<DaemonState>,
+    ctl_tx: mpsc::SyncSender<ControlMsg>,
+    ingest_addr: SocketAddr,
+    http_addr: Option<SocketAddr>,
+    control_join: Option<JoinHandle<anyhow::Result<ServeReport>>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Bounded control-channel depth: drains, scrapes, and reloads are rare
+/// and each sender blocks on its reply anyway.
+const CONTROL_QUEUE_DEPTH: usize = 8;
+
+impl ServeDaemon {
+    /// Validate `cfg`, bind the listeners, start the coordinator and
+    /// all daemon threads. Returns once the daemon is accepting.
+    pub fn start(cfg: ServeConfig, opts: ServeOptions) -> anyhow::Result<Self> {
+        cfg.validate(&PolicyRegistry::builtin())?;
+
+        let ingest = TcpListener::bind(&opts.listen)
+            .map_err(|e| anyhow::anyhow!("bind ingest {}: {e}", opts.listen))?;
+        let ingest_addr = ingest.local_addr()?;
+        let http_listener = match &opts.http {
+            Some(addr) => {
+                let l = TcpListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("bind http {addr}: {e}"))?;
+                Some(l)
+            }
+            None => None,
+        };
+        let http_addr = match &http_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+
+        let meta = TraceMeta {
+            n_items: cfg.akpc.n_items,
+            n_servers: cfg.akpc.n_servers,
+            est_len: None,
+            name: "live-ingest".into(),
+        };
+        let (admission, source) = Admission::new(
+            meta,
+            cfg.slack,
+            cfg.reorder_capacity,
+            cfg.chunk,
+            cfg.queue_depth,
+        );
+        admission.set_max_items(cfg.max_items);
+        let admission = Arc::new(admission);
+
+        let coordinator = Coordinator::start_with(
+            cfg.akpc.clone(),
+            cfg.engine.to_engine(),
+            cfg.shards,
+            TickMode::Sync,
+        )?;
+        let state = Arc::new(DaemonState {
+            client: Mutex::new(coordinator.client()),
+            coordinator: Mutex::new(Some(coordinator)),
+            prior: Mutex::new(Vec::new()),
+            admission: Arc::clone(&admission),
+            cfg: Mutex::new(cfg),
+            config_path: opts.config_path.clone(),
+        });
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(ConnRegistry::default());
+        let accept_join = super::listener::spawn_ingest(
+            ingest,
+            Arc::clone(&admission),
+            Arc::clone(&conns),
+            Arc::clone(&stop),
+        )?;
+        let (ctl_tx, ctl_rx) = mpsc::sync_channel(CONTROL_QUEUE_DEPTH);
+        let http_join = match http_listener {
+            Some(l) => Some(super::http::spawn_http(l, ctl_tx.clone(), Arc::clone(&stop))?),
+            None => None,
+        };
+
+        sig::install_sigterm_hook();
+
+        let replay_state = Arc::clone(&state);
+        let replay_join = std::thread::Builder::new()
+            .name("akpc-serve-replay".into())
+            .spawn(move || -> anyhow::Result<()> {
+                let mut source = source;
+                let mut buf = Vec::new();
+                while source.next_chunk(&mut buf)? {
+                    let client = replay_state
+                        .client
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner);
+                    for r in buf.drain(..) {
+                        client.serve(ServeRequest {
+                            items: r.items,
+                            server: r.server,
+                            time: Some(r.time),
+                        })?;
+                    }
+                }
+                Ok(())
+            })?;
+
+        let ctl_state = Arc::clone(&state);
+        let ctl_stop = Arc::clone(&stop);
+        let started = Instant::now();
+        let control_join = std::thread::Builder::new()
+            .name("akpc-serve-control".into())
+            .spawn(move || -> anyhow::Result<ServeReport> {
+                // Built here, not passed in: the registry's boxed
+                // factories are not Send.
+                let registry = PolicyRegistry::builtin();
+                loop {
+                    if sig::take_sigterm() {
+                        break;
+                    }
+                    match ctl_rx.recv_timeout(Duration::from_millis(200)) {
+                        Ok(ControlMsg::Drain) => break,
+                        Ok(ControlMsg::Scrape(tx)) => {
+                            let body = ctl_state
+                                .render_metrics()
+                                .unwrap_or_else(|e| format!("# scrape failed: {e}\n"));
+                            let _ = tx.send(body);
+                        }
+                        Ok(ControlMsg::Reload(tx)) => {
+                            let outcome = match &ctl_state.config_path {
+                                None => Err("no --serve-config file to reload".to_string()),
+                                Some(path) => apply_reload(&ctl_state, &registry, path)
+                                    .map(|o| o.summary)
+                                    .map_err(|e| format!("{e:#}")),
+                            };
+                            let _ = tx.send(outcome);
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        // Every control sender gone: drain rather than
+                        // spin forever with no way to be told to stop.
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+
+                // ---- drain sequence (see module docs for ordering) ----
+                ctl_stop.store(true, Ordering::SeqCst);
+                if let Err(p) = accept_join.join() {
+                    std::panic::resume_unwind(p);
+                }
+                conns.shutdown_all();
+                // Close the stream; an error here means replay already
+                // stopped, which the join below will surface.
+                let _ = ctl_state.admission.finish();
+                let replay_result = match replay_join.join() {
+                    Ok(r) => r,
+                    Err(p) => std::panic::resume_unwind(p),
+                };
+                let last = {
+                    let mut slot = ctl_state
+                        .coordinator
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner);
+                    match slot.take() {
+                        Some(c) => c.shutdown(),
+                        None => anyhow::bail!("coordinator already shut down"),
+                    }
+                };
+                // Shutdown was clean either way; only now surface a
+                // replay failure so the ledger above stays exact.
+                replay_result?;
+                let prior = {
+                    let mut g = ctl_state
+                        .prior
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner);
+                    std::mem::take(&mut *g)
+                };
+                let epochs = prior.len() + 1;
+                let metrics = merge_epochs(&prior, last);
+                if let Some(h) = http_join {
+                    if let Err(p) = h.join() {
+                        std::panic::resume_unwind(p);
+                    }
+                }
+                let wall_secs = started.elapsed().as_secs_f64();
+                let served = metrics.served;
+                Ok(ServeReport {
+                    metrics,
+                    epochs,
+                    admission: ctl_state.admission.stats(),
+                    wall_secs,
+                    requests_per_sec: if wall_secs > 0.0 {
+                        served as f64 / wall_secs
+                    } else {
+                        0.0
+                    },
+                })
+            })?;
+
+        Ok(Self {
+            state,
+            ctl_tx,
+            ingest_addr,
+            http_addr,
+            control_join: Some(control_join),
+            stop,
+        })
+    }
+
+    /// The bound ingest address (resolved, so `:0` shows the real port).
+    pub fn ingest_addr(&self) -> SocketAddr {
+        self.ingest_addr
+    }
+
+    /// The bound status-endpoint address, if HTTP was enabled.
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
+    }
+
+    /// Live admission counters.
+    pub fn admission_stats(&self) -> AdmissionStats {
+        self.state.admission.stats()
+    }
+
+    /// Scrape the live Prometheus text in-process (what `GET /metrics`
+    /// returns over HTTP).
+    pub fn metrics_text(&self) -> anyhow::Result<String> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.ctl_tx
+            .send(ControlMsg::Scrape(tx))
+            .map_err(|_| anyhow::anyhow!("daemon control loop is gone"))?;
+        rx.recv_timeout(Duration::from_secs(5))
+            .map_err(|_| anyhow::anyhow!("scrape timed out"))
+    }
+
+    /// Re-read the config file (same path `POST /reload` takes).
+    pub fn reload(&self) -> anyhow::Result<String> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.ctl_tx
+            .send(ControlMsg::Reload(tx))
+            .map_err(|_| anyhow::anyhow!("daemon control loop is gone"))?;
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Ok(summary)) => Ok(summary),
+            Ok(Err(e)) => anyhow::bail!("reload rejected: {e}"),
+            Err(_) => anyhow::bail!("reload timed out"),
+        }
+    }
+
+    /// Gracefully drain: stop accepting, flush admission, serve every
+    /// admitted request, quiesce the coordinator, return the exact
+    /// final report.
+    pub fn drain(mut self) -> anyhow::Result<ServeReport> {
+        let _ = self.ctl_tx.send(ControlMsg::Drain);
+        self.join_inner()
+    }
+
+    /// Wait for the daemon to drain on its own (SIGTERM or
+    /// `POST /drain`).
+    pub fn join(mut self) -> anyhow::Result<ServeReport> {
+        self.join_inner()
+    }
+
+    fn join_inner(&mut self) -> anyhow::Result<ServeReport> {
+        let Some(handle) = self.control_join.take() else {
+            anyhow::bail!("daemon already joined");
+        };
+        match handle.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        if self.control_join.is_some() {
+            let _ = self.ctl_tx.send(ControlMsg::Drain);
+            self.stop.store(true, Ordering::SeqCst);
+            let _ = self.join_inner();
+        }
+    }
+}
+
+/// SIGTERM → drain, without a signal-handling dependency: the handler
+/// only flips an atomic the control loop polls (async-signal-safe).
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SIGTERM_PENDING: AtomicBool = AtomicBool::new(false);
+    static HOOK_INSTALLED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigterm(_signum: i32) {
+        SIGTERM_PENDING.store(true, Ordering::SeqCst);
+    }
+
+    pub(super) fn install_sigterm_hook() {
+        if HOOK_INSTALLED.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        let handler = on_sigterm as extern "C" fn(i32) as usize;
+        // akpc-lint has no rule against unsafe; this is the only unsafe
+        // block in the crate and it wraps one libc call.
+        unsafe {
+            signal(SIGTERM, handler);
+        }
+    }
+
+    pub(super) fn take_sigterm() -> bool {
+        SIGTERM_PENDING.swap(false, Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub(super) fn install_sigterm_hook() {}
+
+    pub(super) fn take_sigterm() -> bool {
+        false
+    }
+}

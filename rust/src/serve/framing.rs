@@ -1,0 +1,212 @@
+//! Ingest wire formats (DESIGN.md §12.1).
+//!
+//! A connection speaks one of two formats, sniffed from its first four
+//! bytes:
+//!
+//! * **Text frames** — newline-delimited `ts server item [item...]`
+//!   (whitespace-separated; `ts` is the logical request time as an `f64`,
+//!   `server` the requesting user's edge server id, then 1..=max_items
+//!   item ids). Blank lines and `#` comments are skipped, so a trace
+//!   exported as CSV-ish text can be piped in with minimal massaging.
+//! * **Binary frames** — the leading bytes `AKPT` select the binary
+//!   trace format of [`crate::trace::io`], header included: the v2
+//!   chunk-framed layout streamed by
+//!   [`BinaryStreamSource`](crate::trace::stream::BinaryStreamSource)
+//!   (the flat v1 layout is accepted too). `akpc ingest --binary` can
+//!   therefore pipe a `.akpt` file's bytes straight into the socket.
+//!
+//! Either way, every record lands in [`Admission::offer`] where the
+//! universe bounds and the timestamp-slack contract are enforced; a
+//! malformed *text* line only bumps the `rejected_malformed` counter
+//! (live peers keep streaming), while a corrupt *binary* stream kills
+//! its connection — once length-delimited framing is lost there is no
+//! way to resynchronize.
+
+use std::io::BufRead;
+
+use crate::trace::io as trace_io;
+use crate::trace::model::Request;
+use crate::trace::stream::TraceMeta;
+
+use super::admission::Admission;
+
+/// The binary-format sniff bytes (the `AKPT` trace-file magic).
+pub(crate) const MAGIC: &[u8] = b"AKPT";
+
+/// Parse one text frame: `ts server item [item...]`.
+///
+/// Pure syntax — universe bounds and item-count limits are admission
+/// concerns ([`validate_frame`]), so binary records (which skip this
+/// parser) face the same checks. `Request::new` sorts and deduplicates
+/// the item set, exactly like every other ingest path.
+pub fn parse_text_frame(line: &str) -> anyhow::Result<Request> {
+    let mut parts = line.split_whitespace();
+    let ts = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty frame"))?
+        .parse::<f64>()
+        .map_err(|e| anyhow::anyhow!("bad timestamp: {e}"))?;
+    anyhow::ensure!(ts.is_finite(), "timestamp must be finite, got {ts}");
+    let server = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("frame needs `ts server item [item...]`"))?
+        .parse::<u32>()
+        .map_err(|e| anyhow::anyhow!("bad server id: {e}"))?;
+    let mut items = Vec::new();
+    for p in parts {
+        items.push(
+            p.parse::<u32>()
+                .map_err(|e| anyhow::anyhow!("bad item id `{p}`: {e}"))?,
+        );
+    }
+    anyhow::ensure!(!items.is_empty(), "frame has no items");
+    Ok(Request::new(items, server, ts))
+}
+
+/// The per-record admission checks shared by both wire formats: finite
+/// time, universe bounds from `meta`, and the `max_items` request-size
+/// cap (a d_max-style guard so one hostile frame cannot allocate an
+/// unbounded item set downstream).
+pub(crate) fn validate_frame(
+    req: &Request,
+    meta: &TraceMeta,
+    max_items: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(req.time.is_finite(), "non-finite timestamp");
+    anyhow::ensure!(!req.items.is_empty(), "empty item set");
+    anyhow::ensure!(
+        req.items.len() <= max_items,
+        "{} items exceeds max_items={max_items}",
+        req.items.len()
+    );
+    anyhow::ensure!(
+        req.server < meta.n_servers,
+        "server {} out of range (n_servers={})",
+        req.server,
+        meta.n_servers
+    );
+    if meta.n_items > 0 {
+        if let Some(&last) = req.items.last() {
+            // Items are sorted (Request::new), so the last is the max.
+            anyhow::ensure!(
+                last < meta.n_items,
+                "item {last} out of range (n_items={})",
+                meta.n_items
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Pump a text-mode connection into admission until EOF. Returns the
+/// number of frames submitted (admitted or rejected); errors only on
+/// I/O failure or a stopped daemon (admission channel closed).
+pub(crate) fn pump_text(rdr: &mut impl BufRead, admission: &Admission) -> anyhow::Result<u64> {
+    let mut submitted = 0u64;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if rdr.read_line(&mut line)? == 0 {
+            return Ok(submitted);
+        }
+        let text = line.trim();
+        if text.is_empty() || text.starts_with('#') {
+            continue;
+        }
+        match parse_text_frame(text) {
+            Ok(req) => {
+                admission.offer(req)?;
+                submitted += 1;
+            }
+            Err(_) => admission.note_malformed(),
+        }
+    }
+}
+
+/// Pump a binary-mode connection (full `AKPT` header + records, v1 or
+/// v2 framing) into admission. Returns the number of records submitted;
+/// errors on corrupt framing — the caller drops the connection.
+pub(crate) fn pump_binary(rdr: &mut impl BufRead, admission: &Admission) -> anyhow::Result<u64> {
+    let hdr = trace_io::read_binary_header(rdr)?;
+    let mut submitted = 0u64;
+    match hdr.version {
+        trace_io::VERSION_FLAT => {
+            for _ in 0..hdr.n_reqs {
+                admission.offer(trace_io::read_binary_record(rdr)?)?;
+                submitted += 1;
+            }
+        }
+        _ => {
+            // v2: length-delimited frames, each its own record count.
+            let mut remaining = hdr.n_reqs;
+            while remaining > 0 {
+                let n = u64::from(trace_io::read_frame_header(rdr)?);
+                anyhow::ensure!(
+                    n >= 1 && n <= remaining,
+                    "corrupt chunk frame: {n} records framed, {remaining} remaining"
+                );
+                for _ in 0..n {
+                    admission.offer(trace_io::read_binary_record(rdr)?)?;
+                }
+                remaining -= n;
+                submitted += n;
+            }
+        }
+    }
+    Ok(submitted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            n_items: 10,
+            n_servers: 4,
+            est_len: None,
+            name: "t".into(),
+        }
+    }
+
+    #[test]
+    fn parses_well_formed_frames() {
+        let r = parse_text_frame("1.5 2 7 3 7").unwrap();
+        assert_eq!(r.time, 1.5);
+        assert_eq!(r.server, 2);
+        assert_eq!(r.items, vec![3, 7], "sorted + deduped");
+        // Arbitrary whitespace runs are fine.
+        let r = parse_text_frame("  0.0\t1   9 ").unwrap();
+        assert_eq!(r.items, vec![9]);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for bad in [
+            "",
+            "1.0",
+            "1.0 2",
+            "abc 0 1",
+            "nan 0 1",
+            "inf 0 1",
+            "1.0 -2 1",
+            "1.0 0 x",
+            "1.0 0 1.5",
+        ] {
+            assert!(parse_text_frame(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn validate_enforces_universe_and_size() {
+        let m = meta();
+        validate_frame(&Request::new(vec![0, 9], 3, 1.0), &m, 8).unwrap();
+        let oversize = Request::new((0..9).collect(), 0, 1.0);
+        let err = validate_frame(&oversize, &m, 8).unwrap_err().to_string();
+        assert!(err.contains("max_items"), "{err}");
+        let bad_item = Request::new(vec![10], 0, 1.0);
+        assert!(validate_frame(&bad_item, &m, 8).is_err());
+        let bad_server = Request::new(vec![1], 4, 1.0);
+        assert!(validate_frame(&bad_server, &m, 8).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! The plain-text status endpoint (DESIGN.md §12.4): a deliberately
+//! tiny HTTP/1.0 server — request line + headers in, fixed response
+//! out, `Connection: close` always — because the daemon's operational
+//! surface is four routes and none of them justify a dependency:
+//!
+//! | route | effect |
+//! |---|---|
+//! | `GET /healthz` | `200 ok` while the daemon is up |
+//! | `GET /metrics` | Prometheus text rendered from a live scrape |
+//! | `POST /drain` | `202` and the drain sequence starts |
+//! | `POST /reload` | re-read config; `200` applied / `409` rejected |
+//!
+//! The endpoint thread never touches daemon state directly: every
+//! effectful route is a [`ControlMsg`] over the bounded control channel
+//! with a rendezvous reply channel, so HTTP stays responsive (returning
+//! 503 on timeout) even while the control loop is mid-reload.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::daemon::ControlMsg;
+
+/// Largest request head (request line + headers) we accept.
+const MAX_HEAD: usize = 8 * 1024;
+
+fn respond(stream: &mut TcpStream, status: &str, content_type: &str, body: &str) {
+    let msg = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(msg.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Read until the blank line ending the head (we ignore bodies: the
+/// control routes are argumentless POSTs).
+fn read_head(stream: &mut TcpStream) -> Option<String> {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while head.len() < MAX_HEAD {
+        match stream.read(&mut byte) {
+            Ok(0) => break,
+            Ok(_) => {
+                head.push(byte[0]);
+                if head.ends_with(b"\r\n\r\n") || head.ends_with(b"\n\n") {
+                    break;
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+    String::from_utf8(head).ok()
+}
+
+fn handle_conn(mut stream: TcpStream, ctl: &mpsc::SyncSender<ControlMsg>) {
+    let Some(head) = read_head(&mut stream) else {
+        return;
+    };
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    match (method, path) {
+        ("GET", "/healthz") => respond(&mut stream, "200 OK", "text/plain", "ok\n"),
+        ("GET", "/metrics") => {
+            let (tx, rx) = mpsc::sync_channel(1);
+            if ctl.send(ControlMsg::Scrape(tx)).is_ok() {
+                match rx.recv_timeout(Duration::from_secs(2)) {
+                    Ok(body) => {
+                        respond(&mut stream, "200 OK", "text/plain; version=0.0.4", &body);
+                    }
+                    Err(_) => respond(
+                        &mut stream,
+                        "503 Service Unavailable",
+                        "text/plain",
+                        "scrape timed out\n",
+                    ),
+                }
+            } else {
+                respond(&mut stream, "503 Service Unavailable", "text/plain", "draining\n");
+            }
+        }
+        ("POST", "/drain") => {
+            let _ = ctl.send(ControlMsg::Drain);
+            respond(&mut stream, "202 Accepted", "text/plain", "draining\n");
+        }
+        ("POST", "/reload") => {
+            let (tx, rx) = mpsc::sync_channel(1);
+            if ctl.send(ControlMsg::Reload(tx)).is_err() {
+                respond(&mut stream, "503 Service Unavailable", "text/plain", "draining\n");
+                return;
+            }
+            match rx.recv_timeout(Duration::from_secs(5)) {
+                Ok(Ok(summary)) => {
+                    respond(&mut stream, "200 OK", "text/plain", &format!("{summary}\n"));
+                }
+                Ok(Err(e)) => {
+                    respond(&mut stream, "409 Conflict", "text/plain", &format!("{e}\n"));
+                }
+                Err(_) => respond(
+                    &mut stream,
+                    "503 Service Unavailable",
+                    "text/plain",
+                    "reload timed out\n",
+                ),
+            }
+        }
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+/// Spawn the endpoint thread on an already-bound listener. Polls `stop`
+/// between accepts so drain can retire it without a wakeup connection.
+pub(crate) fn spawn_http(
+    listener: TcpListener,
+    ctl: mpsc::SyncSender<ControlMsg>,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<JoinHandle<()>> {
+    listener.set_nonblocking(true)?;
+    let handle = std::thread::Builder::new()
+        .name("akpc-serve-http".into())
+        .spawn(move || loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    handle_conn(stream, &ctl);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        })?;
+    Ok(handle)
+}

@@ -1,0 +1,156 @@
+//! The ingest acceptor (DESIGN.md §12.1): one nonblocking accept loop
+//! on a dedicated thread, one pump thread per connection, and a
+//! registry so drain can shut every socket down and join every handler
+//! deterministically.
+//!
+//! Each connection's format is sniffed from its first four bytes:
+//! `AKPT` selects the binary trace format (header + v1/v2 records),
+//! anything else is treated as newline-delimited text frames. The
+//! sniffed bytes are chained back in front of the stream so both pumps
+//! see the connection from byte zero.
+
+use std::io::{BufReader, Cursor, Read};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::admission::Admission;
+use super::framing::{pump_binary, pump_text, MAGIC};
+
+#[derive(Default)]
+struct ConnInner {
+    streams: Vec<TcpStream>,
+    handles: Vec<JoinHandle<()>>,
+    closed: bool,
+}
+
+/// Tracks live ingest connections so drain can close and join them.
+#[derive(Default)]
+pub(crate) struct ConnRegistry {
+    inner: Mutex<ConnInner>,
+}
+
+impl ConnRegistry {
+    fn lock(&self) -> std::sync::MutexGuard<'_, ConnInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Register a connection's stream clone + handler thread. If the
+    /// registry is already closed (drain raced the accept), the socket
+    /// is shut down immediately so the handler sees EOF right away.
+    fn register(&self, stream: TcpStream, handle: JoinHandle<()>) {
+        let mut g = self.lock();
+        if g.closed {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        g.streams.push(stream);
+        g.handles.push(handle);
+        // Opportunistically reap finished handlers so a long-lived
+        // daemon's registry doesn't grow with every short connection.
+        let mut i = 0;
+        while i < g.handles.len() {
+            if g.handles[i].is_finished() {
+                let h = g.handles.swap_remove(i);
+                let _ = g.streams.swap_remove(i);
+                if let Err(p) = h.join() {
+                    std::panic::resume_unwind(p);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Close every live socket and join every handler. New connections
+    /// registered afterwards are shut down on sight.
+    pub(crate) fn shutdown_all(&self) {
+        let (streams, handles) = {
+            let mut g = self.lock();
+            g.closed = true;
+            (std::mem::take(&mut g.streams), std::mem::take(&mut g.handles))
+        };
+        for s in &streams {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in handles {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
+}
+
+/// Handle one ingest connection: sniff the format, then pump frames
+/// into admission until EOF / shutdown. Frame-level errors only end
+/// this connection; admission-closed errors mean the daemon is
+/// draining, which is not this connection's problem to report loudly.
+fn handle_conn(mut stream: TcpStream, admission: &Admission) {
+    let mut head = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < head.len() {
+        match stream.read(&mut head[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+    if filled == 0 {
+        return; // connect-and-close probe (health checks do this)
+    }
+    let sniffed = Cursor::new(head[..filled].to_vec());
+    let mut rdr = BufReader::new(sniffed.chain(&stream));
+    let result = if head[..filled] == *MAGIC {
+        pump_binary(&mut rdr, admission)
+    } else {
+        pump_text(&mut rdr, admission)
+    };
+    if let Err(e) = result {
+        eprintln!("akpc-serve: connection ended with error: {e:#}");
+    }
+}
+
+/// Spawn the acceptor thread. Polls `stop` between accepts; every
+/// accepted connection gets its own named pump thread and a registry
+/// entry for drain.
+pub(crate) fn spawn_ingest(
+    listener: TcpListener,
+    admission: Arc<Admission>,
+    conns: Arc<ConnRegistry>,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<JoinHandle<()>> {
+    listener.set_nonblocking(true)?;
+    let handle = std::thread::Builder::new()
+        .name("akpc-serve-accept".into())
+        .spawn(move || loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_nonblocking(false);
+                    let Ok(clone) = stream.try_clone() else {
+                        continue;
+                    };
+                    let adm = Arc::clone(&admission);
+                    let spawned = std::thread::Builder::new()
+                        .name("akpc-serve-conn".into())
+                        .spawn(move || handle_conn(stream, &adm));
+                    match spawned {
+                        Ok(h) => conns.register(clone, h),
+                        Err(e) => {
+                            eprintln!("akpc-serve: spawn connection handler: {e}");
+                            let _ = clone.shutdown(Shutdown::Both);
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        })?;
+    Ok(handle)
+}

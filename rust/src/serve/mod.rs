@@ -1,0 +1,56 @@
+//! The live serving daemon (DESIGN.md §12): `akpc serve --listen` turns
+//! the sharded coordinator into a real ingest server with admission,
+//! live metrics, hot-reload, and graceful drain.
+//!
+//! Topology (one process, all threads bounded-channel actors):
+//!
+//! ```text
+//!   TCP clients ──► acceptor ──► conn handlers (text / AKPT binary frames)
+//!                                   │ Admission::offer
+//!                                   ▼
+//!                     admission reorder buffer (slack window)
+//!                                   │ time-ordered chunks
+//!                                   ▼
+//!        ChannelSource ──► replay thread ──► CoordinatorClient::serve
+//!                                                (PR-5 sharded stack)
+//!   HTTP /metrics /healthz /drain /reload ──► control loop (drain,
+//!                                             scrape, hot-reload)
+//! ```
+//!
+//! Design contract: the daemon reuses the streaming replay stack
+//! *unchanged* — live arrivals become the same time-ordered chunks a
+//! [`TraceSource`](crate::trace::stream::TraceSource) produces, the
+//! replay thread issues the exact per-request `serve` loop of
+//! [`replay_sharded_stream`](crate::sim::replay_sharded_stream), and
+//! drain goes through the coordinator's quiesce barrier. A trace
+//! streamed through the socket into a drained daemon therefore lands on
+//! the same total-cost ledger as the offline sharded replay of that
+//! trace (pinned within 1e-9 in `tests/serve.rs`).
+//!
+//! Module map:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`config`] | [`ServeConfig`]: TOML `[akpc]`-embedding daemon config |
+//! | [`framing`] | wire formats: text lines + v2 `AKPT` binary frames |
+//! | [`admission`] | validation + bounded timestamp-reorder buffer |
+//! | [`listener`] | ingest acceptor + per-connection pump threads |
+//! | [`http`] | plain-text HTTP/1.0 status endpoint |
+//! | [`reload`] | hot-reload validation + coordinator epoch swap |
+//! | [`daemon`] | [`ServeDaemon`]: lifecycle, control loop, drain |
+//!
+//! This module is inside the akpc-lint L3/L4 scope (DESIGN.md §11): no
+//! panicking constructs outside tests, bounded `sync_channel`s only.
+
+pub mod admission;
+pub mod config;
+pub mod daemon;
+pub mod framing;
+mod http;
+mod listener;
+pub mod reload;
+
+pub use admission::{Admission, AdmissionStats, Verdict};
+pub use config::ServeConfig;
+pub use daemon::{ServeDaemon, ServeOptions, ServeReport};
+pub use framing::parse_text_frame;

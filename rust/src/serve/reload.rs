@@ -1,0 +1,207 @@
+//! Hot-reload (DESIGN.md §12.3): re-read the daemon's TOML config,
+//! re-validate it through the same [`ServeConfig::validate`] →
+//! `RunSpec::validate()` path used at startup, and only then apply it.
+//! An invalid file is rejected with the validation error and the
+//! running daemon keeps its current config — reload can never take the
+//! service down.
+//!
+//! Two application tiers:
+//!
+//! * **Live knobs** (`slack`, `chunk`, `max_items`) apply in place via
+//!   the admission layer's setters — no interruption at all.
+//! * **Coordinator knobs** (`policy`, `engine`, `shards`, anything in
+//!   `[akpc]`) need a new shard topology, so the old coordinator is
+//!   drained through its quiesce path and a fresh one is started — an
+//!   *epoch swap*. The swap happens while holding the replay thread's
+//!   client mutex, i.e. at a chunk boundary: no in-flight request ever
+//!   sees a half-torn-down coordinator. The retired epoch's final
+//!   snapshot is kept and folded into every later scrape and the final
+//!   report by [`merge_epochs`], so counters stay monotone across
+//!   reloads (a Prometheus contract).
+//!
+//! `reorder_capacity` and `queue_depth` size buffers threaded through
+//! channel construction; changing them takes a restart of the daemon,
+//! not just an epoch swap, and reload reports them as ignored.
+
+use std::sync::PoisonError;
+
+use crate::coordinator::{Coordinator, MetricsSnapshot, TickMode};
+use crate::run::PolicyRegistry;
+
+use super::config::ServeConfig;
+use super::daemon::DaemonState;
+
+/// What a successful reload did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReloadOutcome {
+    /// Human-readable summary (returned on the `POST /reload` body).
+    pub summary: String,
+    /// Whether the coordinator was swapped for a new epoch.
+    pub restarted: bool,
+}
+
+/// Parse + validate `path`, then apply it to the running daemon.
+/// Errors leave the daemon exactly as it was.
+pub(crate) fn apply_reload(
+    state: &DaemonState,
+    registry: &PolicyRegistry,
+    path: &str,
+) -> anyhow::Result<ReloadOutcome> {
+    let new = ServeConfig::from_toml_file(path)?;
+    new.validate(registry)?;
+
+    let old = state.config();
+    anyhow::ensure!(
+        new.akpc.n_items == old.akpc.n_items && new.akpc.n_servers == old.akpc.n_servers,
+        "reload cannot change the universe (n_items {} -> {}, n_servers {} -> {}); \
+         restart the daemon instead",
+        old.akpc.n_items,
+        new.akpc.n_items,
+        old.akpc.n_servers,
+        new.akpc.n_servers
+    );
+
+    // Live knobs first: these can never fail once validated.
+    state.admission.set_slack(new.slack)?;
+    state.admission.set_chunk_len(new.chunk);
+    state.admission.set_max_items(new.max_items);
+
+    let restart = new.policy != old.policy
+        || new.engine != old.engine
+        || new.shards != old.shards
+        || new.akpc != old.akpc;
+    let mut notes = Vec::new();
+    if new.reorder_capacity != old.reorder_capacity || new.queue_depth != old.queue_depth {
+        notes.push("reorder_capacity/queue_depth change ignored (needs restart)");
+    }
+
+    if restart {
+        // Lock order: replay client first, coordinator second — the
+        // same order drain uses. Holding the client mutex parks the
+        // replay thread at a chunk boundary for the whole swap.
+        let mut client = state
+            .client
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let mut coord_slot = state
+            .coordinator
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let next = Coordinator::start_with(
+            new.akpc.clone(),
+            new.engine.to_engine(),
+            new.shards,
+            TickMode::Sync,
+        )?;
+        if let Some(old_coord) = coord_slot.take() {
+            old_coord.quiesce();
+            let final_snapshot = old_coord.shutdown();
+            state
+                .prior
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .push(final_snapshot);
+        }
+        *client = next.client();
+        *coord_slot = Some(next);
+    }
+
+    let summary = format!(
+        "reloaded: policy={} engine={:?} shards={} slack={}{}{}",
+        new.policy,
+        new.engine,
+        new.shards,
+        new.slack,
+        if restart { " (new coordinator epoch)" } else { " (live)" },
+        if notes.is_empty() {
+            String::new()
+        } else {
+            format!("; {}", notes.join("; "))
+        }
+    );
+    state.set_config(new);
+    Ok(ReloadOutcome {
+        summary,
+        restarted: restart,
+    })
+}
+
+/// Fold the final snapshots of retired coordinator epochs into the
+/// current one, so scrape counters are monotone across hot-reloads.
+/// Gauges (`live_cliques`, shard count) keep the current epoch's value;
+/// counters and histograms accumulate.
+pub fn merge_epochs(prior: &[MetricsSnapshot], mut last: MetricsSnapshot) -> MetricsSnapshot {
+    for p in prior {
+        last.ledger.merge(&p.ledger);
+        last.served += p.served;
+        last.windows += p.windows;
+        last.clique_gen_secs += p.clique_gen_secs;
+        last.clique_hist.merge(&p.clique_hist);
+        last.latency_us.merge(&p.latency_us);
+        for ps in &p.per_shard {
+            if let Some(cur) = last.per_shard.iter_mut().find(|c| c.shard == ps.shard) {
+                cur.ledger.merge(&ps.ledger);
+                cur.served += ps.served;
+                cur.retentions += ps.retentions;
+                cur.latency_us.merge(&ps.latency_us);
+            } else {
+                last.per_shard.push(ps.clone());
+            }
+        }
+    }
+    last.per_shard.sort_by_key(|s| s.shard);
+    last
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GenStats, ShardStats};
+
+    fn snap(shards: &[(usize, u64, f64)], windows: u64) -> MetricsSnapshot {
+        let per_shard = shards
+            .iter()
+            .map(|&(i, served, c_t)| {
+                let mut s = ShardStats {
+                    shard: i,
+                    served,
+                    ..Default::default()
+                };
+                s.ledger.c_t = c_t;
+                s.ledger.requests = served;
+                s.latency_us.record(5);
+                s
+            })
+            .collect();
+        MetricsSnapshot::aggregate(
+            GenStats {
+                windows,
+                ..Default::default()
+            },
+            per_shard,
+        )
+    }
+
+    #[test]
+    fn merge_epochs_accumulates_counters() {
+        let prior = vec![snap(&[(0, 10, 1.0), (1, 5, 0.5)], 3)];
+        let last = snap(&[(0, 7, 0.25)], 2);
+        let m = merge_epochs(&prior, last);
+        assert_eq!(m.served, 22);
+        assert_eq!(m.windows, 5);
+        assert!((m.ledger.c_t - 1.75).abs() < 1e-12);
+        // Shard 1 existed only in the retired epoch; its counters survive.
+        assert_eq!(m.per_shard.len(), 2);
+        assert_eq!(m.per_shard[1].shard, 1);
+        assert_eq!(m.per_shard[1].served, 5);
+        assert_eq!(m.latency_us.count(), 4);
+    }
+
+    #[test]
+    fn merge_epochs_identity_without_priors() {
+        let last = snap(&[(0, 7, 0.25)], 2);
+        let served = last.served;
+        let m = merge_epochs(&[], last);
+        assert_eq!(m.served, served);
+    }
+}

@@ -25,6 +25,10 @@
 //! * [`BinaryStreamSource`] — record-streamed binary traces, both the
 //!   flat v1 layout and the chunk-framed v2 layout written by
 //!   [`write_binary_chunked`](super::io::write_binary_chunked).
+//! * [`ChannelSource`] — live chunks pushed over a bounded in-process
+//!   channel; the adapter the serving daemon's admission layer
+//!   (DESIGN.md §12) uses to feed socket arrivals into the same replay
+//!   drivers the file sources feed.
 //!
 //! Sources validate incrementally (time order, universe bounds) so a
 //! malformed tail fails at its chunk, not after an hour of replay. The
@@ -50,6 +54,7 @@
 use std::borrow::Borrow;
 use std::io::{BufRead, BufReader};
 use std::path::Path;
+use std::sync::mpsc;
 
 use super::generator::{GeneratorParams, TraceGenerator, TraceKind};
 use super::io as trace_io;
@@ -480,6 +485,75 @@ impl TraceSource for BinaryStreamSource {
     }
 }
 
+// ---------------------------------------------------------------------
+// Live channel adapter
+// ---------------------------------------------------------------------
+
+/// [`TraceSource`] over a bounded in-process channel.
+///
+/// The producer side (the serving daemon's admission layer, DESIGN.md
+/// §12.2) pushes time-ordered `Vec<Request>` chunks through the returned
+/// [`mpsc::SyncSender`]; `next_chunk` blocks until a chunk arrives and
+/// ends the stream cleanly (`Ok(false)`) once every sender is dropped.
+/// The bounded depth is the backpressure contract: a slow consumer
+/// blocks the producer after `depth` queued chunks instead of buffering
+/// an unbounded live workload in memory.
+///
+/// Chunks are re-validated on the consumer side with the same
+/// incremental checks the file sources use, so a buggy producer fails
+/// the replay at its chunk rather than corrupting shard state.
+#[derive(Debug)]
+pub struct ChannelSource {
+    rx: mpsc::Receiver<Vec<Request>>,
+    meta: TraceMeta,
+    yielded: usize,
+    last_t: f64,
+}
+
+impl ChannelSource {
+    /// Open a channel-backed source with room for `depth` in-flight
+    /// chunks (clamped to ≥ 1). Returns the producer handle and the
+    /// source; clone the sender for multiple producers, drop every
+    /// clone to end the stream.
+    pub fn bounded(meta: TraceMeta, depth: usize) -> (mpsc::SyncSender<Vec<Request>>, Self) {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        (
+            tx,
+            Self {
+                rx,
+                meta,
+                yielded: 0,
+                last_t: f64::NEG_INFINITY,
+            },
+        )
+    }
+}
+
+impl TraceSource for ChannelSource {
+    fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<Request>) -> anyhow::Result<bool> {
+        buf.clear();
+        loop {
+            match self.rx.recv() {
+                Ok(chunk) => {
+                    if chunk.is_empty() {
+                        continue; // tolerate producer keep-alive flushes
+                    }
+                    *buf = chunk;
+                    check_chunk(&self.meta, &mut self.last_t, self.yielded, buf)?;
+                    self.yielded += buf.len();
+                    return Ok(true);
+                }
+                // All senders dropped: the live stream is complete.
+                Err(mpsc::RecvError) => return Ok(false),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -602,6 +676,52 @@ mod tests {
         let mut src = BinaryStreamSource::open(&p, 16).unwrap();
         let err = src.collect().unwrap_err().to_string();
         assert!(err.contains("not strictly ascending"), "{err}");
+    }
+
+    #[test]
+    fn channel_source_streams_pushed_chunks_in_order() {
+        let meta = TraceMeta {
+            n_items: 10,
+            n_servers: 4,
+            est_len: None,
+            name: "live".into(),
+        };
+        let (tx, mut src) = ChannelSource::bounded(meta, 4);
+        tx.send(vec![Request::new(vec![1, 2], 0, 0.5)]).unwrap();
+        tx.send(Vec::new()).unwrap(); // keep-alive flush: skipped
+        tx.send(vec![
+            Request::new(vec![3], 1, 0.75),
+            Request::new(vec![0, 9], 2, 1.0),
+        ])
+        .unwrap();
+        drop(tx);
+        let t = src.collect().unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.requests[2].items, vec![0, 9]);
+        let mut buf = Vec::new();
+        assert!(!src.next_chunk(&mut buf).unwrap(), "drained after drop");
+    }
+
+    #[test]
+    fn channel_source_rejects_disorder_and_bounds() {
+        let meta = TraceMeta {
+            n_items: 10,
+            n_servers: 4,
+            est_len: None,
+            name: "live".into(),
+        };
+        let (tx, mut src) = ChannelSource::bounded(meta.clone(), 4);
+        tx.send(vec![Request::new(vec![1], 0, 1.0)]).unwrap();
+        tx.send(vec![Request::new(vec![1], 0, 0.5)]).unwrap();
+        drop(tx);
+        let err = src.collect().unwrap_err().to_string();
+        assert!(err.contains("out of time order"), "{err}");
+
+        let (tx, mut src) = ChannelSource::bounded(meta, 4);
+        tx.send(vec![Request::new(vec![42], 0, 0.0)]).unwrap();
+        drop(tx);
+        let err = src.collect().unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
     }
 
     #[test]

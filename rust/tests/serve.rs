@@ -1,0 +1,415 @@
+//! End-to-end tests for the live serving daemon (DESIGN.md §12):
+//!
+//! 1. **Live-ingest equivalence** — a trace streamed through a real TCP
+//!    socket into a drained daemon lands on the same ledger as the
+//!    offline sharded streaming replay of that trace, within 1e-9
+//!    relative, for 1 and 4 shards.
+//! 2. Admission semantics over the wire: in-slack reorder repaired,
+//!    beyond-slack regression rejected, malformed lines counted.
+//! 3. The HTTP endpoint: /healthz, /metrics, /drain, /reload.
+//! 4. Hot-reload: invalid configs rejected (daemon untouched), valid
+//!    live-knob changes applied.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use akpc::config::AkpcConfig;
+use akpc::run::{generated_source, EngineChoice};
+use akpc::serve::{ServeConfig, ServeDaemon, ServeOptions};
+use akpc::sim::{replay_sharded_stream, ReplayMode};
+use akpc::trace::generator::TraceKind;
+use akpc::trace::model::{Request, Trace};
+use akpc::trace::stream::{MemorySource, TraceSource};
+
+fn small_cfg() -> AkpcConfig {
+    AkpcConfig {
+        n_items: 30,
+        n_servers: 12,
+        batch_size: 50,
+        ..Default::default()
+    }
+}
+
+fn serve_cfg(cfg: &AkpcConfig, shards: usize) -> ServeConfig {
+    ServeConfig {
+        shards,
+        slack: 0.5,
+        chunk: 256,
+        akpc: cfg.clone(),
+        ..Default::default()
+    }
+}
+
+fn start_daemon(scfg: ServeConfig, http: bool) -> ServeDaemon {
+    ServeDaemon::start(
+        scfg,
+        ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            http: http.then(|| "127.0.0.1:0".to_string()),
+            config_path: None,
+        },
+    )
+    .expect("daemon start")
+}
+
+/// Write requests as text frames over one socket, then close the write
+/// side so the daemon's handler sees EOF.
+fn send_text_frames(addr: std::net::SocketAddr, reqs: &[Request]) {
+    let stream = TcpStream::connect(addr).expect("connect ingest");
+    let mut out = std::io::BufWriter::new(&stream);
+    for r in reqs {
+        write!(out, "{} {}", r.time, r.server).unwrap();
+        for it in &r.items {
+            write!(out, " {it}").unwrap();
+        }
+        writeln!(out).unwrap();
+    }
+    out.flush().unwrap();
+    drop(out);
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+}
+
+/// Poll until every submitted frame reached admission (the socket pump
+/// is asynchronous; drain must not race it).
+fn await_submitted(daemon: &ServeDaemon, expect: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let s = daemon.admission_stats();
+        let seen = s.admitted + s.rejected_late + s.rejected_malformed;
+        if seen >= expect {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out: {seen}/{expect} frames reached admission"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn assert_ledgers_match(
+    live: &akpc::cache::CostLedger,
+    offline: &akpc::cache::CostLedger,
+    what: &str,
+) {
+    let tol = |x: f64| 1e-9 * x.abs().max(1.0);
+    assert!(
+        (live.total() - offline.total()).abs() <= tol(offline.total()),
+        "{what}: total {} vs offline {}",
+        live.total(),
+        offline.total()
+    );
+    assert!(
+        (live.c_t - offline.c_t).abs() <= tol(offline.c_t),
+        "{what}: C_T {} vs {}",
+        live.c_t,
+        offline.c_t
+    );
+    assert!(
+        (live.c_p - offline.c_p).abs() <= tol(offline.c_p),
+        "{what}: C_P {} vs {}",
+        live.c_p,
+        offline.c_p
+    );
+    assert_eq!(live.requests, offline.requests, "{what}: request counts");
+    assert_eq!(live.full_hits, offline.full_hits, "{what}: full hits");
+    assert_eq!(live.misses, offline.misses, "{what}: misses");
+    assert_eq!(live.transfers, offline.transfers, "{what}: transfers");
+}
+
+/// The tentpole pin: socket → admission → replay → drain reproduces the
+/// offline sharded streaming replay exactly, for 1 and 4 shards.
+#[test]
+fn live_ingest_matches_offline_replay() {
+    let cfg = small_cfg();
+    let n = 3_000;
+    for shards in [1usize, 4] {
+        // Offline reference on the identical generated trace.
+        let mut src = generated_source(TraceKind::Netflix, &cfg, n, 512).unwrap();
+        let offline = replay_sharded_stream(
+            &cfg,
+            EngineChoice::Native.to_engine(),
+            &mut src,
+            shards,
+            ReplayMode::Ordered,
+        )
+        .unwrap();
+
+        // Live: same trace, re-generated, streamed through TCP.
+        let mut src = generated_source(TraceKind::Netflix, &cfg, n, 512).unwrap();
+        let trace = src.collect().unwrap();
+        assert_eq!(trace.len(), n);
+        let daemon = start_daemon(serve_cfg(&cfg, shards), false);
+        send_text_frames(daemon.ingest_addr(), &trace.requests);
+        await_submitted(&daemon, n as u64);
+        let report = daemon.drain().expect("drain");
+
+        assert_eq!(report.admission.admitted, n as u64);
+        assert_eq!(report.admission.rejected_late, 0);
+        assert_eq!(report.metrics.served, n as u64);
+        assert_eq!(report.metrics.per_shard.len(), shards);
+        assert_ledgers_match(
+            &report.metrics.ledger,
+            &offline.metrics.ledger,
+            &format!("shards={shards}"),
+        );
+    }
+}
+
+/// An in-slack timestamp swap over the wire is repaired by admission, so
+/// the ledger equals the offline replay of the *sorted* trace.
+#[test]
+fn in_slack_reorder_is_transparent() {
+    let cfg = small_cfg();
+    let mut src = generated_source(TraceKind::Netflix, &cfg, 600, 128).unwrap();
+    let collected = src.collect().unwrap();
+
+    // Re-time to strictly distinct 0.1-spaced stamps so the sorted order
+    // is unambiguous, then swap adjacent pairs — a 0.1 regression, well
+    // inside the daemon's 1.0 slack.
+    let mut requests = collected.requests;
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.time = i as f64 * 0.1;
+    }
+    let sorted = Trace {
+        requests: requests.clone(),
+        n_items: collected.n_items,
+        n_servers: collected.n_servers,
+        name: "reorder-fixture".into(),
+    };
+    let mut shuffled = requests;
+    let mut i = 0;
+    while i + 1 < shuffled.len() {
+        shuffled.swap(i, i + 1);
+        i += 3;
+    }
+
+    let mut offline_src = MemorySource::new(&sorted);
+    let offline = replay_sharded_stream(
+        &cfg,
+        EngineChoice::Native.to_engine(),
+        &mut offline_src,
+        1,
+        ReplayMode::Ordered,
+    )
+    .unwrap();
+
+    let mut scfg = serve_cfg(&cfg, 1);
+    scfg.slack = 1.0;
+    let daemon = start_daemon(scfg, false);
+    send_text_frames(daemon.ingest_addr(), &shuffled);
+    await_submitted(&daemon, shuffled.len() as u64);
+    let report = daemon.drain().expect("drain");
+
+    assert_eq!(report.admission.admitted, shuffled.len() as u64);
+    assert_eq!(report.admission.rejected_late, 0);
+    assert_ledgers_match(&report.metrics.ledger, &offline.metrics.ledger, "reorder");
+}
+
+/// Wire-level admission rejections: malformed lines and beyond-slack
+/// regressions are counted, never served, and never kill the socket.
+#[test]
+fn malformed_and_late_frames_rejected_over_wire() {
+    let cfg = small_cfg();
+    let mut scfg = serve_cfg(&cfg, 1);
+    scfg.slack = 0.5;
+    scfg.max_items = 4;
+    let daemon = start_daemon(scfg, false);
+
+    let stream = TcpStream::connect(daemon.ingest_addr()).unwrap();
+    let mut out = std::io::BufWriter::new(&stream);
+    writeln!(out, "1.0 0 1 2").unwrap(); // ok
+    writeln!(out, "not-a-frame").unwrap(); // malformed: parse error
+    writeln!(out, "2.0 0 1 2 3 4 5 6").unwrap(); // malformed: > max_items
+    writeln!(out, "2.0 99 1").unwrap(); // malformed: server out of range
+    writeln!(out, "5.0 1 3").unwrap(); // ok (watermark -> 5.0)
+    writeln!(out, "1.5 1 3").unwrap(); // late: 1.5 < 5.0 - 0.5
+    writeln!(out, "4.8 2 7").unwrap(); // ok: within slack
+    out.flush().unwrap();
+    drop(out);
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+
+    await_submitted(&daemon, 7);
+    let report = daemon.drain().expect("drain");
+    assert_eq!(report.admission.admitted, 4);
+    assert_eq!(report.admission.rejected_malformed, 3);
+    assert_eq!(report.admission.rejected_late, 1);
+    assert_eq!(report.metrics.served, 4);
+}
+
+fn http_roundtrip(addr: std::net::SocketAddr, request: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect http");
+    stream.write_all(request.as_bytes()).unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    resp
+}
+
+#[test]
+fn http_endpoint_serves_health_metrics_and_drain() {
+    let cfg = small_cfg();
+    let daemon = start_daemon(serve_cfg(&cfg, 2), true);
+    let http = daemon.http_addr().expect("http enabled");
+
+    let health = http_roundtrip(http, "GET /healthz HTTP/1.0\r\n\r\n");
+    assert!(health.starts_with("HTTP/1.0 200"), "{health}");
+    assert!(health.ends_with("ok\n"), "{health}");
+
+    send_text_frames(daemon.ingest_addr(), &[Request::new(vec![1, 2], 0, 1.0)]);
+    await_submitted(&daemon, 1);
+
+    let metrics = http_roundtrip(http, "GET /metrics HTTP/1.0\r\n\r\n");
+    assert!(metrics.starts_with("HTTP/1.0 200"), "{metrics}");
+    for family in [
+        "akpc_requests_served_total",
+        "akpc_cost_transfer_total",
+        "akpc_admission_admitted_total",
+        "akpc_serve_epochs 1",
+        "akpc_shards 2",
+    ] {
+        assert!(metrics.contains(family), "missing {family} in:\n{metrics}");
+    }
+
+    let missing = http_roundtrip(http, "GET /nope HTTP/1.0\r\n\r\n");
+    assert!(missing.starts_with("HTTP/1.0 404"), "{missing}");
+
+    let drain = http_roundtrip(http, "POST /drain HTTP/1.0\r\n\r\n");
+    assert!(drain.starts_with("HTTP/1.0 202"), "{drain}");
+    let report = daemon.join().expect("join after POST /drain");
+    assert_eq!(report.metrics.served, 1);
+    assert_eq!(report.epochs, 1);
+}
+
+/// Hot-reload: an invalid file is rejected (daemon keeps serving), a
+/// valid live-knob change applies, and counters survive the epoch swap
+/// a coordinator-knob change triggers.
+#[test]
+fn reload_rejects_invalid_and_applies_valid_configs() {
+    let cfg = small_cfg();
+    let dir = std::env::temp_dir().join(format!("akpc-serve-reload-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.toml");
+    let base = format!(
+        "slack = 0.5\nshards = 1\n\n[akpc]\nn_items = {}\nn_servers = {}\nbatch_size = {}\n",
+        cfg.n_items, cfg.n_servers, cfg.batch_size
+    );
+    std::fs::write(&path, &base).unwrap();
+
+    let scfg = ServeConfig::from_toml_str(&base).unwrap();
+    let daemon = ServeDaemon::start(
+        scfg,
+        ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            http: None,
+            config_path: Some(path.to_string_lossy().into_owned()),
+        },
+    )
+    .unwrap();
+
+    send_text_frames(daemon.ingest_addr(), &[Request::new(vec![1], 0, 1.0)]);
+    await_submitted(&daemon, 1);
+
+    // Invalid: unknown policy must be rejected by the RunSpec probe.
+    std::fs::write(&path, format!("policy = \"no-such-policy\"\n{base}")).unwrap();
+    let err = daemon.reload().unwrap_err().to_string();
+    assert!(err.contains("rejected"), "{err}");
+
+    // Invalid: negative slack.
+    std::fs::write(&path, base.replace("slack = 0.5", "slack = -1.0")).unwrap();
+    assert!(daemon.reload().is_err());
+
+    // Invalid: universe change is a restart, not a reload.
+    std::fs::write(&path, base.replace("n_items = 30", "n_items = 31")).unwrap();
+    let err = daemon.reload().unwrap_err().to_string();
+    assert!(err.contains("universe"), "{err}");
+
+    // Valid live-knob change.
+    std::fs::write(&path, base.replace("slack = 0.5", "slack = 2.0")).unwrap();
+    let summary = daemon.reload().expect("valid reload");
+    assert!(summary.contains("slack=2"), "{summary}");
+
+    // Valid coordinator-knob change: epoch swap, counters monotone.
+    std::fs::write(&path, base.replace("shards = 1", "shards = 2")).unwrap();
+    let summary = daemon.reload().expect("shard reload");
+    assert!(summary.contains("epoch"), "{summary}");
+
+    send_text_frames(daemon.ingest_addr(), &[Request::new(vec![2], 1, 2.0)]);
+    await_submitted(&daemon, 2);
+    let report = daemon.drain().expect("drain");
+    assert_eq!(report.epochs, 2);
+    assert_eq!(report.metrics.served, 2, "counters span both epochs");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The binary wire path: pipe a v2 chunk-framed `.akpt` byte stream
+/// (exactly what `akpc ingest --binary` sends) and drain.
+#[test]
+fn binary_wire_format_roundtrips() {
+    let cfg = small_cfg();
+    let n = 500;
+    let mut src = generated_source(TraceKind::Spotify, &cfg, n, 128).unwrap();
+    let dir = std::env::temp_dir().join(format!("akpc-serve-bin-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.akpt");
+    let written = akpc::trace::io::write_binary_chunked_from(&mut src, &path).unwrap();
+    assert_eq!(written, n as u64);
+
+    let mut src = generated_source(TraceKind::Spotify, &cfg, n, 128).unwrap();
+    let offline = replay_sharded_stream(
+        &cfg,
+        EngineChoice::Native.to_engine(),
+        &mut src,
+        1,
+        ReplayMode::Ordered,
+    )
+    .unwrap();
+
+    let daemon = start_daemon(serve_cfg(&cfg, 1), false);
+    let mut stream = TcpStream::connect(daemon.ingest_addr()).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    stream.write_all(&bytes).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    await_submitted(&daemon, n as u64);
+    let report = daemon.drain().expect("drain");
+    assert_eq!(report.admission.admitted, n as u64);
+    assert_ledgers_match(&report.metrics.ledger, &offline.metrics.ledger, "binary");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Offered-after-drop safety: dropping the daemon drains it; a second
+/// daemon can bind immediately after.
+#[test]
+fn drop_drains_and_port_is_released() {
+    let cfg = small_cfg();
+    let addr;
+    {
+        let daemon = start_daemon(serve_cfg(&cfg, 1), false);
+        addr = daemon.ingest_addr();
+        send_text_frames(addr, &[Request::new(vec![0], 0, 0.0)]);
+        await_submitted(&daemon, 1);
+        // Dropped here without an explicit drain().
+    }
+    // The listener thread has exited; a fresh daemon starts cleanly.
+    let daemon = start_daemon(serve_cfg(&cfg, 1), false);
+    assert_ne!(daemon.ingest_addr().port(), 0);
+    let report = daemon.drain().unwrap();
+    assert_eq!(report.metrics.served, 0);
+    let _ = addr;
+}
+
+/// `Trace` workload sanity for the helpers above (guards the fixture,
+/// not the daemon).
+#[test]
+fn fixtures_are_well_formed() {
+    let cfg = small_cfg();
+    let mut src = generated_source(TraceKind::Netflix, &cfg, 100, 32).unwrap();
+    let t: Trace = src.collect().unwrap();
+    assert!(t
+        .requests
+        .windows(2)
+        .all(|w| w[0].time <= w[1].time));
+    assert!(t.requests.iter().all(|r| r.server < cfg.n_servers));
+}

@@ -44,6 +44,33 @@ pub struct CliqueGenPipeline {
     pub windows: u64,
 }
 
+/// Portable snapshot of a [`CliqueGenPipeline`]'s learned state — the
+/// clique-generation half of an elastic handoff (DESIGN.md §13). The
+/// CRM builder itself is *not* captured (it may hold thread-affine XLA
+/// executables); the receiving coordinator constructs a fresh builder
+/// for the same engine and `import_state` restores everything the
+/// builder feeds on: the previous CRM window (diff base), the live
+/// clique set, the sliding pre-sessionized batch window, the histogram,
+/// and the tick counters, plus the one mutable config knob (ω).
+#[derive(Debug, Clone)]
+pub struct GenState {
+    /// Current maximum clique size ω (runtime-adjustable via
+    /// [`CliqueGenPipeline::set_omega`]).
+    pub omega: u32,
+    /// Diff base: the CRM of the last completed window.
+    pub prev_crm: CrmWindow,
+    /// The live clique set being served.
+    pub cliques: CliqueSet,
+    /// Cumulative clique-size histogram (Fig. 9a).
+    pub hist: Histogram,
+    /// Sliding window of pre-sessionized batches (`crm_window_batches`).
+    pub recent: std::collections::VecDeque<Vec<Request>>,
+    /// Cumulative clique-generation wall time (Fig. 9b).
+    pub clique_gen_secs: f64,
+    /// Window ticks executed.
+    pub windows: u64,
+}
+
 impl CliqueGenPipeline {
     pub fn new(cfg: &AkpcConfig, builder: Box<dyn CrmBuilder>) -> Self {
         Self {
@@ -81,6 +108,35 @@ impl CliqueGenPipeline {
     /// Cumulative clique-size distribution over ticks (Fig. 9a).
     pub fn clique_sizes(&self) -> Histogram {
         self.hist.clone()
+    }
+
+    /// Export the learned state for an elastic handoff. The pipeline
+    /// keeps running; the export is a consistent copy as of now.
+    pub fn export_state(&self) -> GenState {
+        GenState {
+            omega: self.cfg.omega,
+            prev_crm: self.prev_crm.clone(),
+            cliques: self.cliques.clone(),
+            hist: self.hist.clone(),
+            recent: self.recent.clone(),
+            clique_gen_secs: self.clique_gen_secs,
+            windows: self.windows,
+        }
+    }
+
+    /// Restore an exported state into this (freshly constructed)
+    /// pipeline. The next `tick` then diffs against the donor's last
+    /// CRM window over the donor's sliding batch window — i.e. it
+    /// produces the exact clique set a never-resized pipeline would
+    /// have produced.
+    pub fn import_state(&mut self, s: GenState) {
+        self.cfg.omega = s.omega;
+        self.prev_crm = s.prev_crm;
+        self.cliques = s.cliques;
+        self.hist = s.hist;
+        self.recent = s.recent;
+        self.clique_gen_secs = s.clique_gen_secs;
+        self.windows = s.windows;
     }
 
     fn variant_suffix(&self) -> &'static str {
@@ -313,6 +369,54 @@ mod tests {
         p.end_batch(&w);
         for c in p.cliques().iter() {
             assert!(c.len() <= 3, "clique {c:?} exceeds ω");
+        }
+    }
+
+    #[test]
+    fn pipeline_export_import_resumes_identically() {
+        use crate::crm::NativeCrmBuilder;
+        let cfg = test_cfg();
+        // Donor runs two windows, exports, and keeps going; the clone
+        // imports into a fresh pipeline with a fresh builder. Both tick
+        // the same third window — clique sets must be identical.
+        let mut donor = CliqueGenPipeline::new(&cfg, Box::new(NativeCrmBuilder));
+        donor.tick(&bundle_window(0.0));
+        let mut w2 = Vec::new();
+        for i in 0..20 {
+            w2.push(req(&[0, 9], 0, 100.0 + i as f64 * 0.01));
+            w2.push(req(&[1, 2], 1, 100.0 + i as f64 * 0.01));
+        }
+        donor.tick(&w2);
+        let state = donor.export_state();
+        assert_eq!(state.windows, 2);
+
+        let mut clone = CliqueGenPipeline::new(&cfg, Box::new(NativeCrmBuilder));
+        clone.import_state(state);
+        let w3 = bundle_window(200.0);
+        donor.tick(&w3);
+        clone.tick(&w3);
+        assert_eq!(donor.windows, clone.windows);
+        let d: Vec<_> = donor.cliques().iter().collect();
+        let c: Vec<_> = clone.cliques().iter().collect();
+        assert_eq!(d, c, "resumed pipeline must regenerate identically");
+    }
+
+    #[test]
+    fn export_import_carries_omega() {
+        use crate::crm::NativeCrmBuilder;
+        let cfg = test_cfg();
+        let mut donor = CliqueGenPipeline::new(&cfg, Box::new(NativeCrmBuilder));
+        donor.set_omega(3);
+        let mut clone = CliqueGenPipeline::new(&cfg, Box::new(NativeCrmBuilder));
+        clone.import_state(donor.export_state());
+        let mut w = Vec::new();
+        for i in 0..30 {
+            w.push(req(&[0, 1, 2, 3, 4], 0, i as f64 * 0.01));
+            w.push(req(&[3, 4, 5], 0, i as f64 * 0.01));
+        }
+        clone.tick(&w);
+        for cl in clone.cliques().iter() {
+            assert!(cl.len() <= 3, "imported ω must bound clique {cl:?}");
         }
     }
 

@@ -21,7 +21,7 @@ pub mod opt;
 pub mod packcache2;
 
 pub use adaptive::AdaptiveK;
-pub use akpc::{Akpc, CliqueGenPipeline};
+pub use akpc::{Akpc, CliqueGenPipeline, GenState};
 pub use dp_greedy::DpGreedy;
 pub use no_packing::NoPacking;
 pub use opt::Opt;

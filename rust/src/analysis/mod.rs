@@ -333,7 +333,9 @@ mod tests {
         assert_eq!(rules_of(&ds), vec!["L3", "L3"], "{ds:?}");
         // The serving daemon is hot-path too (live clients block on it).
         assert_eq!(rules_of(&diags("serve/x.rs", bad)), vec!["L3", "L3"]);
-        // The same file outside coordinator//serve/ is out of scope.
+        // So is the elastic autoscaler (it owns live resize handoffs).
+        assert_eq!(rules_of(&diags("elastic/x.rs", bad)), vec!["L3", "L3"]);
+        // The same file outside coordinator//serve//elastic/ is out of scope.
         assert!(diags("bench/x.rs", bad).is_empty());
     }
 
@@ -351,6 +353,7 @@ mod tests {
         let bad = "use std::sync::mpsc;\nfn f() {\n    let (tx, rx) = mpsc::channel::<u32>();\n    let (a, b) = mpsc::channel();\n    drop((tx, rx, a, b));\n}\n";
         assert_eq!(rules_of(&diags("coordinator/x.rs", bad)), vec!["L4", "L4"]);
         assert_eq!(rules_of(&diags("serve/x.rs", bad)), vec!["L4", "L4"]);
+        assert_eq!(rules_of(&diags("elastic/x.rs", bad)), vec!["L4", "L4"]);
     }
 
     #[test]

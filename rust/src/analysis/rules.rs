@@ -7,8 +7,8 @@
 //! |---|---|---|
 //! | L1 | no-float-partial-unwrap | all of `src/` |
 //! | L2 | no-hash-iter-decision | `algo/ clique/ crm/ cache/` |
-//! | L3 | no-panic-hot-path | `coordinator/ serve/` |
-//! | L4 | bounded-channels-only | `coordinator/ serve/` |
+//! | L3 | no-panic-hot-path | `coordinator/ serve/ elastic/` |
+//! | L4 | bounded-channels-only | `coordinator/ serve/ elastic/` |
 //! | L5 | no-stream-collect | all of `src/` |
 //!
 //! Every check is a token scan over [`PreparedSource::masked`] — comments
@@ -45,16 +45,17 @@ pub const RULES: [Rule; 5] = [
     Rule {
         id: "L3",
         name: "no-panic-hot-path",
-        summary: "coordinator and serving-daemon actors must not \
-                  unwrap/expect/panic: a poisoned shard or dead daemon \
-                  thread deadlocks every client blocked on its mailbox",
+        summary: "coordinator, serving-daemon, and elastic-driver code \
+                  must not unwrap/expect/panic: a poisoned shard or dead \
+                  daemon thread deadlocks every client blocked on its \
+                  mailbox",
     },
     Rule {
         id: "L4",
         name: "bounded-channels-only",
-        summary: "coordinator and serving-daemon mailboxes must be bounded \
-                  sync_channels so a slow actor exerts backpressure \
-                  instead of buffering without limit",
+        summary: "coordinator, serving-daemon, and elastic-driver \
+                  mailboxes must be bounded sync_channels so a slow actor \
+                  exerts backpressure instead of buffering without limit",
     },
     Rule {
         id: "L5",
@@ -97,7 +98,8 @@ pub fn check_file(rel_path: &str, src: &PreparedSource) -> Vec<RawDiag> {
     {
         l2_no_hash_iter_decision(src, &mut out);
     }
-    if path.contains("coordinator/") || path.contains("serve/") {
+    if path.contains("coordinator/") || path.contains("serve/") || path.contains("elastic/")
+    {
         l3_no_panic_hot_path(src, &mut out);
         l4_bounded_channels_only(src, &mut out);
     }

@@ -1,0 +1,219 @@
+//! Elastic autoscale benchmark (EXPERIMENTS.md §Elastic): on each
+//! autoscale scenario, run the elastic driver against its two static
+//! baselines — always-min and always-max — over the *same* replay loop
+//! and the *same* [`RentalModel`], with rental billed at actual
+//! shard-seconds of trace time. The AKPC ledger is placement-invariant
+//! (the handoff is exact), so the three cells differ only in rental and
+//! overload: the elastic win is pure fleet-sizing.
+
+use crate::config::AkpcConfig;
+use crate::elastic::{
+    drive_elastic, drive_static, ControllerConfig, ElasticOutcome, RentalModel,
+};
+use crate::run::cell_config;
+use crate::scenario;
+use crate::trace::model::Trace;
+use crate::util::Json;
+
+use super::sweep::EngineChoice;
+
+/// The scenario-library entries built to stress the autoscaler: flash
+/// crowd (scale-up), overnight trough (scale-down), hot-shard skew
+/// (robustness — volume is flat, so a volume-tracking controller should
+/// hold steady and match the static baseline).
+pub const AUTOSCALE_SCENARIOS: [&str; 3] = [
+    "autoscale-flash-crowd",
+    "overnight-trough",
+    "hot-shard-skew",
+];
+
+/// One (scenario, fleet policy) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct ElasticCell {
+    pub scenario: String,
+    /// `elastic`, `static-<min>`, or `static-<max>`.
+    pub label: String,
+    pub outcome: ElasticOutcome,
+}
+
+/// The full sweep, cells in (scenario-major, elastic/min/max) order.
+#[derive(Debug, Clone)]
+pub struct ElasticSweep {
+    pub cells: Vec<ElasticCell>,
+}
+
+impl ElasticSweep {
+    /// Total billed cost of the cell labeled `label` under `scenario`.
+    pub fn total(&self, scenario: &str, label: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.label == label)
+            .map(|c| c.outcome.cost.total())
+    }
+
+    pub fn print(&self) {
+        println!("== Elastic autoscale — elastic vs static fleets ==");
+        let mut last = "";
+        for c in &self.cells {
+            if c.scenario != last {
+                println!("-- {} --", c.scenario);
+                last = &c.scenario;
+            }
+            println!("  {}", c.outcome.summary(&c.label));
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.cells
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("scenario", Json::Str(c.scenario.clone())),
+                        ("label", Json::Str(c.label.clone())),
+                        ("outcome", c.outcome.to_json()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Derive a controller + rental model calibrated to `trace`'s mean
+/// arrival rate: one shard comfortably carries the mean, so demand
+/// swings (a 6x flash crowd, a 4x overnight stretch) map onto fleet
+/// sizes inside `[min_shards, max_shards]`. Rental is priced at a tenth
+/// of the per-shard capacity per shard-second, overload at 1 per excess
+/// request — cheap enough that always-max is wasteful, dear enough that
+/// always-min's spike overload dominates its rental savings.
+pub fn calibrated(
+    trace: &Trace,
+    min_shards: usize,
+    max_shards: usize,
+) -> (ControllerConfig, RentalModel) {
+    let span = (trace.requests.last().map(|r| r.time).unwrap_or(0.0)
+        - trace.requests.first().map(|r| r.time).unwrap_or(0.0))
+    .max(f64::MIN_POSITIVE);
+    let mean_rate = trace.len() as f64 / span;
+    let ctrl = ControllerConfig {
+        min_shards,
+        max_shards,
+        shard_capacity_rps: mean_rate,
+        shard_capacity_entries: 1e18,
+        ewma_alpha: 0.6,
+        scale_up_frac: 0.9,
+        scale_down_frac: 0.6,
+        cooldown_windows: 2,
+    };
+    let rental = RentalModel {
+        rate_per_shard_time: 0.1 * mean_rate,
+        shard_capacity_rps: mean_rate,
+        overload_penalty: 1.0,
+    };
+    (ctrl, rental)
+}
+
+/// Sweep `names` (built-in scenarios) × {elastic, always-min,
+/// always-max} at `scale`, fleet bounded by `[min_shards, max_shards]`.
+pub fn elastic_suite(
+    cfg: &AkpcConfig,
+    names: &[&str],
+    min_shards: usize,
+    max_shards: usize,
+    engine: EngineChoice,
+    scale: f64,
+) -> anyhow::Result<ElasticSweep> {
+    anyhow::ensure!(
+        min_shards >= 1 && min_shards <= max_shards,
+        "need 1 <= min_shards <= max_shards (got {min_shards}..{max_shards})"
+    );
+    let mut cells = Vec::with_capacity(names.len() * 3);
+    for &name in names {
+        let spec = scenario::builtin(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown built-in scenario `{name}`"))?;
+        let sc = spec.compile(scale)?;
+        let cell_cfg = cell_config(cfg, sc.n_items, sc.n_servers);
+        let trace = sc.concat_trace();
+        let (ctrl, rental) = calibrated(trace, min_shards, max_shards);
+        let runs = [
+            (
+                "elastic".to_string(),
+                drive_elastic(&cell_cfg, engine.to_engine(), &trace.requests, ctrl, rental)?,
+            ),
+            (
+                format!("static-{min_shards}"),
+                drive_static(
+                    &cell_cfg,
+                    engine.to_engine(),
+                    &trace.requests,
+                    min_shards,
+                    rental,
+                )?,
+            ),
+            (
+                format!("static-{max_shards}"),
+                drive_static(
+                    &cell_cfg,
+                    engine.to_engine(),
+                    &trace.requests,
+                    max_shards,
+                    rental,
+                )?,
+            ),
+        ];
+        for (label, outcome) in runs {
+            cells.push(ElasticCell {
+                scenario: name.to_string(),
+                label,
+                outcome,
+            });
+        }
+    }
+    Ok(ElasticSweep { cells })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_tracks_mean_rate() {
+        let t = crate::trace::generator::netflix_like(20, 8, 500, 3);
+        let (ctrl, rental) = calibrated(&t, 1, 4);
+        assert_eq!(ctrl.min_shards, 1);
+        assert_eq!(ctrl.max_shards, 4);
+        assert!(ctrl.shard_capacity_rps > 0.0);
+        assert!((rental.shard_capacity_rps - ctrl.shard_capacity_rps).abs() < 1e-12);
+        assert!(rental.rate_per_shard_time > 0.0);
+    }
+
+    #[test]
+    fn suite_runs_a_downscaled_flash_crowd() {
+        let cfg = AkpcConfig {
+            crm_top_frac: 1.0,
+            ..Default::default()
+        };
+        let sweep = elastic_suite(
+            &cfg,
+            &["autoscale-flash-crowd"],
+            1,
+            4,
+            EngineChoice::Native,
+            0.02,
+        )
+        .unwrap();
+        assert_eq!(sweep.cells.len(), 3);
+        assert!(sweep.total("autoscale-flash-crowd", "elastic").unwrap() > 0.0);
+        assert!(sweep.total("autoscale-flash-crowd", "static-1").is_some());
+        assert!(sweep.total("autoscale-flash-crowd", "static-4").is_some());
+        crate::util::json::parse(&sweep.to_json().to_string()).unwrap();
+        sweep.print();
+    }
+
+    #[test]
+    fn suite_rejects_bad_bounds_and_names() {
+        let cfg = AkpcConfig::default();
+        assert!(elastic_suite(&cfg, &["smoke"], 4, 1, EngineChoice::Native, 1.0).is_err());
+        assert!(elastic_suite(&cfg, &["nope"], 1, 4, EngineChoice::Native, 1.0).is_err());
+    }
+}

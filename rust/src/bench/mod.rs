@@ -2,11 +2,13 @@
 //! (DESIGN.md §4 experiment index). Each regenerates the same rows/series
 //! the paper reports, normalized to OPT = 1 where the paper does.
 
+pub mod elastic;
 pub mod experiments;
 pub mod perf;
 pub mod scenarios;
 pub mod sweep;
 
+pub use elastic::{elastic_suite, ElasticSweep, AUTOSCALE_SCENARIOS};
 pub use experiments::*;
 pub use perf::{run_perf, PerfOptions, PerfReport};
 pub use scenarios::{scenario_suite, ScenarioMatrix};

@@ -33,6 +33,20 @@
 //!   still block, so dropped incarnations are kept as tombstones rather
 //!   than removed. They are pruned once every shard's sweep clock has
 //!   passed them ([`CopyBoard::prune`]).
+//!
+//! ## Elastic resharding (DESIGN.md §13)
+//!
+//! A resize builds a **fresh** board for the new fleet and replays every
+//! live copy through `CacheState::import_live` (which mirrors here via
+//! `note_insert` with `start` = the handoff clock `t_end`). No history
+//! migrates, and none is needed: post-handoff decisions all happen at
+//! event times `> t_end` (every live copy was swept past `t_end` before
+//! export), where a seeded incarnation with `start = t_end` blocks
+//! exactly when the original — with its true, earlier start — would
+//! have (`start < at` holds either way), and incarnations already dead
+//! at `t_end` could never block again. That is what keeps the N→M
+//! handoff decision-identical to a static-M run from genesis
+//! (`tests/elastic.rs` pins it over ~50 seeds).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -237,5 +251,29 @@ mod tests {
     fn unknown_key_is_latest() {
         let b = CopyBoard::new();
         assert!(b.is_latest(42, 0, 1.0));
+    }
+
+    #[test]
+    fn handoff_seeded_board_decides_like_the_original() {
+        // Original board with full history up to the handoff at t=3.0:
+        // server 0's life [0,2) is already dead, servers 1 and 2 are
+        // live past 3.0.
+        let orig = CopyBoard::new();
+        orig.note_insert(7, 0, 0.0, 2.0);
+        orig.note_insert(7, 1, 0.5, 4.0);
+        orig.note_insert(7, 2, 1.0, 5.0);
+        // Seeded board: only the live copies, restarted at t_end=3.0
+        // (exactly what import_live's insert mirror produces).
+        let seeded = CopyBoard::new();
+        seeded.note_insert(7, 1, 3.0, 4.0);
+        seeded.note_insert(7, 2, 3.0, 5.0);
+        // Every post-handoff decision time (> 3.0) agrees.
+        for (server, at) in [(1, 4.0), (2, 4.5), (2, 5.0), (1, 3.5)] {
+            assert_eq!(
+                orig.is_latest(7, server, at),
+                seeded.is_latest(7, server, at),
+                "divergence at server {server}, t={at}"
+            );
+        }
     }
 }

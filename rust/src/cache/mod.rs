@@ -7,4 +7,4 @@ pub mod state;
 
 pub use board::CopyBoard;
 pub use cost::{CostLedger, CostModel};
-pub use state::CacheState;
+pub use state::{CacheState, CopyRecord};

@@ -48,6 +48,22 @@ impl Ord for ExpEvent {
     }
 }
 
+/// One live cache copy in portable form — the unit of elastic handoff
+/// (DESIGN.md §13). `export_live` emits these and `import_live` replays
+/// them into a fresh state, so a resize moves copies between shards
+/// without touching the retention bookkeeping by hand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CopyRecord {
+    /// Content hash of the packed clique ([`crate::util::clique_key`]).
+    pub key: u64,
+    /// Packed size |c| (retention-rent weight).
+    pub size: u32,
+    /// ESS holding the copy.
+    pub server: u32,
+    /// Absolute expiry `E[c][j]`.
+    pub expiry: f64,
+}
+
 /// Cache bookkeeping across all ESSs for one policy run.
 #[derive(Debug)]
 pub struct CacheState {
@@ -257,6 +273,61 @@ impl CacheState {
         }
     }
 
+    /// The sweep clock: largest `now` ever swept to (`-∞` before any
+    /// sweep). The elastic handoff exports it so the receiving shard
+    /// resumes time exactly where the donor stopped.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Export every live copy in a deterministic (key, server) order.
+    ///
+    /// Callers must sweep to the handoff point first
+    /// (`process_expirations(t_end, …)`): after that sweep every entry
+    /// in `expiry` is genuinely alive (`E[c][j] > t_end` — the sweep
+    /// loop re-processes retention-extended events until they clear
+    /// `now`), so the export is exactly the live set and carries no
+    /// stale lazy-deletion residue across the resize.
+    pub fn export_live(&self) -> Vec<CopyRecord> {
+        let mut out: Vec<CopyRecord> = self
+            .expiry
+            .iter()
+            .map(|(&(key, server), &expiry)| CopyRecord {
+                key,
+                size: self.sizes.get(&key).copied().unwrap_or(1),
+                server,
+                expiry,
+            })
+            .collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key).then(a.server.cmp(&b.server)));
+        out
+    }
+
+    /// Seed a *fresh* state (optionally board-attached) from an export.
+    ///
+    /// Sets the sweep clock to `clock` (the donor's quiesce point) and
+    /// replays each record through [`insert`](Self::insert), so `G[c]`,
+    /// the expiry heap, sizes, and the board mirror are rebuilt through
+    /// the one audited mutation path. Board incarnations restart with
+    /// `start = clock`; that is decision-equivalent to the donor's
+    /// history because every post-handoff retention decision happens at
+    /// an event time strictly greater than `clock` (see `export_live`),
+    /// where the `start < at` blocker predicate holds for both the
+    /// original and the reseeded start times, and incarnations already
+    /// dead at `clock` can never block a later decision.
+    pub fn import_live(&mut self, clock: f64, records: &[CopyRecord]) {
+        debug_assert!(
+            self.expiry.is_empty(),
+            "import_live seeds a fresh state only"
+        );
+        if clock > self.clock {
+            self.clock = clock;
+        }
+        for r in records {
+            self.insert(r.key, r.size, r.server, r.expiry);
+        }
+    }
+
     /// Consistency check for tests: `G[c]` equals the number of live
     /// `(c, ·)` entries.
     pub fn check_invariants(&self) -> anyhow::Result<()> {
@@ -423,6 +494,64 @@ mod tests {
         }
         assert_eq!(plain.retentions, sharded.retentions);
         assert_eq!(plain.retained_units, sharded.retained_units);
+        assert_eq!(plain.copy_count(7), sharded.copy_count(7));
+        assert_eq!(plain.expiry_of(7, 1), sharded.expiry_of(7, 1));
+    }
+
+    #[test]
+    fn export_import_round_trip_preserves_decisions() {
+        // Donor: two copies of key 7, one of key 9, swept to t=2.0.
+        let mut donor = CacheState::new();
+        donor.insert(7, 2, 0, 3.0);
+        donor.insert(7, 2, 1, 4.0);
+        donor.insert(9, 1, 2, 5.0);
+        let current = keys(&[7, 9]);
+        donor.process_expirations(2.0, &current, 1.0);
+        let records = donor.export_live();
+        assert_eq!(records.len(), 3);
+        assert_eq!(donor.clock(), 2.0);
+
+        // Receiver: fresh state seeded from the export.
+        let mut recv = CacheState::new();
+        recv.import_live(donor.clock(), &records);
+        assert_eq!(recv.clock(), 2.0);
+        assert_eq!(recv.copy_count(7), 2);
+        assert_eq!(recv.copy_count(9), 1);
+        recv.check_invariants().unwrap();
+
+        // Run both forward: drops and retentions must agree exactly.
+        donor.process_expirations(10.0, &current, 1.5);
+        recv.process_expirations(10.0, &current, 1.5);
+        assert_eq!(donor.copy_count(7), recv.copy_count(7));
+        assert_eq!(donor.copy_count(9), recv.copy_count(9));
+        assert_eq!(donor.expiry_of(7, 1), recv.expiry_of(7, 1));
+        // Counters reset on the receiver — the donor's prefix counters
+        // live in the retired metrics epoch, so only deltas must match.
+        assert_eq!(donor.retentions, recv.retentions);
+    }
+
+    #[test]
+    fn import_live_seeds_board_backed_state_equivalently() {
+        use crate::cache::CopyBoard;
+        use std::sync::Arc;
+        // A board-backed receiver seeded at t=1.0 must make the same
+        // retention decisions as an unsharded receiver of the export.
+        let mut donor = CacheState::new();
+        donor.insert(7, 2, 0, 2.0);
+        donor.insert(7, 2, 1, 3.0);
+        donor.process_expirations(1.0, &keys(&[7]), 1.0);
+        let records = donor.export_live();
+        let clock = donor.clock();
+
+        let mut plain = CacheState::new();
+        plain.import_live(clock, &records);
+        let mut sharded = CacheState::new();
+        sharded.attach_board(Arc::new(CopyBoard::new()));
+        sharded.import_live(clock, &records);
+        for c in [&mut plain, &mut sharded] {
+            c.process_expirations(6.0, &keys(&[7]), 1.0);
+        }
+        assert_eq!(plain.retentions, sharded.retentions);
         assert_eq!(plain.copy_count(7), sharded.copy_count(7));
         assert_eq!(plain.expiry_of(7, 1), sharded.expiry_of(7, 1));
     }

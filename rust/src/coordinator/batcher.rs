@@ -49,6 +49,15 @@ impl WindowBatcher {
     pub fn pending(&self) -> usize {
         self.buf.len()
     }
+
+    /// Take the open window's requests *without* closing it (no
+    /// `windows_closed` bump, no clique-gen tick). The elastic handoff
+    /// uses this: the carried-over requests refill the successor's
+    /// batcher, so the window closes at exactly the same request index
+    /// a never-resized run would close it at.
+    pub fn take_pending(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.buf)
+    }
 }
 
 #[cfg(test)]
@@ -78,6 +87,18 @@ mod tests {
         let w = b.flush().unwrap();
         assert_eq!(w.len(), 2);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn take_pending_does_not_count_a_window() {
+        let mut b = WindowBatcher::new(10);
+        b.push(req(0.0));
+        b.push(req(1.0));
+        let pending = b.take_pending();
+        assert_eq!(pending.len(), 2);
+        assert_eq!(b.windows_closed, 0);
+        assert_eq!(b.pending(), 0);
+        assert!(b.flush().is_none(), "buffer is empty after take");
     }
 
     #[test]

@@ -25,6 +25,9 @@ pub struct ShardStats {
     /// Largest request time processed (the shard's sweep clock);
     /// `NEG_INFINITY` until the first request.
     pub last_time: f64,
+    /// In-flight `Serve` messages in this shard's mailbox at snapshot
+    /// time (the autoscaler's and dashboards' backpressure signal).
+    pub queue_depth: usize,
 }
 
 impl ShardStats {
@@ -35,6 +38,7 @@ impl ShardStats {
             ("served", Json::Num(self.served as f64)),
             ("retentions", Json::Num(self.retentions as f64)),
             ("live_entries", Json::Num(self.live_entries as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
             (
                 "snapshot_version",
                 Json::Num(self.snapshot_version as f64),
@@ -129,6 +133,52 @@ impl MetricsSnapshot {
     /// Total Algorithm-6 retentions across shards.
     pub fn retentions(&self) -> u64 {
         self.per_shard.iter().map(|s| s.retentions).sum()
+    }
+
+    /// Fold the final snapshots of retired coordinator epochs into the
+    /// current one, so counters stay monotone across hot-reloads and
+    /// elastic resizes (a Prometheus contract). Gauges (`live_cliques`,
+    /// shard count, queue depth) keep the current epoch's value;
+    /// counters and histograms accumulate. Shards present only in a
+    /// retired epoch keep their counters in the merged view.
+    pub fn merge_epochs(prior: &[MetricsSnapshot], mut last: MetricsSnapshot) -> MetricsSnapshot {
+        for p in prior {
+            last.ledger.merge(&p.ledger);
+            last.served += p.served;
+            last.windows += p.windows;
+            last.clique_gen_secs += p.clique_gen_secs;
+            last.clique_hist.merge(&p.clique_hist);
+            last.latency_us.merge(&p.latency_us);
+            for ps in &p.per_shard {
+                if let Some(cur) = last.per_shard.iter_mut().find(|c| c.shard == ps.shard) {
+                    cur.ledger.merge(&ps.ledger);
+                    cur.served += ps.served;
+                    cur.retentions += ps.retentions;
+                    cur.latency_us.merge(&ps.latency_us);
+                } else {
+                    last.per_shard.push(ps.clone());
+                }
+            }
+        }
+        last.per_shard.sort_by_key(|s| s.shard);
+        last
+    }
+
+    /// Normalize a retired epoch produced by a *stateful* handoff
+    /// ([`Coordinator::decommission`](crate::coordinator::Coordinator::decommission))
+    /// for [`merge_epochs`](Self::merge_epochs): the clique-gen counters
+    /// (`windows`, `clique_gen_secs`, the clique histogram) travel
+    /// *inside* the handoff and keep accumulating in the successor's
+    /// pipeline, so leaving them in the retired snapshot would
+    /// double-count them at merge time. Shard-side counters (ledger,
+    /// served, retentions, latency) genuinely reset per epoch and are
+    /// kept. Fresh-swap epochs (policy/engine change — no handoff) must
+    /// NOT be normalized: their successor's pipeline restarts at zero.
+    pub fn into_handoff_epoch(mut self) -> Self {
+        self.windows = 0;
+        self.clique_gen_secs = 0.0;
+        self.clique_hist = Histogram::new();
+        self
     }
 
     /// Cross-shard ledger delta vs an earlier snapshot of the same
@@ -246,6 +296,28 @@ impl MetricsSnapshot {
                 s.shard, s.served
             ));
         }
+        // Per-shard gauges the autoscaler (and the release-smoke scrape)
+        // watches: live cache entries and mailbox depth per shard.
+        out.push_str(
+            "# HELP akpc_shard_occupancy Live (clique, server) cache entries on one shard\n\
+             # TYPE akpc_shard_occupancy gauge\n",
+        );
+        for s in &self.per_shard {
+            out.push_str(&format!(
+                "akpc_shard_occupancy{{shard=\"{}\"}} {}\n",
+                s.shard, s.live_entries
+            ));
+        }
+        out.push_str(
+            "# HELP akpc_shard_queue_depth In-flight serve messages in one shard's mailbox\n\
+             # TYPE akpc_shard_queue_depth gauge\n",
+        );
+        for s in &self.per_shard {
+            out.push_str(&format!(
+                "akpc_shard_queue_depth{{shard=\"{}\"}} {}\n",
+                s.shard, s.queue_depth
+            ));
+        }
         out
     }
 
@@ -345,6 +417,10 @@ mod tests {
         assert!(text.contains("akpc_shard_served_total{shard=\"1\"} 5"));
         assert!(text.contains("# TYPE akpc_live_cliques gauge"));
         assert!(text.contains("akpc_latency_us_q99"));
+        assert!(text.contains("# TYPE akpc_shard_occupancy gauge"));
+        assert!(text.contains("akpc_shard_occupancy{shard=\"0\"} "));
+        assert!(text.contains("# TYPE akpc_shard_queue_depth gauge"));
+        assert!(text.contains("akpc_shard_queue_depth{shard=\"1\"} "));
         // Every non-comment line is `name[{labels}] value`.
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             let mut parts = line.split_whitespace();
@@ -353,6 +429,32 @@ mod tests {
             val.parse::<f64>().unwrap();
             assert!(parts.next().is_none(), "{line}");
         }
+    }
+
+    #[test]
+    fn handoff_epoch_merge_does_not_double_count_gen_counters() {
+        let gen = GenStats {
+            windows: 2,
+            clique_gen_secs: 0.5,
+            ..Default::default()
+        };
+        let retired =
+            MetricsSnapshot::aggregate(gen, vec![shard(0, 1.0, 10)]).into_handoff_epoch();
+        // The successor's pipeline carried the counters: its epoch
+        // already reports windows=5 cumulative.
+        let last = MetricsSnapshot::aggregate(
+            GenStats {
+                windows: 5,
+                clique_gen_secs: 1.25,
+                ..Default::default()
+            },
+            vec![shard(0, 0.5, 7)],
+        );
+        let m = MetricsSnapshot::merge_epochs(&[retired], last);
+        assert_eq!(m.windows, 5, "gen counters must not double-count");
+        assert!((m.clique_gen_secs - 1.25).abs() < 1e-12);
+        assert_eq!(m.served, 17, "shard counters do accumulate");
+        assert!((m.ledger.c_t - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //! retention board ([`crate::cache::CopyBoard`]). The PJRT client is
 //! `Rc`-backed (thread-affine), so the CRM engine is constructed *on* the
 //! worker thread and never moves; Python is never involved at runtime.
+//!
+//! The fleet size N is *elastic*: [`Coordinator::resize`] tears the
+//! actors down to a portable [`HandoffState`] and reboots at a new
+//! shard count with cache, ledgers-as-epochs, clique-gen state, and the
+//! open window carried over exactly (DESIGN.md §13; the routing rule is
+//! [`crate::elastic::Placement`], shared with the handoff partitioner).
 
 pub mod batcher;
 pub mod metrics;
@@ -31,6 +37,6 @@ pub mod snapshot;
 pub use batcher::WindowBatcher;
 pub use metrics::{GenStats, MetricsSnapshot, ShardStats};
 pub use service::{
-    Coordinator, CoordinatorClient, ServeRequest, ServeResponse, TickMode,
+    Coordinator, CoordinatorClient, HandoffState, ServeRequest, ServeResponse, TickMode,
 };
 pub use snapshot::CliqueSnapshot;

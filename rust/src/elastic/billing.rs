@@ -1,0 +1,124 @@
+//! Shard-second billing — the cost axis that makes elasticity pay.
+//!
+//! The AKPC ledger (C_T + C_P) is *placement-invariant*: per-shard
+//! ledgers sum to the single-leader total at any shard count (the PR-1
+//! equivalence invariant), so shard count cannot change it and a cost
+//! comparison on the ledger alone would score every fleet size the
+//! same. What shard count does change is the *infrastructure* bill —
+//! how many cache instances are rented, for how long, and whether the
+//! fleet kept up with offered load. [`RentalModel`] prices exactly
+//! that, in the spirit of Carlsson & Eager's dynamic-instantiation
+//! cost (PAPERS.md):
+//!
+//! * **rental** — `rate_per_shard_time × Σ (shards × epoch span)`,
+//!   i.e. billed at *actual shard-seconds* of trace time, not at the
+//!   peak or the configured maximum;
+//! * **overload** — `overload_penalty` per request beyond what the
+//!   fleet could absorb in a window (`shards × shard_capacity_rps ×
+//!   window span`), the SLO-miss proxy that keeps "always rent one
+//!   shard" from trivially winning.
+//!
+//! [`ElasticCost`] folds both on top of the ledger total so elastic
+//! and static runs compare on one number.
+
+/// Infrastructure price sheet for a shard fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RentalModel {
+    /// Cost of keeping one shard rented for one unit of trace time.
+    pub rate_per_shard_time: f64,
+    /// Requests per unit trace time one shard absorbs before requests
+    /// start missing the SLO.
+    pub shard_capacity_rps: f64,
+    /// Cost per request beyond fleet capacity in a window.
+    pub overload_penalty: f64,
+}
+
+impl Default for RentalModel {
+    fn default() -> Self {
+        Self {
+            rate_per_shard_time: 1.0,
+            shard_capacity_rps: 1_000.0,
+            overload_penalty: 1.0,
+        }
+    }
+}
+
+impl RentalModel {
+    /// Rental for `n_shards` shards held over `span` units of trace
+    /// time. Negative or non-finite spans (empty epochs) bill zero.
+    pub fn rental(&self, n_shards: usize, span: f64) -> f64 {
+        if !span.is_finite() || span <= 0.0 {
+            return 0.0;
+        }
+        self.rate_per_shard_time * n_shards as f64 * span
+    }
+
+    /// Overload charge for one window: `requests` offered over `span`
+    /// trace-time units against `n_shards` shards of capacity.
+    pub fn overload(&self, n_shards: usize, requests: usize, span: f64) -> f64 {
+        if !span.is_finite() || span <= 0.0 {
+            return 0.0;
+        }
+        let absorbed = self.shard_capacity_rps * n_shards as f64 * span;
+        let excess = (requests as f64 - absorbed).max(0.0);
+        self.overload_penalty * excess
+    }
+}
+
+/// The three-part bill for one (elastic or static) run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ElasticCost {
+    /// AKPC ledger total C = C_T + C_P (placement-invariant).
+    pub ledger_total: f64,
+    /// Σ rental over every fleet-size epoch, at actual shard-seconds.
+    pub rental: f64,
+    /// Σ per-window overload charges.
+    pub overload: f64,
+}
+
+impl ElasticCost {
+    /// Grand total: ledger + rental + overload.
+    pub fn total(&self) -> f64 {
+        self.ledger_total + self.rental + self.overload
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rental_bills_actual_shard_seconds() {
+        let m = RentalModel {
+            rate_per_shard_time: 2.0,
+            ..Default::default()
+        };
+        assert!((m.rental(3, 10.0) - 60.0).abs() < 1e-12);
+        assert_eq!(m.rental(3, 0.0), 0.0);
+        assert_eq!(m.rental(3, f64::NEG_INFINITY), 0.0, "empty epoch");
+    }
+
+    #[test]
+    fn overload_charges_only_the_excess() {
+        let m = RentalModel {
+            shard_capacity_rps: 10.0,
+            overload_penalty: 0.5,
+            ..Default::default()
+        };
+        // Capacity 1 shard × 10 rps × 2.0 span = 20 requests.
+        assert_eq!(m.overload(1, 20, 2.0), 0.0);
+        assert!((m.overload(1, 30, 2.0) - 5.0).abs() < 1e-12);
+        // Double the fleet → no excess.
+        assert_eq!(m.overload(2, 30, 2.0), 0.0);
+    }
+
+    #[test]
+    fn cost_total_sums_all_parts() {
+        let c = ElasticCost {
+            ledger_total: 100.0,
+            rental: 20.0,
+            overload: 3.0,
+        };
+        assert!((c.total() - 123.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,236 @@
+//! [`ShardController`] — the volume-tracking autoscale policy.
+//!
+//! The controller decides, once per clique-generation window, how many
+//! shards the coordinator *should* be running. It follows Carlsson &
+//! Eager's observation (PAPERS.md, "Optimized Dynamic Cache
+//! Instantiation") that the cloud-scale win comes from instantiating
+//! capacity as request volume moves: it rides an EWMA of two demand
+//! signals — per-window request *rate* and total cache *occupancy* —
+//! and converts whichever is more binding into a desired shard count.
+//!
+//! Two classic stabilizers keep it from thrashing:
+//!
+//! * **hysteresis bands** — scaling up requires smoothed demand to
+//!   exceed `current × scale_up_frac` shard-capacities; scaling down
+//!   requires it to fall below `current × scale_down_frac`. With
+//!   `scale_down_frac < scale_up_frac` there is a dead band in which
+//!   the fleet holds steady.
+//! * **cooldown** — after any resize the controller sits out
+//!   `cooldown_windows` windows, so one spiky window cannot trigger a
+//!   resize storm while the EWMA catches up.
+//!
+//! The controller only *recommends*; the caller (the elastic replay
+//! driver or the live daemon) owns the actual `Coordinator::resize`,
+//! which is why `tick` takes and returns plain shard counts.
+
+/// Tuning knobs for the autoscaler. All fields are plain numbers so the
+/// config stays `Copy` and can be embedded in
+/// [`Driver::Elastic`](crate::run::Driver) without breaking its `Copy`
+/// derive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// Floor on the fleet size (clamped to ≥ 1).
+    pub min_shards: usize,
+    /// Ceiling on the fleet size (clamped to ≥ min_shards).
+    pub max_shards: usize,
+    /// Request rate (requests per unit trace time) one shard handles
+    /// comfortably; the rate signal divides by this.
+    pub shard_capacity_rps: f64,
+    /// Live cache entries one shard holds comfortably; the occupancy
+    /// signal divides by this.
+    pub shard_capacity_entries: f64,
+    /// EWMA smoothing factor in (0, 1]; 1.0 = no smoothing (track the
+    /// latest window exactly — useful for deterministic tests).
+    pub ewma_alpha: f64,
+    /// Scale up only when demand > current × this (in shard-capacities).
+    pub scale_up_frac: f64,
+    /// Scale down only when demand < current × this.
+    pub scale_down_frac: f64,
+    /// Windows to hold after any resize before recommending another.
+    pub cooldown_windows: u32,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            min_shards: 1,
+            max_shards: 8,
+            shard_capacity_rps: 1_000.0,
+            shard_capacity_entries: 100_000.0,
+            ewma_alpha: 0.5,
+            scale_up_frac: 0.9,
+            scale_down_frac: 0.6,
+            cooldown_windows: 2,
+        }
+    }
+}
+
+impl ControllerConfig {
+    /// Clamp the bounds into a sane, non-empty range.
+    fn sanitized(self) -> Self {
+        let min_shards = self.min_shards.max(1);
+        Self {
+            min_shards,
+            max_shards: self.max_shards.max(min_shards),
+            ..self
+        }
+    }
+}
+
+/// The stateful controller: EWMA accumulators plus the cooldown timer.
+#[derive(Debug, Clone)]
+pub struct ShardController {
+    cfg: ControllerConfig,
+    ewma_rate: Option<f64>,
+    ewma_occupancy: Option<f64>,
+    cooldown: u32,
+}
+
+impl ShardController {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        Self {
+            cfg: cfg.sanitized(),
+            ewma_rate: None,
+            ewma_occupancy: None,
+            cooldown: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Smoothed demand in shard-capacities (the max of the rate and
+    /// occupancy signals), as of the last `tick`. 0.0 before any tick.
+    pub fn demand(&self) -> f64 {
+        let rate = self.ewma_rate.unwrap_or(0.0) / self.cfg.shard_capacity_rps.max(1e-12);
+        let occ =
+            self.ewma_occupancy.unwrap_or(0.0) / self.cfg.shard_capacity_entries.max(1e-12);
+        rate.max(occ)
+    }
+
+    fn ewma(prev: &mut Option<f64>, sample: f64, alpha: f64) -> f64 {
+        let next = match *prev {
+            Some(p) => alpha * sample + (1.0 - alpha) * p,
+            None => sample,
+        };
+        *prev = Some(next);
+        next
+    }
+
+    /// Observe one closed window (`rate` = requests per unit trace
+    /// time, `occupancy` = total live cache entries across the fleet)
+    /// and return the recommended shard count given `current` shards.
+    /// Returns `current` while inside the dead band or cooling down.
+    pub fn tick(&mut self, rate: f64, occupancy: f64, current: usize) -> usize {
+        let alpha = self.cfg.ewma_alpha.clamp(1e-6, 1.0);
+        Self::ewma(&mut self.ewma_rate, rate, alpha);
+        Self::ewma(&mut self.ewma_occupancy, occupancy, alpha);
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return current;
+        }
+        let demand = self.demand();
+        let desired = (demand.ceil().max(1.0) as usize)
+            .clamp(self.cfg.min_shards, self.cfg.max_shards);
+        let current_clamped = current.clamp(self.cfg.min_shards, self.cfg.max_shards);
+        let target = if desired > current_clamped
+            && demand > current_clamped as f64 * self.cfg.scale_up_frac
+        {
+            desired
+        } else if desired < current_clamped
+            && demand < current_clamped as f64 * self.cfg.scale_down_frac
+        {
+            desired
+        } else {
+            current_clamped
+        };
+        if target != current {
+            self.cooldown = self.cfg.cooldown_windows;
+        }
+        target
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            min_shards: 1,
+            max_shards: 4,
+            shard_capacity_rps: 100.0,
+            shard_capacity_entries: 1e12, // occupancy signal effectively off
+            ewma_alpha: 1.0,
+            scale_up_frac: 1.0,
+            scale_down_frac: 0.7,
+            cooldown_windows: 0,
+        }
+    }
+
+    #[test]
+    fn scales_up_under_load_and_down_in_trough() {
+        let mut c = ShardController::new(cfg());
+        // Calm: demand 0.8 shards → stay at 1.
+        assert_eq!(c.tick(80.0, 0.0, 1), 1);
+        // Spike: demand 3.5 shards → jump to 4.
+        assert_eq!(c.tick(350.0, 0.0, 1), 4);
+        // Calm again: demand 0.8 < 4×0.7 → back to 1.
+        assert_eq!(c.tick(80.0, 0.0, 4), 1);
+    }
+
+    #[test]
+    fn dead_band_holds_steady() {
+        let mut c = ShardController::new(cfg());
+        // demand 1.5 with 2 shards: desired 2 == current, no move.
+        assert_eq!(c.tick(150.0, 0.0, 2), 2);
+        // demand 1.5 < 2×1.0 scale_up bar and > 2×0.7 scale_down bar:
+        // even if desired differed, the bands would hold it.
+        assert_eq!(c.tick(150.0, 0.0, 2), 2);
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_resizes() {
+        let mut c = ShardController::new(ControllerConfig {
+            cooldown_windows: 2,
+            ..cfg()
+        });
+        assert_eq!(c.tick(350.0, 0.0, 1), 4, "first resize fires");
+        // Next two windows are inside the cooldown: recommendation
+        // sticks to current even though demand says shrink.
+        assert_eq!(c.tick(10.0, 0.0, 4), 4);
+        assert_eq!(c.tick(10.0, 0.0, 4), 4);
+        // Cooldown over → the (fully-smoothed, alpha=1) trough wins.
+        assert_eq!(c.tick(10.0, 0.0, 4), 1);
+    }
+
+    #[test]
+    fn occupancy_signal_binds_when_rate_is_low() {
+        let mut c = ShardController::new(ControllerConfig {
+            shard_capacity_entries: 100.0,
+            ..cfg()
+        });
+        // Rate says 0.1 shard, occupancy says 2.5 shards → grow to 3.
+        assert_eq!(c.tick(10.0, 250.0, 1), 3);
+    }
+
+    #[test]
+    fn bounds_are_respected() {
+        let mut c = ShardController::new(cfg());
+        assert_eq!(c.tick(1e9, 0.0, 1), 4, "capped at max_shards");
+        let mut c = ShardController::new(cfg());
+        assert_eq!(c.tick(0.0, 0.0, 3), 1, "floored at min_shards");
+    }
+
+    #[test]
+    fn ewma_smooths_single_window_spikes() {
+        let mut c = ShardController::new(ControllerConfig {
+            ewma_alpha: 0.2,
+            ..cfg()
+        });
+        // One spiky window barely moves the smoothed rate:
+        // ewma = 0.2×350 = 70 → demand 0.7 → stay at 1.
+        assert_eq!(c.tick(350.0, 0.0, 1), 1);
+    }
+}

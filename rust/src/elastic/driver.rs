@@ -1,0 +1,447 @@
+//! Elastic replay driver — controller-in-the-loop resharding over an
+//! ordered trace (DESIGN.md §13.4).
+//!
+//! The driver serves a trace through a live [`Coordinator`] exactly
+//! like the sharded replay harness, but at every clique-generation
+//! window boundary it feeds the window's request rate and the fleet's
+//! cache occupancy to a [`ShardController`] and, when the recommended
+//! fleet size differs from the current one, performs a stateful
+//! [`Coordinator::resize`]. Cache contents, cost ledgers-as-epochs,
+//! clique-gen state, and the open window all carry across each resize,
+//! so the merged ledger equals a never-resized run's ledger exactly —
+//! what elasticity changes is only the [`RentalModel`] bill, which is
+//! charged at *actual shard-seconds* of trace time per fleet-size
+//! epoch plus per-window overload.
+//!
+//! Window boundaries are tracked by counting serves against
+//! `cfg.batch_size` — the same rule the coordinator's own
+//! [`WindowBatcher`](crate::coordinator::WindowBatcher) applies, and
+//! the driver starts from an empty batcher, so the two stay in lockstep
+//! by construction (a resize carries the open window over, keeping the
+//! alignment across epochs).
+//!
+//! Static baselines reuse the same loop with a pinned controller
+//! ([`pinned_controller`]): identical serving, identical billing, zero
+//! resizes — so "elastic beats always-min and always-max" is an
+//! apples-to-apples comparison on one code path.
+
+use std::time::Instant;
+
+use crate::config::AkpcConfig;
+use crate::coordinator::{Coordinator, MetricsSnapshot, TickMode};
+use crate::coordinator::ServeRequest;
+use crate::runtime::CrmEngine;
+use crate::trace::model::Request;
+use crate::util::Json;
+
+use super::billing::{ElasticCost, RentalModel};
+use super::controller::{ControllerConfig, ShardController};
+
+/// One fleet-size change performed by the driver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResizeEvent {
+    /// Window ordinal (1-based) whose close triggered the resize.
+    pub window: u64,
+    /// Trace time of the window close (= the handoff quiesce time).
+    pub time: f64,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// What an elastic (or pinned-static) replay produced.
+#[derive(Debug, Clone)]
+pub struct ElasticOutcome {
+    /// Epoch-merged metrics: ledger/served/latency accumulate across
+    /// resizes; clique-gen counters carry inside the handoffs.
+    pub metrics: MetricsSnapshot,
+    /// Ledger + rental + overload bill.
+    pub cost: ElasticCost,
+    /// Every resize, in order. Empty for pinned-static runs.
+    pub resizes: Vec<ResizeEvent>,
+    /// Σ shards × epoch span, in trace-time units (what rental bills).
+    pub shard_seconds: f64,
+    /// Fleet size when the trace ended.
+    pub final_shards: usize,
+    /// Largest fleet size held at any point.
+    pub peak_shards: usize,
+    /// Wall-clock replay duration.
+    pub wall_secs: f64,
+}
+
+/// The elasticity-specific slice of an outcome — what
+/// [`RunOutcome`](crate::run::RunOutcome) embeds so the unified report
+/// can show the bill and the resize log without duplicating the
+/// metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct ElasticReport {
+    pub cost: ElasticCost,
+    pub resizes: Vec<ResizeEvent>,
+    pub shard_seconds: f64,
+    pub final_shards: usize,
+    pub peak_shards: usize,
+}
+
+impl ElasticReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_cost", Json::Num(self.cost.total())),
+            ("ledger_total", Json::Num(self.cost.ledger_total)),
+            ("rental", Json::Num(self.cost.rental)),
+            ("overload", Json::Num(self.cost.overload)),
+            ("shard_seconds", Json::Num(self.shard_seconds)),
+            ("final_shards", Json::Num(self.final_shards as f64)),
+            ("peak_shards", Json::Num(self.peak_shards as f64)),
+            (
+                "resizes",
+                Json::Arr(
+                    self.resizes
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("window", Json::Num(r.window as f64)),
+                                ("time", Json::Num(r.time)),
+                                ("from", Json::Num(r.from as f64)),
+                                ("to", Json::Num(r.to as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl ElasticOutcome {
+    /// The embeddable elasticity slice (cost + resize log).
+    pub fn report(&self) -> ElasticReport {
+        ElasticReport {
+            cost: self.cost,
+            resizes: self.resizes.clone(),
+            shard_seconds: self.shard_seconds,
+            final_shards: self.final_shards,
+            peak_shards: self.peak_shards,
+        }
+    }
+
+    /// Compact one-line summary for logs and the CLI table.
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: total={:.2} (ledger={:.2} rental={:.2} overload={:.2}) \
+             shard_secs={:.2} resizes={} peak={} final={} served={}",
+            self.cost.total(),
+            self.cost.ledger_total,
+            self.cost.rental,
+            self.cost.overload,
+            self.shard_seconds,
+            self.resizes.len(),
+            self.peak_shards,
+            self.final_shards,
+            self.metrics.served,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("elastic", self.report().to_json()),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// A controller pinned to exactly `n` shards — the static baseline.
+/// `tick` can never leave `[n, n]`, so the driver performs no resizes.
+pub fn pinned_controller(n: usize) -> ControllerConfig {
+    ControllerConfig {
+        min_shards: n.max(1),
+        max_shards: n.max(1),
+        ..ControllerConfig::default()
+    }
+}
+
+/// Replay `requests` (time-ordered) through an elastic coordinator,
+/// resizing at window boundaries on the controller's recommendation.
+/// The fleet starts at `ctrl.min_shards`.
+///
+/// # Errors
+///
+/// Fails on an empty trace, a coordinator spawn/serve failure, or a
+/// failed handoff.
+pub fn drive_elastic(
+    cfg: &AkpcConfig,
+    engine: CrmEngine,
+    requests: &[Request],
+    ctrl: ControllerConfig,
+    rental: RentalModel,
+) -> anyhow::Result<ElasticOutcome> {
+    anyhow::ensure!(
+        !requests.is_empty(),
+        "elastic replay needs a non-empty trace"
+    );
+    let wall = Instant::now();
+    let batch = cfg.batch_size.max(1);
+    let mut controller = ShardController::new(ctrl);
+    let mut coord = Coordinator::start_with(
+        cfg.clone(),
+        engine,
+        controller.config().min_shards,
+        TickMode::Sync,
+    )?;
+    let mut n_shards = coord.n_shards();
+    let mut peak_shards = n_shards;
+
+    let t_first = requests[0].time;
+    // Epochs for rental: one per fleet size, closed at each resize.
+    let mut epoch_start = t_first;
+    let mut shard_seconds = 0.0;
+    // Windows for rate + overload: closed every `batch` serves.
+    let mut window_start = t_first;
+    let mut in_window = 0usize;
+    let mut window_no = 0u64;
+
+    let mut priors: Vec<MetricsSnapshot> = Vec::new();
+    let mut resizes: Vec<ResizeEvent> = Vec::new();
+    let mut cost = ElasticCost::default();
+
+    for r in requests {
+        coord.serve(ServeRequest {
+            items: r.items.clone(),
+            server: r.server,
+            time: Some(r.time),
+        })?;
+        in_window += 1;
+        if in_window < batch {
+            continue;
+        }
+        // Window closed inside the coordinator on that serve; observe it.
+        window_no += 1;
+        let t_end = r.time;
+        let span = (t_end - window_start).max(0.0);
+        cost.overload += rental.overload(n_shards, in_window, span);
+        // Zero-span windows (bursts at one timestamp) read as infinite
+        // rate; cap to "requests per minimum resolvable span" so the
+        // EWMA saturates instead of poisoning itself with infinity.
+        let rate = in_window as f64 / span.max(1e-9);
+        let occupancy: f64 = coord
+            .metrics()?
+            .per_shard
+            .iter()
+            .map(|s| s.live_entries as f64)
+            .sum();
+        let desired = controller.tick(rate, occupancy, n_shards);
+        if desired != n_shards {
+            shard_seconds += n_shards as f64 * (t_end - epoch_start).max(0.0);
+            let (next, retired) = coord.resize(desired)?;
+            priors.push(retired.into_handoff_epoch());
+            resizes.push(ResizeEvent {
+                window: window_no,
+                time: t_end,
+                from: n_shards,
+                to: desired,
+            });
+            coord = next;
+            n_shards = desired;
+            peak_shards = peak_shards.max(n_shards);
+            epoch_start = t_end;
+        }
+        window_start = t_end;
+        in_window = 0;
+    }
+
+    let t_last = requests[requests.len() - 1].time;
+    if in_window > 0 {
+        // Trailing partial window: bill its overload and force the tick,
+        // mirroring the sharded replay harness's end-of-trace flush.
+        cost.overload += rental.overload(n_shards, in_window, (t_last - window_start).max(0.0));
+        coord.flush_window()?;
+    }
+    shard_seconds += n_shards as f64 * (t_last - epoch_start).max(0.0);
+    // `shard_seconds` already carries the per-epoch shard multiplier, so
+    // bill it as 1 "shard" held for that many seconds.
+    cost.rental = rental.rental(1, shard_seconds);
+
+    coord.quiesce();
+    let last = coord.shutdown();
+    let metrics = MetricsSnapshot::merge_epochs(&priors, last);
+    cost.ledger_total = metrics.ledger.total();
+
+    Ok(ElasticOutcome {
+        metrics,
+        cost,
+        resizes,
+        shard_seconds,
+        final_shards: n_shards,
+        peak_shards,
+        wall_secs: wall.elapsed().as_secs_f64(),
+    })
+}
+
+/// Replay with a fleet pinned at `n_shards` — the static baseline,
+/// billed by the same [`RentalModel`] over the same loop.
+pub fn drive_static(
+    cfg: &AkpcConfig,
+    engine: CrmEngine,
+    requests: &[Request],
+    n_shards: usize,
+    rental: RentalModel,
+) -> anyhow::Result<ElasticOutcome> {
+    drive_elastic(cfg, engine, requests, pinned_controller(n_shards), rental)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 16,
+            n_servers: 8,
+            batch_size: 10,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    /// Calm/spike/calm trace: `calm` windows at 10 req per time unit,
+    /// `spike` windows at 400, then `calm` again. Request times are
+    /// spaced so each 10-request window spans 1.0 (calm) or 0.025
+    /// (spike) trace-time units.
+    fn flash_crowd(calm: usize, spike: usize) -> Vec<Request> {
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        let mut push = |out: &mut Vec<Request>, t: &mut f64, windows: usize, dt: f64| {
+            for i in 0..windows * 10 {
+                *t += dt;
+                out.push(Request::new(
+                    vec![1, 2, (i % 3) as u32 + 3],
+                    (i % 8) as u32,
+                    *t,
+                ));
+            }
+        };
+        push(&mut out, &mut t, calm, 0.1);
+        push(&mut out, &mut t, spike, 0.0025);
+        push(&mut out, &mut t, calm, 0.1);
+        out
+    }
+
+    fn ctrl() -> ControllerConfig {
+        ControllerConfig {
+            min_shards: 1,
+            max_shards: 4,
+            shard_capacity_rps: 20.0,
+            shard_capacity_entries: 1e12,
+            ewma_alpha: 1.0,
+            scale_up_frac: 1.0,
+            scale_down_frac: 0.7,
+            cooldown_windows: 0,
+        }
+    }
+
+    #[test]
+    fn pinned_controller_never_resizes() {
+        let reqs = flash_crowd(2, 2);
+        let out = drive_static(&cfg(), CrmEngine::Native, &reqs, 2, RentalModel::default())
+            .unwrap();
+        assert!(out.resizes.is_empty());
+        assert_eq!(out.final_shards, 2);
+        assert_eq!(out.peak_shards, 2);
+        assert_eq!(out.metrics.served, reqs.len() as u64);
+        // Pinned fleet: shard-seconds = 2 × whole trace span.
+        let span = reqs[reqs.len() - 1].time - reqs[0].time;
+        assert!((out.shard_seconds - 2.0 * span).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elastic_scales_with_the_flash_crowd_and_back() {
+        let reqs = flash_crowd(3, 3);
+        let out = drive_elastic(
+            &cfg(),
+            CrmEngine::Native,
+            &reqs,
+            ctrl(),
+            RentalModel::default(),
+        )
+        .unwrap();
+        assert!(
+            out.resizes.iter().any(|r| r.to > r.from),
+            "spike must scale up: {:?}",
+            out.resizes
+        );
+        assert!(
+            out.resizes.iter().any(|r| r.to < r.from),
+            "trough must scale back down: {:?}",
+            out.resizes
+        );
+        assert_eq!(out.final_shards, 1, "ends calm at min_shards");
+        assert!(out.peak_shards > 1);
+        assert_eq!(out.metrics.served, reqs.len() as u64);
+    }
+
+    #[test]
+    fn ledger_is_invariant_under_elasticity() {
+        // The handoff is exact and the ledger placement-invariant, so
+        // the elastic run's merged ledger must equal a static run's to
+        // float round-off — only rental/overload may differ.
+        let reqs = flash_crowd(2, 3);
+        let elastic = drive_elastic(
+            &cfg(),
+            CrmEngine::Native,
+            &reqs,
+            ctrl(),
+            RentalModel::default(),
+        )
+        .unwrap();
+        assert!(!elastic.resizes.is_empty(), "test needs real resizes");
+        let fixed =
+            drive_static(&cfg(), CrmEngine::Native, &reqs, 1, RentalModel::default()).unwrap();
+        let (a, b) = (elastic.cost.ledger_total, fixed.cost.ledger_total);
+        assert!(
+            (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+            "elastic ledger {a} != static ledger {b}"
+        );
+        assert_eq!(elastic.metrics.served, fixed.metrics.served);
+        assert_eq!(elastic.metrics.windows, fixed.metrics.windows);
+    }
+
+    #[test]
+    fn shard_seconds_partition_the_trace_span() {
+        // Epoch spans must tile [t_first, t_last] exactly, whatever the
+        // resize schedule: Σ (span × shards) ≥ span_total × min and
+        // the per-epoch spans sum to the trace span.
+        let reqs = flash_crowd(2, 2);
+        let out = drive_elastic(
+            &cfg(),
+            CrmEngine::Native,
+            &reqs,
+            ctrl(),
+            RentalModel::default(),
+        )
+        .unwrap();
+        let span = reqs[reqs.len() - 1].time - reqs[0].time;
+        // Reconstruct Σ spans from the resize log.
+        let mut t_prev = reqs[0].time;
+        let mut n_prev = 1usize;
+        let mut expect = 0.0;
+        for r in &out.resizes {
+            expect += n_prev as f64 * (r.time - t_prev);
+            t_prev = r.time;
+            n_prev = r.to;
+        }
+        expect += n_prev as f64 * (reqs[reqs.len() - 1].time - t_prev);
+        assert!((out.shard_seconds - expect).abs() < 1e-9);
+        assert!(out.shard_seconds >= span - 1e-9, "at least 1 shard always");
+    }
+
+    #[test]
+    fn empty_trace_is_rejected() {
+        assert!(drive_elastic(
+            &cfg(),
+            CrmEngine::Native,
+            &[],
+            ctrl(),
+            RentalModel::default()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! Elastic shard autoscaling (DESIGN.md §13).
+//!
+//! The coordinator's fleet size is not fixed: this module holds the
+//! pieces that let it grow and shrink mid-run with *exact* state
+//! handoff — the merged cost ledger of an elastic run equals a
+//! never-resized run's ledger to float round-off, so elasticity is a
+//! pure infrastructure-cost play:
+//!
+//! * [`Placement`] — the one `server → shard` ownership rule, shared
+//!   by request routing, the replay harnesses, and the handoff
+//!   partitioner so they can never disagree;
+//! * [`ShardController`] / [`ControllerConfig`] — the volume-tracking
+//!   autoscale policy (EWMA demand, hysteresis bands, cooldown);
+//! * [`RentalModel`] / [`ElasticCost`] — shard-second billing, the
+//!   cost axis the ledger cannot see;
+//! * [`drive_elastic`] / [`drive_static`] — the controller-in-the-loop
+//!   replay driver and its pinned-fleet baseline.
+//!
+//! The resharding protocol itself (quiesce → export → partition →
+//! resume) lives on [`Coordinator`](crate::coordinator::Coordinator)
+//! (`decommission` / `resume` / `resize`); this module supplies the
+//! policy and the accounting around it.
+
+pub mod billing;
+pub mod controller;
+pub mod driver;
+pub mod placement;
+
+pub use billing::{ElasticCost, RentalModel};
+pub use controller::{ControllerConfig, ShardController};
+pub use driver::{
+    drive_elastic, drive_static, pinned_controller, ElasticOutcome, ElasticReport, ResizeEvent,
+};
+pub use placement::Placement;

@@ -1,0 +1,79 @@
+//! [`Placement`] — the single `server → shard` ownership rule.
+//!
+//! Before this type existed the `server % N` rule was written out by
+//! hand in three places (coordinator routing, `sim::replay_sharded*`'s
+//! per-shard partitioning, and the scenario replay's parallel driver).
+//! That duplication was harmless while N was fixed at startup; under
+//! elastic resharding it becomes a correctness hazard — if routing and
+//! state partitioning ever disagree about who owns a server, a resize
+//! silently splits one server's cache across two shards and the
+//! retention rule (Algorithm 6) loses its global view. Both the static
+//! and elastic paths now go through this one type, so the handoff
+//! partitioner and the request router cannot drift apart.
+
+/// The modular placement rule: server `s` is owned by shard
+/// `s mod n_shards`. Construction clamps `n_shards ≥ 1` exactly like
+/// `Coordinator::start_with`, so a `Placement` is always total — every
+/// server maps to some shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    n_shards: usize,
+}
+
+impl Placement {
+    /// Placement over `n_shards` shards (clamped to at least 1).
+    pub fn new(n_shards: usize) -> Self {
+        Self {
+            n_shards: n_shards.max(1),
+        }
+    }
+
+    /// Number of shards this placement distributes over.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The shard that owns `server`'s cache state and serves its
+    /// requests.
+    pub fn shard_of(&self, server: u32) -> usize {
+        server as usize % self.n_shards
+    }
+
+    /// Whether `shard` owns `server` under this placement.
+    pub fn owns(&self, shard: usize, server: u32) -> bool {
+        self.shard_of(server) == shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_total_and_modular() {
+        let p = Placement::new(4);
+        assert_eq!(p.n_shards(), 4);
+        for server in 0..64u32 {
+            let shard = p.shard_of(server);
+            assert!(shard < 4);
+            assert_eq!(shard, server as usize % 4);
+            assert!(p.owns(shard, server));
+            assert!(!p.owns((shard + 1) % 4, server));
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let p = Placement::new(0);
+        assert_eq!(p.n_shards(), 1);
+        assert_eq!(p.shard_of(12345), 0);
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let p = Placement::new(1);
+        for server in 0..32u32 {
+            assert_eq!(p.shard_of(server), 0);
+        }
+    }
+}

@@ -35,7 +35,8 @@
 //! | [`serve`] | live serving daemon: TCP ingest, admission/reorder, `/metrics`, hot-reload, graceful drain (DESIGN.md §12) |
 //! | [`sim`] | event-driven CDN simulator, sharded replay drivers (materialized + streamed) + reports |
 //! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
-//! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker |
+//! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker, elastic resize |
+//! | [`elastic`] | shard autoscaler: placement rule, volume-tracking controller, shard-second billing, elastic replay driver (DESIGN.md §13) |
 //! | [`bench`] | the paper's evaluation harness (every table & figure, shard scaling, memory baseline) |
 //!
 //! ## Bounded-memory replays (DESIGN.md §10)
@@ -72,6 +73,7 @@ pub mod clique;
 pub mod config;
 pub mod coordinator;
 pub mod crm;
+pub mod elastic;
 pub mod run;
 pub mod runtime;
 pub mod scenario;

@@ -9,7 +9,7 @@
 //!                engine (DESIGN.md §10) instead of materializing
 //!   exp <id>     regenerate a paper table/figure
 //!                (table1 fig5 fig6a fig6b fig7a fig7b fig7c fig8a fig8b
-//!                 fig8c fig9a fig9b adversarial all)
+//!                 fig8c fig9a fig9b elastic adversarial all)
 //!   scenario     Scenario Lab: phased non-stationary workload replays
 //!                (list | suite | <name> | <spec.toml>)
 //!   bench        tracked hot-path perf baseline; `--json` writes the
@@ -163,7 +163,7 @@ fn usage() {
          \u{20}          [--shards N [--mode <ordered|parallel>]]\n\
          \u{20}          [--stream [--chunk N]]   (bounded-memory replay)\n\
          exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
-         \u{20}           fig9a|fig9b|adversarial|ablations|shards|all>\n\
+         \u{20}           fig9a|fig9b|elastic|adversarial|ablations|shards|all>\n\
          scenario:  <list|suite|name|spec.toml> [--policy P] [--scale F]\n\
          \u{20}          [--shards N [--mode <ordered|parallel>]] [--out <dir>]\n\
          bench:     [--json] [--scale F] [--out <file>]   (default BENCH_5.json)\n\
@@ -511,6 +511,22 @@ fn run_experiment(
                 r.n_shards, r.requests_per_sec, r.total_cost, r.p99_latency_us
             );
         }
+        matched = true;
+    }
+    if all || id == "elastic" {
+        // Autoscale sweep: elastic vs always-min vs always-max over the
+        // three autoscale scenarios, rental at actual shard-seconds.
+        let scale = (opts.n_requests as f64 / 200_000.0).clamp(0.01, 1.0);
+        let sweep = akpc::bench::elastic_suite(
+            cfg,
+            &akpc::bench::AUTOSCALE_SCENARIOS,
+            1,
+            8,
+            opts.engine,
+            scale,
+        )?;
+        sweep.print();
+        dump("elastic", sweep.to_json())?;
         matched = true;
     }
     if all || id == "adversarial" {

@@ -221,6 +221,9 @@ pub fn drive_phased_sharded(
                 }
             }
             ReplayMode::Parallel => {
+                // Partition by the coordinator's own Placement so this
+                // harness can never disagree with shard ownership.
+                let placement = coord.placement();
                 let mut handles = Vec::with_capacity(n_shards);
                 for shard in 0..n_shards {
                     let client = coord.client();
@@ -228,7 +231,7 @@ pub fn drive_phased_sharded(
                         .trace
                         .requests
                         .iter()
-                        .filter(|r| r.server as usize % n_shards == shard)
+                        .filter(|r| placement.owns(shard, r.server))
                         .cloned()
                         .collect();
                     handles.push(std::thread::spawn(move || -> anyhow::Result<()> {

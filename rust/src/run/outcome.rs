@@ -5,6 +5,7 @@
 
 use crate::cache::CostLedger;
 use crate::coordinator::MetricsSnapshot;
+use crate::elastic::{ElasticOutcome, ElasticReport};
 use crate::scenario::{PhaseCost, ScenarioRun};
 use crate::sim::{ReplayMode, ShardedReport, SimReport};
 use crate::util::{Histogram, Json};
@@ -33,6 +34,8 @@ pub struct RunOutcome {
     /// Full coordinator metrics (per-shard ledgers, latency quantiles);
     /// sharded drivers only.
     pub metrics: Option<MetricsSnapshot>,
+    /// Elasticity report (bill + resize log); elastic driver only.
+    pub elastic: Option<ElasticReport>,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
 }
@@ -52,6 +55,9 @@ impl RunOutcome {
     }
 
     fn driver_label(&self) -> String {
+        if let Some(e) = &self.elastic {
+            return format!("elastic(peak={},final={})", e.peak_shards, e.final_shards);
+        }
         match (self.n_shards, self.mode) {
             (0, _) => "single-leader".to_string(),
             (n, Some(m)) => format!("{n}-shard/{}", format!("{m:?}").to_lowercase()),
@@ -111,6 +117,13 @@ impl RunOutcome {
                     None => Json::Null,
                 },
             ),
+            (
+                "elastic",
+                match &self.elastic {
+                    Some(e) => e.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("wall_secs", Json::Num(self.wall_secs)),
             ("requests_per_sec", Json::Num(self.requests_per_sec)),
         ])
@@ -128,6 +141,7 @@ impl RunOutcome {
             phases: Vec::new(),
             clique_hist: rep.clique_hist,
             metrics: None,
+            elastic: None,
             wall_secs: rep.wall_secs,
             requests_per_sec: rep.requests_per_sec,
         }
@@ -145,6 +159,7 @@ impl RunOutcome {
             phases: Vec::new(),
             clique_hist: Some(rep.metrics.clique_hist.clone()),
             metrics: Some(rep.metrics),
+            elastic: None,
             wall_secs: rep.wall_secs,
             requests_per_sec: rep.requests_per_sec,
         }
@@ -164,6 +179,7 @@ impl RunOutcome {
             phases: run.phases,
             clique_hist,
             metrics: None,
+            elastic: None,
             wall_secs: run.wall_secs,
             requests_per_sec,
         }
@@ -186,7 +202,29 @@ impl RunOutcome {
             phases: run.phases,
             clique_hist: Some(metrics.clique_hist.clone()),
             metrics: Some(metrics),
+            elastic: None,
             wall_secs: run.wall_secs,
+            requests_per_sec,
+        }
+    }
+
+    /// From an elastic replay ([`crate::elastic::drive_elastic`]):
+    /// ledger and metrics are the epoch-merged totals; the bill and the
+    /// resize log land in `elastic`.
+    pub fn from_elastic(out: ElasticOutcome, workload: String) -> Self {
+        let requests_per_sec = out.metrics.served as f64 / out.wall_secs.max(1e-12);
+        Self {
+            policy: out.metrics.policy.clone(),
+            workload,
+            n_shards: out.final_shards,
+            mode: None,
+            n_requests: out.metrics.served as usize,
+            ledger: out.metrics.ledger.clone(),
+            phases: Vec::new(),
+            clique_hist: Some(out.metrics.clique_hist.clone()),
+            elastic: Some(out.report()),
+            metrics: Some(out.metrics),
+            wall_secs: out.wall_secs,
             requests_per_sec,
         }
     }
@@ -213,6 +251,7 @@ mod tests {
             phases: Vec::new(),
             clique_hist: None,
             metrics: None,
+            elastic: None,
             wall_secs: 0.5,
             requests_per_sec: 200.0,
         }

@@ -23,6 +23,10 @@ pub struct PolicyCaps {
     /// `prepare` must see the full trace up front (clairvoyant/offline
     /// policies; meaningless in a live serving deployment).
     pub needs_offline_trace: bool,
+    /// The elastic replay driver can resize this policy's coordinator
+    /// mid-run with exact state handoff (DESIGN.md §13). Implies
+    /// `supports_sharded` — the handoff is a coordinator operation.
+    pub supports_elastic: bool,
 }
 
 impl PolicyCaps {
@@ -35,6 +39,9 @@ impl PolicyCaps {
         }];
         if self.supports_sharded {
             parts.push("sharded");
+        }
+        if self.supports_elastic {
+            parts.push("elastic");
         }
         parts.join("+")
     }
@@ -175,6 +182,7 @@ impl PolicyRegistry {
                 "Adaptive K-PackCache (proposed): K-cliques with CS + ACM",
                 PolicyCaps {
                     supports_sharded: true,
+                    supports_elastic: true,
                     ..PolicyCaps::default()
                 },
                 Box::new(|cfg: &AkpcConfig, engine: EngineChoice| -> Box<dyn CachePolicy> {
@@ -379,10 +387,24 @@ mod tests {
     fn capability_flags_match_policy_nature() {
         let reg = PolicyRegistry::builtin();
         assert!(reg.get("akpc").unwrap().caps().supports_sharded);
+        assert!(reg.get("akpc").unwrap().caps().supports_elastic);
         assert!(!reg.get("no-packing").unwrap().caps().supports_sharded);
+        assert!(!reg.get("no-packing").unwrap().caps().supports_elastic);
         assert!(reg.get("opt").unwrap().caps().needs_offline_trace);
         assert!(reg.get("dp-greedy").unwrap().caps().needs_offline_trace);
-        assert_eq!(reg.get("akpc").unwrap().caps().summary(), "online+sharded");
+        assert_eq!(
+            reg.get("akpc").unwrap().caps().summary(),
+            "online+sharded+elastic"
+        );
         assert_eq!(reg.get("opt").unwrap().caps().summary(), "offline-trace");
+        // Elastic implies sharded for every entry (the handoff is a
+        // coordinator operation).
+        for e in reg.iter() {
+            assert!(
+                !e.caps().supports_elastic || e.caps().supports_sharded,
+                "`{}` claims elastic without sharded",
+                e.name()
+            );
+        }
     }
 }

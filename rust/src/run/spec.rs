@@ -11,6 +11,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::config::AkpcConfig;
+use crate::elastic::{ControllerConfig, RentalModel};
 use crate::scenario::{CompiledScenario, ScenarioSpec};
 use crate::sim::ReplayMode;
 use crate::trace::generator::{self, GeneratorParams, TraceKind};
@@ -121,13 +122,21 @@ impl std::fmt::Debug for SourceHandle {
 }
 
 /// How the run is executed.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Driver {
     /// In-process simulator loop (any policy, incl. offline baselines).
     SingleLeader,
     /// The sharded online coordinator (policies with the
     /// `supports_sharded` capability).
     Sharded { n_shards: usize, mode: ReplayMode },
+    /// The elastic coordinator (policies with the `supports_elastic`
+    /// capability): the fleet starts at `ctrl.min_shards` and the
+    /// controller resizes it at window boundaries with exact state
+    /// handoff; `rental` prices the shard-seconds (DESIGN.md §13).
+    Elastic {
+        ctrl: ControllerConfig,
+        rental: RentalModel,
+    },
 }
 
 /// Map a CLI dataset name to a generator kind.
@@ -296,6 +305,11 @@ impl RunSpec {
         self.driver(Driver::Sharded { n_shards, mode })
     }
 
+    /// Sugar: elastic driver (autoscaled fleet, shard-second billing).
+    pub fn elastic(self, ctrl: ControllerConfig, rental: RentalModel) -> Self {
+        self.driver(Driver::Elastic { ctrl, rental })
+    }
+
     /// Select the policy by registry name (default: `akpc`).
     pub fn policy(mut self, name: impl Into<String>) -> Self {
         self.policy = name.into();
@@ -348,6 +362,28 @@ impl RunSpec {
                     capable.join(", ")
                 );
             }
+        }
+        if let Driver::Elastic { .. } = self.driver {
+            if !entry.caps().supports_elastic {
+                let capable: Vec<&str> = registry
+                    .iter()
+                    .filter(|e| e.caps().supports_elastic)
+                    .map(|e| e.name())
+                    .collect();
+                anyhow::bail!(
+                    "policy `{}` does not support the elastic driver \
+                     (elastic-capable: {})",
+                    entry.name(),
+                    capable.join(", ")
+                );
+            }
+            anyhow::ensure!(
+                !matches!(self.workload, Some(Workload::Streamed { .. })),
+                "the elastic driver replays a materialized trace (the \
+                 controller re-reads window boundaries); use a trace, \
+                 generated, or scenario workload — live elastic serving \
+                 is the daemon's `POST /reload` path"
+            );
         }
         let workload = self.workload.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
@@ -500,6 +536,13 @@ impl PreparedRun {
                 entry.name()
             );
         }
+        if matches!(self.driver, Driver::Elastic { .. }) {
+            anyhow::ensure!(
+                entry.caps().supports_elastic,
+                "policy `{}` does not support the elastic driver",
+                entry.name()
+            );
+        }
         self.policy = entry.name().to_string();
         Ok(self)
     }
@@ -609,6 +652,36 @@ impl PreparedRun {
                     mode,
                 )?;
                 RunOutcome::from_sharded(rep, h.meta().name.clone())
+            }
+            (Driver::Elastic { ctrl, rental }, WorkloadData::Trace(t)) => {
+                let out = crate::elastic::drive_elastic(
+                    &self.cfg,
+                    self.engine.to_engine(),
+                    &t.requests,
+                    ctrl,
+                    rental,
+                )?;
+                RunOutcome::from_elastic(out, t.name.clone())
+            }
+            (Driver::Elastic { ctrl, rental }, WorkloadData::Scenario(sc)) => {
+                // The controller reacts to the *global* timeline, so the
+                // phases replay as one flat trace; per-phase cost deltas
+                // are a static-driver concern.
+                let t = sc.concat_trace();
+                let out = crate::elastic::drive_elastic(
+                    &self.cfg,
+                    self.engine.to_engine(),
+                    &t.requests,
+                    ctrl,
+                    rental,
+                )?;
+                RunOutcome::from_elastic(out, sc.name.clone())
+            }
+            (Driver::Elastic { .. }, WorkloadData::Stream(_)) => {
+                anyhow::bail!(
+                    "elastic driver cannot replay a stream workload \
+                     (validate() rejects this combination)"
+                )
             }
         };
         obs.on_done(&outcome);
@@ -741,6 +814,65 @@ mod tests {
         spec.execute(&reg).unwrap();
         let err = spec.execute(&reg).unwrap_err().to_string();
         assert!(err.contains("already consumed"), "{err}");
+    }
+
+    #[test]
+    fn elastic_unsupported_policy_rejected() {
+        let reg = PolicyRegistry::builtin();
+        let err = RunSpec::new()
+            .config(small_cfg())
+            .generated(TraceKind::Netflix, 100)
+            .policy("no-packing")
+            .elastic(
+                crate::elastic::ControllerConfig::default(),
+                crate::elastic::RentalModel::default(),
+            )
+            .validate(&reg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not support the elastic driver"), "{err}");
+        assert!(err.contains("akpc"), "{err}");
+    }
+
+    #[test]
+    fn elastic_rejects_stream_workloads() {
+        let reg = PolicyRegistry::builtin();
+        let err = RunSpec::new()
+            .config(small_cfg())
+            .stream_generated(TraceKind::Netflix, 100)
+            .elastic(
+                crate::elastic::ControllerConfig::default(),
+                crate::elastic::RentalModel::default(),
+            )
+            .validate(&reg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("materialized trace"), "{err}");
+    }
+
+    #[test]
+    fn elastic_run_reports_bill_and_matches_request_count() {
+        let reg = PolicyRegistry::builtin();
+        let out = RunSpec::new()
+            .config(small_cfg())
+            .generated(TraceKind::Netflix, 400)
+            .elastic(
+                crate::elastic::ControllerConfig {
+                    min_shards: 2,
+                    max_shards: 2,
+                    ..Default::default()
+                },
+                crate::elastic::RentalModel::default(),
+            )
+            .execute(&reg)
+            .unwrap();
+        assert_eq!(out.ledger.requests, 400);
+        let e = out.elastic.as_ref().expect("elastic driver attaches a report");
+        assert!(e.resizes.is_empty(), "pinned [2,2] fleet cannot resize");
+        assert_eq!(out.n_shards, 2);
+        assert!(e.cost.rental > 0.0, "rental must bill shard-seconds");
+        assert!(out.row().contains("elastic(peak=2,final=2)"));
+        crate::util::json::parse(&out.to_json().to_string()).unwrap();
     }
 
     #[test]

@@ -268,7 +268,9 @@ mod stub {
 #[cfg(not(feature = "xla"))]
 pub use stub::XlaCrmBuilder;
 
-/// Engine selection for the CLI / experiments.
+/// Engine selection for the CLI / experiments. `Copy` so coordinators
+/// can remember their engine choice across elastic resizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CrmEngine {
     Native,
     Xla,

@@ -160,6 +160,89 @@ const BUILTINS: &[(&str, &str, &str)] = &[
         "#,
     ),
     (
+        "autoscale-flash-crowd",
+        "flash crowd at 6x arrival rate: the elastic scale-up stress",
+        r#"
+        name = "autoscale-flash-crowd"
+        seed = 108
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "calm"
+        generator = "netflix"
+        requests = 20000
+
+        [phase]
+        label = "spike"
+        generator = "netflix"
+        requests = 30000
+        rate_scale = 6.0
+        flash_frac = 0.35
+        flash_items = 4
+
+        [phase]
+        label = "cooldown"
+        generator = "netflix"
+        requests = 20000
+        "#,
+    ),
+    (
+        "overnight-trough",
+        "arrival rate falls to a quarter overnight: the scale-down stress",
+        r#"
+        name = "overnight-trough"
+        seed = 109
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "evening"
+        generator = "netflix"
+        requests = 20000
+
+        [phase]
+        label = "overnight"
+        generator = "netflix"
+        requests = 20000
+        rate_scale = 0.25
+
+        [phase]
+        label = "morning"
+        generator = "netflix"
+        requests = 20000
+        "#,
+    ),
+    (
+        "hot-shard-skew",
+        "traffic collapses onto a small server block: the rebalance stress",
+        r#"
+        name = "hot-shard-skew"
+        seed = 110
+        n_items = 60
+        n_servers = 600
+
+        [phase]
+        label = "balanced"
+        generator = "netflix"
+        requests = 20000
+
+        [phase]
+        label = "skewed"
+        generator = "netflix"
+        requests = 30000
+        skew_frac = 0.8
+        skew_servers = 40
+        skew_start_frac = 0.1
+        skew_end_frac = 0.9
+
+        [phase]
+        label = "rebalanced"
+        generator = "netflix"
+        requests = 20000
+        "#,
+    ),
+    (
         "smoke",
         "tiny three-phase mix exercising every driver path (CI)",
         r#"
@@ -197,7 +280,7 @@ pub fn builtin_names() -> Vec<&'static str> {
     BUILTINS.iter().map(|(n, ..)| *n).collect()
 }
 
-/// The ~6 "real" scenarios the suite runner sweeps (everything except the
+/// The "real" scenarios the suite runner sweeps (everything except the
 /// CI smoke helper).
 pub fn suite_names() -> Vec<&'static str> {
     BUILTINS

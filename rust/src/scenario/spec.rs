@@ -266,6 +266,22 @@ impl ScenarioSpec {
                 needs(outage_end, "outage_end_frac", "outage_servers")?;
             }
         }
+        let skew_start = take_num(&mut t, "skew_start_frac")?;
+        let skew_end = take_num(&mut t, "skew_end_frac")?;
+        let skew_servers = take_u32(&mut t, "skew_servers")?;
+        match take_num(&mut t, "skew_frac")? {
+            Some(frac) => transforms.push(Transform::ServerSkew {
+                start_frac: skew_start.unwrap_or(0.0),
+                end_frac: skew_end.unwrap_or(1.0),
+                frac,
+                n_hot: skew_servers.unwrap_or(1),
+            }),
+            None => {
+                needs(skew_start, "skew_start_frac", "skew_frac")?;
+                needs(skew_end, "skew_end_frac", "skew_frac")?;
+                needs(skew_servers.map(f64::from), "skew_servers", "skew_frac")?;
+            }
+        }
         if let Some(k) = t.keys().next() {
             anyhow::bail!("phase `{label}`: unknown key `{k}`");
         }

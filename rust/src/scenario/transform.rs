@@ -8,7 +8,8 @@
 //! non-decreasing. They compose in the canonical order of
 //! [`Transform::CANONICAL_ORDER`]: time-warps first (rate scaling,
 //! diurnal modulation), then content rewrites (bundle churn, flash crowd,
-//! catalog rollover), then routing rewrites (outage re-routing) — so a
+//! catalog rollover), then routing rewrites (outage re-routing, hot
+//! server skew) — so a
 //! spec's transformer set always means the same pipeline regardless of
 //! key order in the TOML.
 
@@ -55,18 +56,30 @@ pub enum Transform {
         end_frac: f64,
         n_down: u32,
     },
+    /// Hot-shard skew: inside the window, each request is redirected
+    /// with probability `frac` to a contiguous block of `n_hot` servers
+    /// (drawn once per phase). Under modular placement the block lands
+    /// on a handful of shards, so occupancy and queue depth go lopsided
+    /// — the elastic rebalance stress (DESIGN.md §13.5).
+    ServerSkew {
+        start_frac: f64,
+        end_frac: f64,
+        frac: f64,
+        n_hot: u32,
+    },
 }
 
 impl Transform {
     /// Pipeline position of each variant; [`sort_canonical`] orders a
     /// transformer set by it.
-    pub const CANONICAL_ORDER: [&'static str; 6] = [
+    pub const CANONICAL_ORDER: [&'static str; 7] = [
         "rate_scale",
         "diurnal",
         "bundle_churn",
         "flash_crowd",
         "catalog_rollover",
         "outage",
+        "server_skew",
     ];
 
     /// Stable spec-grammar name (also the key prefix in phase tables).
@@ -78,6 +91,7 @@ impl Transform {
             Transform::FlashCrowd { .. } => "flash_crowd",
             Transform::CatalogRollover { .. } => "catalog_rollover",
             Transform::Outage { .. } => "outage",
+            Transform::ServerSkew { .. } => "server_skew",
         }
     }
 
@@ -154,6 +168,25 @@ impl Transform {
                     n_down >= 1 && 2 * n_down <= n_servers,
                     "outage_servers must be in [1, n_servers/2={}] (got {n_down})",
                     n_servers / 2
+                );
+            }
+            Transform::ServerSkew {
+                start_frac,
+                end_frac,
+                frac,
+                n_hot,
+            } => {
+                anyhow::ensure!(
+                    window_ok(start_frac, end_frac),
+                    "skew window [{start_frac}, {end_frac}) invalid"
+                );
+                anyhow::ensure!(
+                    frac > 0.0 && frac <= 1.0,
+                    "skew_frac must be in (0, 1] (got {frac})"
+                );
+                anyhow::ensure!(
+                    n_hot >= 1 && n_hot <= n_servers,
+                    "skew_servers must be in [1, n_servers={n_servers}] (got {n_hot})"
                 );
             }
         }
@@ -288,6 +321,24 @@ impl Transform {
                     }
                 }
             }
+            Transform::ServerSkew {
+                start_frac,
+                end_frac,
+                frac,
+                n_hot,
+            } => {
+                let m = trace.n_servers;
+                let first_hot = rng.below(m as usize) as u32;
+                let (w_lo, w_hi) = (t0 + start_frac * span, t0 + end_frac * span);
+                for r in trace.requests.iter_mut() {
+                    if r.time < w_lo || r.time >= w_hi {
+                        continue;
+                    }
+                    if rng.chance(frac) {
+                        r.server = (first_hot + rng.below(n_hot as usize) as u32) % m;
+                    }
+                }
+            }
         }
     }
 }
@@ -315,6 +366,12 @@ enum StreamState {
     /// Down block drawn once at stream start.
     Outage {
         first_down: u32,
+        w_lo: f64,
+        w_hi: f64,
+    },
+    /// Hot block drawn once at stream start.
+    ServerSkew {
+        first_hot: u32,
         w_lo: f64,
         w_hi: f64,
     },
@@ -402,6 +459,15 @@ impl Transform {
                 ..
             } => StreamState::Outage {
                 first_down: rng.below(n_servers as usize) as u32,
+                w_lo: t0 + start_frac * span,
+                w_hi: t0 + end_frac * span,
+            },
+            Transform::ServerSkew {
+                start_frac,
+                end_frac,
+                ..
+            } => StreamState::ServerSkew {
+                first_hot: rng.below(n_servers as usize) as u32,
                 w_lo: t0 + start_frac * span,
                 w_hi: t0 + end_frac * span,
             },
@@ -502,6 +568,18 @@ impl StreamedTransform {
                 }
                 if (r.server + m - *first_down) % m < *n_down {
                     r.server = (r.server + *n_down) % m;
+                }
+            }
+            (
+                Transform::ServerSkew { frac, n_hot, .. },
+                StreamState::ServerSkew { first_hot, w_lo, w_hi },
+            ) => {
+                let m = n_servers;
+                if r.time < *w_lo || r.time >= *w_hi {
+                    return;
+                }
+                if rng.chance(*frac) {
+                    r.server = (*first_hot + rng.below(*n_hot as usize) as u32) % m;
                 }
             }
             _ => unreachable!("state/kind mismatch"),
@@ -727,6 +805,45 @@ mod tests {
     }
 
     #[test]
+    fn server_skew_concentrates_routing_inside_window() {
+        let hot = 2u32;
+        let t = apply(
+            Transform::ServerSkew {
+                start_frac: 0.25,
+                end_frac: 0.75,
+                frac: 0.8,
+                n_hot: hot,
+            },
+            13,
+        );
+        // Recover the hot block deterministically from the same stream.
+        let mut rng = Rng::new(13);
+        let first_hot = rng.below(t.n_servers as usize) as u32;
+        let t0 = t.requests[0].time;
+        let span = t.requests.last().unwrap().time - t0;
+        let in_block = |s: u32| (s + t.n_servers - first_hot) % t.n_servers < hot;
+        let windowed: Vec<&Request> = t
+            .requests
+            .iter()
+            .filter(|r| r.time >= t0 + 0.25 * span && r.time < t0 + 0.75 * span)
+            .collect();
+        let to_hot = windowed.iter().filter(|r| in_block(r.server)).count();
+        // ~80% redirected into a 2-server block (2/20 = 10% baseline).
+        assert!(
+            to_hot as f64 > 0.6 * windowed.len() as f64,
+            "hot block carries only {to_hot}/{}",
+            windowed.len()
+        );
+        // Outside the window, routing is untouched.
+        let orig = base();
+        for (a, b) in orig.requests.iter().zip(&t.requests) {
+            if b.time < t0 + 0.25 * span || b.time >= t0 + 0.75 * span {
+                assert_eq!(a.server, b.server);
+            }
+        }
+    }
+
+    #[test]
     fn transforms_are_deterministic() {
         for t in [
             Transform::RateScale { factor: 2.0 },
@@ -776,6 +893,12 @@ mod tests {
                 start_frac: 0.1,
                 end_frac: 0.9,
                 n_down: 3,
+            },
+            Transform::ServerSkew {
+                start_frac: 0.2,
+                end_frac: 0.9,
+                frac: 0.7,
+                n_hot: 2,
             },
         ];
         for tr in variants {
@@ -872,6 +995,14 @@ mod tests {
         assert!(Transform::BundleChurn {
             period: 1.0,
             shift: 10
+        }
+        .validate(10, 10)
+        .is_err());
+        assert!(Transform::ServerSkew {
+            start_frac: 0.0,
+            end_frac: 1.0,
+            frac: 0.5,
+            n_hot: 11
         }
         .validate(10, 10)
         .is_err());

@@ -9,15 +9,23 @@
 //!
 //! * **Live knobs** (`slack`, `chunk`, `max_items`) apply in place via
 //!   the admission layer's setters — no interruption at all.
-//! * **Coordinator knobs** (`policy`, `engine`, `shards`, anything in
-//!   `[akpc]`) need a new shard topology, so the old coordinator is
-//!   drained through its quiesce path and a fresh one is started — an
-//!   *epoch swap*. The swap happens while holding the replay thread's
-//!   client mutex, i.e. at a chunk boundary: no in-flight request ever
-//!   sees a half-torn-down coordinator. The retired epoch's final
-//!   snapshot is kept and folded into every later scrape and the final
-//!   report by [`merge_epochs`], so counters stay monotone across
-//!   reloads (a Prometheus contract).
+//! * **Shard count alone** (`shards` changed, everything else equal)
+//!   routes through the elastic handoff
+//!   ([`Coordinator::resize`], DESIGN.md §13): cache contents, cost
+//!   ledgers-as-epochs, clique-gen state, and the open window all carry
+//!   over, so items cached before the reload still hit after it. The
+//!   retired epoch's snapshot is normalized with
+//!   [`MetricsSnapshot::into_handoff_epoch`] before it is folded into
+//!   later scrapes (gen counters travel inside the handoff).
+//! * **Coordinator knobs** (`policy`, `engine`, anything in `[akpc]`)
+//!   genuinely invalidate the cached decisions, so the old coordinator
+//!   is drained through its quiesce path and a fresh one is started —
+//!   an *epoch swap* with fresh state. Either way the swap happens
+//!   while holding the replay thread's client mutex, i.e. at a chunk
+//!   boundary: no in-flight request ever sees a half-torn-down
+//!   coordinator. Retired epochs are folded into every later scrape and
+//!   the final report by [`merge_epochs`], so counters stay monotone
+//!   across reloads (a Prometheus contract).
 //!
 //! `reorder_capacity` and `queue_depth` size buffers threaded through
 //! channel construction; changing them takes a restart of the daemon,
@@ -66,10 +74,12 @@ pub(crate) fn apply_reload(
     state.admission.set_chunk_len(new.chunk);
     state.admission.set_max_items(new.max_items);
 
-    let restart = new.policy != old.policy
-        || new.engine != old.engine
-        || new.shards != old.shards
-        || new.akpc != old.akpc;
+    // A shard-count change with identical policy/engine/[akpc] keeps
+    // every cached decision valid — route it through the stateful
+    // elastic handoff instead of dropping warm state on the floor.
+    let fresh_swap = new.policy != old.policy || new.engine != old.engine || new.akpc != old.akpc;
+    let resize_only = !fresh_swap && new.shards != old.shards;
+    let restart = fresh_swap || resize_only;
     let mut notes = Vec::new();
     if new.reorder_capacity != old.reorder_capacity || new.queue_depth != old.queue_depth {
         notes.push("reorder_capacity/queue_depth change ignored (needs restart)");
@@ -87,15 +97,26 @@ pub(crate) fn apply_reload(
             .coordinator
             .lock()
             .unwrap_or_else(PoisonError::into_inner);
-        let next = Coordinator::start_with(
-            new.akpc.clone(),
-            new.engine.to_engine(),
-            new.shards,
-            TickMode::Sync,
-        )?;
-        if let Some(old_coord) = coord_slot.take() {
-            old_coord.quiesce();
-            let final_snapshot = old_coord.shutdown();
+        let (next, retired) = match coord_slot.take() {
+            Some(old_coord) if resize_only => {
+                let (next, retired) = old_coord.resize(new.shards)?;
+                (next, Some(retired.into_handoff_epoch()))
+            }
+            old_coord => {
+                let next = Coordinator::start_with(
+                    new.akpc.clone(),
+                    new.engine.to_engine(),
+                    new.shards,
+                    TickMode::Sync,
+                )?;
+                let retired = old_coord.map(|c| {
+                    c.quiesce();
+                    c.shutdown()
+                });
+                (next, retired)
+            }
+        };
+        if let Some(final_snapshot) = retired {
             state
                 .prior
                 .lock()
@@ -112,7 +133,13 @@ pub(crate) fn apply_reload(
         new.engine,
         new.shards,
         new.slack,
-        if restart { " (new coordinator epoch)" } else { " (live)" },
+        if resize_only {
+            " (stateful resize: cache carried over)"
+        } else if restart {
+            " (new coordinator epoch)"
+        } else {
+            " (live)"
+        },
         if notes.is_empty() {
             String::new()
         } else {
@@ -128,29 +155,11 @@ pub(crate) fn apply_reload(
 
 /// Fold the final snapshots of retired coordinator epochs into the
 /// current one, so scrape counters are monotone across hot-reloads.
-/// Gauges (`live_cliques`, shard count) keep the current epoch's value;
-/// counters and histograms accumulate.
-pub fn merge_epochs(prior: &[MetricsSnapshot], mut last: MetricsSnapshot) -> MetricsSnapshot {
-    for p in prior {
-        last.ledger.merge(&p.ledger);
-        last.served += p.served;
-        last.windows += p.windows;
-        last.clique_gen_secs += p.clique_gen_secs;
-        last.clique_hist.merge(&p.clique_hist);
-        last.latency_us.merge(&p.latency_us);
-        for ps in &p.per_shard {
-            if let Some(cur) = last.per_shard.iter_mut().find(|c| c.shard == ps.shard) {
-                cur.ledger.merge(&ps.ledger);
-                cur.served += ps.served;
-                cur.retentions += ps.retentions;
-                cur.latency_us.merge(&ps.latency_us);
-            } else {
-                last.per_shard.push(ps.clone());
-            }
-        }
-    }
-    last.per_shard.sort_by_key(|s| s.shard);
-    last
+/// Kept as a re-exportable alias of
+/// [`MetricsSnapshot::merge_epochs`] — the elastic replay driver uses
+/// the same fold, so the logic lives on the snapshot type.
+pub fn merge_epochs(prior: &[MetricsSnapshot], last: MetricsSnapshot) -> MetricsSnapshot {
+    MetricsSnapshot::merge_epochs(prior, last)
 }
 
 #[cfg(test)]

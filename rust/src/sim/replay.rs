@@ -157,10 +157,13 @@ pub fn replay_sharded_stream(
             // Route in global order; each shard's channel preserves its
             // subsequence order. A send error means the shard thread
             // died — stop routing and surface its error via join.
+            // Routing uses the coordinator's own Placement so harness
+            // and shard ownership can never disagree.
+            let placement = coord.placement();
             let mut routing_broken = false;
             'route: while source.next_chunk(&mut chunk)? {
                 for r in chunk.drain(..) {
-                    let shard = r.server as usize % n_shards;
+                    let shard = placement.shard_of(r.server);
                     if txs[shard].send(r).is_err() {
                         routing_broken = true;
                         break 'route;

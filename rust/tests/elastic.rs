@@ -1,0 +1,193 @@
+//! Elastic resharding acceptance (DESIGN.md §13):
+//!
+//! 1. **Exact handoff** — over ~50 randomized schedules (grow, shrink,
+//!    no-op at random window boundaries), an N→M resize mid-run yields
+//!    ledger totals identical (1e-9 relative) to a never-resized
+//!    M-shard oracle, the post-handoff epoch matches the oracle's
+//!    suffix delta, and the CopyBoard's retention decisions are
+//!    unchanged.
+//! 2. **The autoscale win** — on the flash-crowd scenario, the elastic
+//!    fleet beats both static baselines (always-min, always-max) on
+//!    total cost, with rental billed at actual shard-seconds.
+
+use akpc::bench::elastic_suite;
+use akpc::config::AkpcConfig;
+use akpc::coordinator::{Coordinator, MetricsSnapshot, ServeRequest, TickMode};
+use akpc::run::EngineChoice;
+use akpc::runtime::CrmEngine;
+use akpc::trace::generator::netflix_like;
+use akpc::trace::model::Request;
+
+fn serve_all(coord: &Coordinator, reqs: &[Request]) {
+    for r in reqs {
+        coord
+            .serve(ServeRequest {
+                items: r.items.clone(),
+                server: r.server,
+                time: Some(r.time),
+            })
+            .expect("serve");
+    }
+}
+
+fn total_retentions(m: &MetricsSnapshot) -> u64 {
+    m.per_shard.iter().map(|s| s.retentions).sum()
+}
+
+fn assert_rel_close(what: &str, seed: u64, a: f64, b: f64) {
+    let tol = 1e-9 * b.abs().max(1.0);
+    assert!(
+        (a - b).abs() <= tol,
+        "seed {seed}: {what} diverged — elastic {a} vs oracle {b} \
+         (diff {:.3e}, tol {:.3e})",
+        (a - b).abs(),
+        tol
+    );
+}
+
+/// The resharding exactness property, randomized over fleet sizes and
+/// cut points. For each seed: serve a prefix on N shards, hand off to M
+/// at a window boundary, serve the suffix — then replay the same trace
+/// on a static M-shard fleet and compare.
+#[test]
+fn random_resizes_match_the_static_oracle() {
+    let cfg = AkpcConfig {
+        n_items: 24,
+        n_servers: 12,
+        batch_size: 16,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let n_req = 480usize; // 30 windows of 16
+    let windows = n_req / cfg.batch_size;
+
+    for seed in 0..50u64 {
+        let trace = netflix_like(cfg.n_items, cfg.n_servers, n_req, seed + 1);
+        let n_from = 1 + (seed % 4) as usize; // 1..=4
+        let n_to = 1 + ((seed / 4) % 4) as usize; // 1..=4 — grow, shrink, no-op
+        // A random window boundary strictly inside the trace.
+        let cut = cfg.batch_size * (1 + (seed as usize * 7) % (windows - 1));
+
+        // Elastic path: N shards for the prefix, stateful handoff, M for
+        // the suffix. In Sync tick mode the cut lands right after a
+        // window install, so every shard's sweep clock sits exactly at
+        // the cut time — the same point `decommission` quiesces to.
+        let coord =
+            Coordinator::start_with(cfg.clone(), CrmEngine::Native, n_from, TickMode::Sync)
+                .expect("boot donor");
+        serve_all(&coord, &trace.requests[..cut]);
+        let (next, retired) = coord.resize(n_to).expect("resize");
+        assert_eq!(next.n_shards(), n_to);
+        serve_all(&next, &trace.requests[cut..]);
+        next.quiesce();
+        let last = next.shutdown();
+        let merged = MetricsSnapshot::merge_epochs(
+            &[retired.into_handoff_epoch()],
+            last.clone(),
+        );
+
+        // Oracle: a never-resized M-shard fleet over the same trace,
+        // with a snapshot at the same window boundary.
+        let oracle =
+            Coordinator::start_with(cfg.clone(), CrmEngine::Native, n_to, TickMode::Sync)
+                .expect("boot oracle");
+        serve_all(&oracle, &trace.requests[..cut]);
+        let at_cut = oracle.metrics().expect("oracle metrics");
+        serve_all(&oracle, &trace.requests[cut..]);
+        oracle.quiesce();
+        let full = oracle.shutdown();
+
+        // Whole-run totals: identical to float round-off.
+        assert_rel_close("total ledger", seed, merged.ledger.total(), full.ledger.total());
+        assert_rel_close("C_T", seed, merged.ledger.c_t, full.ledger.c_t);
+        assert_rel_close("C_P", seed, merged.ledger.c_p, full.ledger.c_p);
+        assert_eq!(merged.served, full.served, "seed {seed}: served");
+        assert_eq!(merged.windows, full.windows, "seed {seed}: windows");
+        assert_eq!(
+            merged.ledger.full_hits, full.ledger.full_hits,
+            "seed {seed}: full hits"
+        );
+        assert_eq!(
+            merged.ledger.transfers, full.ledger.transfers,
+            "seed {seed}: transfers"
+        );
+
+        // The post-handoff epoch alone equals the oracle's suffix delta.
+        assert_rel_close(
+            "post-handoff ledger delta",
+            seed,
+            last.ledger.total(),
+            full.ledger.total() - at_cut.ledger.total(),
+        );
+        assert_eq!(
+            last.served,
+            full.served - at_cut.served,
+            "seed {seed}: post-handoff serve count"
+        );
+
+        // Global retention (Algorithm 6's G[c] rule through the
+        // CopyBoard) made the same decisions with and without a resize.
+        assert_eq!(
+            total_retentions(&merged),
+            total_retentions(&full),
+            "seed {seed}: retention decisions changed across the handoff"
+        );
+    }
+}
+
+/// The headline autoscale claim: on the flash-crowd scenario, elastic
+/// total cost (ledger + shard-second rental + overload) undercuts both
+/// an always-min and an always-max static fleet. The ledger term is
+/// placement-invariant, so the win is pure fleet-sizing.
+#[test]
+fn elastic_beats_both_static_fleets_on_the_flash_crowd() {
+    let cfg = AkpcConfig {
+        batch_size: 50,
+        crm_top_frac: 1.0,
+        ..Default::default()
+    };
+    let sweep = elastic_suite(
+        &cfg,
+        &["autoscale-flash-crowd"],
+        1,
+        8,
+        EngineChoice::Native,
+        0.05,
+    )
+    .expect("sweep");
+    let name = "autoscale-flash-crowd";
+    let elastic = sweep.total(name, "elastic").expect("elastic cell");
+    let always_min = sweep.total(name, "static-1").expect("min cell");
+    let always_max = sweep.total(name, "static-8").expect("max cell");
+    assert!(
+        elastic < always_min,
+        "elastic {elastic} must beat always-min {always_min}"
+    );
+    assert!(
+        elastic < always_max,
+        "elastic {elastic} must beat always-max {always_max}"
+    );
+    // And the fleet really flexed: up for the spike, back down after.
+    let cell = sweep
+        .cells
+        .iter()
+        .find(|c| c.label == "elastic")
+        .expect("elastic cell");
+    assert!(cell.outcome.peak_shards > 1, "never scaled up");
+    assert!(
+        cell.outcome.final_shards < cell.outcome.peak_shards,
+        "never scaled back down"
+    );
+    // The three cells served identical traffic and agree on the ledger.
+    let ledgers: Vec<f64> = sweep
+        .cells
+        .iter()
+        .map(|c| c.outcome.cost.ledger_total)
+        .collect();
+    for w in ledgers.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() <= 1e-9 * w[1].abs().max(1.0),
+            "ledger must be placement-invariant: {ledgers:?}"
+        );
+    }
+}

@@ -8,7 +8,9 @@
 //!    beyond-slack regression rejected, malformed lines counted.
 //! 3. The HTTP endpoint: /healthz, /metrics, /drain, /reload.
 //! 4. Hot-reload: invalid configs rejected (daemon untouched), valid
-//!    live-knob changes applied.
+//!    live-knob changes applied, and a shard-count-only change routes
+//!    through the stateful elastic handoff (DESIGN.md §13) — items
+//!    cached before the resize still hit after it.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -83,6 +85,26 @@ fn await_submitted(daemon: &ServeDaemon, expect: u64) {
         assert!(
             Instant::now() < deadline,
             "timed out: {seen}/{expect} frames reached admission"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Poll the merged scrape until the coordinator has *served* `expect`
+/// requests. `await_submitted` only proves frames reached admission —
+/// not enough when a test must pin which coordinator epoch handled
+/// them (the reorder buffer may still be holding the frames).
+fn await_served(daemon: &ServeDaemon, expect: u64) {
+    let needle = format!("akpc_requests_served_total {expect}\n");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if daemon.metrics_text().expect("scrape").contains(&needle) {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for `{}`",
+            needle.trim_end()
         );
         std::thread::sleep(Duration::from_millis(10));
     }
@@ -281,9 +303,11 @@ fn http_endpoint_serves_health_metrics_and_drain() {
     assert_eq!(report.epochs, 1);
 }
 
-/// Hot-reload: an invalid file is rejected (daemon keeps serving), a
-/// valid live-knob change applies, and counters survive the epoch swap
-/// a coordinator-knob change triggers.
+/// Hot-reload: an invalid file is rejected (daemon keeps serving), and
+/// each valid tier takes its own route — live knobs apply in place, a
+/// shard-count-only change is a stateful resize, a coordinator-knob
+/// change is a fresh epoch swap. Counters stay monotone across all of
+/// them.
 #[test]
 fn reload_rejects_invalid_and_applies_valid_configs() {
     let cfg = small_cfg();
@@ -329,16 +353,105 @@ fn reload_rejects_invalid_and_applies_valid_configs() {
     let summary = daemon.reload().expect("valid reload");
     assert!(summary.contains("slack=2"), "{summary}");
 
-    // Valid coordinator-knob change: epoch swap, counters monotone.
+    // Valid shard-count-only change: the stateful elastic handoff, not
+    // a fresh epoch (warmth is pinned end-to-end by
+    // `live_resize_keeps_the_warm_cache_hot` below).
     std::fs::write(&path, base.replace("shards = 1", "shards = 2")).unwrap();
     let summary = daemon.reload().expect("shard reload");
-    assert!(summary.contains("epoch"), "{summary}");
+    assert!(summary.contains("stateful resize"), "{summary}");
 
     send_text_frames(daemon.ingest_addr(), &[Request::new(vec![2], 1, 2.0)]);
     await_submitted(&daemon, 2);
+
+    // Valid coordinator-knob change: a genuine fresh-state epoch swap,
+    // counters monotone across it.
+    let swapped = base.replace("shards = 1", "shards = 2").replace(
+        &format!("batch_size = {}", cfg.batch_size),
+        &format!("batch_size = {}", cfg.batch_size / 2),
+    );
+    std::fs::write(&path, swapped).unwrap();
+    let summary = daemon.reload().expect("batch reload");
+    assert!(summary.contains("new coordinator epoch"), "{summary}");
+
+    send_text_frames(daemon.ingest_addr(), &[Request::new(vec![3], 2, 3.0)]);
+    await_submitted(&daemon, 3);
+    let report = daemon.drain().expect("drain");
+    assert_eq!(report.epochs, 3, "resize + swap each retired an epoch");
+    assert_eq!(report.metrics.served, 3, "counters span all three epochs");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The live-resize regression (DESIGN.md §13): items cached *before* a
+/// shard-count-only reload still hit *after* it. Zero slack and
+/// `chunk = 1` make admission ship every frame the moment it arrives,
+/// so `await_served` pins the warm fetches to the donor fleet and the
+/// re-requests to the resized one — the post-resize full hits can only
+/// come from copies that crossed the handoff.
+#[test]
+fn live_resize_keeps_the_warm_cache_hot() {
+    let cfg = small_cfg();
+    let dir = std::env::temp_dir().join(format!("akpc-serve-resize-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.toml");
+    let base = format!(
+        "slack = 0.0\nchunk = 1\nshards = 1\n\n[akpc]\nn_items = {}\nn_servers = {}\nbatch_size = {}\n",
+        cfg.n_items, cfg.n_servers, cfg.batch_size
+    );
+    std::fs::write(&path, &base).unwrap();
+
+    let scfg = ServeConfig::from_toml_str(&base).unwrap();
+    let daemon = ServeDaemon::start(
+        scfg,
+        ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            http: None,
+            config_path: Some(path.to_string_lossy().into_owned()),
+        },
+    )
+    .unwrap();
+
+    // Warm the 1-shard fleet: the first touch of each item is a
+    // transfer that leaves a copy behind (expiry Δt = ρλ/μ = 1 time
+    // unit out). Servers 3 and 4 land on *different* shards after the
+    // resize (3 % 2 = 1, 4 % 2 = 0), so both destination shards must
+    // receive migrated state for the re-requests to hit.
+    send_text_frames(
+        daemon.ingest_addr(),
+        &[Request::new(vec![7], 3, 1.0), Request::new(vec![8], 4, 1.2)],
+    );
+    await_served(&daemon, 2);
+    let pre = daemon.metrics_text().expect("pre-resize scrape");
+    assert!(
+        pre.contains("akpc_full_hits_total 0\n"),
+        "warm-up must be all misses:\n{pre}"
+    );
+
+    // Shard-count-only reload: the stateful elastic handoff.
+    std::fs::write(&path, base.replace("shards = 1", "shards = 2")).unwrap();
+    let summary = daemon.reload().expect("resize reload");
+    assert!(summary.contains("carried over"), "{summary}");
+
+    // Re-request the same items at the same servers inside the expiry
+    // window. On a fresh-state swap these would be transfers again; on
+    // the stateful resize they are pure hits on the migrated copies.
+    send_text_frames(
+        daemon.ingest_addr(),
+        &[Request::new(vec![7], 3, 1.5), Request::new(vec![8], 4, 1.7)],
+    );
+    await_served(&daemon, 4);
+
     let report = daemon.drain().expect("drain");
     assert_eq!(report.epochs, 2);
-    assert_eq!(report.metrics.served, 2, "counters span both epochs");
+    assert_eq!(report.metrics.served, 4);
+    assert_eq!(
+        report.metrics.ledger.transfers, 2,
+        "only the warm-up should fetch"
+    );
+    assert_eq!(
+        report.metrics.ledger.full_hits, 2,
+        "pre-resize cached items must still hit after the live resize"
+    );
 
     let _ = std::fs::remove_dir_all(&dir);
 }

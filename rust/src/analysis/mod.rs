@@ -379,6 +379,56 @@ mod tests {
         assert!(diags("run/x.rs", iter).is_empty());
     }
 
+    // ---- L6 ----
+
+    #[test]
+    fn l6_trips_on_bare_recv_and_unsignaled_join() {
+        let bad = concat!(
+            "fn f(rx: &std::sync::mpsc::Receiver<u32>, h: std::thread::JoinHandle<()>) -> u32 {\n",
+            "    let v = match rx.recv() {\n",
+            "        Ok(v) => v,\n",
+            "        Err(_) => 0,\n",
+            "    };\n",
+            "    let _ = h.join();\n",
+            "    v\n",
+            "}\n",
+        );
+        let ds = diags("coordinator/x.rs", bad);
+        assert_eq!(rules_of(&ds), vec!["L6", "L6"], "{ds:?}");
+        assert_eq!((ds[0].line, ds[1].line), (2, 6));
+        // Same text outside coordinator//serve//elastic/: out of scope.
+        assert!(diags("run/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn l6_near_misses_pass() {
+        // The mailbox drain loop, recv_timeout, a signaled join, and
+        // anything under #[cfg(test)] are all sanctioned.
+        let ok = concat!(
+            "fn pump(rx: std::sync::mpsc::Receiver<u32>, out: &mut Vec<u32>) {\n",
+            "    while let Ok(v) = rx.recv() {\n",
+            "        out.push(v);\n",
+            "    }\n",
+            "}\n",
+            "fn stop(tx: std::sync::mpsc::SyncSender<Msg>, h: std::thread::JoinHandle<()>) {\n",
+            "    let _ = tx.send(Msg::Shutdown);\n",
+            "    let _ = h.join();\n",
+            "}\n",
+            "fn wait(rx: &std::sync::mpsc::Receiver<u32>) -> Option<u32> {\n",
+            "    rx.recv_timeout(std::time::Duration::from_millis(50)).ok()\n",
+            "}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t(rx: std::sync::mpsc::Receiver<u32>, h: std::thread::JoinHandle<()>) {\n",
+            "        let _ = rx.recv();\n",
+            "        let _ = h.join();\n",
+            "    }\n",
+            "}\n",
+        );
+        let ds = diags("serve/x.rs", ok);
+        assert!(ds.is_empty(), "{ds:?}");
+    }
+
     // ---- allow escape hatch ----
 
     #[test]

@@ -1,6 +1,6 @@
 //! The akpc-lint rule catalog (DESIGN.md §11).
 //!
-//! Five repo-specific invariants, each born from a class of bug this
+//! Six repo-specific invariants, each born from a class of bug this
 //! codebase actually hit or structurally risks:
 //!
 //! | id | name | scope |
@@ -10,6 +10,7 @@
 //! | L3 | no-panic-hot-path | `coordinator/ serve/ elastic/` |
 //! | L4 | bounded-channels-only | `coordinator/ serve/ elastic/` |
 //! | L5 | no-stream-collect | all of `src/` |
+//! | L6 | no-unbounded-recv | `coordinator/ serve/ elastic/` |
 //!
 //! Every check is a token scan over [`PreparedSource::masked`] — comments
 //! and literals can never trip a rule — and every check skips
@@ -27,7 +28,7 @@ pub struct Rule {
 }
 
 /// The enforced invariants, in severity order.
-pub const RULES: [Rule; 5] = [
+pub const RULES: [Rule; 6] = [
     Rule {
         id: "L1",
         name: "no-float-partial-unwrap",
@@ -62,6 +63,14 @@ pub const RULES: [Rule; 5] = [
         name: "no-stream-collect",
         summary: "TraceSource::collect defeats bounded-memory replay; only \
                   needs_offline_trace-gated code may materialize a stream",
+    },
+    Rule {
+        id: "L6",
+        name: "no-unbounded-recv",
+        summary: "coordinator, serving-daemon, and elastic-driver code must \
+                  not block forever on a peer that may never answer: use \
+                  recv_timeout instead of bare recv, and signal shutdown \
+                  before joining a thread",
     },
 ];
 
@@ -102,6 +111,7 @@ pub fn check_file(rel_path: &str, src: &PreparedSource) -> Vec<RawDiag> {
     {
         l3_no_panic_hot_path(src, &mut out);
         l4_bounded_channels_only(src, &mut out);
+        l6_no_unbounded_recv(src, &mut out);
     }
     l5_no_stream_collect(src, &mut out);
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
@@ -462,6 +472,73 @@ fn l5_no_stream_collect(src: &PreparedSource, out: &mut Vec<RawDiag>) {
                  needs_offline_trace gate; bounded-memory replay is the \
                  default contract (DESIGN.md §10)"
             ),
+        });
+    }
+}
+
+/// Shutdown evidence that exonerates a `.join()`: within the preceding
+/// window the joined thread was told to stop (a shutdown/drain message,
+/// a stop flag, a dropped sender closing its mailbox) or polled for
+/// completion first.
+const JOIN_EVIDENCE: [&str; 6] = [
+    "shutdown",
+    "Shutdown",
+    "store(true",
+    "is_finished",
+    "Drain",
+    "drop(",
+];
+
+/// L6 — blocking forever on a peer that may never answer (the bug class
+/// behind DESIGN.md §14.1: a panicked shard leaves its rendezvous reply
+/// channel dangling and a bare `recv` deadlocks the caller). Two forms:
+///
+/// * a bare `.recv()` outside the `while let` mailbox-drain idiom — the
+///   drain loop *is* the shutdown protocol (it ends when every sender
+///   hangs up), but a single rendezvous `recv` must use `recv_timeout`
+///   so a dead peer becomes a typed `ShardLost` instead of a hang;
+/// * a `.join()` with no shutdown evidence in the preceding 20 lines —
+///   joining a thread nobody told to stop waits forever.
+fn l6_no_unbounded_recv(src: &PreparedSource, out: &mut Vec<RawDiag>) {
+    let m = src.masked();
+    for at in find_all(m, ".recv()") {
+        let line = src.line_of(at);
+        if src.in_test_region(line) {
+            continue;
+        }
+        let (start, _) = src.statement_window(at);
+        if m[start..at].trim_start().starts_with("while let") {
+            continue;
+        }
+        out.push(RawDiag {
+            rule: "L6",
+            line,
+            message: "bare `.recv()` blocks forever on a dead peer; use \
+                      recv_timeout and surface a typed loss (DESIGN.md \
+                      §14.1)"
+                .into(),
+        });
+    }
+    for at in find_all(m, ".join()") {
+        let line = src.line_of(at);
+        if src.in_test_region(line) {
+            continue;
+        }
+        let signaled = (line.saturating_sub(20)..=line).any(|l| {
+            let t = src.line_text(l);
+            JOIN_EVIDENCE.iter().any(|e| t.contains(e))
+        });
+        if signaled {
+            continue;
+        }
+        out.push(RawDiag {
+            rule: "L6",
+            line,
+            message: "`.join()` with no shutdown signal in the preceding \
+                      lines waits forever on a thread nobody told to stop; \
+                      send Shutdown / set the stop flag / drop the sender \
+                      first"
+                .into(),
         });
     }
 }

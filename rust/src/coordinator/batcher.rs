@@ -58,6 +58,14 @@ impl WindowBatcher {
     pub fn take_pending(&mut self) -> Vec<Request> {
         std::mem::take(&mut self.buf)
     }
+
+    /// Clone the open window's requests without disturbing the batcher.
+    /// The checkpoint path uses this: a snapshot must carry the pending
+    /// window (so a restored run closes windows at the same request
+    /// index) while the live fleet keeps serving into the same buffer.
+    pub fn pending_clone(&self) -> Vec<Request> {
+        self.buf.clone()
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,15 @@
 //! shard count with cache, ledgers-as-epochs, clique-gen state, and the
 //! open window carried over exactly (DESIGN.md §13; the routing rule is
 //! [`crate::elastic::Placement`], shared with the handoff partitioner).
+//!
+//! The fleet is also *supervised* (DESIGN.md §14): every rendezvous
+//! reply is deadline-bounded, a dead or stalled actor surfaces as a
+//! typed [`ShardLost`], and [`Coordinator::recover`] rebuilds the fleet
+//! from survivor exports plus the lost shard's shadow, charging honest
+//! re-transfer for the copies that died with it.
+//! [`Coordinator::checkpoint_state`] snapshots a [`HandoffState`]
+//! without stopping the fleet (the crash-restart path,
+//! [`crate::fault::checkpoint`]).
 
 pub mod batcher;
 pub mod metrics;
@@ -37,6 +46,7 @@ pub mod snapshot;
 pub use batcher::WindowBatcher;
 pub use metrics::{GenStats, MetricsSnapshot, ShardStats};
 pub use service::{
-    Coordinator, CoordinatorClient, HandoffState, ServeRequest, ServeResponse, TickMode,
+    set_reply_timeout_ms, Coordinator, CoordinatorClient, HandoffState, ServeRequest,
+    ServeResponse, ShardLost, TickMode,
 };
 pub use snapshot::CliqueSnapshot;

@@ -41,11 +41,26 @@
 //! (not-yet-closed) window batch carries over unserved — so the resumed
 //! fleet's ledger deltas match a static-M run from genesis within 1e-9
 //! relative (`tests/elastic.rs` pins it over ~50 seeds).
+//!
+//! ## Fault tolerance (DESIGN.md §14)
+//!
+//! Every rendezvous reply is bounded by [`set_reply_timeout_ms`]: a dead
+//! or stalled actor surfaces as a typed [`ShardLost`] error instead of a
+//! permanent hang. A supervisor (fault/supervisor.rs, or the serving
+//! daemon) detects the loss via [`Coordinator::lost_shard`] (join-handle
+//! watch) or a `ShardLost` from a serve (heartbeat timeout), then calls
+//! [`Coordinator::recover`]: survivors quiesce and export exactly as in
+//! a [`Coordinator::decommission`], the lost shard is replaced by its
+//! last shadow export, and the ledger is charged Eq. (3) re-transfer for
+//! every copy that was live on the dead shard — an honest cost account
+//! of the recovery. [`Coordinator::checkpoint_state`] snapshots the same
+//! [`HandoffState`] without tearing the fleet down (the checkpoint path,
+//! fault/checkpoint.rs).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::algo::{CliqueGenPipeline, GenState, PackedCacheCore};
 use crate::cache::{CopyBoard, CopyRecord, CostModel};
@@ -71,6 +86,69 @@ const SHARD_QUEUE_DEPTH: usize = 1024;
 /// the closing client until the worker catches up — bounded lag by
 /// construction, instead of an unbounded backlog of stale windows.
 const GEN_QUEUE_DEPTH: usize = 2;
+
+/// Rendezvous reply timeout in milliseconds (DESIGN.md §14). Every
+/// coordinator `recv` on a reply channel is bounded by this, so a dead
+/// or stalled actor surfaces as [`ShardLost`] instead of hanging the
+/// caller forever. 30 s default: generous enough that a loaded CI shard
+/// never trips it, short enough that a supervisor reacts.
+static REPLY_TIMEOUT_MS: AtomicU64 = AtomicU64::new(30_000);
+
+/// Set the rendezvous reply timeout (the shard "heartbeat" deadline);
+/// returns the previous value. Tests drop it to tens of milliseconds so
+/// an injected stall is detected quickly. Clamped to ≥ 1 ms.
+pub fn set_reply_timeout_ms(ms: u64) -> u64 {
+    REPLY_TIMEOUT_MS.swap(ms.max(1), Ordering::Relaxed)
+}
+
+fn reply_timeout() -> Duration {
+    Duration::from_millis(REPLY_TIMEOUT_MS.load(Ordering::Relaxed))
+}
+
+/// Typed fault: an actor the caller was waiting on died (its channel
+/// disconnected — thread panicked or was shut down) or stalled (no reply
+/// within the [`set_reply_timeout_ms`] deadline). Recoverable by a
+/// supervisor via [`Coordinator::recover`]; callers downcast with
+/// `err.downcast_ref::<ShardLost>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardLost {
+    /// Index of the lost shard actor; `None` = the clique-gen worker.
+    pub shard: Option<usize>,
+    /// What the caller observed: `"stalled (reply timeout)"` or
+    /// `"died (channel disconnected)"`.
+    pub reason: &'static str,
+}
+
+impl ShardLost {
+    fn stalled(shard: Option<usize>) -> Self {
+        Self { shard, reason: "stalled (reply timeout)" }
+    }
+
+    fn died(shard: Option<usize>) -> Self {
+        Self { shard, reason: "died (channel disconnected)" }
+    }
+}
+
+impl std::fmt::Display for ShardLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.shard {
+            Some(i) => write!(f, "shard {i} {}", self.reason),
+            None => write!(f, "clique-gen worker {}", self.reason),
+        }
+    }
+}
+
+impl std::error::Error for ShardLost {}
+
+/// Bounded rendezvous receive: the one place a coordinator thread waits
+/// on an actor reply (akpc-lint L6 — no bare `recv()` in this module).
+fn recv_reply<T>(rx: &mpsc::Receiver<T>, shard: Option<usize>) -> Result<T, ShardLost> {
+    match rx.recv_timeout(reply_timeout()) {
+        Ok(v) => Ok(v),
+        Err(mpsc::RecvTimeoutError::Timeout) => Err(ShardLost::stalled(shard)),
+        Err(mpsc::RecvTimeoutError::Disconnected) => Err(ShardLost::died(shard)),
+    }
+}
 
 /// A request submitted to the coordinator.
 #[derive(Debug)]
@@ -199,9 +277,9 @@ impl CoordinatorClient {
             .is_err()
         {
             self.queue_depths[shard].fetch_sub(1, Ordering::Relaxed);
-            anyhow::bail!("coordinator is down");
+            return Err(ShardLost::died(Some(shard)).into());
         }
-        let resp = rrx.recv()?;
+        let resp = recv_reply(&rrx, Some(shard))?;
 
         // Window accounting happens after the response, mirroring the
         // single leader (serve, then batch — Fig. 3 causality). The mutex
@@ -238,9 +316,8 @@ impl CoordinatorClient {
                 let (dtx, drx) = mpsc::sync_channel(1);
                 self.gen_tx
                     .send(GenMsg::Window(batch, Some(dtx)))
-                    .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-                drx.recv()
-                    .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+                    .map_err(|_| ShardLost::died(None))?;
+                recv_reply(&drx, None)?;
             }
             TickMode::Async => {
                 self.gen_tx
@@ -256,14 +333,14 @@ impl CoordinatorClient {
         let (gtx, grx) = mpsc::sync_channel(1);
         self.gen_tx
             .send(GenMsg::Metrics(gtx))
-            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-        let gen = grx.recv()?;
+            .map_err(|_| ShardLost::died(None))?;
+        let gen = recv_reply(&grx, None)?;
         let mut shards = Vec::with_capacity(self.shard_txs.len());
-        for tx in &self.shard_txs {
+        for (i, tx) in self.shard_txs.iter().enumerate() {
             let (stx, srx) = mpsc::sync_channel(1);
             tx.send(ShardMsg::Metrics(stx))
-                .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-            shards.push(srx.recv()?);
+                .map_err(|_| ShardLost::died(Some(i)))?;
+            shards.push(recv_reply(&srx, Some(i))?);
         }
         Ok(MetricsSnapshot::aggregate(gen, shards))
     }
@@ -516,24 +593,40 @@ impl Coordinator {
     /// mailboxes are FIFO, so a `metrics()` issued afterwards observes
     /// the swept state.
     pub fn quiesce(&self) {
-        Self::quiesce_shards(&self.client.shard_txs);
+        Self::quiesce_shards(&self.client.shard_txs, None, f64::NEG_INFINITY);
     }
 
     /// Sweep every shard to the global max request time; returns that
     /// `t_end`, or `None` when no shard ever saw a request (nothing to
-    /// sweep — sweep clocks stay at `-∞`).
-    fn quiesce_shards(shard_txs: &[mpsc::SyncSender<ShardMsg>]) -> Option<f64> {
-        let mut t_end = f64::NEG_INFINITY;
-        for tx in shard_txs {
+    /// sweep — sweep clocks stay at `-∞`). `skip` excludes a lost shard
+    /// from the barrier (recovery path — its channel may be dead or its
+    /// actor wedged); `floor` folds an external lower bound into `t_end`
+    /// (the lost shard's shadow clock), so survivors still sweep past the
+    /// global maximum even when the dead shard saw the latest request.
+    /// Best-effort per shard: a shard that fails the metrics rendezvous
+    /// is skipped rather than failing the barrier.
+    fn quiesce_shards(
+        shard_txs: &[mpsc::SyncSender<ShardMsg>],
+        skip: Option<usize>,
+        floor: f64,
+    ) -> Option<f64> {
+        let mut t_end = floor;
+        for (i, tx) in shard_txs.iter().enumerate() {
+            if skip == Some(i) {
+                continue;
+            }
             let (stx, srx) = mpsc::sync_channel(1);
             if tx.send(ShardMsg::Metrics(stx)).is_ok() {
-                if let Ok(s) = srx.recv() {
+                if let Ok(s) = recv_reply(&srx, Some(i)) {
                     t_end = t_end.max(s.last_time);
                 }
             }
         }
         if t_end.is_finite() {
-            for tx in shard_txs {
+            for (i, tx) in shard_txs.iter().enumerate() {
+                if skip == Some(i) {
+                    continue;
+                }
                 let _ = tx.send(ShardMsg::Quiesce(t_end));
             }
             Some(t_end)
@@ -573,8 +666,8 @@ impl Coordinator {
             self.client
                 .gen_tx
                 .send(GenMsg::Export(tx))
-                .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-            rx.recv()?
+                .map_err(|_| ShardLost::died(None))?;
+            recv_reply(&rx, None)?
         };
         let gen_join = self
             .gen_join
@@ -586,14 +679,20 @@ impl Coordinator {
             Err(payload) => std::panic::resume_unwind(payload),
         };
 
-        let clock = Self::quiesce_shards(&self.client.shard_txs)
+        let clock = Self::quiesce_shards(&self.client.shard_txs, None, f64::NEG_INFINITY)
             .unwrap_or(f64::NEG_INFINITY);
         let mut copies = Vec::new();
         let mut shards = Vec::with_capacity(self.shard_joins.len());
-        for (tx, join) in self.client.shard_txs.iter().zip(&mut self.shard_joins) {
+        for (i, (tx, join)) in self
+            .client
+            .shard_txs
+            .iter()
+            .zip(&mut self.shard_joins)
+            .enumerate()
+        {
             let (ctx, crx) = mpsc::sync_channel(1);
             if tx.send(ShardMsg::Export(ctx)).is_ok() {
-                if let Ok(mut recs) = crx.recv() {
+                if let Ok(mut recs) = recv_reply(&crx, Some(i)) {
                     copies.append(&mut recs);
                 }
             }
@@ -663,6 +762,220 @@ impl Coordinator {
         Ok((next, retired))
     }
 
+    /// Join-handle watch (DESIGN.md §14.2): index of the first shard
+    /// whose actor thread has already exited — i.e. panicked, since a
+    /// live coordinator never shuts a shard down. `None` = all running.
+    /// A *stalled* shard is not detected here (its thread is alive);
+    /// that fault surfaces as a [`ShardLost`] with `reason` "stalled"
+    /// from the serve that hit the reply timeout.
+    pub fn lost_shard(&self) -> Option<usize> {
+        self.shard_joins.iter().position(|j| {
+            j.as_ref().is_some_and(std::thread::JoinHandle::is_finished)
+        })
+    }
+
+    /// Shadow capture (DESIGN.md §14.2): export one shard's live copies
+    /// without disturbing it. A supervisor calls this at every window
+    /// boundary so that, when the shard is later lost, its state at the
+    /// last boundary is known exactly (the fault hooks fire before any
+    /// serve mutates state, so boundary shadows are fault-time truth).
+    pub fn export_shard_copies(&self, shard: usize) -> anyhow::Result<Vec<CopyRecord>> {
+        let tx = self
+            .client
+            .shard_txs
+            .get(shard)
+            .ok_or_else(|| anyhow::anyhow!("no shard {shard}"))?;
+        let (ctx, crx) = mpsc::sync_channel(1);
+        tx.send(ShardMsg::Export(ctx))
+            .map_err(|_| ShardLost::died(Some(shard)))?;
+        Ok(recv_reply(&crx, Some(shard))?)
+    }
+
+    /// Snapshot the full fleet state as a [`HandoffState`] *without*
+    /// tearing the fleet down — the checkpoint path (DESIGN.md §14.3,
+    /// fault/checkpoint.rs). Identical content to what
+    /// [`decommission`](Self::decommission) would hand off at this
+    /// instant: open-window pending, learned gen state, a global
+    /// quiesce, and every shard's live copies.
+    ///
+    /// The caller must guarantee no serve is in flight (the daemon holds
+    /// its submission lock; offline drivers are single-threaded) —
+    /// otherwise the pending/gen/copies captures could straddle a window
+    /// close and disagree with each other.
+    ///
+    /// # Errors
+    ///
+    /// [`ShardLost`] if an actor is dead or stalled.
+    pub fn checkpoint_state(&self) -> anyhow::Result<HandoffState> {
+        let pending = {
+            let window = self
+                .client
+                .shared
+                .window
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            window.pending_clone()
+        };
+        // FIFO with Window: queued async ticks land before the export,
+        // exactly as in `decommission`.
+        let gen = {
+            let (tx, rx) = mpsc::sync_channel(1);
+            self.client
+                .gen_tx
+                .send(GenMsg::Export(tx))
+                .map_err(|_| ShardLost::died(None))?;
+            recv_reply(&rx, None)?
+        };
+        let clock = Self::quiesce_shards(&self.client.shard_txs, None, f64::NEG_INFINITY)
+            .unwrap_or(f64::NEG_INFINITY);
+        let mut copies = Vec::new();
+        for (i, tx) in self.client.shard_txs.iter().enumerate() {
+            let (ctx, crx) = mpsc::sync_channel(1);
+            tx.send(ShardMsg::Export(ctx))
+                .map_err(|_| ShardLost::died(Some(i)))?;
+            copies.append(&mut recv_reply(&crx, Some(i))?);
+        }
+        Ok(HandoffState {
+            cfg: self.cfg.clone(),
+            engine: self.engine,
+            tick_mode: self.tick_mode,
+            gen,
+            copies,
+            clock,
+            pending,
+            start: self.client.shared.start,
+        })
+    }
+
+    /// Rebuild the fleet after losing shard `lost` (DESIGN.md §14.2).
+    ///
+    /// The survivors go through the exact decommission barrier (gen
+    /// export, quiesce, copy export, join); the lost shard contributes
+    /// its supervisor-held shadow instead: `shadow_copies` from the last
+    /// [`export_shard_copies`](Self::export_shard_copies) and
+    /// `shadow_stats` from the last per-shard metrics pull. Copies still
+    /// live on the dead shard at the quiesce point are restored to the
+    /// new fleet **and charged as fresh Eq. (3) packed transfers** on
+    /// the retired epoch's ledger — the cache content is recovered from
+    /// the shadow, but the bytes would have to cross the network again,
+    /// and the ledger stays an honest account of that. A panicked actor
+    /// is reaped without re-raising (the panic *is* the fault being
+    /// handled); a stalled actor is detached — its channels disconnect
+    /// when the old fleet's senders drop, and it exits on wake-up.
+    ///
+    /// Returns the new same-size fleet, the retired epoch's metrics
+    /// (shadow stats standing in for the lost shard), and the total
+    /// re-transfer charge.
+    ///
+    /// # Errors
+    ///
+    /// Fails if `lost` is out of range, the coordinator was already
+    /// stopped, or a *survivor* is also dead/stalled ([`ShardLost`]).
+    pub fn recover(
+        mut self,
+        lost: usize,
+        shadow_copies: Vec<CopyRecord>,
+        shadow_stats: ShardStats,
+    ) -> anyhow::Result<(Self, MetricsSnapshot, f64)> {
+        let n_shards = self.client.shard_txs.len();
+        anyhow::ensure!(lost < n_shards, "recover: no shard {lost}");
+        let pending = {
+            let mut window = self
+                .client
+                .shared
+                .window
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            window.take_pending()
+        };
+
+        // Worker first, as in `decommission`: export learned state and
+        // stop it so no Install can race the quiesce barrier.
+        let gen_state = {
+            let (tx, rx) = mpsc::sync_channel(1);
+            self.client
+                .gen_tx
+                .send(GenMsg::Export(tx))
+                .map_err(|_| ShardLost::died(None))?;
+            recv_reply(&rx, None)?
+        };
+        let gen_join = self
+            .gen_join
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("coordinator already stopped"))?;
+        let _ = self.client.gen_tx.send(GenMsg::Shutdown);
+        let gen = match gen_join.join() {
+            Ok(g) => g,
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
+
+        // Quiesce survivors to the global max request time *including*
+        // the dead shard's shadow clock — it may have seen the latest
+        // request, and survivors must still sweep retention rent to it.
+        let clock =
+            Self::quiesce_shards(&self.client.shard_txs, Some(lost), shadow_stats.last_time)
+                .unwrap_or(f64::NEG_INFINITY);
+
+        // Re-transfer charge: every copy still live on the lost shard at
+        // the quiesce point is restored to the rebuilt fleet and billed
+        // as a fresh packed transfer (Eq. 3) on the retired epoch.
+        let restored: Vec<CopyRecord> = shadow_copies
+            .into_iter()
+            .filter(|c| c.expiry > clock)
+            .collect();
+        let model = CostModel::from_config(&self.cfg);
+        let recharge: f64 = restored.iter().map(|c| model.transfer_packed(c.size)).sum();
+        let mut shadow_stats = shadow_stats;
+        shadow_stats.ledger.c_t += recharge;
+        shadow_stats.ledger.transfers += restored.len() as u64;
+
+        let mut copies = restored;
+        let mut shards = Vec::with_capacity(n_shards);
+        for (i, (tx, join)) in self
+            .client
+            .shard_txs
+            .iter()
+            .zip(&mut self.shard_joins)
+            .enumerate()
+        {
+            if i == lost {
+                let _ = tx.send(ShardMsg::Shutdown);
+                if let Some(j) = join.take() {
+                    if j.is_finished() {
+                        // Reap the panic payload without re-raising —
+                        // the panic is the fault being recovered from.
+                        let _ = j.join();
+                    }
+                    // else: stalled — detach (see doc comment above).
+                }
+                shards.push(shadow_stats.clone());
+            } else {
+                let (ctx, crx) = mpsc::sync_channel(1);
+                tx.send(ShardMsg::Export(ctx))
+                    .map_err(|_| ShardLost::died(Some(i)))?;
+                copies.append(&mut recv_reply(&crx, Some(i))?);
+                let _ = tx.send(ShardMsg::Shutdown);
+                if let Some(j) = join.take() {
+                    match j.join() {
+                        Ok(s) => shards.push(s),
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    }
+                }
+            }
+        }
+        let retired = MetricsSnapshot::aggregate(gen, shards);
+        let next = Self::boot(
+            self.cfg.clone(),
+            self.engine,
+            n_shards,
+            self.tick_mode,
+            Some((gen_state, copies, clock)),
+            pending,
+            self.client.shared.start,
+        )?;
+        Ok((next, retired, recharge))
+    }
+
     /// Stop every actor; returns `None` when already stopped. With
     /// `tolerate_panics` (the Drop path — possibly already unwinding), a
     /// panicked actor yields default stats instead of re-raising; the
@@ -678,7 +991,7 @@ impl Coordinator {
             Err(payload) => std::panic::resume_unwind(payload),
         };
 
-        Self::quiesce_shards(&self.client.shard_txs);
+        Self::quiesce_shards(&self.client.shard_txs, None, f64::NEG_INFINITY);
 
         let mut shards = Vec::with_capacity(self.shard_joins.len());
         for (tx, join) in self.client.shard_txs.iter().zip(&mut self.shard_joins) {
@@ -771,6 +1084,12 @@ fn shard_loop(
         match msg {
             ShardMsg::Serve(r, resp) => {
                 depth.fetch_sub(1, Ordering::Relaxed);
+                // Deterministic fault injection (DESIGN.md §14.1): a
+                // no-op single atomic load unless a test or `akpc exp
+                // faults` armed a plan. Fires *before* any state
+                // mutation, so a panicked/stalled shard's core equals
+                // its last shadow export exactly.
+                crate::fault::fire("shard-serve", Some(shard));
                 let t0 = Instant::now();
                 // Response assembly: the packed cliques covering D_i
                 // (Algorithm 5 line 13 — deliver whole cliques).
@@ -900,9 +1219,18 @@ fn gen_loop(
                 drop(ctx);
                 let mut min_clock = f64::INFINITY;
                 let mut acked = 0usize;
-                while let Ok(clock) = crx.recv() {
-                    min_clock = min_clock.min(clock);
-                    acked += 1;
+                // Bounded ack wait: a lost shard never acks, so a
+                // timeout just skips the board prune for this window
+                // (safe — pruning is an optimization) and keeps the
+                // worker alive for the supervisor's export.
+                while acked < expected {
+                    match crx.recv_timeout(reply_timeout()) {
+                        Ok(clock) => {
+                            min_clock = min_clock.min(clock);
+                            acked += 1;
+                        }
+                        Err(_) => break,
+                    }
                 }
                 if acked == shard_txs.len() && acked == expected {
                     if let Some(b) = &board {

@@ -1,0 +1,681 @@
+//! Checkpoint/restore: [`HandoffState`] on disk (DESIGN.md §14.3).
+//!
+//! A checkpoint is the *exact* portable state PR-8's elastic handoff
+//! already defined — config, clique-generation state, live copies,
+//! quiesce clock, pending window — plus what a crash-restarted daemon
+//! additionally needs: the admission watermark (so resent frames at or
+//! below it are rejected as duplicates, never double-served) and the
+//! merged metrics of everything served so far (so counters stay monotone
+//! across the restart, the same contract hot-reload epochs keep).
+//!
+//! ## File format (`akpc.ckpt`)
+//!
+//! ```text
+//!   magic  "AKCP"
+//!   version u32 = 1                      (all integers little-endian)
+//!   body:
+//!     cfg TOML text     (len-prefixed bytes; exact round-trip)
+//!     engine u8, tick_mode u8
+//!     clock f64, watermark f64
+//!     gen   { omega, windows, clique_gen_secs, prev_crm as
+//!             (active, CSR entries), cliques in slot order,
+//!             histogram (value, count) pairs, recent batches }
+//!     copies   [key u64, size u32, server u32, expiry f64]
+//!     pending  [requests]
+//!     prior metrics epoch (optional: full snapshot incl. per-shard)
+//!   checksum u64 = FNV-1a 64 over magic..body
+//! ```
+//!
+//! Writes go to `akpc.ckpt.tmp` then `fs::rename` — atomic on POSIX, so
+//! a crash (or an injected `checkpoint-write` fault) mid-write never
+//! corrupts the previous checkpoint. Reads verify magic, version, and
+//! checksum before deserializing; a truncated or bit-flipped file is a
+//! clean error, not a garbage restore.
+//!
+//! Not captured: the donor's `Instant` epoch (wall-clock anchor for
+//! live-mode `time: None` requests) — an `Instant` does not survive a
+//! process, so restore re-anchors at `Instant::now()`. Trace-timed
+//! ingest (every exactness test) is unaffected.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::cache::{CopyRecord, CostLedger};
+use crate::clique::CliqueSet;
+use crate::config::AkpcConfig;
+use crate::coordinator::{HandoffState, MetricsSnapshot, ShardStats};
+use crate::crm::CrmWindow;
+use crate::runtime::CrmEngine;
+use crate::trace::model::Request;
+use crate::util::Histogram;
+
+use crate::algo::GenState;
+use crate::coordinator::TickMode;
+
+const MAGIC: &[u8; 4] = b"AKCP";
+const VERSION: u32 = 1;
+
+/// Fixed checkpoint file name inside `--checkpoint-dir`; the atomic
+/// rename always replaces the whole file, so one name is one slot.
+pub const CKPT_FILE: &str = "akpc.ckpt";
+
+/// Everything a restarted daemon resumes from.
+pub struct Checkpoint {
+    /// The fleet state, byte-for-byte what `Coordinator::resume` needs.
+    pub state: HandoffState,
+    /// Admission floor: the highest request time admitted before the
+    /// checkpoint. A restarted daemon rejects times ≤ this as duplicates
+    /// (`rejected_late`), which is what makes client resend-from-ack
+    /// exactly-once end to end.
+    pub watermark: f64,
+    /// Merged metrics of all epochs up to the checkpoint (already
+    /// handoff-normalized); the restarted daemon seeds its prior-epoch
+    /// list with this so `/metrics` counters stay monotone.
+    pub prior: Option<MetricsSnapshot>,
+}
+
+// ---- byte-level helpers -------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        let mut buf = Vec::with_capacity(4096);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        Self { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+    fn finish(mut self) -> Vec<u8> {
+        let sum = fnv1a(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+        self.buf
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated checkpoint (need {n} bytes at offset {})",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn bytes(&mut self) -> anyhow::Result<&'a [u8]> {
+        let n = self.u64()? as usize;
+        self.take(n)
+    }
+    /// Bounded element count for a length prefix (corruption guard: a
+    /// bogus length must error, not attempt a huge allocation).
+    fn count(&mut self) -> anyhow::Result<usize> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(
+            n <= self.buf.len(),
+            "checkpoint length prefix {n} exceeds file size"
+        );
+        Ok(n)
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- domain encodings ---------------------------------------------------
+
+fn put_hist(w: &mut Writer, h: &Histogram) {
+    let pairs: Vec<(u32, u64)> = h.iter().collect();
+    w.u64(pairs.len() as u64);
+    for (v, c) in pairs {
+        w.u32(v);
+        w.u64(c);
+    }
+}
+
+fn get_hist(r: &mut Reader) -> anyhow::Result<Histogram> {
+    let n = r.count()?;
+    let mut h = Histogram::new();
+    for _ in 0..n {
+        let v = r.u32()?;
+        let c = r.u64()?;
+        h.record_n(v, c);
+    }
+    Ok(h)
+}
+
+fn put_request(w: &mut Writer, req: &Request) {
+    w.f64(req.time);
+    w.u32(req.server);
+    w.u32(req.items.len() as u32);
+    for &d in &req.items {
+        w.u32(d);
+    }
+}
+
+fn get_request(r: &mut Reader) -> anyhow::Result<Request> {
+    let time = r.f64()?;
+    let server = r.u32()?;
+    let k = r.u32()? as usize;
+    anyhow::ensure!(k <= r.buf.len(), "request item count {k} exceeds file size");
+    let mut items = Vec::with_capacity(k);
+    for _ in 0..k {
+        items.push(r.u32()?);
+    }
+    Ok(Request::new(items, server, time))
+}
+
+fn put_requests(w: &mut Writer, reqs: &[Request]) {
+    w.u64(reqs.len() as u64);
+    for r in reqs {
+        put_request(w, r);
+    }
+}
+
+fn get_requests(r: &mut Reader) -> anyhow::Result<Vec<Request>> {
+    let n = r.count()?;
+    (0..n).map(|_| get_request(r)).collect()
+}
+
+fn put_crm(w: &mut Writer, crm: &CrmWindow) {
+    w.u64(crm.active.len() as u64);
+    for &d in &crm.active {
+        w.u32(d);
+    }
+    // Walk the CSR rows back out as (row, id, w, edge) entries; the
+    // restore rebuilds through the same `from_entries` constructor the
+    // window diff uses, so row ordering is reproduced exactly.
+    let mut entries: Vec<(u32, u32, f32, bool)> = Vec::new();
+    for (row, &d) in crm.active.iter().enumerate() {
+        for (id, wgt, is_edge) in crm.neighbors(d) {
+            entries.push((row as u32, id, wgt, is_edge));
+        }
+    }
+    w.u64(entries.len() as u64);
+    for (row, id, wgt, is_edge) in entries {
+        w.u32(row);
+        w.u32(id);
+        w.f32(wgt);
+        w.u8(u8::from(is_edge));
+    }
+}
+
+fn get_crm(r: &mut Reader) -> anyhow::Result<CrmWindow> {
+    let k = r.count()?;
+    let mut active = Vec::with_capacity(k);
+    for _ in 0..k {
+        active.push(r.u32()?);
+    }
+    let n = r.count()?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row = r.u32()?;
+        let id = r.u32()?;
+        let wgt = r.f32()?;
+        let is_edge = r.u8()? != 0;
+        anyhow::ensure!((row as usize) < k.max(1), "CSR row {row} out of range");
+        entries.push(crate::crm::CsrEntry {
+            row,
+            id,
+            w: wgt,
+            is_edge,
+        });
+    }
+    Ok(CrmWindow::from_entries(active, entries))
+}
+
+fn put_cliques(w: &mut Writer, set: &CliqueSet) {
+    // Exported sets are always compacted (CliqueSet::generate ends with
+    // compact()), so serializing live cliques in slot order and
+    // re-inserting ascending reproduces identical slot ids.
+    let cliques: Vec<&[u32]> = set.iter_ids().map(|(_, c)| c).collect();
+    w.u64(cliques.len() as u64);
+    for c in cliques {
+        w.u64(c.len() as u64);
+        for &d in c {
+            w.u32(d);
+        }
+    }
+}
+
+fn get_cliques(r: &mut Reader) -> anyhow::Result<CliqueSet> {
+    let n = r.count()?;
+    let mut set = CliqueSet::new();
+    for _ in 0..n {
+        let k = r.count()?;
+        let mut items = Vec::with_capacity(k);
+        for _ in 0..k {
+            items.push(r.u32()?);
+        }
+        set.insert(items);
+    }
+    Ok(set)
+}
+
+fn put_ledger(w: &mut Writer, l: &CostLedger) {
+    w.f64(l.c_p);
+    w.f64(l.c_t);
+    w.u64(l.transfers);
+    w.u64(l.full_hits);
+    w.u64(l.misses);
+    w.u64(l.requests);
+    w.u64(l.items_delivered);
+    w.u64(l.items_requested);
+}
+
+fn get_ledger(r: &mut Reader) -> anyhow::Result<CostLedger> {
+    Ok(CostLedger {
+        c_p: r.f64()?,
+        c_t: r.f64()?,
+        transfers: r.u64()?,
+        full_hits: r.u64()?,
+        misses: r.u64()?,
+        requests: r.u64()?,
+        items_delivered: r.u64()?,
+        items_requested: r.u64()?,
+    })
+}
+
+fn put_snapshot(w: &mut Writer, m: &MetricsSnapshot) {
+    w.bytes(m.policy.as_bytes());
+    w.bytes(m.engine.as_bytes());
+    put_ledger(w, &m.ledger);
+    w.u64(m.served);
+    w.u64(m.windows);
+    w.u64(m.live_cliques as u64);
+    w.f64(m.clique_gen_secs);
+    put_hist(w, &m.clique_hist);
+    put_hist(w, &m.latency_us);
+    w.u64(m.per_shard.len() as u64);
+    for s in &m.per_shard {
+        w.u64(s.shard as u64);
+        put_ledger(w, &s.ledger);
+        w.u64(s.served);
+        w.u64(s.retentions);
+        w.u64(s.live_entries as u64);
+        w.u64(s.snapshot_version);
+        w.f64(s.last_time);
+        w.u64(s.queue_depth as u64);
+        put_hist(w, &s.latency_us);
+    }
+}
+
+fn get_snapshot(r: &mut Reader) -> anyhow::Result<MetricsSnapshot> {
+    let policy = String::from_utf8(r.bytes()?.to_vec())?;
+    let engine = String::from_utf8(r.bytes()?.to_vec())?;
+    let ledger = get_ledger(r)?;
+    let served = r.u64()?;
+    let windows = r.u64()?;
+    let live_cliques = r.u64()? as usize;
+    let clique_gen_secs = r.f64()?;
+    let clique_hist = get_hist(r)?;
+    let latency_us = get_hist(r)?;
+    let n = r.count()?;
+    let mut per_shard = Vec::with_capacity(n);
+    for _ in 0..n {
+        let shard = r.u64()? as usize;
+        let ledger = get_ledger(r)?;
+        let served = r.u64()?;
+        let retentions = r.u64()?;
+        let live_entries = r.u64()? as usize;
+        let snapshot_version = r.u64()?;
+        let last_time = r.f64()?;
+        let queue_depth = r.u64()? as usize;
+        let latency_us = get_hist(r)?;
+        per_shard.push(ShardStats {
+            shard,
+            ledger,
+            served,
+            latency_us,
+            retentions,
+            live_entries,
+            snapshot_version,
+            last_time,
+            queue_depth,
+        });
+    }
+    Ok(MetricsSnapshot {
+        policy,
+        engine,
+        ledger,
+        served,
+        windows,
+        live_cliques,
+        clique_hist,
+        clique_gen_secs,
+        latency_us,
+        per_shard,
+    })
+}
+
+// ---- top level ----------------------------------------------------------
+
+/// Serialize a checkpoint to bytes (magic + version + body + checksum).
+pub fn to_bytes(ck: &Checkpoint) -> Vec<u8> {
+    let mut w = Writer::new();
+    let st = &ck.state;
+    w.bytes(st.cfg.to_toml().as_bytes());
+    w.u8(match st.engine {
+        CrmEngine::Native => 0,
+        CrmEngine::Xla => 1,
+    });
+    w.u8(match st.tick_mode {
+        TickMode::Sync => 0,
+        TickMode::Async => 1,
+    });
+    w.f64(st.clock);
+    w.f64(ck.watermark);
+    // GenState.
+    w.u32(st.gen.omega);
+    w.u64(st.gen.windows);
+    w.f64(st.gen.clique_gen_secs);
+    put_crm(&mut w, &st.gen.prev_crm);
+    put_cliques(&mut w, &st.gen.cliques);
+    put_hist(&mut w, &st.gen.hist);
+    w.u64(st.gen.recent.len() as u64);
+    for batch in &st.gen.recent {
+        put_requests(&mut w, batch);
+    }
+    // Copies.
+    w.u64(st.copies.len() as u64);
+    for c in &st.copies {
+        w.u64(c.key);
+        w.u32(c.size);
+        w.u32(c.server);
+        w.f64(c.expiry);
+    }
+    put_requests(&mut w, &st.pending);
+    // Prior metrics epoch.
+    match &ck.prior {
+        None => w.u8(0),
+        Some(m) => {
+            w.u8(1);
+            put_snapshot(&mut w, m);
+        }
+    }
+    w.finish()
+}
+
+/// Deserialize and verify a checkpoint (magic, version, checksum).
+pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+    anyhow::ensure!(bytes.len() >= MAGIC.len() + 4 + 8, "checkpoint too short");
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let sum = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    anyhow::ensure!(fnv1a(body) == sum, "checkpoint checksum mismatch");
+    let mut r = Reader { buf: body, pos: 0 };
+    anyhow::ensure!(r.take(4)? == MAGIC, "not an AKCP checkpoint");
+    let version = r.u32()?;
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+
+    let cfg = AkpcConfig::from_toml_str(std::str::from_utf8(r.bytes()?)?)?;
+    let engine = match r.u8()? {
+        0 => CrmEngine::Native,
+        1 => CrmEngine::Xla,
+        t => anyhow::bail!("unknown engine tag {t}"),
+    };
+    let tick_mode = match r.u8()? {
+        0 => TickMode::Sync,
+        1 => TickMode::Async,
+        t => anyhow::bail!("unknown tick-mode tag {t}"),
+    };
+    let clock = r.f64()?;
+    let watermark = r.f64()?;
+    let omega = r.u32()?;
+    let windows = r.u64()?;
+    let clique_gen_secs = r.f64()?;
+    let prev_crm = get_crm(&mut r)?;
+    let cliques = get_cliques(&mut r)?;
+    let hist = get_hist(&mut r)?;
+    let n_batches = r.count()?;
+    let mut recent = VecDeque::with_capacity(n_batches);
+    for _ in 0..n_batches {
+        recent.push_back(get_requests(&mut r)?);
+    }
+    let n_copies = r.count()?;
+    let mut copies = Vec::with_capacity(n_copies);
+    for _ in 0..n_copies {
+        copies.push(CopyRecord {
+            key: r.u64()?,
+            size: r.u32()?,
+            server: r.u32()?,
+            expiry: r.f64()?,
+        });
+    }
+    let pending = get_requests(&mut r)?;
+    let prior = match r.u8()? {
+        0 => None,
+        _ => Some(get_snapshot(&mut r)?),
+    };
+    anyhow::ensure!(r.pos == r.buf.len(), "trailing bytes in checkpoint");
+
+    let gen = GenState {
+        omega,
+        prev_crm,
+        cliques,
+        hist,
+        recent,
+        clique_gen_secs,
+        windows,
+    };
+    Ok(Checkpoint {
+        state: HandoffState {
+            cfg,
+            engine,
+            tick_mode,
+            gen,
+            copies,
+            clock,
+            pending,
+            // An Instant cannot cross a process boundary; live-mode
+            // wall-clock timestamps re-anchor at restore time.
+            start: Instant::now(),
+        },
+        watermark,
+        prior,
+    })
+}
+
+/// Path of the checkpoint slot inside `dir`.
+pub fn slot_path(dir: &Path) -> PathBuf {
+    dir.join(CKPT_FILE)
+}
+
+/// Write a checkpoint into `dir` atomically: serialize, write
+/// `akpc.ckpt.tmp`, fsync, rename over `akpc.ckpt`. An injected
+/// `checkpoint-write` fault (or any IO error) leaves the previous
+/// checkpoint untouched.
+pub fn write_to_dir(dir: &Path, ck: &Checkpoint) -> anyhow::Result<PathBuf> {
+    anyhow::ensure!(
+        !crate::fault::should_fail("checkpoint-write", None),
+        "injected fault: checkpoint write failure"
+    );
+    std::fs::create_dir_all(dir)?;
+    let bytes = to_bytes(ck);
+    let tmp = dir.join(format!("{CKPT_FILE}.tmp"));
+    let fin = slot_path(dir);
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &fin)?;
+    Ok(fin)
+}
+
+/// Load the checkpoint slot from `dir`; `Ok(None)` if none exists yet.
+pub fn read_from_dir(dir: &Path) -> anyhow::Result<Option<Checkpoint>> {
+    let path = slot_path(dir);
+    match std::fs::read(&path) {
+        Ok(bytes) => Ok(Some(from_bytes(&bytes).map_err(|e| {
+            anyhow::anyhow!("{}: {e}", path.display())
+        })?)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(e.into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, ServeRequest};
+    use crate::util::tempdir::TempDir;
+
+    fn cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 16,
+            n_servers: 4,
+            batch_size: 10,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    /// Drive a coordinator to a non-trivial state and checkpoint it.
+    fn live_checkpoint() -> Checkpoint {
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 2).unwrap();
+        for i in 0..25 {
+            coord
+                .serve(ServeRequest {
+                    items: vec![1, 2],
+                    server: i % 4,
+                    time: Some(f64::from(i) * 0.05),
+                })
+                .unwrap();
+        }
+        let state = coord.checkpoint_state().unwrap();
+        let prior = coord.metrics().unwrap();
+        let clock = state.clock();
+        drop(coord);
+        Checkpoint {
+            state,
+            watermark: clock,
+            prior: Some(prior.into_handoff_epoch()),
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_state_and_serving_behavior() {
+        let ck = live_checkpoint();
+        let n_copies = ck.state.n_copies();
+        let n_pending = ck.state.n_pending();
+        let clock = ck.state.clock();
+        let bytes = to_bytes(&ck);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.state.n_copies(), n_copies);
+        assert_eq!(back.state.n_pending(), n_pending);
+        assert_eq!(back.state.clock(), clock);
+        assert_eq!(back.watermark, ck.watermark);
+        let prior = back.prior.as_ref().unwrap();
+        assert_eq!(prior.served, 25);
+        // The restored fleet serves the learned {1,2} pack — the clique
+        // set and cache content survived the byte round-trip.
+        let coord = Coordinator::resume(back.state, 2).unwrap();
+        let resp = coord
+            .serve(ServeRequest {
+                items: vec![1],
+                server: 3,
+                time: Some(10.0),
+            })
+            .unwrap();
+        assert_eq!(resp.delivered, vec![1, 2]);
+        drop(coord);
+    }
+
+    #[test]
+    fn dir_slot_roundtrip_and_missing_dir() {
+        let dir = TempDir::new("akpc-ckpt").unwrap();
+        assert!(read_from_dir(dir.path()).unwrap().is_none());
+        let ck = live_checkpoint();
+        write_to_dir(dir.path(), &ck).unwrap();
+        let back = read_from_dir(dir.path()).unwrap().unwrap();
+        assert_eq!(back.state.n_copies(), ck.state.n_copies());
+        // Overwrite is atomic: a second write replaces the slot.
+        write_to_dir(dir.path(), &back).unwrap();
+        assert!(read_from_dir(dir.path()).unwrap().is_some());
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let ck = live_checkpoint();
+        let bytes = to_bytes(&ck);
+        // Bit-flip in the body → checksum mismatch.
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(from_bytes(&bad).is_err());
+        // Truncation → clean error.
+        assert!(from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        // Wrong magic.
+        let mut bad = bytes;
+        bad[0] = b'X';
+        assert!(from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn injected_write_failure_leaves_previous_slot_intact() {
+        let dir = TempDir::new("akpc-ckpt-fault").unwrap();
+        let ck = live_checkpoint();
+        write_to_dir(dir.path(), &ck).unwrap();
+        crate::fault::arm(
+            "checkpoint-write",
+            None,
+            crate::fault::FaultAction::Fail,
+            0,
+        );
+        assert!(write_to_dir(dir.path(), &ck).is_err());
+        // The previous checkpoint still reads back clean.
+        let back = read_from_dir(dir.path()).unwrap().unwrap();
+        assert_eq!(back.state.n_copies(), ck.state.n_copies());
+        crate::fault::disarm_all();
+    }
+}

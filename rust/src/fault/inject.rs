@@ -1,0 +1,194 @@
+//! The fault-injection point (DESIGN.md §14.1).
+//!
+//! A process-global registry of *armed* faults, compiled permanently
+//! into the hot paths it guards but **zero-cost when empty**: every
+//! hook site calls [`fire`]/[`should_fail`], which is a single relaxed
+//! atomic load unless a test or `akpc exp faults` has armed something.
+//! The panic / sleep themselves live in *this* module, so the guarded
+//! modules (`coordinator/`, `serve/`) stay clean under akpc-lint L3
+//! (no panics on the hot path — the injected panic *is* the experiment,
+//! not a code path a production request can reach).
+//!
+//! Sites currently compiled in:
+//!
+//! | site | location | actions |
+//! |---|---|---|
+//! | `shard-serve` | shard actor, top of the Serve arm | Panic, Stall |
+//! | `checkpoint-write` | checkpoint writer, before the tmp write | Fail |
+//! | `ingest-frame` | ingest pumps, per admitted frame | Fail (connection drop) |
+//!
+//! Arms are **one-shot**: a fault that fires is consumed. `after`
+//! counts matching hits to skip first (0 = fire on the next hit), which
+//! is how a plan expresses "drop the connection after k frames" or
+//! "panic shard 2 on its next serve".
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What an armed fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic the calling thread (a shard-actor crash).
+    Panic,
+    /// Sleep the calling thread for the given duration (a wedged actor;
+    /// pick it well above the coordinator reply timeout).
+    Stall(Duration),
+    /// Make the guarded operation report failure ([`should_fail`]
+    /// returns `true`): a checkpoint write error, a dropped connection.
+    Fail,
+}
+
+/// One armed fault in the global registry.
+#[derive(Debug, Clone)]
+struct ArmedFault {
+    site: &'static str,
+    /// Shard filter: `Some(i)` fires only for shard `i`; `None` fires
+    /// for any hit on the site.
+    shard: Option<usize>,
+    action: FaultAction,
+    /// Matching hits to skip before firing (decremented per match).
+    after: u64,
+}
+
+/// Fast-path guard: number of armed faults. The hook sites read this
+/// with one relaxed load and return immediately when it is zero, so an
+/// unarmed binary pays one predictable-branch atomic per site hit.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+static REGISTRY: Mutex<Vec<ArmedFault>> = Mutex::new(Vec::new());
+
+fn with_registry<T>(f: impl FnOnce(&mut Vec<ArmedFault>) -> T) -> T {
+    let mut reg = REGISTRY
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
+    let out = f(&mut reg);
+    ARMED.store(reg.len(), Ordering::Relaxed);
+    out
+}
+
+/// Arm a one-shot fault: `action` fires at hook `site` (for `shard`, if
+/// given) after skipping `after` matching hits. Tests and the
+/// fault-plan driver call this; nothing arms faults in production.
+pub fn arm(site: &'static str, shard: Option<usize>, action: FaultAction, after: u64) {
+    with_registry(|reg| {
+        reg.push(ArmedFault {
+            site,
+            shard,
+            action,
+            after,
+        });
+    });
+}
+
+/// Disarm everything (test teardown; the registry is process-global, so
+/// fault tests serialize on a lock and clear it between cases).
+pub fn disarm_all() {
+    with_registry(Vec::clear);
+}
+
+/// Number of currently armed faults.
+pub fn armed() -> usize {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Take the action armed for this hit, if any (consumes the arm).
+fn take(site: &str, shard: Option<usize>) -> Option<FaultAction> {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    with_registry(|reg| {
+        let pos = reg.iter_mut().position(|a| {
+            a.site == site && (a.shard.is_none() || a.shard == shard)
+        })?;
+        if reg[pos].after > 0 {
+            reg[pos].after -= 1;
+            return None;
+        }
+        Some(reg.swap_remove(pos).action)
+    })
+}
+
+/// Hook for active faults (panic / stall): a no-op single atomic load
+/// unless armed. Call at the top of the guarded operation, *before* any
+/// state mutation, so a fired fault leaves state exactly as it was.
+pub fn fire(site: &str, shard: Option<usize>) {
+    match take(site, shard) {
+        None | Some(FaultAction::Fail) => {}
+        Some(FaultAction::Panic) => {
+            panic!("injected fault: {site} shard={shard:?} (FaultAction::Panic)")
+        }
+        Some(FaultAction::Stall(d)) => std::thread::sleep(d),
+    }
+}
+
+/// Hook for failure-result faults: `true` = the guarded operation must
+/// report an error this time (consumes the arm). Panic/Stall arms on
+/// the same site still execute here, so a site can use either hook.
+pub fn should_fail(site: &str, shard: Option<usize>) -> bool {
+    match take(site, shard) {
+        None => false,
+        Some(FaultAction::Fail) => true,
+        Some(FaultAction::Panic) => {
+            panic!("injected fault: {site} shard={shard:?} (FaultAction::Panic)")
+        }
+        Some(FaultAction::Stall(d)) => {
+            std::thread::sleep(d);
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; these tests must not interleave
+    // with each other (or with tests/fault.rs, which runs in a separate
+    // test binary and serializes on its own lock).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn unarmed_hooks_are_inert() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        disarm_all();
+        assert_eq!(armed(), 0);
+        fire("shard-serve", Some(0));
+        assert!(!should_fail("checkpoint-write", None));
+    }
+
+    #[test]
+    fn fail_arm_is_one_shot() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        disarm_all();
+        arm("checkpoint-write", None, FaultAction::Fail, 0);
+        assert_eq!(armed(), 1);
+        assert!(should_fail("checkpoint-write", None));
+        assert!(!should_fail("checkpoint-write", None), "consumed");
+        assert_eq!(armed(), 0);
+    }
+
+    #[test]
+    fn after_skips_hits_and_shard_filter_matches() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        disarm_all();
+        arm("ingest-frame", None, FaultAction::Fail, 2);
+        assert!(!should_fail("ingest-frame", None)); // skip 1
+        assert!(!should_fail("ingest-frame", None)); // skip 2
+        assert!(should_fail("ingest-frame", None)); // fires
+        arm("shard-serve", Some(3), FaultAction::Fail, 0);
+        assert!(!should_fail("shard-serve", Some(1)), "wrong shard");
+        assert!(should_fail("shard-serve", Some(3)));
+        disarm_all();
+    }
+
+    #[test]
+    fn panic_action_panics() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        disarm_all();
+        arm("shard-serve", Some(0), FaultAction::Panic, 0);
+        let r = std::panic::catch_unwind(|| fire("shard-serve", Some(0)));
+        assert!(r.is_err());
+        assert_eq!(armed(), 0);
+    }
+}

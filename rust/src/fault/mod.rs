@@ -1,0 +1,37 @@
+//! Fault tolerance (DESIGN.md §14): deterministic fault injection,
+//! shard supervision/recovery, and checkpoint/restore.
+//!
+//! The layer answers one question for the serving stack: *what does a
+//! failure cost, exactly?* Every fault the harness can inject — a shard
+//! actor panicking or wedging mid-serve, an ingest connection dying, a
+//! checkpoint write failing — has a recovery path whose cost is pinned
+//! against a never-faulted oracle:
+//!
+//! > recovered total == oracle total + Σ transfer charges for the
+//! >                    copies re-fetched onto the rebuilt shard
+//!
+//! Four pieces:
+//!
+//! * [`inject`] — the process-global registry of armed faults and the
+//!   zero-cost-when-empty hooks ([`fire`] / [`should_fail`]) compiled
+//!   into the guarded hot paths.
+//! * [`plan`] — seeded, ordered fault schedules ([`FaultPlan`]),
+//!   parseable from compact specs (`shard-panic@2:1`) or drawn
+//!   reproducibly for property sweeps.
+//! * [`supervisor`] — the offline driver: runs a trace under a plan,
+//!   detects lost shards via typed [`ShardLost`](crate::coordinator::ShardLost)
+//!   errors and join-handle watches, rebuilds the fleet from per-shard
+//!   shadows, and reports the exact recharge.
+//! * [`checkpoint`] — [`HandoffState`](crate::coordinator::HandoffState)
+//!   on disk: length-prefixed, checksummed, atomically renamed; what
+//!   `akpc serve --checkpoint-dir` crash-restarts from.
+
+pub mod checkpoint;
+pub mod inject;
+pub mod plan;
+pub mod supervisor;
+
+pub use checkpoint::{read_from_dir, write_to_dir, Checkpoint};
+pub use inject::{arm, armed, disarm_all, fire, should_fail, FaultAction};
+pub use plan::{FaultEvent, FaultKind, FaultPlan};
+pub use supervisor::{run_fault_plan, FaultRunOptions, FaultRunReport};

@@ -1,0 +1,185 @@
+//! Deterministic, seeded fault plans (DESIGN.md §14.1).
+//!
+//! A [`FaultPlan`] is an ordered schedule of [`FaultEvent`]s — *which*
+//! fault, *where* (shard), *when* (window boundary index) — either
+//! written out explicitly, parsed from compact specs
+//! (`"shard-panic@2:1"` = panic shard 1 at window boundary 2), or drawn
+//! from a seeded xorshift generator so a property test can sweep ~30
+//! random schedules reproducibly. The plan itself never touches the
+//! global injection registry; the [supervisor](crate::fault::supervisor)
+//! arms each event at the right moment and drives recovery.
+
+use crate::util::Rng;
+
+/// The fault matrix: everything the harness can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The target shard's actor thread panics on its next serve.
+    ShardPanic,
+    /// The target shard's actor wedges (sleeps past the reply timeout)
+    /// on its next serve.
+    ShardStall,
+    /// The ingest connection drops mid-stream; the client reconnects
+    /// and resumes from its acked watermark.
+    IngestDrop,
+    /// The next checkpoint write fails (disk error); the previous
+    /// checkpoint must stay intact (atomic rename).
+    CheckpointFail,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::ShardPanic => "shard-panic",
+            FaultKind::ShardStall => "shard-stall",
+            FaultKind::IngestDrop => "ingest-drop",
+            FaultKind::CheckpointFail => "checkpoint-fail",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "shard-panic" => Ok(Self::ShardPanic),
+            "shard-stall" => Ok(Self::ShardStall),
+            "ingest-drop" => Ok(Self::IngestDrop),
+            "checkpoint-fail" => Ok(Self::CheckpointFail),
+            _ => anyhow::bail!("unknown fault kind `{s}`"),
+        }
+    }
+}
+
+/// One scheduled fault: `kind` against `shard` at window boundary
+/// `window` (the fault arms when the coordinator has closed exactly
+/// `window` windows, and fires on the next matching hit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub window: u64,
+    /// Target shard (ignored by `IngestDrop` / `CheckpointFail`).
+    pub shard: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Compact spec: `kind@window[:shard]`, shard defaulting to 0.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let (kind, rest) = spec
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault spec `{spec}` needs kind@window[:shard]"))?;
+        let (window, shard) = match rest.split_once(':') {
+            Some((w, s)) => (w, s.parse()?),
+            None => (rest, 0),
+        };
+        Ok(Self {
+            window: window.parse()?,
+            shard,
+            kind: FaultKind::parse(kind)?,
+        })
+    }
+
+    pub fn spec(&self) -> String {
+        format!("{}@{}:{}", self.kind.as_str(), self.window, self.shard)
+    }
+}
+
+/// An ordered fault schedule, sorted by window boundary.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.window);
+        Self { events }
+    }
+
+    /// Parse a comma-separated list of compact specs
+    /// (`"shard-panic@2:1,ingest-drop@4"`).
+    pub fn parse(specs: &str) -> anyhow::Result<Self> {
+        let events = specs
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| FaultEvent::parse(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self::new(events))
+    }
+
+    /// Draw a random schedule: `n_events` faults over `n_windows` window
+    /// boundaries (≥ 1 — a boundary-0 fault would precede any learned
+    /// state) against `n_shards` shards, reproducible per `seed`. All
+    /// four kinds are drawn; recovery-path kinds dominate the weighting
+    /// (panic/stall 3:3:1:1 vs drop/checkpoint) since they exercise the
+    /// exactness contract the property test pins.
+    pub fn random(seed: u64, n_events: usize, n_windows: u64, n_shards: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let kind = match rng.next_u64() % 8 {
+                0..=2 => FaultKind::ShardPanic,
+                3..=5 => FaultKind::ShardStall,
+                6 => FaultKind::IngestDrop,
+                _ => FaultKind::CheckpointFail,
+            };
+            events.push(FaultEvent {
+                window: 1 + rng.next_u64() % n_windows.max(1),
+                shard: (rng.next_u64() % n_shards.max(1) as u64) as usize,
+                kind,
+            });
+        }
+        Self::new(events)
+    }
+
+    /// Events scheduled at window boundary `w` (ascending shard order —
+    /// Vec order after the sort is stable for equal windows).
+    pub fn at_window(&self, w: u64) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter().filter(move |e| e.window == w)
+    }
+
+    pub fn spec(&self) -> String {
+        self.events
+            .iter()
+            .map(FaultEvent::spec)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip() {
+        let p = FaultPlan::parse("shard-panic@2:1, ingest-drop@4, shard-stall@1:0").unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(p.events[0].kind, FaultKind::ShardStall, "sorted by window");
+        let back = FaultPlan::parse(&p.spec()).unwrap();
+        assert_eq!(back.events, p.events);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(FaultPlan::parse("nonsense@1").is_err());
+        assert!(FaultPlan::parse("shard-panic").is_err());
+        assert!(FaultPlan::parse("shard-panic@x").is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_in_range() {
+        let a = FaultPlan::random(7, 10, 5, 4);
+        let b = FaultPlan::random(7, 10, 5, 4);
+        assert_eq!(a.events, b.events);
+        assert!(a.events.iter().all(|e| e.window >= 1 && e.window <= 5));
+        assert!(a.events.iter().all(|e| e.shard < 4));
+        let c = FaultPlan::random(8, 10, 5, 4);
+        assert_ne!(a.events, c.events, "seed changes the schedule");
+    }
+
+    #[test]
+    fn at_window_filters() {
+        let p = FaultPlan::parse("shard-panic@2:1,shard-stall@2:0,ingest-drop@3").unwrap();
+        assert_eq!(p.at_window(2).count(), 2);
+        assert_eq!(p.at_window(3).count(), 1);
+        assert_eq!(p.at_window(1).count(), 0);
+    }
+}

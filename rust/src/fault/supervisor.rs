@@ -1,0 +1,415 @@
+//! Shard supervision: drive a trace through a [`Coordinator`] under a
+//! [`FaultPlan`], recover from every injected failure, and account for
+//! the recovery exactly (DESIGN.md §14.2).
+//!
+//! The supervisor is the offline twin of the serving daemon's recovery
+//! path — same primitives (`lost_shard`, `recover`, the checkpoint
+//! writer, the admission-watermark dedup), driven synchronously so the
+//! exactness contract is testable:
+//!
+//! > recovered total cost == never-faulted oracle total
+//! >                         + Σ re-transfer charges for copies restored
+//! >                           from each dead shard's shadow
+//!
+//! ## Why the shadow is exact (the gap-1 argument)
+//!
+//! Shadows (per-shard live copies + stats) are captured at every window
+//! boundary, *after* the synchronous snapshot install. A shard fault is
+//! armed at a boundary and fires at the **top of the next Serve arm**
+//! that reaches the doomed shard — before that serve mutates anything,
+//! and `Coordinator::serve` only pushes a request into the window
+//! batcher *after* the shard replies. So between the last shadow and
+//! the fault there are zero mutations on the doomed shard (no serves —
+//! the firing serve is the first since arming; no installs — those only
+//! happen at boundaries). The shadow *is* the dead shard's state at
+//! fault time, the failed request is neither served nor batched, and
+//! re-submitting it to the recovered fleet replays history with a gap
+//! of exactly zero requests.
+//!
+//! Stalled shards (wedged, not dead) eventually wake and serve the
+//! doomed request into their *old* core — which the recovered fleet
+//! discarded in favor of the shadow, and whose response channel is
+//! gone. The write is invisible; the old actor drains and exits once
+//! the retired fleet's senders drop.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use crate::cache::CopyRecord;
+use crate::config::AkpcConfig;
+use crate::coordinator::{
+    set_reply_timeout_ms, Coordinator, MetricsSnapshot, ServeRequest, ShardLost, ShardStats,
+};
+use crate::fault::checkpoint::{self, Checkpoint};
+use crate::fault::plan::{FaultKind, FaultPlan};
+use crate::fault::{arm, disarm_all, FaultAction};
+use crate::runtime::CrmEngine;
+use crate::trace::model::Request;
+
+/// Knobs for one supervised run.
+pub struct FaultRunOptions {
+    pub cfg: AkpcConfig,
+    pub engine: CrmEngine,
+    pub n_shards: usize,
+    pub plan: FaultPlan,
+    /// How long an injected stall sleeps. Must exceed
+    /// `reply_timeout_ms` or the stall is invisible.
+    pub stall_ms: u64,
+    /// Coordinator reply timeout while this run is active (swapped in
+    /// on entry, restored on exit). Keep small so stall detection does
+    /// not dominate test wall-clock.
+    pub reply_timeout_ms: u64,
+    /// If set, a checkpoint is written at every window boundary (and
+    /// `checkpoint-fail` events have something to break).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl FaultRunOptions {
+    pub fn new(cfg: AkpcConfig, engine: CrmEngine, n_shards: usize, plan: FaultPlan) -> Self {
+        Self {
+            cfg,
+            engine,
+            n_shards,
+            plan,
+            stall_ms: 400,
+            reply_timeout_ms: 100,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// What a supervised run did and what it cost.
+#[derive(Debug, Clone)]
+pub struct FaultRunReport {
+    /// Final metrics, merged across every fleet epoch (pre-recovery
+    /// epochs fold in exactly like hot-reload epochs do).
+    pub snapshot: MetricsSnapshot,
+    /// `snapshot.ledger.total()`, for callers that only want the number.
+    pub total_cost: f64,
+    /// Fleet rebuilds performed (shard panics + stalls detected).
+    pub recoveries: u64,
+    /// Σ re-transfer cost charged for copies restored from dead-shard
+    /// shadows — the exact gap between this run and a faultless oracle.
+    pub recharges: f64,
+    /// Requests re-submitted after a recovery (the in-flight casualty
+    /// of each fault; always ≤ `recoveries`... equal, in fact).
+    pub resubmitted: u64,
+    /// Replayed frames rejected by the admission watermark after an
+    /// injected ingest drop (exactly-once: duplicates never serve).
+    pub duplicates_rejected: u64,
+    /// Window-boundary checkpoints that landed on disk.
+    pub checkpoints_written: u64,
+    /// Checkpoint writes that failed under an injected fault (the
+    /// previous slot stays intact — atomic rename).
+    pub checkpoint_failures: u64,
+}
+
+/// RAII: swap the coordinator reply timeout in, restore the old value
+/// on scope exit (the registry and timeout are process-global, so fault
+/// runs must not leak their aggressive settings into other tests).
+struct TimeoutGuard {
+    old_ms: u64,
+}
+
+impl TimeoutGuard {
+    fn set(ms: u64) -> Self {
+        Self {
+            old_ms: set_reply_timeout_ms(ms),
+        }
+    }
+}
+
+impl Drop for TimeoutGuard {
+    fn drop(&mut self) {
+        set_reply_timeout_ms(self.old_ms);
+        disarm_all();
+    }
+}
+
+/// Capture per-shard shadows: `(stats, live copies)` for every shard,
+/// taken at a window boundary so the gap-1 argument applies.
+fn capture_shadows(
+    coord: &Coordinator,
+    n_shards: usize,
+) -> anyhow::Result<Vec<(ShardStats, Vec<CopyRecord>)>> {
+    let m = coord.metrics()?;
+    let mut out = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let stats = m
+            .per_shard
+            .iter()
+            .find(|p| p.shard == s)
+            .cloned()
+            .unwrap_or_else(|| ShardStats {
+                shard: s,
+                ..ShardStats::default()
+            });
+        let copies = coord.export_shard_copies(s)?;
+        out.push((stats, copies));
+    }
+    Ok(out)
+}
+
+/// Run `trace` through a supervised coordinator fleet under
+/// `opts.plan`, recovering from every injected fault.
+///
+/// The trace must be globally time-ordered (strictly increasing
+/// `time`), which is what makes the admission-watermark dedup and the
+/// expiry-sweep transparency arguments hold; every generator in
+/// [`crate::trace`] produces such traces.
+///
+/// # Errors
+///
+/// Propagates coordinator failures that are *not* attributable to a
+/// supervised shard (e.g. the clique-gen worker dying), and checkpoint
+/// IO errors other than injected ones.
+pub fn run_fault_plan(opts: &FaultRunOptions, trace: &[Request]) -> anyhow::Result<FaultRunReport> {
+    let batch = opts.cfg.batch_size.max(1) as u64;
+    let _guard = TimeoutGuard::set(opts.reply_timeout_ms);
+    disarm_all();
+
+    let mut coord = Some(Coordinator::start(
+        opts.cfg.clone(),
+        opts.engine,
+        opts.n_shards,
+    )?);
+    let n_shards = opts.n_shards.max(1);
+    let mut prior: Vec<MetricsSnapshot> = Vec::new();
+    let mut shadows = capture_shadows(coord.as_ref().unwrap(), n_shards)?;
+
+    let mut queue: VecDeque<Request> = trace.iter().cloned().collect();
+    // Frames delivered since the last boundary — what an ingest drop
+    // makes the "client" redeliver.
+    let mut recent: VecDeque<Request> = VecDeque::new();
+    let mut watermark = f64::NEG_INFINITY;
+    let mut served: u64 = 0;
+    let mut boundary: u64 = 0;
+
+    let mut recoveries = 0u64;
+    let mut recharges = 0.0f64;
+    let mut resubmitted = 0u64;
+    let mut duplicates_rejected = 0u64;
+    let mut checkpoints_written = 0u64;
+    let mut checkpoint_failures = 0u64;
+
+    while let Some(req) = queue.pop_front() {
+        // Admission watermark: exactly what the daemon's reorder stage
+        // enforces — a frame at or below the high-water mark is a
+        // duplicate (ingest-drop redelivery) and must never serve.
+        if req.time <= watermark {
+            duplicates_rejected += 1;
+            continue;
+        }
+        let sreq = ServeRequest {
+            items: req.items.clone(),
+            server: req.server,
+            time: Some(req.time),
+        };
+        match coord.as_ref().unwrap().serve(sreq) {
+            Ok(_) => {
+                watermark = req.time;
+                served += 1;
+                recent.push_back(req);
+                if recent.len() as u64 > batch {
+                    recent.pop_front();
+                }
+                if served % batch != 0 {
+                    continue;
+                }
+                // ---- window boundary ----
+                boundary += 1;
+                let c = coord.as_ref().unwrap();
+                // Shadows first: state *after* this boundary's install,
+                // *before* anything armed below can fire.
+                shadows = capture_shadows(c, n_shards)?;
+                for ev in opts.plan.at_window(boundary) {
+                    match ev.kind {
+                        FaultKind::ShardPanic => {
+                            arm("shard-serve", Some(ev.shard % n_shards), FaultAction::Panic, 0);
+                        }
+                        FaultKind::ShardStall => arm(
+                            "shard-serve",
+                            Some(ev.shard % n_shards),
+                            FaultAction::Stall(std::time::Duration::from_millis(opts.stall_ms)),
+                            0,
+                        ),
+                        FaultKind::IngestDrop => {
+                            // The connection died after the batch was
+                            // acked server-side but before the client
+                            // saw the ack: the client reconnects and
+                            // redelivers everything past its last acked
+                            // watermark. All of it is duplicate.
+                            for r in recent.iter().rev() {
+                                queue.push_front(r.clone());
+                            }
+                        }
+                        FaultKind::CheckpointFail => {
+                            arm("checkpoint-write", None, FaultAction::Fail, 0);
+                        }
+                    }
+                }
+                if let Some(dir) = &opts.checkpoint_dir {
+                    let ck = Checkpoint {
+                        state: c.checkpoint_state()?,
+                        watermark,
+                        prior: prior.last().cloned(),
+                    };
+                    match checkpoint::write_to_dir(dir, &ck) {
+                        Ok(_) => checkpoints_written += 1,
+                        Err(_) => checkpoint_failures += 1,
+                    }
+                }
+            }
+            Err(e) => {
+                // Attribute the failure to a shard: the typed error
+                // knows which mailbox timed out / disconnected; a
+                // panicked actor is also visible via its join handle.
+                let lost = e
+                    .downcast_ref::<ShardLost>()
+                    .and_then(|l| l.shard)
+                    .or_else(|| coord.as_ref().unwrap().lost_shard());
+                let Some(lost) = lost else {
+                    return Err(e);
+                };
+                let lost = lost % n_shards;
+                let (stats, copies) = shadows[lost].clone();
+                let retiring = coord.take().unwrap();
+                let (next, retired, recharge) = retiring.recover(lost, copies, stats)?;
+                coord = Some(next);
+                prior.push(retired.into_handoff_epoch());
+                recoveries += 1;
+                recharges += recharge;
+                // Fresh fleet, fresh shadows (state is the recovery
+                // baseline; the next boundary refreshes them again).
+                shadows = capture_shadows(coord.as_ref().unwrap(), n_shards)?;
+                // The failed request was neither served nor batched —
+                // replay it first (its time is above the watermark, so
+                // it passes admission exactly once).
+                resubmitted += 1;
+                queue.push_front(req);
+            }
+        }
+    }
+
+    let last = coord.as_ref().unwrap().metrics()?;
+    let snapshot = MetricsSnapshot::merge_epochs(&prior, last);
+    let total_cost = snapshot.ledger.total();
+    Ok(FaultRunReport {
+        snapshot,
+        total_cost,
+        recoveries,
+        recharges,
+        resubmitted,
+        duplicates_rejected,
+        checkpoints_written,
+        checkpoint_failures,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::plan::FaultEvent;
+    use crate::trace::generator::{self, GeneratorParams, TraceKind};
+    use crate::util::tempdir::TempDir;
+    use std::sync::Mutex;
+
+    // The injection registry and reply timeout are process-global:
+    // supervised runs must not interleave.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 24,
+            n_servers: 6,
+            batch_size: 12,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    fn trace(n: usize) -> Vec<Request> {
+        let mut p = GeneratorParams::netflix(24, 6, n);
+        p.seed = 7;
+        generator::generate(&p, TraceKind::Netflix).requests
+    }
+
+    fn run(plan: FaultPlan, dir: Option<PathBuf>) -> FaultRunReport {
+        let mut opts = FaultRunOptions::new(cfg(), CrmEngine::Native, 3, plan);
+        opts.checkpoint_dir = dir;
+        run_fault_plan(&opts, &trace(120)).unwrap()
+    }
+
+    #[test]
+    fn empty_plan_matches_plain_coordinator() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let report = run(FaultPlan::default(), None);
+        assert_eq!(report.recoveries, 0);
+        assert_eq!(report.recharges, 0.0);
+        assert_eq!(report.snapshot.served, 120);
+
+        let coord = Coordinator::start(cfg(), CrmEngine::Native, 3).unwrap();
+        for r in trace(120) {
+            coord
+                .serve(ServeRequest {
+                    items: r.items,
+                    server: r.server,
+                    time: Some(r.time),
+                })
+                .unwrap();
+        }
+        let oracle = coord.metrics().unwrap();
+        assert_eq!(report.snapshot.served, oracle.served);
+        assert!((report.total_cost - oracle.ledger.total()).abs() <= 1e-9 * oracle.ledger.total().abs().max(1.0));
+        drop(coord);
+    }
+
+    #[test]
+    fn panic_recovery_charges_exactly_the_recharge() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let oracle = run(FaultPlan::default(), None);
+        let report = run(
+            FaultPlan::new(vec![FaultEvent {
+                window: 2,
+                shard: 1,
+                kind: FaultKind::ShardPanic,
+            }]),
+            None,
+        );
+        assert_eq!(report.recoveries, 1);
+        assert_eq!(report.resubmitted, 1);
+        assert_eq!(report.snapshot.served, oracle.snapshot.served);
+        let want = oracle.total_cost + report.recharges;
+        assert!(
+            (report.total_cost - want).abs() <= 1e-9 * want.abs().max(1.0),
+            "faulted {} vs oracle+recharge {}",
+            report.total_cost,
+            want
+        );
+    }
+
+    #[test]
+    fn ingest_drop_duplicates_are_rejected() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let oracle = run(FaultPlan::default(), None);
+        let report = run(FaultPlan::parse("ingest-drop@2").unwrap(), None);
+        assert!(report.duplicates_rejected > 0);
+        assert_eq!(report.recoveries, 0);
+        assert_eq!(report.snapshot.served, oracle.snapshot.served);
+        assert!((report.total_cost - oracle.total_cost).abs() <= 1e-9 * oracle.total_cost.abs().max(1.0));
+    }
+
+    #[test]
+    fn checkpoint_fail_is_counted_and_survived() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let dir = TempDir::new("akpc-fault-ckpt").unwrap();
+        let report = run(
+            FaultPlan::parse("checkpoint-fail@2").unwrap(),
+            Some(dir.path().to_path_buf()),
+        );
+        assert_eq!(report.checkpoint_failures, 1);
+        assert!(report.checkpoints_written >= 1);
+        // The surviving slot still parses.
+        assert!(checkpoint::read_from_dir(dir.path()).unwrap().is_some());
+    }
+}

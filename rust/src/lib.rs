@@ -37,6 +37,7 @@
 //! | [`runtime`] | PJRT artifact loading/execution, `CrmEngine` (Xla \| Native) |
 //! | [`coordinator`] | online sharded service: N shard actors, window batcher, background clique-gen worker, elastic resize |
 //! | [`elastic`] | shard autoscaler: placement rule, volume-tracking controller, shard-second billing, elastic replay driver (DESIGN.md §13) |
+//! | [`fault`] | fault tolerance: seeded fault-injection harness, shard supervision/recovery, checkpoint/restore (DESIGN.md §14) |
 //! | [`bench`] | the paper's evaluation harness (every table & figure, shard scaling, memory baseline) |
 //!
 //! ## Bounded-memory replays (DESIGN.md §10)
@@ -74,6 +75,7 @@ pub mod config;
 pub mod coordinator;
 pub mod crm;
 pub mod elastic;
+pub mod fault;
 pub mod run;
 pub mod runtime;
 pub mod scenario;

@@ -9,7 +9,7 @@
 //!                engine (DESIGN.md §10) instead of materializing
 //!   exp <id>     regenerate a paper table/figure
 //!                (table1 fig5 fig6a fig6b fig7a fig7b fig7c fig8a fig8b
-//!                 fig8c fig9a fig9b elastic adversarial all)
+//!                 fig8c fig9a fig9b elastic adversarial faults all)
 //!   scenario     Scenario Lab: phased non-stationary workload replays
 //!                (list | suite | <name> | <spec.toml>)
 //!   bench        tracked hot-path perf baseline; `--json` writes the
@@ -61,6 +61,18 @@
 //!   --to <addr>               ingest: daemon address to stream into
 //!   --binary                  ingest: pipe the trace file's AKPT bytes
 //!                             verbatim instead of text frames
+//!   --retries <N>             ingest: reconnect attempts after a failure
+//!                             (text mode; resume handshake dedups, default 5)
+//!   --backoff-ms <N>          ingest: base retry backoff (doubles, jittered)
+//!   --checkpoint-dir <dir>    serve: restore from + periodically write
+//!                             checkpoints (DESIGN.md §14.5)
+//!   --checkpoint-secs <F>     serve: seconds between checkpoints (default 5)
+//!   --reply-timeout-ms <N>    serve: stall-detection rendezvous timeout
+//!   --inject <spec>           serve: arm a fault before starting —
+//!                             <site>:<action>[:<shard>[:<after>]], e.g.
+//!                             shard-serve:panic:1:50000 (chaos drills)
+//!   --plan <spec>             exp faults: comma-separated fault plan,
+//!                             e.g. shard-panic@2:1,ingest-drop@4
 //! ```
 //!
 //! (The offline build has no clap; flag parsing is in-tree. Every
@@ -163,7 +175,8 @@ fn usage() {
          \u{20}          [--shards N [--mode <ordered|parallel>]]\n\
          \u{20}          [--stream [--chunk N]]   (bounded-memory replay)\n\
          exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
-         \u{20}           fig9a|fig9b|elastic|adversarial|ablations|shards|all>\n\
+         \u{20}           fig9a|fig9b|elastic|adversarial|ablations|shards|faults|all>\n\
+         \u{20}          faults: [--plan <kind@window[:shard],...>] [--shards N]\n\
          scenario:  <list|suite|name|spec.toml> [--policy P] [--scale F]\n\
          \u{20}          [--shards N [--mode <ordered|parallel>]] [--out <dir>]\n\
          bench:     [--json] [--scale F] [--out <file>]   (default BENCH_5.json)\n\
@@ -172,9 +185,12 @@ fn usage() {
          \u{20}          [--chunked [--chunk N]]   (streamed v2 binary)\n\
          serve:     daemon: --listen <addr> [--http <addr>] [--serve-config <toml>]\n\
          \u{20}          [--slack F] [--shards N] [--policy P] [--engine E]\n\
+         \u{20}          [--checkpoint-dir <dir> [--checkpoint-secs F]]\n\
+         \u{20}          [--reply-timeout-ms N] [--inject <site>:<action>[:shard[:after]]]\n\
          \u{20}          demo:   --dataset <netflix|spotify> [--requests N] [--shards N]\n\
          \u{20}          [--mode <ordered|parallel>]\n\
          ingest:    --to <addr> [--trace <file> [--binary] | --dataset D --requests N]\n\
+         \u{20}          [--retries N] [--backoff-ms N]   (resume handshake dedups)\n\
          lint:      [--root <dir>]   (invariant checker, DESIGN.md §11)"
     );
 }
@@ -257,7 +273,7 @@ fn main() -> anyhow::Result<()> {
             if let Some(d) = &out_dir {
                 std::fs::create_dir_all(d)?;
             }
-            run_experiment(id, &opts, &cfg, out_dir.as_deref())?;
+            run_experiment(id, &opts, &cfg, out_dir.as_deref(), &cli)?;
         }
         "scenario" => {
             let what = cli
@@ -411,6 +427,7 @@ fn run_experiment(
     opts: &exp::ExpOptions,
     cfg: &AkpcConfig,
     out_dir: Option<&str>,
+    cli: &Cli,
 ) -> anyhow::Result<()> {
     let all = id == "all";
     let mut matched = false;
@@ -529,6 +546,10 @@ fn run_experiment(
         dump("elastic", sweep.to_json())?;
         matched = true;
     }
+    if all || id == "faults" {
+        run_faults_exp(opts, cfg, cli)?;
+        matched = true;
+    }
     if all || id == "adversarial" {
         println!("== Theorem 1/2 — adversarial competitive ratio ==");
         println!("{:<6}{:>14}{:>14}", "S", "measured", "bound");
@@ -539,6 +560,105 @@ fn run_experiment(
         matched = true;
     }
     anyhow::ensure!(matched, "unknown experiment id: {id}");
+    Ok(())
+}
+
+/// `akpc exp faults` — supervised fault-recovery drills (DESIGN.md
+/// §14): run a trace under fault plans (from `--plan` or seeded random
+/// draws), compare each against the never-faulted oracle, and show the
+/// gap is exactly the recovery recharge.
+fn run_faults_exp(opts: &exp::ExpOptions, cfg: &AkpcConfig, cli: &Cli) -> anyhow::Result<()> {
+    use akpc::fault::{run_fault_plan, FaultPlan, FaultRunOptions};
+
+    let n = opts.n_requests.min(20_000);
+    let n_shards: usize = cli
+        .flag("shards")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(3);
+    anyhow::ensure!(n_shards >= 1, "exp faults needs --shards >= 1");
+    let trace = generator::netflix_like(cfg.n_items, cfg.n_servers, n, opts.seed);
+    let n_windows = (n / cfg.batch_size.max(1)).max(1) as u64;
+    let plans: Vec<(String, FaultPlan)> = match cli.flag("plan") {
+        Some(spec) => vec![(spec.to_string(), FaultPlan::parse(spec)?)],
+        None => (0..4)
+            .map(|i| {
+                let p = FaultPlan::random(opts.seed + i, 2, n_windows, n_shards);
+                (p.spec(), p)
+            })
+            .collect(),
+    };
+    let engine = opts.engine.to_engine();
+
+    let oracle = run_fault_plan(
+        &FaultRunOptions::new(cfg.clone(), engine, n_shards, FaultPlan::new(Vec::new())),
+        &trace.requests,
+    )?;
+    println!(
+        "== Fault drills ({n} requests, {n_shards} shards; oracle total {:.3}) ==",
+        oracle.total_cost
+    );
+    println!(
+        "{:<44}{:>12}{:>5}{:>11}{:>7}{:>14}",
+        "plan", "total", "rec", "recharge", "dupes", "total-rechg"
+    );
+    for (spec, plan) in plans {
+        let r = run_fault_plan(
+            &FaultRunOptions::new(cfg.clone(), engine, n_shards, plan),
+            &trace.requests,
+        )?;
+        println!(
+            "{:<44}{:>12.3}{:>5}{:>11.3}{:>7}{:>14.3}",
+            spec,
+            r.total_cost,
+            r.recoveries,
+            r.recharges,
+            r.duplicates_rejected,
+            r.total_cost - r.recharges
+        );
+    }
+    println!("(total - recharge equals the oracle total for shard faults — DESIGN.md §14.2)");
+    Ok(())
+}
+
+/// `--inject <site>:<action>[:<shard>[:<after>]]` — arm one
+/// process-global fault before the daemon starts (chaos drills,
+/// DESIGN.md §14.1). `shard` of `-` matches any shard; `after` skips
+/// that many matching hits before firing. Example:
+/// `shard-serve:panic:1:50000` panics shard 1 on its 50001st serve.
+fn arm_injected_fault(spec: &str) -> anyhow::Result<()> {
+    use akpc::fault::FaultAction;
+
+    let parts: Vec<&str> = spec.split(':').collect();
+    anyhow::ensure!(
+        (2..=4).contains(&parts.len()),
+        "--inject wants <site>:<action>[:<shard>[:<after>]], got `{spec}`"
+    );
+    let site: &'static str = match parts[0] {
+        "shard-serve" => "shard-serve",
+        "checkpoint-write" => "checkpoint-write",
+        "ingest-frame" => "ingest-frame",
+        other => anyhow::bail!("--inject: unknown site `{other}`"),
+    };
+    let action = match parts[1] {
+        "panic" => FaultAction::Panic,
+        "fail" => FaultAction::Fail,
+        s => match s.strip_prefix("stall-") {
+            Some(ms) => FaultAction::Stall(std::time::Duration::from_millis(ms.parse()?)),
+            None => anyhow::bail!("--inject: unknown action `{s}` (panic|fail|stall-<ms>)"),
+        },
+    };
+    let shard = match parts.get(2) {
+        None => None,
+        Some(&"-") => None,
+        Some(s) => Some(s.parse()?),
+    };
+    let after: u64 = match parts.get(3) {
+        None => 0,
+        Some(s) => s.parse()?,
+    };
+    akpc::fault::arm(site, shard, action, after);
+    eprintln!("akpc-serve: armed injected fault `{spec}`");
     Ok(())
 }
 
@@ -572,6 +692,10 @@ fn serve_daemon_cmd(cli: &Cli, cfg: &AkpcConfig, engine: EngineChoice) -> anyhow
         scfg.chunk = s.parse()?;
     }
 
+    if let Some(spec) = cli.flag("inject") {
+        arm_injected_fault(spec)?;
+    }
+
     let listen = cli
         .flag("listen")
         .ok_or_else(|| anyhow::anyhow!("serve daemon mode needs --listen <addr>"))?;
@@ -581,6 +705,17 @@ fn serve_daemon_cmd(cli: &Cli, cfg: &AkpcConfig, engine: EngineChoice) -> anyhow
             listen: listen.to_string(),
             http: cli.flag("http").map(str::to_string),
             config_path: cli.flag("serve-config").map(str::to_string),
+            checkpoint_dir: cli.flag("checkpoint-dir").map(str::to_string),
+            checkpoint_secs: cli
+                .flag("checkpoint-secs")
+                .map(str::parse)
+                .transpose()?
+                .unwrap_or(0.0),
+            reply_timeout_ms: cli
+                .flag("reply-timeout-ms")
+                .map(str::parse)
+                .transpose()?
+                .unwrap_or(0),
         },
     )?;
     // Parseable ready lines (CI greps the ports out of these).
@@ -593,36 +728,50 @@ fn serve_daemon_cmd(cli: &Cli, cfg: &AkpcConfig, engine: EngineChoice) -> anyhow
     println!("{}", report.metrics.summary());
     println!(
         "akpc-serve: drained: epochs={} admitted={} rejected_late={} \
-         rejected_malformed={} forced_releases={} req/s={:.0} wall={:.1}s",
+         rejected_malformed={} forced_releases={} truncated_chunks={} req/s={:.0} wall={:.1}s",
         report.epochs,
         report.admission.admitted,
         report.admission.rejected_late,
         report.admission.rejected_malformed,
         report.admission.forced_releases,
+        report.admission.truncated_chunks,
         report.requests_per_sec,
         report.wall_secs
+    );
+    println!(
+        "akpc-serve: robustness: served={} recoveries={} recharge={:.3} \
+         shed={} shed_items={} shed_cost={:.3} checkpoints={} ckpt_failures={}",
+        report.metrics.served,
+        report.counters.recoveries,
+        report.counters.recharge_cost,
+        report.counters.shed_requests,
+        report.counters.shed_items,
+        report.counters.shed_cost,
+        report.counters.checkpoints_written,
+        report.counters.checkpoint_failures
     );
     Ok(())
 }
 
 /// `akpc ingest --to <addr>` — stream a workload into a running daemon.
-/// Text frames by default (any `TraceSource`: file or generated);
-/// `--binary --trace <file.akpt>` pipes the file's bytes verbatim so the
-/// daemon exercises its binary wire path.
+/// Text mode (the default) goes through the retrying client
+/// ([`akpc::serve::ingest`]): resume handshake, bounded reconnects with
+/// jittered backoff, exactly-once across daemon restarts.
+/// `--binary --trace <file.akpt>` pipes the file's bytes verbatim so
+/// the daemon exercises its binary wire path (no retry — the binary
+/// protocol has no resume handshake).
 fn ingest_cmd(
     cli: &Cli,
     cfg: &AkpcConfig,
     kind: TraceKind,
     n_requests: usize,
 ) -> anyhow::Result<()> {
+    use akpc::serve::{ingest_trace, IngestOptions};
     use akpc::trace::stream::{BinaryStreamSource, CsvStreamSource, TraceSource};
-    use std::io::Write;
 
     let to = cli
         .flag("to")
         .ok_or_else(|| anyhow::anyhow!("ingest needs --to <addr>"))?;
-    let mut stream = std::net::TcpStream::connect(to)
-        .map_err(|e| anyhow::anyhow!("connect {to}: {e}"))?;
 
     if cli.flag("binary").is_some() {
         let path = cli
@@ -632,6 +781,8 @@ fn ingest_cmd(
             !path.ends_with(".csv"),
             "--binary pipes the AKPT binary layout; `{path}` is CSV"
         );
+        let mut stream = std::net::TcpStream::connect(to)
+            .map_err(|e| anyhow::anyhow!("connect {to}: {e}"))?;
         let mut f = std::fs::File::open(path)?;
         let n = std::io::copy(&mut f, &mut stream)?;
         stream.shutdown(std::net::Shutdown::Write)?;
@@ -639,31 +790,34 @@ fn ingest_cmd(
         return Ok(());
     }
 
+    // The retry client needs random access to resume from the daemon's
+    // watermark after a reconnect, so the workload is materialized.
     let chunk = cli.chunk_len()?;
     let mut source: Box<dyn TraceSource> = match cli.flag("trace") {
         Some(p) if p.ends_with(".csv") => Box::new(CsvStreamSource::open(p, chunk)?),
         Some(p) => Box::new(BinaryStreamSource::open(p, chunk)?),
         None => Box::new(generated_source(kind, cfg, n_requests, chunk)?),
     };
-    let mut out = std::io::BufWriter::new(&stream);
+    let mut requests = Vec::new();
     let mut buf = Vec::new();
-    let mut sent = 0u64;
     while source.next_chunk(&mut buf)? {
-        for r in &buf {
-            // `{}` on f64 prints the shortest round-tripping decimal,
-            // so the daemon parses back the identical timestamp.
-            write!(out, "{} {}", r.time, r.server)?;
-            for it in &r.items {
-                write!(out, " {it}")?;
-            }
-            writeln!(out)?;
-        }
-        sent += buf.len() as u64;
+        requests.append(&mut buf);
     }
-    out.flush()?;
-    drop(out);
-    stream.shutdown(std::net::Shutdown::Write)?;
-    println!("ingest: sent {sent} text frames to {to}");
+
+    let mut opts = IngestOptions::new(to);
+    opts.seed = cfg.seed;
+    if let Some(r) = cli.flag("retries") {
+        opts.retries = r.parse()?;
+    }
+    if let Some(b) = cli.flag("backoff-ms") {
+        opts.backoff_ms = b.parse()?;
+    }
+    let report = ingest_trace(&requests, &opts)?;
+    println!(
+        "ingest: sent {} text frames to {to} (skipped {} already-admitted, \
+         attempts {}, daemon watermark {})",
+        report.sent, report.skipped, report.attempts, report.watermark
+    );
     Ok(())
 }
 

@@ -28,7 +28,8 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::sync::{mpsc, Mutex, PoisonError};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 
 use crate::trace::model::Request;
 use crate::trace::stream::{ChannelSource, TraceMeta};
@@ -58,6 +59,10 @@ pub struct AdmissionStats {
     pub rejected_malformed: u64,
     /// Entries released early because the reorder buffer hit capacity.
     pub forced_releases: u64,
+    /// Binary v2 chunks whose framing promised more records than the
+    /// stream delivered (EOF mid-chunk). The partial chunk is discarded
+    /// whole — a truncated batch never reaches the replay thread.
+    pub truncated_chunks: u64,
 }
 
 /// Min-heap entry ordered by `(time, seq)`. `total_cmp` keeps the order
@@ -108,6 +113,10 @@ struct Inner {
     stats: AdmissionStats,
     /// `None` after [`Admission::finish`]: the stream is closed.
     tx: Option<mpsc::SyncSender<Vec<Request>>>,
+    /// Chunks currently queued in the channel behind the replay thread
+    /// (shared with [`ChannelSource`], which decrements per consumed
+    /// chunk) — the overload signal degradation thresholds key on.
+    depth: Arc<AtomicUsize>,
 }
 
 /// The shared admission front door. One instance per daemon, shared by
@@ -129,6 +138,7 @@ impl Admission {
         queue_depth: usize,
     ) -> (Self, ChannelSource) {
         let (tx, source) = ChannelSource::bounded(meta.clone(), queue_depth);
+        let depth = source.depth_gauge();
         let admission = Self {
             meta,
             inner: Mutex::new(Inner {
@@ -143,6 +153,7 @@ impl Admission {
                 seq: 0,
                 stats: AdmissionStats::default(),
                 tx: Some(tx),
+                depth,
             }),
         };
         (admission, source)
@@ -205,6 +216,49 @@ impl Admission {
     /// (text parse errors at the framing layer).
     pub fn note_malformed(&self) {
         self.lock().stats.rejected_malformed += 1;
+    }
+
+    /// Count a binary v2 chunk cut off by EOF mid-frame. The framing
+    /// layer discards the partial chunk whole before calling this, so
+    /// the counter is also the number of batches provably *not*
+    /// delivered truncated.
+    pub fn note_truncated(&self) {
+        self.lock().stats.truncated_chunks += 1;
+    }
+
+    /// The largest admitted timestamp (`-inf` before the first admit).
+    /// This is what the ingest `resume` handshake reports: a
+    /// reconnecting client may safely skip every frame at or below it —
+    /// each such frame is in the reorder buffer or beyond, never lost.
+    pub fn watermark(&self) -> f64 {
+        self.lock().watermark
+    }
+
+    /// Chunks queued between admission and the replay thread right now.
+    pub fn queue_depth(&self) -> usize {
+        self.lock().depth.load(Ordering::Relaxed)
+    }
+
+    /// Restore the admission floor from a checkpoint: every arrival at
+    /// or below `watermark` (the checkpointed coordinator clock) is
+    /// rejected as a duplicate (`rejected_late`). Called once, before
+    /// the daemon starts accepting, so a client resending from its last
+    /// ack can never double-serve a request the restored state already
+    /// contains.
+    pub fn resume_floor(&self, watermark: f64) {
+        if !watermark.is_finite() {
+            return;
+        }
+        // Floor semantics are strict (`t < floor` rejects); bump one ulp
+        // so `t == watermark` is rejected too.
+        let exclusive = if watermark >= 0.0 {
+            f64::from_bits(watermark.to_bits() + 1)
+        } else {
+            f64::from_bits(watermark.to_bits() - 1)
+        };
+        let mut g = self.lock();
+        g.floor = g.floor.max(exclusive);
+        g.watermark = g.watermark.max(watermark);
     }
 
     /// Snapshot of the admission counters.
@@ -289,6 +343,8 @@ impl Admission {
             };
             tx.send(chunk)
                 .map_err(|_| anyhow::anyhow!("live replay stopped; closing ingest"))?;
+            // Gauge after a successful send; the consumer decrements.
+            g.depth.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     }
@@ -387,6 +443,37 @@ mod tests {
         assert!(adm.set_slack(f64::NAN).is_err());
         adm.finish().unwrap();
         assert_eq!(src.collect().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn resume_floor_rejects_replayed_frames_exactly() {
+        let (adm, mut src) = Admission::new(meta(), 0.5, 1024, 4, 16);
+        adm.resume_floor(3.0);
+        assert_eq!(adm.watermark(), 3.0);
+        // At or below the checkpointed watermark: duplicate.
+        assert_eq!(adm.offer(req(3.0, 0, 1)).unwrap(), Verdict::RejectedLate);
+        assert_eq!(adm.offer(req(2.0, 0, 1)).unwrap(), Verdict::RejectedLate);
+        // Strictly above: fresh work.
+        assert_eq!(adm.offer(req(3.0001, 0, 1)).unwrap(), Verdict::Admitted);
+        adm.finish().unwrap();
+        assert_eq!(src.collect().unwrap().len(), 1);
+        assert_eq!(adm.stats().rejected_late, 2);
+    }
+
+    #[test]
+    fn truncation_and_depth_counters() {
+        let (adm, mut src) = Admission::new(meta(), 0.0, 1024, 1, 16);
+        assert_eq!(adm.queue_depth(), 0);
+        adm.note_truncated();
+        assert_eq!(adm.stats().truncated_chunks, 1);
+        adm.offer(req(1.0, 0, 1)).unwrap();
+        adm.offer(req(2.0, 0, 2)).unwrap();
+        // chunk_len 1, slack 0: both released and queued, none consumed.
+        assert_eq!(adm.queue_depth(), 2);
+        let mut buf = Vec::new();
+        assert!(src.next_chunk(&mut buf).unwrap());
+        assert_eq!(adm.queue_depth(), 1);
+        adm.finish().unwrap();
     }
 
     #[test]

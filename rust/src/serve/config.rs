@@ -12,6 +12,7 @@
 //! chunk = 8192           # replay chunk length
 //! max_items = 64         # per-request item cap
 //! queue_depth = 64       # admission -> replay chunks in flight
+//! shed_depth = 0         # overload shed threshold, 0 = never shed
 //!
 //! [akpc]
 //! n_servers = 600
@@ -51,6 +52,11 @@ pub struct ServeConfig {
     pub max_items: usize,
     /// Bounded admission→replay channel depth, in chunks.
     pub queue_depth: usize,
+    /// Overload degradation threshold (DESIGN.md §14.4): when the
+    /// admission→replay queue holds at least this many chunks, the
+    /// replay thread sheds whole chunks at NoPacking pass-through cost
+    /// instead of running the packer. `0` disables shedding entirely.
+    pub shed_depth: usize,
     /// The cost-model / universe block (the `[akpc]` table).
     pub akpc: AkpcConfig,
 }
@@ -66,6 +72,7 @@ impl Default for ServeConfig {
             chunk: DEFAULT_CHUNK_LEN,
             max_items: 64,
             queue_depth: 64,
+            shed_depth: 0,
             akpc: AkpcConfig::default(),
         }
     }
@@ -112,6 +119,7 @@ impl ServeConfig {
                 "chunk" => cfg.chunk = num_field(key, v)?,
                 "max_items" => cfg.max_items = num_field(key, v)?,
                 "queue_depth" => cfg.queue_depth = num_field(key, v)?,
+                "shed_depth" => cfg.shed_depth = num_field(key, v)?,
                 "slack" => {
                     cfg.slack = v
                         .as_f64()
@@ -181,12 +189,13 @@ mod tests {
         let cfg = ServeConfig::from_toml_str(
             "policy = \"no-packing\"\nengine = \"xla\"\nshards = 4\n\
              slack = 2.5\nreorder_capacity = 128\nchunk = 16\n\
-             max_items = 8\nqueue_depth = 3\n\n[akpc]\nn_servers = 40\nn_items = 20\n",
+             max_items = 8\nqueue_depth = 3\nshed_depth = 2\n\n[akpc]\nn_servers = 40\nn_items = 20\n",
         )
         .unwrap();
         assert_eq!(cfg.policy, "no-packing");
         assert_eq!(cfg.engine, EngineChoice::Xla);
         assert_eq!((cfg.shards, cfg.chunk, cfg.queue_depth), (4, 16, 3));
+        assert_eq!(cfg.shed_depth, 2);
         assert_eq!(cfg.slack, 2.5);
         assert_eq!(cfg.akpc.n_servers, 40);
         assert_eq!(cfg.akpc.n_items, 20);

@@ -26,16 +26,31 @@
 //! dispatches it either, and the live-vs-replay ledger equivalence
 //! (`tests/serve.rs`) depends on both sides agreeing.
 //!
+//! Robustness (DESIGN.md §14) threads through the same loop: the replay
+//! thread captures per-shard shadows at chunk boundaries and rebuilds
+//! the fleet in place when a serve surfaces [`ShardLost`]; it sheds
+//! whole chunks at NoPacking pass-through cost when the admission queue
+//! crosses `shed_depth`; and the control loop writes periodic + final
+//! checkpoints when `--checkpoint-dir` is set, which `start` restores
+//! from (raising the admission floor to the persisted served watermark
+//! so resent frames dedup exactly).
+//!
 //! [`ChannelSource`]: crate::trace::stream::ChannelSource
 
 use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Coordinator, CoordinatorClient, MetricsSnapshot, ServeRequest, TickMode};
+use crate::cache::{CopyRecord, CostModel};
+use crate::coordinator::{
+    Coordinator, CoordinatorClient, MetricsSnapshot, ServeRequest, ShardLost, ShardStats, TickMode,
+};
+use crate::fault::Checkpoint;
 use crate::run::PolicyRegistry;
+use crate::trace::model::Request;
 use crate::trace::stream::{TraceMeta, TraceSource};
 
 use super::admission::{Admission, AdmissionStats};
@@ -53,9 +68,33 @@ pub(crate) enum ControlMsg {
     Reload(mpsc::SyncSender<Result<String, String>>),
 }
 
+/// Robustness counters (DESIGN.md §14): recoveries, degradation
+/// shedding, and checkpoint outcomes, surfaced on `/metrics` and in the
+/// final [`ServeReport`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DaemonCounters {
+    /// Shard fleets rebuilt after a lost shard (panic or stall).
+    pub recoveries: u64,
+    /// Total transfer cost charged to re-fetch copies lost with dead
+    /// shards (the exact recovery surcharge over a never-faulted run).
+    pub recharge_cost: f64,
+    /// Requests shed to NoPacking pass-through under overload.
+    pub shed_requests: u64,
+    /// Items inside those shed requests.
+    pub shed_items: u64,
+    /// Cost charged for shed traffic (Σ `transfer_packed(1)` per item).
+    pub shed_cost: f64,
+    /// Checkpoints written successfully.
+    pub checkpoints_written: u64,
+    /// Checkpoint attempts that failed (I/O error or injected fault);
+    /// the previous on-disk slot survives each failure.
+    pub checkpoint_failures: u64,
+}
+
 /// Shared daemon state: the admission layer plus the current
 /// coordinator epoch. `client` is the replay thread's handle — swapping
-/// it (hot-reload) requires its mutex, which replay holds per chunk.
+/// it (hot-reload or recovery) requires its mutex, which replay holds
+/// per chunk.
 pub(crate) struct DaemonState {
     cfg: Mutex<ServeConfig>,
     pub(crate) admission: Arc<Admission>,
@@ -63,6 +102,7 @@ pub(crate) struct DaemonState {
     pub(crate) coordinator: Mutex<Option<Coordinator>>,
     /// Final snapshots of coordinator epochs retired by hot-reload.
     pub(crate) prior: Mutex<Vec<MetricsSnapshot>>,
+    pub(crate) counters: Mutex<DaemonCounters>,
     config_path: Option<String>,
 }
 
@@ -76,6 +116,14 @@ impl DaemonState {
 
     pub(crate) fn set_config(&self, cfg: ServeConfig) {
         *self.cfg.lock().unwrap_or_else(PoisonError::into_inner) = cfg;
+    }
+
+    pub(crate) fn counters(&self) -> DaemonCounters {
+        *self.counters.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn with_counters(&self, f: impl FnOnce(&mut DaemonCounters)) {
+        f(&mut self.counters.lock().unwrap_or_else(PoisonError::into_inner));
     }
 
     /// Render the merged-epoch Prometheus text plus the admission and
@@ -116,16 +164,249 @@ impl DaemonState {
                 "Reorder-buffer entries force-released at capacity",
                 s.forced_releases,
             ),
+            (
+                "akpc_admission_truncated_chunks_total",
+                "Binary chunks discarded whole for truncation mid-frame",
+                s.truncated_chunks,
+            ),
+        ] {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        }
+        let c = self.counters();
+        for (name, help, v) in [
+            (
+                "akpc_recoveries_total",
+                "Shard fleets rebuilt after a lost shard",
+                c.recoveries,
+            ),
+            (
+                "akpc_degraded_shed_total",
+                "Requests shed to NoPacking pass-through under overload",
+                c.shed_requests,
+            ),
+            (
+                "akpc_degraded_shed_items_total",
+                "Items inside shed requests",
+                c.shed_items,
+            ),
+            (
+                "akpc_checkpoints_written_total",
+                "Checkpoints written successfully",
+                c.checkpoints_written,
+            ),
+            (
+                "akpc_checkpoint_failures_total",
+                "Checkpoint attempts that failed",
+                c.checkpoint_failures,
+            ),
         ] {
             out.push_str(&format!(
                 "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
             ));
         }
         out.push_str(&format!(
+            "# HELP akpc_recharge_cost_total Transfer cost charged to re-fetch copies lost with dead shards\n\
+             # TYPE akpc_recharge_cost_total counter\nakpc_recharge_cost_total {}\n",
+            c.recharge_cost
+        ));
+        out.push_str(&format!(
+            "# HELP akpc_degraded_shed_cost_total Cost charged for shed pass-through traffic\n\
+             # TYPE akpc_degraded_shed_cost_total counter\nakpc_degraded_shed_cost_total {}\n",
+            c.shed_cost
+        ));
+        out.push_str(&format!(
             "# HELP akpc_serve_epochs Coordinator epochs (1 + completed hot-reload swaps)\n\
              # TYPE akpc_serve_epochs gauge\nakpc_serve_epochs {epochs}\n"
         ));
         Ok(out)
+    }
+}
+
+fn to_serve_req(r: &Request) -> ServeRequest {
+    ServeRequest {
+        items: r.items.clone(),
+        server: r.server,
+        time: Some(r.time),
+    }
+}
+
+/// Shed one admitted chunk under overload (DESIGN.md §14.4): every item
+/// is charged NoPacking pass-through (`transfer_packed(1)` each — the
+/// cache and packer are bypassed entirely), and the chunk never reaches
+/// the coordinator. Drain accounting treats shed requests as handled:
+/// `admitted == served + shed_requests`.
+fn shed_chunk(state: &DaemonState, cfg: &ServeConfig, buf: &[Request]) {
+    let model = CostModel::from_config(&cfg.akpc);
+    let mut items = 0u64;
+    for r in buf {
+        items += r.items.len() as u64;
+    }
+    let cost = items as f64 * model.transfer_packed(1);
+    state.with_counters(|c| {
+        c.shed_requests += buf.len() as u64;
+        c.shed_items += items;
+        c.shed_cost += cost;
+    });
+}
+
+/// Capture per-shard `(stats, live copies)` shadows from the live
+/// coordinator. Called at chunk boundaries by the replay thread (which
+/// already holds the client mutex, so no serve is in flight — the
+/// boundary shadow is exact).
+fn capture_shadows(
+    state: &DaemonState,
+    n_shards: usize,
+) -> anyhow::Result<Vec<(ShardStats, Vec<CopyRecord>)>> {
+    let slot = state
+        .coordinator
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner);
+    let coord = slot
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("coordinator is shut down"))?;
+    let m = coord.metrics()?;
+    let mut out = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let stats = m
+            .per_shard
+            .iter()
+            .find(|p| p.shard == s)
+            .cloned()
+            .unwrap_or_else(|| ShardStats {
+                shard: s,
+                ..ShardStats::default()
+            });
+        out.push((stats, coord.export_shard_copies(s)?));
+    }
+    Ok(out)
+}
+
+/// Rebuild the fleet after losing `lost` (DESIGN.md §14.3): retire the
+/// current coordinator epoch through `Coordinator::recover` (which
+/// charges re-transfer for the copies that died with the shard), swap
+/// the replay thread's client in place, and record the recharge.
+fn recover_in_place(
+    state: &DaemonState,
+    client: &mut CoordinatorClient,
+    lost: usize,
+    shadow: (ShardStats, Vec<CopyRecord>),
+) -> anyhow::Result<()> {
+    let mut slot = state
+        .coordinator
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner);
+    let coord = slot
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("coordinator is shut down"))?;
+    let (stats, copies) = shadow;
+    let (next, retired, recharge) = coord.recover(lost, copies, stats)?;
+    *client = next.client();
+    *slot = Some(next);
+    drop(slot);
+    state
+        .prior
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .push(retired.into_handoff_epoch());
+    state.with_counters(|c| {
+        c.recoveries += 1;
+        c.recharge_cost += recharge;
+    });
+    eprintln!("akpc-serve: recovered shard {lost} (recharge {recharge:.3})");
+    Ok(())
+}
+
+/// Serve one admitted chunk, recovering in place if a shard is lost
+/// mid-chunk. Shadows are captured at the chunk boundary; when shard
+/// `s` dies, every request this chunk routed to `s` since the boundary
+/// is replayed onto the rebuilt fleet (their effects died with the
+/// shard), then the failed request itself is retried. Unlike the
+/// offline supervisor (`fault::supervisor`), the replays here can
+/// re-enter the window batcher, so the live path is *accounted* but
+/// not pinned exact — `admitted == served + shed` still holds.
+fn serve_chunk(state: &DaemonState, n_shards: usize, buf: &[Request]) -> anyhow::Result<()> {
+    let mut client = state.client.lock().unwrap_or_else(PoisonError::into_inner);
+    let mut shadows = capture_shadows(state, n_shards)?;
+    let mut since_shadow: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+    let mut i = 0usize;
+    while i < buf.len() {
+        let r = &buf[i];
+        let route = client.placement().shard_of(r.server);
+        match client.serve(to_serve_req(r)) {
+            Ok(_) => {
+                since_shadow[route].push(i);
+                i += 1;
+            }
+            Err(e) => {
+                let lost = e
+                    .downcast_ref::<ShardLost>()
+                    .and_then(|l| l.shard)
+                    .or_else(|| {
+                        state
+                            .coordinator
+                            .lock()
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .as_ref()
+                            .and_then(Coordinator::lost_shard)
+                    });
+                let Some(lost) = lost else {
+                    return Err(e);
+                };
+                anyhow::ensure!(lost < n_shards, "lost unknown shard {lost}");
+                recover_in_place(state, &mut client, lost, shadows[lost].clone())?;
+                let replay: Vec<usize> = std::mem::take(&mut since_shadow[lost]);
+                for j in replay {
+                    client.serve(to_serve_req(&buf[j]))?;
+                }
+                shadows = capture_shadows(state, n_shards)?;
+                for v in &mut since_shadow {
+                    v.clear();
+                }
+                // `i` is not advanced: the failed request is retried
+                // against the rebuilt fleet on the next iteration.
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write one checkpoint (DESIGN.md §14.5). Lock order matches reload
+/// and drain: client first (parks the replay thread at a chunk
+/// boundary, so no serve is in flight), then the coordinator slot. The
+/// persisted watermark is the coordinator clock — the largest *served*
+/// time — so admitted-but-unserved frames stay above the restore floor
+/// and a resending client replays exactly them.
+fn checkpoint_now(state: &DaemonState, dir: &Path) {
+    let result = (|| -> anyhow::Result<()> {
+        let _client = state.client.lock().unwrap_or_else(PoisonError::into_inner);
+        let slot = state
+            .coordinator
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let coord = slot
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("coordinator is shut down"))?;
+        let hs = coord.checkpoint_state()?;
+        let live = coord.metrics()?;
+        let merged = {
+            let prior = state.prior.lock().unwrap_or_else(PoisonError::into_inner);
+            merge_epochs(&prior, live).into_handoff_epoch()
+        };
+        let ck = Checkpoint {
+            watermark: hs.clock(),
+            state: hs,
+            prior: Some(merged),
+        };
+        crate::fault::write_to_dir(dir, &ck)
+    })();
+    match result {
+        Ok(()) => state.with_counters(|c| c.checkpoints_written += 1),
+        Err(e) => {
+            state.with_counters(|c| c.checkpoint_failures += 1);
+            eprintln!("akpc-serve: checkpoint failed: {e:#}");
+        }
     }
 }
 
@@ -138,6 +419,18 @@ pub struct ServeOptions {
     pub http: Option<String>,
     /// TOML config path re-read on `POST /reload` / `reload()`.
     pub config_path: Option<String>,
+    /// Checkpoint directory (DESIGN.md §14.5). When set, the daemon
+    /// restores from the slot file if one exists, snapshots
+    /// periodically, and writes a final checkpoint during drain.
+    pub checkpoint_dir: Option<String>,
+    /// Seconds between periodic checkpoints; `<= 0` means the default
+    /// (5s). Ignored without `checkpoint_dir`.
+    pub checkpoint_secs: f64,
+    /// Per-reply stall timeout for coordinator rendezvous, in ms
+    /// (`0` = wait forever). Setting it lets the daemon convert a
+    /// wedged shard into a typed `ShardLost` and recover; it is
+    /// process-global (see `coordinator::set_reply_timeout_ms`).
+    pub reply_timeout_ms: u64,
 }
 
 /// What a drained daemon hands back.
@@ -153,6 +446,8 @@ pub struct ServeReport {
     pub wall_secs: f64,
     /// Served requests per wall-clock second.
     pub requests_per_sec: f64,
+    /// Robustness counters: recoveries, shedding, checkpoints.
+    pub counters: DaemonCounters,
 }
 
 /// A running `akpc serve` daemon. Dropping it drains gracefully.
@@ -206,19 +501,47 @@ impl ServeDaemon {
         );
         admission.set_max_items(cfg.max_items);
         let admission = Arc::new(admission);
+        if opts.reply_timeout_ms > 0 {
+            crate::coordinator::set_reply_timeout_ms(opts.reply_timeout_ms);
+        }
 
-        let coordinator = Coordinator::start_with(
-            cfg.akpc.clone(),
-            cfg.engine.to_engine(),
-            cfg.shards,
-            TickMode::Sync,
-        )?;
+        // Crash-restart (DESIGN.md §14.5): if the checkpoint dir holds a
+        // slot, resume the coordinator from it, seed the prior-epoch
+        // list with the checkpointed metrics, and raise the admission
+        // floor to the persisted served watermark so a client resending
+        // from before the crash cannot double-serve anything.
+        let ckpt_dir = opts.checkpoint_dir.as_ref().map(PathBuf::from);
+        let mut restored_prior: Vec<MetricsSnapshot> = Vec::new();
+        let slot = match &ckpt_dir {
+            Some(dir) => crate::fault::read_from_dir(dir)?,
+            None => None,
+        };
+        let coordinator = match slot {
+            Some(ck) => {
+                anyhow::ensure!(
+                    ck.state.cfg == cfg.akpc,
+                    "checkpoint in {} was written under a different [akpc] config; \
+                     refusing to restore",
+                    opts.checkpoint_dir.as_deref().unwrap_or("<none>"),
+                );
+                admission.resume_floor(ck.watermark);
+                restored_prior.extend(ck.prior);
+                Coordinator::resume(ck.state, cfg.shards)?
+            }
+            None => Coordinator::start_with(
+                cfg.akpc.clone(),
+                cfg.engine.to_engine(),
+                cfg.shards,
+                TickMode::Sync,
+            )?,
+        };
         let state = Arc::new(DaemonState {
             client: Mutex::new(coordinator.client()),
             coordinator: Mutex::new(Some(coordinator)),
-            prior: Mutex::new(Vec::new()),
+            prior: Mutex::new(restored_prior),
             admission: Arc::clone(&admission),
             cfg: Mutex::new(cfg),
+            counters: Mutex::new(DaemonCounters::default()),
             config_path: opts.config_path.clone(),
         });
 
@@ -245,23 +568,33 @@ impl ServeDaemon {
                 let mut source = source;
                 let mut buf = Vec::new();
                 while source.next_chunk(&mut buf)? {
-                    let client = replay_state
-                        .client
-                        .lock()
-                        .unwrap_or_else(PoisonError::into_inner);
-                    for r in buf.drain(..) {
-                        client.serve(ServeRequest {
-                            items: r.items,
-                            server: r.server,
-                            time: Some(r.time),
-                        })?;
+                    let cfg = replay_state.config();
+                    // Overload degradation (§14.4): when the bounded
+                    // admission→replay queue is this deep, the packer is
+                    // the bottleneck — shed the whole chunk at NoPacking
+                    // pass-through cost instead of falling further
+                    // behind.
+                    if cfg.shed_depth > 0
+                        && replay_state.admission.queue_depth() >= cfg.shed_depth
+                    {
+                        shed_chunk(&replay_state, &cfg, &buf);
+                        buf.clear();
+                        continue;
                     }
+                    serve_chunk(&replay_state, cfg.shards, &buf)?;
+                    buf.clear();
                 }
                 Ok(())
             })?;
 
         let ctl_state = Arc::clone(&state);
         let ctl_stop = Arc::clone(&stop);
+        let ctl_ckpt_dir = ckpt_dir;
+        let ckpt_period = if opts.checkpoint_secs > 0.0 {
+            opts.checkpoint_secs
+        } else {
+            5.0
+        };
         let started = Instant::now();
         let control_join = std::thread::Builder::new()
             .name("akpc-serve-control".into())
@@ -269,9 +602,16 @@ impl ServeDaemon {
                 // Built here, not passed in: the registry's boxed
                 // factories are not Send.
                 let registry = PolicyRegistry::builtin();
+                let mut last_ckpt = Instant::now();
                 loop {
                     if sig::take_sigterm() {
                         break;
+                    }
+                    if let Some(dir) = &ctl_ckpt_dir {
+                        if last_ckpt.elapsed().as_secs_f64() >= ckpt_period {
+                            checkpoint_now(&ctl_state, dir);
+                            last_ckpt = Instant::now();
+                        }
                     }
                     match ctl_rx.recv_timeout(Duration::from_millis(200)) {
                         Ok(ControlMsg::Drain) => break,
@@ -310,6 +650,11 @@ impl ServeDaemon {
                     Ok(r) => r,
                     Err(p) => std::panic::resume_unwind(p),
                 };
+                // Final checkpoint before shutdown: a daemon restarted
+                // from it resumes with every served request on record.
+                if let Some(dir) = &ctl_ckpt_dir {
+                    checkpoint_now(&ctl_state, dir);
+                }
                 let last = {
                     let mut slot = ctl_state
                         .coordinator
@@ -349,6 +694,7 @@ impl ServeDaemon {
                     } else {
                         0.0
                     },
+                    counters: ctl_state.counters(),
                 })
             })?;
 

@@ -22,13 +22,18 @@
 //! its connection — once length-delimited framing is lost there is no
 //! way to resynchronize.
 
-use std::io::BufRead;
+use std::io::{BufRead, Write};
 
 use crate::trace::io as trace_io;
 use crate::trace::model::Request;
 use crate::trace::stream::TraceMeta;
 
 use super::admission::Admission;
+
+/// Text-mode ack cadence: one `ack <submitted> <watermark>` line per
+/// this many submitted frames (plus a final one at EOF), so a retrying
+/// client can log progress without the daemon flooding the back channel.
+pub(crate) const ACK_EVERY: u64 = 256;
 
 /// The binary-format sniff bytes (the `AKPT` trace-file magic).
 pub(crate) const MAGIC: &[u8] = b"AKPT";
@@ -98,25 +103,70 @@ pub(crate) fn validate_frame(
     Ok(())
 }
 
+/// Write one back-channel line, best-effort: the first failed write
+/// disables the channel (a client that hung up mid-ack is not an ingest
+/// error — its frames already landed).
+fn back_channel(ack: &mut Option<&mut dyn Write>, line: std::fmt::Arguments<'_>) {
+    if let Some(w) = ack.as_deref_mut() {
+        if w.write_fmt(format_args!("{line}\n")).is_err() || w.flush().is_err() {
+            *ack = None;
+        }
+    }
+}
+
 /// Pump a text-mode connection into admission until EOF. Returns the
 /// number of frames submitted (admitted or rejected); errors only on
-/// I/O failure or a stopped daemon (admission channel closed).
-pub(crate) fn pump_text(rdr: &mut impl BufRead, admission: &Admission) -> anyhow::Result<u64> {
+/// I/O failure, a stopped daemon (admission channel closed), or an
+/// injected `ingest-frame` connection drop.
+///
+/// Two control lines ride the same framing:
+///
+/// * `resume` — the client asks where to restart; the daemon answers
+///   `resume <watermark>` on the back channel (`-inf` before any
+///   admit). A reconnecting client skips every frame at or below the
+///   reply — combined with the admission floor this is exactly-once
+///   across connection drops *and* checkpoint restarts.
+/// * periodic `ack <submitted> <watermark>` lines (every
+///   [`ACK_EVERY`] frames, plus one at EOF) let the client track
+///   durable progress.
+pub(crate) fn pump_text(
+    rdr: &mut impl BufRead,
+    admission: &Admission,
+    mut ack: Option<&mut dyn Write>,
+) -> anyhow::Result<u64> {
     let mut submitted = 0u64;
     let mut line = String::new();
     loop {
         line.clear();
         if rdr.read_line(&mut line)? == 0 {
+            back_channel(
+                &mut ack,
+                format_args!("ack {submitted} {}", admission.watermark()),
+            );
             return Ok(submitted);
         }
         let text = line.trim();
         if text.is_empty() || text.starts_with('#') {
             continue;
         }
+        if text == "resume" {
+            back_channel(&mut ack, format_args!("resume {}", admission.watermark()));
+            continue;
+        }
+        anyhow::ensure!(
+            !crate::fault::should_fail("ingest-frame", None),
+            "injected fault: ingest connection drop"
+        );
         match parse_text_frame(text) {
             Ok(req) => {
                 admission.offer(req)?;
                 submitted += 1;
+                if submitted % ACK_EVERY == 0 {
+                    back_channel(
+                        &mut ack,
+                        format_args!("ack {submitted} {}", admission.watermark()),
+                    );
+                }
             }
             Err(_) => admission.note_malformed(),
         }
@@ -126,12 +176,24 @@ pub(crate) fn pump_text(rdr: &mut impl BufRead, admission: &Admission) -> anyhow
 /// Pump a binary-mode connection (full `AKPT` header + records, v1 or
 /// v2 framing) into admission. Returns the number of records submitted;
 /// errors on corrupt framing — the caller drops the connection.
+///
+/// v2 chunks are all-or-nothing: every record of a chunk is decoded
+/// into a side buffer *before* any of them is offered, so a stream cut
+/// off mid-chunk (EOF, injected drop) discards the partial batch whole
+/// — counted in `truncated_chunks` — instead of delivering a truncated
+/// prefix downstream.
 pub(crate) fn pump_binary(rdr: &mut impl BufRead, admission: &Admission) -> anyhow::Result<u64> {
     let hdr = trace_io::read_binary_header(rdr)?;
     let mut submitted = 0u64;
     match hdr.version {
         trace_io::VERSION_FLAT => {
+            // v1 records are individually framed; each complete record
+            // is a complete frame, so EOF between records loses nothing.
             for _ in 0..hdr.n_reqs {
+                anyhow::ensure!(
+                    !crate::fault::should_fail("ingest-frame", None),
+                    "injected fault: ingest connection drop"
+                );
                 admission.offer(trace_io::read_binary_record(rdr)?)?;
                 submitted += 1;
             }
@@ -139,14 +201,33 @@ pub(crate) fn pump_binary(rdr: &mut impl BufRead, admission: &Admission) -> anyh
         _ => {
             // v2: length-delimited frames, each its own record count.
             let mut remaining = hdr.n_reqs;
+            let mut batch: Vec<Request> = Vec::new();
             while remaining > 0 {
                 let n = u64::from(trace_io::read_frame_header(rdr)?);
                 anyhow::ensure!(
                     n >= 1 && n <= remaining,
                     "corrupt chunk frame: {n} records framed, {remaining} remaining"
                 );
+                batch.clear();
                 for _ in 0..n {
-                    admission.offer(trace_io::read_binary_record(rdr)?)?;
+                    match trace_io::read_binary_record(rdr) {
+                        Ok(r) => batch.push(r),
+                        Err(e) => {
+                            admission.note_truncated();
+                            return Err(e.context(format!(
+                                "binary chunk truncated mid-frame ({} of {n} records); \
+                                 partial batch discarded",
+                                batch.len()
+                            )));
+                        }
+                    }
+                }
+                for r in batch.drain(..) {
+                    anyhow::ensure!(
+                        !crate::fault::should_fail("ingest-frame", None),
+                        "injected fault: ingest connection drop"
+                    );
+                    admission.offer(r)?;
                 }
                 remaining -= n;
                 submitted += n;
@@ -195,6 +276,66 @@ mod tests {
         ] {
             assert!(parse_text_frame(bad).is_err(), "accepted `{bad}`");
         }
+    }
+
+    #[test]
+    fn text_pump_acks_and_answers_resume() {
+        let (adm, mut src) = Admission::new(meta(), 0.0, 16, 4, 16);
+        let input = "resume\n1.0 0 1\n2.0 1 2\n";
+        let mut back = Vec::new();
+        let n = pump_text(
+            &mut std::io::Cursor::new(input),
+            &adm,
+            Some(&mut back as &mut dyn Write),
+        )
+        .unwrap();
+        assert_eq!(n, 2);
+        adm.finish().unwrap();
+        assert_eq!(src.collect().unwrap().len(), 2);
+        let back = String::from_utf8(back).unwrap();
+        let lines: Vec<&str> = back.lines().collect();
+        assert_eq!(lines[0], "resume -inf", "no admits before the handshake");
+        assert_eq!(lines.last().unwrap(), &"ack 2 2", "final ack at EOF");
+    }
+
+    #[test]
+    fn binary_truncation_discards_partial_chunk() {
+        use crate::trace::model::Trace;
+        use crate::util::tempdir::TempDir;
+        let trace = Trace {
+            requests: (0..8)
+                .map(|i| Request::new(vec![i % 10], i % 4, f64::from(i)))
+                .collect(),
+            n_items: 10,
+            n_servers: 4,
+            name: "t".into(),
+        };
+        let dir = TempDir::new("akpc-frame-trunc").unwrap();
+        let path = dir.path().join("t.akpt");
+        trace_io::write_binary_chunked(&trace, &path, 4).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        // Intact stream: all 8 records land.
+        let (adm, mut src) = Admission::new(meta(), 0.0, 64, 4, 16);
+        assert_eq!(
+            pump_binary(&mut std::io::Cursor::new(&bytes), &adm).unwrap(),
+            8
+        );
+        adm.finish().unwrap();
+        assert_eq!(src.collect().unwrap().len(), 8);
+        assert_eq!(adm.stats().truncated_chunks, 0);
+
+        // Cut nine bytes off the tail: EOF lands mid-record inside the
+        // second chunk. The whole partial chunk must be discarded —
+        // exactly the first chunk's 4 records are delivered.
+        let (adm, mut src) = Admission::new(meta(), 0.0, 64, 4, 16);
+        let cut = &bytes[..bytes.len() - 9];
+        let err = pump_binary(&mut std::io::Cursor::new(cut), &adm).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+        adm.finish().unwrap();
+        assert_eq!(src.collect().unwrap().len(), 4, "no partial batch");
+        assert_eq!(adm.stats().admitted, 4);
+        assert_eq!(adm.stats().truncated_chunks, 1);
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! The retrying ingest client (DESIGN.md §14.6): what `akpc ingest
+//! --retries` runs, and the reference implementation of the text-mode
+//! resume protocol ([`framing`](super::framing)).
+//!
+//! Exactly-once across connection drops *and* daemon restarts, with the
+//! daemon as the single source of truth:
+//!
+//! 1. On every (re)connect the client sends `resume` and reads back
+//!    `resume <watermark>` — the daemon's inclusive admitted watermark
+//!    (`-inf` before the first admit; after a crash-restart it is the
+//!    checkpoint's *served* watermark, see `Admission::resume_floor`).
+//! 2. The client then streams only the frames with `time > watermark`.
+//!    Trace times are nondecreasing, so everything at or below the
+//!    watermark is already admitted (or already served, post-restart)
+//!    and is skipped, not resent.
+//! 3. Periodic `ack <submitted> <watermark>` lines flow back on the
+//!    same socket; the client drains them after `shutdown(Write)` so a
+//!    clean attempt ends with the daemon's final word on what landed.
+//!
+//! Any failure — connect refused, mid-stream reset, ack timeout —
+//! retries the whole attempt after exponential backoff with
+//! deterministic jitter. Retrying is always safe: step 1 re-asks the
+//! daemon what it has, so nothing is duplicated and nothing is lost.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use crate::trace::model::Request;
+use crate::util::Rng;
+
+/// Knobs for [`ingest_trace`].
+#[derive(Debug, Clone)]
+pub struct IngestOptions {
+    /// Daemon ingest address, e.g. `127.0.0.1:4780`.
+    pub addr: String,
+    /// Reconnect attempts after the first failure (`0` = fail fast).
+    pub retries: usize,
+    /// Base backoff before the first retry, in ms; doubles per attempt,
+    /// capped at [`MAX_BACKOFF_MS`].
+    pub backoff_ms: u64,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+}
+
+impl IngestOptions {
+    /// Defaults: 5 retries, 100ms base backoff.
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            retries: 5,
+            backoff_ms: 100,
+            seed: 0x1463_E571,
+        }
+    }
+}
+
+/// What a completed ingest hands back.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestReport {
+    /// Frames written to the socket across all attempts.
+    pub sent: u64,
+    /// Frames skipped because the daemon already held them (resume
+    /// dedup); nonzero exactly when a retry or restart happened.
+    pub skipped: u64,
+    /// Connection attempts made (`1` = no retries needed).
+    pub attempts: u64,
+    /// The daemon's final acked watermark (`-inf` if it never admitted).
+    pub watermark: f64,
+}
+
+/// Backoff ceiling: retries never sleep longer than this.
+const MAX_BACKOFF_MS: u64 = 5_000;
+
+/// Per-read socket timeout while waiting for the resume reply / acks; a
+/// wedged daemon turns into a retryable error, not a hang.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One connection attempt: handshake, stream, drain acks. Returns
+/// `(sent, skipped, final watermark)` on a fully-acked run.
+fn attempt(addr: &str, requests: &[Request]) -> anyhow::Result<(u64, u64, f64)> {
+    let stream = TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut rdr = BufReader::new(stream.try_clone()?);
+    let mut out = std::io::BufWriter::new(&stream);
+
+    writeln!(out, "resume")?;
+    out.flush()?;
+    let mut line = String::new();
+    anyhow::ensure!(rdr.read_line(&mut line)? > 0, "daemon closed before resume reply");
+    let watermark = line
+        .trim()
+        .strip_prefix("resume ")
+        .and_then(|w| w.parse::<f64>().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad resume reply: {line:?}"))?;
+
+    let mut sent = 0u64;
+    let mut skipped = 0u64;
+    for r in requests {
+        if r.time <= watermark {
+            skipped += 1;
+            continue;
+        }
+        // `{}` on f64 prints the shortest round-tripping decimal, so
+        // the daemon parses back the identical timestamp.
+        write!(out, "{} {}", r.time, r.server)?;
+        for it in &r.items {
+            write!(out, " {it}")?;
+        }
+        writeln!(out)?;
+        sent += 1;
+    }
+    out.flush()?;
+    drop(out);
+    stream.shutdown(Shutdown::Write)?;
+
+    // Drain acks to EOF; the last one is the daemon's final word.
+    let mut final_wm = watermark;
+    loop {
+        line.clear();
+        if rdr.read_line(&mut line)? == 0 {
+            break;
+        }
+        let mut parts = line.split_whitespace();
+        if parts.next() == Some("ack") {
+            let _submitted = parts.next();
+            if let Some(wm) = parts.next().and_then(|w| w.parse::<f64>().ok()) {
+                final_wm = wm;
+            }
+        }
+    }
+    Ok((sent, skipped, final_wm))
+}
+
+/// Stream `requests` (time-sorted) into the daemon at `opts.addr`,
+/// retrying with exponential backoff + deterministic jitter until the
+/// stream is fully acked or the retry budget is spent.
+pub fn ingest_trace(requests: &[Request], opts: &IngestOptions) -> anyhow::Result<IngestReport> {
+    let mut rng = Rng::new(opts.seed);
+    let mut report = IngestReport {
+        sent: 0,
+        skipped: 0,
+        attempts: 0,
+        watermark: f64::NEG_INFINITY,
+    };
+    let mut last_err = None;
+    for try_no in 0..=opts.retries {
+        report.attempts += 1;
+        match attempt(&opts.addr, requests) {
+            Ok((sent, skipped, wm)) => {
+                report.sent += sent;
+                report.skipped += skipped;
+                report.watermark = wm;
+                return Ok(report);
+            }
+            Err(e) => {
+                if try_no < opts.retries {
+                    let base = (opts.backoff_ms << try_no.min(16)).min(MAX_BACKOFF_MS);
+                    let jitter = rng.next_u64() % (base / 2 + 1);
+                    eprintln!(
+                        "ingest: attempt {} failed ({e:#}); retrying in {}ms",
+                        report.attempts,
+                        base + jitter
+                    );
+                    std::thread::sleep(Duration::from_millis(base + jitter));
+                }
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow::anyhow!("ingest: no attempts made"))
+        .context(format!("ingest to {} failed after {} attempts", opts.addr, report.attempts)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn req(time: f64, server: u32, item: u32) -> Request {
+        Request::new(vec![item], server, time)
+    }
+
+    /// A tiny in-test daemon stand-in speaking the resume/ack protocol.
+    fn fake_daemon(listener: TcpListener, watermark: f64) -> std::thread::JoinHandle<Vec<String>> {
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().expect("accept");
+            let mut rdr = BufReader::new(stream.try_clone().expect("clone"));
+            let mut wtr = stream;
+            let mut lines = Vec::new();
+            let mut submitted = 0u64;
+            let mut max_t = watermark;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if rdr.read_line(&mut line).unwrap_or(0) == 0 {
+                    break;
+                }
+                let t = line.trim().to_string();
+                if t == "resume" {
+                    writeln!(wtr, "resume {watermark}").expect("reply");
+                } else if !t.is_empty() {
+                    submitted += 1;
+                    if let Some(first) = t.split_whitespace().next() {
+                        if let Ok(v) = first.parse::<f64>() {
+                            max_t = max_t.max(v);
+                        }
+                    }
+                }
+                lines.push(t);
+            }
+            writeln!(wtr, "ack {submitted} {max_t}").expect("final ack");
+            lines
+        })
+    }
+
+    #[test]
+    fn resume_skips_frames_at_or_below_watermark() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let daemon = fake_daemon(listener, 2.0);
+        let requests = vec![req(1.0, 0, 1), req(2.0, 1, 2), req(3.0, 0, 3), req(4.0, 1, 4)];
+        let mut opts = IngestOptions::new(addr);
+        opts.retries = 0;
+        let report = ingest_trace(&requests, &opts).expect("ingest");
+        assert_eq!((report.sent, report.skipped, report.attempts), (2, 2, 1));
+        assert_eq!(report.watermark, 4.0);
+        let lines = daemon.join().expect("daemon");
+        assert_eq!(lines[0], "resume");
+        assert!(lines[1].starts_with("3 "), "first resent frame: {:?}", lines[1]);
+    }
+
+    #[test]
+    fn retries_until_a_daemon_appears_then_gives_up_cleanly() {
+        // Nothing listening: the bounded budget must be spent, not hung.
+        let mut opts = IngestOptions::new("127.0.0.1:1"); // reserved port
+        opts.retries = 2;
+        opts.backoff_ms = 1;
+        let err = ingest_trace(&[req(1.0, 0, 1)], &opts).expect_err("no daemon");
+        assert!(format!("{err:#}").contains("after 3 attempts"), "{err:#}");
+    }
+}

@@ -101,11 +101,18 @@ fn handle_conn(mut stream: TcpStream, admission: &Admission) {
         return; // connect-and-close probe (health checks do this)
     }
     let sniffed = Cursor::new(head[..filled].to_vec());
+    let mut writer = stream.try_clone().ok();
     let mut rdr = BufReader::new(sniffed.chain(&stream));
     let result = if head[..filled] == *MAGIC {
         pump_binary(&mut rdr, admission)
     } else {
-        pump_text(&mut rdr, admission)
+        // Text mode gets the back channel (resume handshake + acks);
+        // losing the clone only loses acks, never frames.
+        pump_text(
+            &mut rdr,
+            admission,
+            writer.as_mut().map(|w| w as &mut dyn std::io::Write),
+        )
     };
     if let Err(e) = result {
         eprintln!("akpc-serve: connection ended with error: {e:#}");

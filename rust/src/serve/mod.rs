@@ -38,6 +38,7 @@
 //! | [`http`] | plain-text HTTP/1.0 status endpoint |
 //! | [`reload`] | hot-reload validation + coordinator epoch swap |
 //! | [`daemon`] | [`ServeDaemon`]: lifecycle, control loop, drain |
+//! | [`ingest`] | retrying client: resume handshake, backoff, acks |
 //!
 //! This module is inside the akpc-lint L3/L4 scope (DESIGN.md §11): no
 //! panicking constructs outside tests, bounded `sync_channel`s only.
@@ -47,10 +48,12 @@ pub mod config;
 pub mod daemon;
 pub mod framing;
 mod http;
+pub mod ingest;
 mod listener;
 pub mod reload;
 
 pub use admission::{Admission, AdmissionStats, Verdict};
 pub use config::ServeConfig;
-pub use daemon::{ServeDaemon, ServeOptions, ServeReport};
+pub use daemon::{DaemonCounters, ServeDaemon, ServeOptions, ServeReport};
 pub use framing::parse_text_frame;
+pub use ingest::{ingest_trace, IngestOptions, IngestReport};

@@ -54,7 +54,8 @@
 use std::borrow::Borrow;
 use std::io::{BufRead, BufReader};
 use std::path::Path;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 
 use super::generator::{GeneratorParams, TraceGenerator, TraceKind};
 use super::io as trace_io;
@@ -508,6 +509,7 @@ pub struct ChannelSource {
     meta: TraceMeta,
     yielded: usize,
     last_t: f64,
+    depth: Arc<AtomicUsize>,
 }
 
 impl ChannelSource {
@@ -524,8 +526,18 @@ impl ChannelSource {
                 meta,
                 yielded: 0,
                 last_t: f64::NEG_INFINITY,
+                depth: Arc::new(AtomicUsize::new(0)),
             },
         )
+    }
+
+    /// Shared queue-depth gauge: producers that bump it after each send
+    /// (the daemon's admission layer does) get a live count of chunks
+    /// waiting in the channel, which is what overload-degradation
+    /// thresholds key on (DESIGN.md §14.4). `next_chunk` decrements it
+    /// per consumed chunk; producers that never increment simply read 0.
+    pub fn depth_gauge(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.depth)
     }
 }
 
@@ -539,6 +551,13 @@ impl TraceSource for ChannelSource {
         loop {
             match self.rx.recv() {
                 Ok(chunk) => {
+                    // Saturating: producers that don't maintain the
+                    // gauge leave it at zero.
+                    let _ = self.depth.fetch_update(
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                        |v| v.checked_sub(1),
+                    );
                     if chunk.is_empty() {
                         continue; // tolerate producer keep-alive flushes
                     }

@@ -22,6 +22,18 @@ impl Histogram {
         self.sum += value as f64;
     }
 
+    /// Record `n` occurrences of `value` at once. The checkpoint
+    /// deserializer rebuilds a histogram from its `(value, count)`
+    /// bucket pairs with this — equivalent to `n` calls to `record`.
+    pub fn record_n(&mut self, value: u32, n: u64) {
+        if n == 0 {
+            return;
+        }
+        *self.buckets.entry(value).or_insert(0) += n;
+        self.count += n;
+        self.sum += value as f64 * n as f64;
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }

@@ -1,0 +1,264 @@
+//! End-to-end fault-tolerance tests (DESIGN.md §14):
+//!
+//! 1. **Property sweep** — 30 seeded random fault plans through the
+//!    offline supervisor: every run converges (all requests served,
+//!    duplicates rejected) and the ledger equals the never-faulted
+//!    oracle plus exactly the recovery recharge, within 1e-9 relative.
+//! 2. **Checkpoint restart over the wire** — daemon A ingests half a
+//!    trace through a real socket and drains (writing its final
+//!    checkpoint); daemon B restores from the slot, the retrying client
+//!    resends the *full* trace, the resume handshake skips exactly the
+//!    served half, and the merged ledger matches the offline sharded
+//!    replay of the whole trace.
+//! 3. **Live shard panic** — an injected shard panic mid-stream is
+//!    recovered in place by the replay thread; `admitted == served`.
+//! 4. **Overload shedding** — with `shed_depth` set and the packer
+//!    stalled, queued chunks shed to pass-through;
+//!    `admitted == served + shed`.
+//!
+//! The fault registry and the coordinator reply timeout are
+//! process-global, so every test here serializes on one mutex.
+
+use std::sync::Mutex;
+
+use akpc::config::AkpcConfig;
+use akpc::fault::{
+    arm, disarm_all, read_from_dir, run_fault_plan, FaultAction, FaultPlan, FaultRunOptions,
+};
+use akpc::run::EngineChoice;
+use akpc::serve::{ingest_trace, IngestOptions, ServeConfig, ServeDaemon, ServeOptions};
+use akpc::sim::{replay_sharded_stream, ReplayMode};
+use akpc::trace::generator;
+use akpc::trace::model::Trace;
+use akpc::trace::stream::MemorySource;
+use akpc::util::tempdir::TempDir;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn fault_cfg() -> AkpcConfig {
+    AkpcConfig {
+        n_items: 24,
+        n_servers: 6,
+        batch_size: 12,
+        ..Default::default()
+    }
+}
+
+fn serve_cfg(cfg: &AkpcConfig, shards: usize) -> ServeConfig {
+    ServeConfig {
+        shards,
+        slack: 0.5,
+        chunk: 64,
+        akpc: cfg.clone(),
+        ..Default::default()
+    }
+}
+
+fn run(
+    cfg: &AkpcConfig,
+    n_shards: usize,
+    plan: FaultPlan,
+    trace: &Trace,
+) -> akpc::fault::FaultRunReport {
+    let mut opts = FaultRunOptions::new(
+        cfg.clone(),
+        EngineChoice::Native.to_engine(),
+        n_shards,
+        plan,
+    );
+    opts.stall_ms = 150;
+    opts.reply_timeout_ms = 50;
+    run_fault_plan(&opts, &trace.requests).expect("fault run")
+}
+
+fn ledger_matches(live: &akpc::cache::CostLedger, offline: &akpc::cache::CostLedger, what: &str) {
+    let tol = |x: f64| 1e-9 * x.abs().max(1.0);
+    assert!(
+        (live.total() - offline.total()).abs() <= tol(offline.total()),
+        "{what}: total {} vs {}",
+        live.total(),
+        offline.total()
+    );
+    assert_eq!(live.requests, offline.requests, "{what}: request counts");
+    assert_eq!(live.full_hits, offline.full_hits, "{what}: full hits");
+    assert_eq!(live.transfers, offline.transfers, "{what}: transfers");
+}
+
+/// 1. The exactness contract over 30 random plans: total - recharge
+///    lands on the oracle total, and every request is served exactly
+///    once no matter what the plan injected.
+#[test]
+fn thirty_seed_fault_plans_converge_and_account_exactly() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let cfg = fault_cfg();
+    let n = 180;
+    let n_shards = 3;
+    let trace = generator::netflix_like(cfg.n_items, cfg.n_servers, n, 11);
+
+    let oracle = run(&cfg, n_shards, FaultPlan::new(Vec::new()), &trace);
+    assert_eq!(oracle.recoveries, 0);
+    assert_eq!(oracle.snapshot.served, n as u64);
+
+    let n_windows = (n / cfg.batch_size) as u64;
+    for seed in 0..30u64 {
+        let plan = FaultPlan::random(seed, 2, n_windows, n_shards);
+        let spec = plan.spec();
+        let r = run(&cfg, n_shards, plan, &trace);
+        assert_eq!(
+            r.snapshot.served, n as u64,
+            "plan `{spec}`: every request must be served exactly once"
+        );
+        assert_eq!(r.resubmitted, r.recoveries, "plan `{spec}`");
+        let adjusted = r.total_cost - r.recharges;
+        let tol = 1e-9 * oracle.total_cost.abs().max(1.0);
+        assert!(
+            (adjusted - oracle.total_cost).abs() <= tol,
+            "plan `{spec}`: total {} - recharge {} = {adjusted}, oracle {}",
+            r.total_cost,
+            r.recharges,
+            oracle.total_cost
+        );
+    }
+}
+
+/// 2. Socket-level restart from checkpoint: serve half, drain, restore,
+///    resend everything, and land on the offline ledger of the full
+///    trace — exactly-once across the restart.
+#[test]
+fn checkpoint_restart_resumes_exactly_over_the_wire() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    disarm_all();
+    let cfg = fault_cfg();
+    let n = 1_200;
+    let half = n / 2;
+    let shards = 2;
+    let trace = generator::netflix_like(cfg.n_items, cfg.n_servers, n, 23);
+    let dir = TempDir::new("fault-ckpt").expect("tempdir");
+
+    let offline = {
+        let mut src = MemorySource::new(&trace);
+        replay_sharded_stream(
+            &cfg,
+            EngineChoice::Native.to_engine(),
+            &mut src,
+            shards,
+            ReplayMode::Ordered,
+        )
+        .expect("offline replay")
+    };
+
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        checkpoint_dir: Some(dir.path().to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+
+    // Daemon A: first half, then drain (which writes the final
+    // checkpoint). Standing in for the kill -9 the CI chaos step does
+    // at process level.
+    let a = ServeDaemon::start(serve_cfg(&cfg, shards), opts.clone()).expect("daemon A");
+    let ingest = IngestOptions::new(a.ingest_addr().to_string());
+    let sent = ingest_trace(&trace.requests[..half], &ingest).expect("ingest A");
+    assert_eq!((sent.sent, sent.skipped), (half as u64, 0));
+    let report_a = a.drain().expect("drain A");
+    assert_eq!(report_a.admission.admitted, half as u64);
+    assert_eq!(report_a.metrics.served, half as u64);
+    assert!(report_a.counters.checkpoints_written >= 1);
+    assert!(read_from_dir(dir.path()).expect("slot parse").is_some());
+
+    // Daemon B: restore, resend the FULL trace; the resume handshake
+    // must skip exactly the half daemon A already served.
+    let b = ServeDaemon::start(serve_cfg(&cfg, shards), opts).expect("daemon B");
+    let ingest = IngestOptions::new(b.ingest_addr().to_string());
+    let resent = ingest_trace(&trace.requests, &ingest).expect("ingest B");
+    assert_eq!(
+        (resent.sent, resent.skipped),
+        ((n - half) as u64, half as u64),
+        "resume handshake must dedup the served half"
+    );
+    let report_b = b.drain().expect("drain B");
+    assert_eq!(report_b.admission.admitted, (n - half) as u64);
+    assert_eq!(report_b.admission.rejected_late, 0);
+    assert_eq!(
+        report_b.metrics.served, n as u64,
+        "merged epochs span both daemon lifetimes"
+    );
+    ledger_matches(&report_b.metrics.ledger, &offline.metrics.ledger, "restart");
+}
+
+/// 3. A shard panic injected mid-stream is recovered by the replay
+///    thread without losing or duplicating a request.
+#[test]
+fn live_daemon_recovers_from_injected_shard_panic() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    disarm_all();
+    let cfg = fault_cfg();
+    let n = 300;
+    let trace = generator::netflix_like(cfg.n_items, cfg.n_servers, n, 31);
+
+    let daemon = ServeDaemon::start(
+        serve_cfg(&cfg, 2),
+        ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )
+    .expect("daemon");
+    // Shard 1 panics on its 21st serve — mid-chunk, after state built up.
+    arm("shard-serve", Some(1), FaultAction::Panic, 20);
+    let ingest = IngestOptions::new(daemon.ingest_addr().to_string());
+    ingest_trace(&trace.requests, &ingest).expect("ingest");
+    let report = daemon.drain().expect("drain");
+    disarm_all();
+
+    assert_eq!(report.counters.recoveries, 1, "one fleet rebuild");
+    assert_eq!(report.admission.admitted, n as u64);
+    assert_eq!(
+        report.metrics.served, n as u64,
+        "admitted == served across the recovery"
+    );
+    assert_eq!(report.epochs, 2, "recovery retires the pre-fault epoch");
+}
+
+/// 4. Overload degradation: stall the first serve so admitted chunks
+///    pile up, then watch every backlogged chunk shed at pass-through
+///    cost. The drain identity is `admitted == served + shed`.
+#[test]
+fn overload_sheds_backlogged_chunks_to_pass_through() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    disarm_all();
+    let cfg = fault_cfg();
+    let n = 50;
+    let trace = generator::netflix_like(cfg.n_items, cfg.n_servers, n, 41);
+
+    let mut scfg = serve_cfg(&cfg, 1);
+    scfg.slack = 0.0;
+    scfg.chunk = 1; // every request is its own chunk
+    scfg.shed_depth = 1; // any backlog at all triggers shedding
+    let daemon = ServeDaemon::start(
+        scfg,
+        ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )
+    .expect("daemon");
+    // Wedge the first serve long enough for the rest of the stream to
+    // queue behind it.
+    arm("shard-serve", None, FaultAction::Stall(std::time::Duration::from_millis(500)), 0);
+    let ingest = IngestOptions::new(daemon.ingest_addr().to_string());
+    ingest_trace(&trace.requests, &ingest).expect("ingest");
+    let report = daemon.drain().expect("drain");
+    disarm_all();
+
+    let c = report.counters;
+    assert!(c.shed_requests > 0, "backlog must shed: {c:?}");
+    assert!(c.shed_items >= c.shed_requests);
+    assert!(c.shed_cost > 0.0);
+    assert_eq!(c.recoveries, 0, "a stall below the reply timeout is not a loss");
+    assert_eq!(
+        report.metrics.served + c.shed_requests,
+        report.admission.admitted,
+        "drain identity: admitted == served + shed"
+    );
+}

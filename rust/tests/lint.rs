@@ -75,5 +75,5 @@ fn catalog_ids_are_unique_and_stable() {
     ids.sort_unstable();
     ids.dedup();
     assert_eq!(ids.len(), n, "duplicate rule ids");
-    assert_eq!(ids, vec!["L1", "L2", "L3", "L4", "L5"]);
+    assert_eq!(ids, vec!["L1", "L2", "L3", "L4", "L5", "L6"]);
 }

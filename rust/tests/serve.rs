@@ -49,7 +49,7 @@ fn start_daemon(scfg: ServeConfig, http: bool) -> ServeDaemon {
         ServeOptions {
             listen: "127.0.0.1:0".into(),
             http: http.then(|| "127.0.0.1:0".to_string()),
-            config_path: None,
+            ..Default::default()
         },
     )
     .expect("daemon start")
@@ -327,6 +327,7 @@ fn reload_rejects_invalid_and_applies_valid_configs() {
             listen: "127.0.0.1:0".into(),
             http: None,
             config_path: Some(path.to_string_lossy().into_owned()),
+            ..Default::default()
         },
     )
     .unwrap();
@@ -407,6 +408,7 @@ fn live_resize_keeps_the_warm_cache_hot() {
             listen: "127.0.0.1:0".into(),
             http: None,
             config_path: Some(path.to_string_lossy().into_owned()),
+            ..Default::default()
         },
     )
     .unwrap();

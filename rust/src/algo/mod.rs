@@ -8,10 +8,14 @@
 //! | [`DpGreedy`](dp_greedy::DpGreedy) | pairs | offline trace | Huang et al. [4] |
 //! | [`NoPacking`](no_packing::NoPacking) | none | online | Wang et al. [6] |
 //! | [`Opt`](opt::Opt) | per-request exact | full future | OPT lower bound |
+//! | [`Predictive`](crate::policy::Predictive) | K-cliques from EWMA forecast | online | DESIGN.md §15.1 |
+//! | [`BundleOpt`](crate::policy::BundleOpt) | per-request missing bundle | online | DESIGN.md §15.2 |
 //!
 //! All clique-based policies share [`PackedCacheCore`], the Algorithm 5 + 6
 //! request/expiry machinery; they differ only in *how the clique set is
-//! produced*.
+//! produced*. The extended families in the last two rows live in
+//! [`crate::policy`] and register through the same
+//! [`PolicyRegistry`](crate::run::PolicyRegistry) as everything here.
 
 pub mod adaptive;
 pub mod akpc;

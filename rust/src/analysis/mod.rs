@@ -290,6 +290,9 @@ mod tests {
         let bad = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f32>) -> Vec<u32> {\n    m.keys().copied().collect::<Vec<_>>()\n}\n";
         let ds = diags("crm/x.rs", bad);
         assert_eq!(rules_of(&ds), vec!["L2"], "{ds:?}");
+        // The extended policy families (policy/, DESIGN.md §15) carry
+        // learned state; order leaks there are packing-decision bugs too.
+        assert_eq!(rules_of(&diags("policy/x.rs", bad)), vec!["L2"]);
         // Same text outside the scoped dirs: no finding.
         assert!(diags("run/x.rs", bad).is_empty());
     }

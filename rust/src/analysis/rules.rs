@@ -6,7 +6,7 @@
 //! | id | name | scope |
 //! |---|---|---|
 //! | L1 | no-float-partial-unwrap | all of `src/` |
-//! | L2 | no-hash-iter-decision | `algo/ clique/ crm/ cache/` |
+//! | L2 | no-hash-iter-decision | `algo/ clique/ crm/ cache/ policy/` |
 //! | L3 | no-panic-hot-path | `coordinator/ serve/ elastic/` |
 //! | L4 | bounded-channels-only | `coordinator/ serve/ elastic/` |
 //! | L5 | no-stream-collect | all of `src/` |
@@ -101,7 +101,7 @@ pub fn check_file(rel_path: &str, src: &PreparedSource) -> Vec<RawDiag> {
     let path = rel_path.replace('\\', "/");
     let mut out = Vec::new();
     l1_no_float_partial_unwrap(src, &mut out);
-    if ["algo/", "clique/", "crm/", "cache/"]
+    if ["algo/", "clique/", "crm/", "cache/", "policy/"]
         .iter()
         .any(|d| path.contains(d))
     {

@@ -80,6 +80,21 @@ pub fn scenario_suite(
     engine: EngineChoice,
     scale: f64,
 ) -> anyhow::Result<ScenarioMatrix> {
+    let policy_names: Vec<&str> = policies.iter().map(|p| p.cli_name()).collect();
+    scenario_suite_names(cfg, names, &policy_names, engine, scale)
+}
+
+/// The registry-name flavor of [`scenario_suite`]: policies are resolved
+/// by registered name, so extension families without a [`PolicyChoice`]
+/// (`predictive`, `bundle-opt`, `akpc-adaptive-k`, …) sweep the same
+/// matrix as the builtins. `akpc scenario suite` calls this.
+pub fn scenario_suite_names(
+    cfg: &AkpcConfig,
+    names: &[&str],
+    policies: &[&str],
+    engine: EngineChoice,
+    scale: f64,
+) -> anyhow::Result<ScenarioMatrix> {
     let registry = PolicyRegistry::builtin();
     let mut runs = Vec::with_capacity(names.len() * policies.len());
     let mut policy_names = Vec::new();
@@ -90,7 +105,7 @@ pub fn scenario_suite(
         // The same effective-config derivation RunSpec::validate uses.
         let cell_cfg = cell_config(cfg, sc.n_items, sc.n_servers);
         for &p in policies {
-            let mut policy = registry.build_choice(p, &cell_cfg, engine);
+            let mut policy = registry.build(p, &cell_cfg, engine)?;
             let run = run_phased(policy.as_mut(), &sc, cell_cfg.batch_size);
             if policy_names.len() < policies.len() {
                 policy_names.push(run.policy.clone());
@@ -129,6 +144,44 @@ mod tests {
         assert!(m.total(0, 0) > 0.0 && m.total(1, 0) > 0.0);
         crate::util::json::parse(&m.to_json().to_string()).unwrap();
         m.print();
+    }
+
+    #[test]
+    fn suite_by_name_includes_extension_policies() {
+        // The names-based flavor sweeps registry extensions that have no
+        // PolicyChoice — the DESIGN.md §15 families in particular.
+        let cfg = AkpcConfig {
+            crm_top_frac: 1.0,
+            ..Default::default()
+        };
+        let m = scenario_suite_names(
+            &cfg,
+            &["smoke"],
+            &["no-packing", "bundle-opt", "predictive"],
+            EngineChoice::Native,
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(m.policies, vec!["NoPacking", "BundleOpt", "Predictive"]);
+        assert_eq!(m.runs.len(), 3);
+        // BundleOpt's packed fetches can only undercut NoPacking (§15.2
+        // pointwise dominance) — pinned here on a real scenario too.
+        assert!(m.total(1, 0) <= m.total(0, 0) + 1e-9);
+    }
+
+    #[test]
+    fn suite_by_name_rejects_unknown_policy() {
+        let cfg = AkpcConfig::default();
+        let err = scenario_suite_names(
+            &cfg,
+            &["smoke"],
+            &["bogus"],
+            EngineChoice::Native,
+            1.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown policy `bogus`"), "{err}");
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! | [`clique`] | disjoint clique store; split / approximate-merge / adjust |
 //! | [`cache`] | per-ESS cache state, expiry queue, cost model & ledger |
 //! | [`algo`] | `CachePolicy` trait: AKPC + NoPacking, PackCache, DP_Greedy, OPT |
+//! | [`policy`] | extended policy families: Predictive (EWMA co-access forecast), BundleOpt (Qin–Etesami baseline) (DESIGN.md §15) |
 //! | [`scenario`] | Scenario Lab: declarative workload scenarios, trace transformers (materialized + streamed), phased replay |
 //! | [`run`] | unified Run API: policy registry, `RunSpec` builder, `RunOutcome`, streaming observers |
 //! | [`serve`] | live serving daemon: TCP ingest, admission/reorder, `/metrics`, hot-reload, graceful drain (DESIGN.md §12) |
@@ -76,6 +77,7 @@ pub mod coordinator;
 pub mod crm;
 pub mod elastic;
 pub mod fault;
+pub mod policy;
 pub mod run;
 pub mod runtime;
 pub mod scenario;

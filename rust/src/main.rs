@@ -9,7 +9,7 @@
 //!                engine (DESIGN.md §10) instead of materializing
 //!   exp <id>     regenerate a paper table/figure
 //!                (table1 fig5 fig6a fig6b fig7a fig7b fig7c fig8a fig8b
-//!                 fig8c fig9a fig9b elastic adversarial faults all)
+//!                 fig8c fig9a fig9b policies elastic adversarial faults all)
 //!   scenario     Scenario Lab: phased non-stationary workload replays
 //!                (list | suite | <name> | <spec.toml>)
 //!   bench        tracked hot-path perf baseline; `--json` writes the
@@ -42,7 +42,8 @@
 //!   --seed <N>                RNG seed override
 //!   --shards <N>              serve/scenario/run: shard actor count
 //!   --mode <ordered|parallel> serve/scenario/run: replay scheduling
-//!   --scale <F>               scenario: phase-length multiplier (default 1)
+//!   --scale <F>               scenario: phase-length multiplier; exp
+//!                             policies: request-budget multiplier (default 1)
 //!   --progress <N>            run/scenario/serve: stderr progress (single-leader:
 //!                             every N windows; sharded scenario: per phase;
 //!                             sharded trace replay: completion only — DESIGN §8.4)
@@ -79,8 +80,8 @@
 //! subcommand that executes a policy goes through [`akpc::run::RunSpec`].)
 
 use akpc::bench::experiments as exp;
-use akpc::bench::scenarios::scenario_suite;
-use akpc::bench::sweep::{shard_scaling, EngineChoice, PolicyChoice};
+use akpc::bench::scenarios::scenario_suite_names;
+use akpc::bench::sweep::{shard_scaling, EngineChoice};
 use akpc::config::AkpcConfig;
 use akpc::run::{
     generated_source, generated_trace, parse_dataset, Driver, Fanout, JsonlSink, PolicyRegistry,
@@ -175,8 +176,9 @@ fn usage() {
          \u{20}          [--shards N [--mode <ordered|parallel>]]\n\
          \u{20}          [--stream [--chunk N]]   (bounded-memory replay)\n\
          exp:       <table1|fig5|fig6a|fig6b|fig7a|fig7b|fig7c|fig8a|fig8b|fig8c|\n\
-         \u{20}           fig9a|fig9b|elastic|adversarial|ablations|shards|faults|all>\n\
+         \u{20}           fig9a|fig9b|policies|elastic|adversarial|ablations|shards|faults|all>\n\
          \u{20}          faults: [--plan <kind@window[:shard],...>] [--shards N]\n\
+         \u{20}          policies: [--scale F]   (request-budget multiplier)\n\
          scenario:  <list|suite|name|spec.toml> [--policy P] [--scale F]\n\
          \u{20}          [--shards N [--mode <ordered|parallel>]] [--out <dir>]\n\
          bench:     [--json] [--scale F] [--out <file>]   (default BENCH_5.json)\n\
@@ -504,6 +506,19 @@ fn run_experiment(
     }
     if all || id == "fig9b" {
         exp::fig9b(opts, cfg).print();
+        matched = true;
+    }
+    if all || id == "policies" {
+        // `--scale` shrinks the request budget (CI smoke runs 0.01).
+        let mut popts = *opts;
+        if let Some(s) = cli.flag("scale") {
+            let f: f64 = s.parse()?;
+            anyhow::ensure!(f > 0.0, "--scale must be positive");
+            popts.n_requests = ((popts.n_requests as f64 * f) as usize).max(2_000);
+        }
+        let r = exp::policies(&popts, cfg)?;
+        r.print();
+        dump("policies", r.to_json())?;
         matched = true;
     }
     if all || id == "ablations" {
@@ -850,13 +865,17 @@ fn run_scenario_cmd(
                 "scenario suite always sweeps its fixed policy set; drop --policy"
             );
             let names = scenario::suite_names();
-            let matrix = scenario_suite(
-                cfg,
-                &names,
-                PolicyChoice::SWEEP,
-                engine,
-                scale,
-            )?;
+            // The classic SWEEP ladder plus the DESIGN.md §15 extension
+            // families, weakest-first down to OPT.
+            let policies = [
+                "no-packing",
+                "packcache",
+                "bundle-opt",
+                "predictive",
+                "akpc",
+                "opt",
+            ];
+            let matrix = scenario_suite_names(cfg, &names, &policies, engine, scale)?;
             matrix.print();
             if let Some(d) = out_dir {
                 let path = format!("{d}/scenario_suite.json");

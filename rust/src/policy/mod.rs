@@ -1,0 +1,25 @@
+//! Extended policy families beyond the paper's evaluation set
+//! (DESIGN.md §15) — registered through the same
+//! [`PolicyRegistry::register`](crate::run::PolicyRegistry::register)
+//! path any downstream extension uses, so they appear in
+//! `akpc policy list`, resolve by name in `akpc run`/`akpc scenario`,
+//! and are swept by `akpc exp policies`:
+//!
+//! | policy | idea | reference |
+//! |---|---|---|
+//! | [`Predictive`] | EWMA co-access forecast feeds clique generation | Choi et al. (PAPERS.md) |
+//! | [`BundleOpt`] | per-request missing-bundle packed fetch | Qin & Etesami (PAPERS.md) |
+//!
+//! Both are *online* policies on the shared Table-I cost model, which
+//! keeps every cross-policy comparison apples-to-apples; the
+//! cross-policy differential harness (`tests/policy.rs`) pins their
+//! ledger identities, determinism, and ordering against the builtin
+//! field. This directory is in akpc-lint L2 scope (DESIGN.md §11):
+//! learned state must never leak hash-iteration order into packing
+//! decisions.
+
+pub mod bundle_opt;
+pub mod predictive;
+
+pub use bundle_opt::BundleOpt;
+pub use predictive::{CoAccessPredictor, Predictive};

@@ -1,0 +1,373 @@
+//! **Predictive** — EWMA co-access prediction ahead of the access
+//! (DESIGN.md §15.1), following Choi et al. ("Learning-based Dynamic
+//! Cache Management in a Cloud", PAPERS.md).
+//!
+//! AKPC packs from the *observed* CRM of the last few batches; this
+//! policy packs from a *forecast*. A [`CoAccessPredictor`] is fit online
+//! over the CRM window history: every window tick builds the observation
+//! CRM (the same `crm/` CSR rows AKPC consumes — they are the feature
+//! source), folds its per-pair co-access weights into exponentially
+//! decayed affinity scores, and synthesizes a *predicted* CRM whose
+//! normalized scores act as predicted-affinity priors for
+//! `CliqueSet::generate` (adjust → form → split → `merge_approx`). Stale
+//! signal decays at every window boundary ([`DECAY`]), so a pair that
+//! stops co-occurring fades out of the packing instead of pinning a dead
+//! clique forever, while a long-lived pairing accumulates confidence that
+//! one noisy window cannot erase — the prediction is *ahead* of the next
+//! access in exactly Choi et al.'s sense.
+//!
+//! Determinism (akpc-lint L2 — this directory is in scope): all learned
+//! state lives in a `BTreeMap`, every iteration walks sorted keys, and
+//! the synthesized CRM goes through the same `CrmWindow::from_entries`
+//! assembly the engines use.
+
+use std::collections::BTreeMap;
+
+use crate::algo::{CachePolicy, PackedCacheCore};
+use crate::cache::{CostLedger, CostModel};
+use crate::clique::CliqueSet;
+use crate::config::AkpcConfig;
+use crate::crm::{diff_windows, CrmBuilder, CrmWindow, NativeCrmBuilder};
+use crate::trace::model::Request;
+use crate::util::Histogram;
+
+/// Per-window-boundary decay of learned affinities (EWMA retention).
+pub const DECAY: f64 = 0.7;
+
+/// Scores below this after decay are dropped (bounds the model to pairs
+/// with live signal; `DECAY^9 ≈ 0.04`, so ~9 silent windows forget a
+/// single observation).
+const PRUNE_EPS: f64 = 0.05;
+
+/// Online EWMA co-access predictor over CRM window history.
+///
+/// Scores are keyed by unordered item pair `(u, v)` with `u < v`, in a
+/// `BTreeMap` so every walk is id-ordered (no hash-order leakage — L2).
+/// Feeding it the per-window CRM rather than raw requests keeps the
+/// feature pipeline identical to AKPC's (sessionize → co-occurrence →
+/// top-p% → min-max normalize), so predicted and observed windows live
+/// on the same [0, 1] scale.
+#[derive(Debug, Default, Clone)]
+pub struct CoAccessPredictor {
+    scores: BTreeMap<(u32, u32), f64>,
+}
+
+impl CoAccessPredictor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of pairs with live (un-pruned) signal.
+    pub fn len(&self) -> usize {
+        self.scores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scores.is_empty()
+    }
+
+    /// One window boundary: decay every learned affinity and prune dust.
+    pub fn decay(&mut self) {
+        for v in self.scores.values_mut() {
+            *v *= DECAY;
+        }
+        self.scores.retain(|_, v| *v > PRUNE_EPS);
+    }
+
+    /// Fold one observation window's CSR rows into the learned scores
+    /// (decay first — the window boundary is where stale signal fades).
+    /// Sub-threshold co-access neighbors count too: the predictor sees
+    /// the weighted CRM, not just its binarization.
+    pub fn absorb_crm(&mut self, crm: &CrmWindow) {
+        self.decay();
+        for &u in &crm.active {
+            for (v, w, _) in crm.neighbors(u) {
+                if v > u && w > 0.0 {
+                    *self.scores.entry((u, v)).or_default() += w as f64;
+                }
+            }
+        }
+    }
+
+    /// Current affinity score of an item pair (0 when unknown).
+    pub fn score(&self, a: u32, b: u32) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.scores.get(&key).copied().unwrap_or(0.0)
+    }
+
+    /// Synthesize the *predicted* CRM for the next window: scores
+    /// max-normalized to [0, 1], binarized at `theta` — the same edge
+    /// rule the native engine applies to observed weights, so
+    /// `CliqueSet::generate` consumes predictions and observations
+    /// interchangeably.
+    pub fn predicted_window(&self, theta: f32) -> CrmWindow {
+        if self.scores.is_empty() {
+            return CrmWindow::default();
+        }
+        let max = self
+            .scores
+            .values()
+            .fold(0.0f64, |m, &v| if v > m { v } else { m });
+        if max <= 0.0 {
+            return CrmWindow::default();
+        }
+        // Active set + id→row in one sorted pass (BTreeMap key order).
+        let mut active: Vec<u32> = Vec::new();
+        for &(u, v) in self.scores.keys() {
+            active.push(u);
+            active.push(v);
+        }
+        active.sort_unstable();
+        active.dedup();
+        let row_of = |item: u32| -> u32 {
+            active.binary_search(&item).expect("scored item is active") as u32
+        };
+        let mut entries = Vec::with_capacity(self.scores.len() * 2);
+        for (&(u, v), &s) in &self.scores {
+            let w = (s / max) as f32;
+            let is_edge = w > theta;
+            entries.push(crate::crm::CsrEntry {
+                row: row_of(u),
+                id: v,
+                w,
+                is_edge,
+            });
+            entries.push(crate::crm::CsrEntry {
+                row: row_of(v),
+                id: u,
+                w,
+                is_edge,
+            });
+        }
+        CrmWindow::from_entries(active, entries)
+    }
+}
+
+/// The predictive policy: Algorithm 5/6 serving over cliques generated
+/// from the predictor's forecast instead of the observed window.
+pub struct Predictive {
+    cfg: AkpcConfig,
+    core: PackedCacheCore,
+    builder: Box<dyn CrmBuilder>,
+    predictor: CoAccessPredictor,
+    /// Diff base: last window's *predicted* CRM.
+    prev_pred: CrmWindow,
+    cliques: CliqueSet,
+    hist: Histogram,
+}
+
+impl Predictive {
+    /// Predictive with the native CRM engine for the observation windows.
+    pub fn new(cfg: &AkpcConfig) -> Self {
+        Self::with_builder(cfg, Box::new(NativeCrmBuilder))
+    }
+
+    /// Predictive with an explicit CRM engine (the registry injects the
+    /// runtime's choice, same as AKPC).
+    pub fn with_builder(cfg: &AkpcConfig, builder: Box<dyn CrmBuilder>) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            core: PackedCacheCore::new(CostModel::from_config(cfg), cfg.charge_policy),
+            builder,
+            predictor: CoAccessPredictor::new(),
+            prev_pred: CrmWindow::default(),
+            cliques: CliqueSet::new(),
+            hist: Histogram::new(),
+        }
+    }
+
+    /// The live predictor (inspection / tests).
+    pub fn predictor(&self) -> &CoAccessPredictor {
+        &self.predictor
+    }
+
+    /// Current clique set (inspection / tests).
+    pub fn cliques(&self) -> &CliqueSet {
+        &self.cliques
+    }
+}
+
+impl CachePolicy for Predictive {
+    fn name(&self) -> String {
+        "Predictive".into()
+    }
+
+    fn handle_request(&mut self, r: &Request) {
+        self.core.handle_request(r);
+    }
+
+    fn end_batch(&mut self, batch: &[Request]) {
+        // Observe: sessionize the batch and build its CRM — identical
+        // feature pipeline to AKPC's Event 1.
+        let gap = self.cfg.session_gap_frac * self.cfg.delta_t();
+        let transactions = crate::crm::sessionize(batch, gap);
+        let observed = self.builder.build(
+            &transactions,
+            self.cfg.n_items,
+            self.cfg.theta,
+            self.cfg.crm_top_frac,
+        );
+        // Learn: decay + fold the observation into the EWMA scores.
+        self.predictor.absorb_crm(&observed);
+        // Predict: synthesize next window's CRM and regenerate cliques
+        // from it (predicted-affinity priors into adjust/form/split/ACM).
+        let predicted = self.predictor.predicted_window(self.cfg.theta);
+        let delta = diff_windows(&self.prev_pred, &predicted);
+        self.cliques = CliqueSet::generate(
+            &self.cliques,
+            &predicted,
+            &delta,
+            self.cfg.omega,
+            self.cfg.gamma_approx,
+            self.cfg.clique_splitting,
+            self.cfg.approx_merging,
+        );
+        self.prev_pred = predicted;
+        for c in self.cliques.iter() {
+            self.hist.record(c.len() as u32);
+        }
+        self.core.set_cliques(self.cliques.iter());
+    }
+
+    fn ledger(&self) -> &CostLedger {
+        &self.core.ledger
+    }
+
+    fn clique_sizes(&self) -> Option<Histogram> {
+        Some(self.hist.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(items: &[u32], server: u32, t: f64) -> Request {
+        Request::new(items.to_vec(), server, t)
+    }
+
+    fn test_cfg() -> AkpcConfig {
+        AkpcConfig {
+            n_items: 16,
+            n_servers: 4,
+            crm_top_frac: 1.0,
+            ..Default::default()
+        }
+    }
+
+    /// A window that makes {0,1,2} a strong bundle (mirrors algo::akpc).
+    fn bundle_window(t0: f64) -> Vec<Request> {
+        let mut w = Vec::new();
+        for i in 0..20 {
+            w.push(req(&[0, 1, 2], 0, t0 + i as f64 * 0.01));
+            w.push(req(&[5, 6], 1, t0 + i as f64 * 0.01));
+        }
+        w
+    }
+
+    #[test]
+    fn learns_cliques_from_predicted_window() {
+        let cfg = test_cfg();
+        let mut p = Predictive::new(&cfg);
+        p.end_batch(&bundle_window(0.0));
+        assert_eq!(p.cliques().clique_of(0).unwrap(), &[0, 1, 2]);
+        assert_eq!(p.cliques().clique_of(5).unwrap(), &[5, 6]);
+        p.cliques().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn serves_predicted_clique_on_single_item_request() {
+        let cfg = test_cfg();
+        let mut p = Predictive::new(&cfg);
+        p.end_batch(&bundle_window(0.0));
+        p.handle_request(&req(&[0], 2, 10.0));
+        assert_eq!(p.ledger().items_delivered, 3);
+        assert_eq!(p.ledger().items_requested, 1);
+        assert!((p.ledger().c_t - 2.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decay_forgets_stale_bundles() {
+        let cfg = test_cfg();
+        let mut p = Predictive::new(&cfg);
+        p.end_batch(&bundle_window(0.0));
+        let fresh = p.predictor().score(0, 1);
+        assert!(fresh > 0.0);
+        // Windows with unrelated traffic only: {0,1} decays toward prune.
+        for k in 1..12 {
+            let w: Vec<Request> = (0..20)
+                .map(|i| req(&[8, 9], 0, k as f64 * 100.0 + i as f64 * 0.01))
+                .collect();
+            p.end_batch(&w);
+        }
+        assert!(
+            p.predictor().score(0, 1) < fresh * 0.2,
+            "stale affinity did not decay: {} vs {}",
+            p.predictor().score(0, 1),
+            fresh
+        );
+        // The live pair dominates the prediction now.
+        assert!(p.predictor().score(8, 9) > p.predictor().score(0, 1));
+        assert_eq!(p.cliques().clique_of(8).unwrap(), &[8, 9]);
+    }
+
+    #[test]
+    fn persistent_signal_survives_one_noisy_window() {
+        let cfg = test_cfg();
+        let mut p = Predictive::new(&cfg);
+        // Three consistent windows build confidence...
+        for k in 0..3 {
+            p.end_batch(&bundle_window(k as f64 * 100.0));
+        }
+        // ...one empty window must not unpack the bundle (EWMA memory —
+        // the single-window CRM would).
+        p.end_batch(&[]);
+        assert_eq!(p.cliques().clique_of(0).unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn predictor_scores_are_symmetric_and_zero_on_diagonal() {
+        let mut pred = CoAccessPredictor::new();
+        let crm = crate::crm::build_native(
+            &crate::crm::sessionize(&bundle_window(0.0), 0.05),
+            16,
+            0.2,
+            1.0,
+        );
+        pred.absorb_crm(&crm);
+        assert_eq!(pred.score(0, 1), pred.score(1, 0));
+        assert_eq!(pred.score(3, 3), 0.0);
+        assert!(pred.score(0, 1) > 0.0);
+        assert_eq!(pred.score(0, 9), 0.0);
+    }
+
+    #[test]
+    fn predicted_window_matches_native_edge_rule() {
+        // One absorbed window, scores max-normalized: the strongest pair
+        // must be an edge at any θ < 1, and the window must be symmetric.
+        let mut pred = CoAccessPredictor::new();
+        let crm = crate::crm::build_native(
+            &crate::crm::sessionize(&bundle_window(0.0), 0.05),
+            16,
+            0.2,
+            1.0,
+        );
+        pred.absorb_crm(&crm);
+        let w = pred.predicted_window(0.2);
+        assert!(w.edge(0, 1) && w.edge(1, 0));
+        assert!((w.weight(0, 1) - w.weight(1, 0)).abs() < 1e-6);
+        assert_eq!(w.edge_count(), w.edges().len());
+        assert!(w.k() >= 4);
+    }
+
+    #[test]
+    fn empty_predictor_predicts_empty_window() {
+        let pred = CoAccessPredictor::new();
+        let w = pred.predicted_window(0.2);
+        assert_eq!(w.k(), 0);
+        assert_eq!(w.edge_count(), 0);
+    }
+}

@@ -11,6 +11,7 @@
 use crate::algo::{AdaptiveK, Akpc, CachePolicy, DpGreedy, NoPacking, Opt, PackCache2};
 use crate::bench::sweep::{EngineChoice, PolicyChoice};
 use crate::config::AkpcConfig;
+use crate::policy::{BundleOpt, Predictive};
 
 /// What a policy can do — consulted by
 /// [`RunSpec::validate`](super::RunSpec::validate) before any work
@@ -222,6 +223,25 @@ impl PolicyRegistry {
                     Box::new(AdaptiveK::new(cfg))
                 }),
             ),
+            PolicyEntry::new(
+                "predictive",
+                "EWMA co-access forecast packs cliques ahead of the access (Choi et al.)",
+                online,
+                Box::new(|cfg: &AkpcConfig, engine: EngineChoice| -> Box<dyn CachePolicy> {
+                    Box::new(Predictive::with_builder(
+                        cfg,
+                        engine.to_engine().builder(&cfg.artifacts_dir),
+                    ))
+                }),
+            ),
+            PolicyEntry::new(
+                "bundle-opt",
+                "online file-bundle caching baseline (Qin & Etesami)",
+                online,
+                Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                    Box::new(BundleOpt::new(cfg))
+                }),
+            ),
             PolicyEntry::builtin(
                 PolicyChoice::Opt,
                 "clairvoyant per-request optimal packing (lower bound)",
@@ -397,6 +417,15 @@ mod tests {
             "online+sharded+elastic"
         );
         assert_eq!(reg.get("opt").unwrap().caps().summary(), "offline-trace");
+        // The extended policy families (DESIGN.md §15) are online-only:
+        // neither drives the sharded coordinator (AKPC-specific path) nor
+        // needs the trace up front.
+        for name in ["predictive", "bundle-opt"] {
+            let caps = reg.get(name).unwrap().caps();
+            assert_eq!(caps.summary(), "online", "`{name}` caps drifted");
+            assert!(!caps.supports_sharded);
+            assert!(!caps.needs_offline_trace);
+        }
         // Elastic implies sharded for every entry (the handoff is a
         // coordinator operation).
         for e in reg.iter() {

@@ -1,0 +1,494 @@
+//! Cross-policy differential test harness (ISSUE 10, DESIGN.md §15.3).
+//!
+//! Everything here is **auto-generated over the registry** — no hardcoded
+//! policy-name lists in the differential sections — so any future
+//! `PolicyRegistry::register` call inherits these invariants for free:
+//!
+//! 1. ledger accounting identities on every registered policy;
+//! 2. `CostLedger::delta_from` consistency across a mid-run snapshot;
+//! 3. bit-exact determinism across a rerun with the same seed;
+//! 4. sharded == single-leader totals (1e-9) for `supports_sharded`;
+//! 5. a brute-force offline oracle for micro-universes sandwiching every
+//!    policy between a certified transfer floor and the exhaustive
+//!    static-partition minimum;
+//! 6. the headline ordering AKPC < BundleOpt < NoPacking on the
+//!    flash-crowd scenario;
+//! 7. registry-extension regression (toy policy registration, CLI list
+//!    rows, unknown-policy enumeration, capability gating in `run`).
+
+use akpc::algo::{CachePolicy, NoPacking, PackedCacheCore};
+use akpc::bench::experiments::adversarial_bound_derived;
+use akpc::bench::scenarios::scenario_suite_names;
+use akpc::cache::{CostLedger, CostModel};
+use akpc::config::AkpcConfig;
+use akpc::run::{
+    EngineChoice, NullObserver, PolicyCaps, PolicyEntry, PolicyRegistry, RunSpec,
+};
+use akpc::sim::ReplayMode;
+use akpc::trace::generator::netflix_like;
+use akpc::trace::model::{Request, Trace};
+use akpc::util::Rng;
+
+/// Config for the differential replays (small but multi-window).
+fn diff_cfg() -> AkpcConfig {
+    AkpcConfig {
+        n_items: 24,
+        n_servers: 8,
+        ..Default::default()
+    }
+}
+
+/// The single-leader replay loop (mirror of `sim::run` without reports):
+/// offline policies see the trace up front, everyone replays in batches.
+fn replay(policy: &mut dyn CachePolicy, trace: &Trace, batch: usize) {
+    if policy.needs_offline_trace() {
+        policy.prepare(trace);
+    }
+    for b in trace.batches(batch) {
+        for r in b {
+            policy.handle_request(r);
+        }
+        policy.end_batch(b);
+    }
+}
+
+// ------------------------------------------------- differential harness
+
+/// (i) Ledger accounting identities for *every* registered policy.
+///
+/// Note on the identity set: a request touching k > 1 packed groups
+/// performs k transfers but counts as ONE miss, so the literal
+/// "transfers + full_hits == requests" only holds for single-group
+/// requests. The identities that hold universally are
+/// `full_hits + misses == requests` and `transfers >= misses` (each miss
+/// performs at least one transfer), which together imply
+/// `transfers + full_hits >= requests`.
+#[test]
+fn ledger_identities_hold_for_every_registered_policy() {
+    let cfg = diff_cfg();
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 4_000, 7);
+    let total_items: u64 = trace.requests.iter().map(|r| r.items.len() as u64).sum();
+    let registry = PolicyRegistry::builtin();
+    for e in registry.iter() {
+        let mut p = e.build(&cfg, EngineChoice::Native);
+        replay(p.as_mut(), &trace, cfg.batch_size);
+        let l = p.ledger();
+        assert_eq!(l.requests, trace.len() as u64, "`{}`: request count", e.name());
+        assert_eq!(
+            l.full_hits + l.misses,
+            l.requests,
+            "`{}`: hits + misses != requests",
+            e.name()
+        );
+        assert!(
+            l.transfers >= l.misses,
+            "`{}`: {} transfers < {} misses",
+            e.name(),
+            l.transfers,
+            l.misses
+        );
+        assert!(
+            l.transfers + l.full_hits >= l.requests,
+            "`{}`: transfers+hits < requests",
+            e.name()
+        );
+        // Non-negative rent and transfer spend; total is their sum.
+        assert!(l.c_p >= 0.0 && l.c_t >= 0.0, "`{}`: negative cost", e.name());
+        assert!(
+            (l.total() - (l.c_p + l.c_t)).abs() < 1e-12,
+            "`{}`: total != c_p + c_t",
+            e.name()
+        );
+        // Every requested item is delivered (possibly alongside packed
+        // extras — never fewer).
+        assert_eq!(l.items_requested, total_items, "`{}`: items_requested", e.name());
+        assert!(
+            l.items_delivered >= l.items_requested,
+            "`{}`: delivered {} < requested {}",
+            e.name(),
+            l.items_delivered,
+            l.items_requested
+        );
+    }
+}
+
+/// (i b) `CostLedger::delta_from` over a mid-run snapshot is consistent
+/// with the final ledger for every registered policy.
+#[test]
+fn delta_from_is_consistent_for_every_registered_policy() {
+    let cfg = diff_cfg();
+    let trace = netflix_like(cfg.n_items, cfg.n_servers, 4_000, 7);
+    let half = trace.len() / 2;
+    let registry = PolicyRegistry::builtin();
+    for e in registry.iter() {
+        let mut p = e.build(&cfg, EngineChoice::Native);
+        if p.needs_offline_trace() {
+            p.prepare(&trace);
+        }
+        let mut snapshot: Option<CostLedger> = None;
+        let mut served = 0usize;
+        for b in trace.batches(cfg.batch_size) {
+            for r in b {
+                p.handle_request(r);
+            }
+            p.end_batch(b);
+            served += b.len();
+            if snapshot.is_none() && served >= half {
+                snapshot = Some(p.ledger().clone());
+            }
+        }
+        let snap = snapshot.expect("trace spans multiple batches");
+        let l = p.ledger();
+        let delta = l.delta_from(&snap);
+        assert_eq!(delta.requests, l.requests - snap.requests, "`{}`", e.name());
+        assert_eq!(delta.transfers, l.transfers - snap.transfers, "`{}`", e.name());
+        assert_eq!(delta.full_hits, l.full_hits - snap.full_hits, "`{}`", e.name());
+        assert_eq!(delta.misses, l.misses - snap.misses, "`{}`", e.name());
+        // Costs are monotone over a run, so the saturating delta is exact
+        // and snapshot + delta reassembles the final ledger.
+        let tol = 1e-9 * l.total().abs().max(1.0);
+        assert!(
+            (snap.total() + delta.total() - l.total()).abs() <= tol,
+            "`{}`: snapshot {} + delta {} != total {}",
+            e.name(),
+            snap.total(),
+            delta.total(),
+            l.total()
+        );
+        assert!(delta.c_p >= 0.0 && delta.c_t >= 0.0, "`{}`", e.name());
+    }
+}
+
+/// (iii) Same seed ⇒ bit-identical ledgers for every registered policy.
+#[test]
+fn reruns_with_same_seed_are_deterministic() {
+    let cfg = diff_cfg();
+    let registry = PolicyRegistry::builtin();
+    for e in registry.iter() {
+        let mut ledgers = Vec::new();
+        for _ in 0..2 {
+            // Regenerate the trace too: determinism must cover the whole
+            // seed → workload → policy pipeline.
+            let trace = netflix_like(cfg.n_items, cfg.n_servers, 3_000, 13);
+            let mut p = e.build(&cfg, EngineChoice::Native);
+            replay(p.as_mut(), &trace, cfg.batch_size);
+            ledgers.push(p.ledger().clone());
+        }
+        let (a, b) = (&ledgers[0], &ledgers[1]);
+        assert_eq!(a.c_p.to_bits(), b.c_p.to_bits(), "`{}`: c_p drifted", e.name());
+        assert_eq!(a.c_t.to_bits(), b.c_t.to_bits(), "`{}`: c_t drifted", e.name());
+        assert_eq!(
+            (a.transfers, a.full_hits, a.misses, a.requests, a.items_delivered),
+            (b.transfers, b.full_hits, b.misses, b.requests, b.items_delivered),
+            "`{}`: counters drifted",
+            e.name()
+        );
+    }
+}
+
+/// (ii) Sharded totals equal single-leader totals (within 1e-9) for every
+/// policy whose capability flags claim `supports_sharded`.
+#[test]
+fn sharded_matches_single_leader_for_capable_policies() {
+    let registry = PolicyRegistry::builtin();
+    let trace = netflix_like(24, 8, 4_000, 11);
+    let mut checked = 0;
+    for e in registry.iter() {
+        if !e.caps().supports_sharded {
+            continue;
+        }
+        let single = RunSpec::new()
+            .config(diff_cfg())
+            .engine(EngineChoice::Native)
+            .policy(e.name())
+            .inline_trace(trace.clone())
+            .run(&registry, &mut NullObserver)
+            .unwrap();
+        let sharded = RunSpec::new()
+            .config(diff_cfg())
+            .engine(EngineChoice::Native)
+            .policy(e.name())
+            .inline_trace(trace.clone())
+            .sharded(2, ReplayMode::Ordered)
+            .run(&registry, &mut NullObserver)
+            .unwrap();
+        let tol = 1e-9 * single.total().abs().max(1.0);
+        assert!(
+            (single.total() - sharded.total()).abs() <= tol,
+            "`{}`: single-leader {} != sharded {}",
+            e.name(),
+            single.total(),
+            sharded.total()
+        );
+        checked += 1;
+    }
+    assert!(checked >= 1, "no sharded-capable policy in the registry");
+}
+
+// --------------------------------------------------- micro-universe oracle
+
+/// A tiny instance the oracle can search exhaustively.
+struct Micro {
+    cfg: AkpcConfig,
+    requests: Vec<Request>,
+}
+
+fn random_micro(rng: &mut Rng) -> Micro {
+    let n_items = 3 + rng.below(4) as u32; // 3..=6
+    let n_servers = 1 + rng.below(2) as u32; // 1..=2
+    let len = 8 + rng.below(13); // 8..=20 requests
+    let mut t = 0.0;
+    let requests = (0..len)
+        .map(|_| {
+            t += rng.f64() * 0.4;
+            let k = 1 + rng.below(3.min(n_items as usize));
+            let mut items: Vec<u32> = rng
+                .sample_distinct(n_items as usize, k)
+                .into_iter()
+                .map(|d| d as u32)
+                .collect();
+            items.sort_unstable();
+            Request::new(items, rng.below(n_servers as usize) as u32, t)
+        })
+        .collect();
+    Micro {
+        cfg: AkpcConfig {
+            n_items,
+            n_servers,
+            batch_size: 5,
+            ..Default::default()
+        },
+        requests,
+    }
+}
+
+/// All set partitions of `0..n` with blocks of at most `max_block` items
+/// (restricted-growth enumeration; Bell(6) = 203, so this is tiny).
+fn partitions(n: u32, max_block: usize) -> Vec<Vec<Vec<u32>>> {
+    let mut out = Vec::new();
+    let mut blocks: Vec<Vec<u32>> = Vec::new();
+    fn go(item: u32, n: u32, max_block: usize, blocks: &mut Vec<Vec<u32>>, out: &mut Vec<Vec<Vec<u32>>>) {
+        if item == n {
+            out.push(blocks.clone());
+            return;
+        }
+        for i in 0..blocks.len() {
+            if blocks[i].len() < max_block {
+                blocks[i].push(item);
+                go(item + 1, n, max_block, blocks, out);
+                blocks[i].pop();
+            }
+        }
+        blocks.push(vec![item]);
+        go(item + 1, n, max_block, blocks, out);
+        blocks.pop();
+    }
+    go(0, n, max_block, &mut blocks, &mut out);
+    out
+}
+
+/// Exhaustive static-partition minimum: replay the instance under every
+/// disjoint clique partition (one `set_cliques` up front, Algorithm 5/6
+/// semantics throughout) and take the cheapest. A concrete schedule, so
+/// an UPPER bound on the true offline optimum.
+fn static_partition_min(m: &Micro) -> f64 {
+    let mut best = f64::INFINITY;
+    for partition in partitions(m.cfg.n_items, m.cfg.omega as usize) {
+        let mut core = PackedCacheCore::new(
+            CostModel::from_config(&m.cfg),
+            m.cfg.charge_policy,
+        );
+        core.set_cliques(partition.iter().map(|b| b.as_slice()));
+        for r in &m.requests {
+            core.handle_request(r);
+        }
+        if core.ledger.total() < best {
+            best = core.ledger.total();
+        }
+    }
+    best
+}
+
+/// Certified transfer floor: every item requested at a server must reach
+/// that server at least once, and packed transfer cost is subadditive for
+/// α ≤ 1 (k transfers covering u items cost ≥ `(1 + (u−1)α)·λ`), so
+/// `Σ_servers transfer_packed(distinct items requested there)` LOWER
+/// bounds any policy's total (rent excluded — also nonnegative).
+fn transfer_floor(m: &Micro) -> f64 {
+    let cost = CostModel::from_config(&m.cfg);
+    let mut per_server: Vec<std::collections::BTreeSet<u32>> =
+        vec![Default::default(); m.cfg.n_servers as usize];
+    for r in &m.requests {
+        per_server[r.server as usize].extend(r.items.iter().copied());
+    }
+    per_server
+        .iter()
+        .filter(|s| !s.is_empty())
+        .map(|s| cost.transfer_packed(s.len() as u32))
+        .sum()
+}
+
+/// ~30 seeded micro-instances: the floor ≤ static-partition-min sandwich
+/// holds, **no registered policy ever beats the oracle's floor**, and
+/// `bundle-opt` / `akpc` stay within the claimed competitive factor of
+/// the oracle's upper bound (the Theorem-1/2 derivation
+/// `S·(2+(ω−1)α)/(1+(S−1)α)` instantiated at S = universe size — the
+/// adversarial worst case over exactly this instance family).
+#[test]
+fn micro_oracle_sandwiches_every_policy() {
+    let registry = PolicyRegistry::builtin();
+    for seed in 1..=30u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let m = random_micro(&mut rng);
+        let floor = transfer_floor(&m);
+        let upper = static_partition_min(&m);
+        assert!(
+            floor <= upper + 1e-9,
+            "seed {seed}: floor {floor} > static-min {upper}"
+        );
+        let trace = Trace {
+            requests: m.requests.clone(),
+            n_items: m.cfg.n_items,
+            n_servers: m.cfg.n_servers,
+            name: format!("micro-{seed}"),
+        };
+        let bound = adversarial_bound_derived(&m.cfg, m.cfg.n_items);
+        for e in registry.iter() {
+            let mut p = e.build(&m.cfg, EngineChoice::Native);
+            replay(p.as_mut(), &trace, m.cfg.batch_size);
+            let total = p.ledger().total();
+            assert!(
+                total >= floor - 1e-9,
+                "seed {seed}: `{}` total {total} beats the certified floor {floor}",
+                e.name()
+            );
+            if matches!(e.name(), "bundle-opt" | "akpc") {
+                assert!(
+                    total <= bound * upper + 1e-9,
+                    "seed {seed}: `{}` total {total} outside {bound}× oracle bound {upper}",
+                    e.name()
+                );
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- headline ordering
+
+/// Acceptance pin: on the flash-crowd scenario, AKPC beats BundleOpt
+/// (cross-request clique packing) which beats NoPacking (per-request
+/// bundle packing) on total cost.
+#[test]
+fn flash_crowd_orders_akpc_bundle_opt_no_packing() {
+    let cfg = AkpcConfig::default();
+    let m = scenario_suite_names(
+        &cfg,
+        &["flash-crowd"],
+        &["no-packing", "bundle-opt", "akpc"],
+        EngineChoice::Native,
+        0.25,
+    )
+    .unwrap();
+    let np = m.total(0, 0);
+    let bo = m.total(1, 0);
+    let akpc = m.total(2, 0);
+    assert!(bo < np, "BundleOpt {bo} !< NoPacking {np}");
+    assert!(akpc < bo, "AKPC {akpc} !< BundleOpt {bo}");
+}
+
+// ------------------------------------------- registry-extension regression
+
+/// Register a toy policy from outside the crate: it must show up in the
+/// `akpc policy list` rows and in unknown-policy error enumerations, and
+/// build/run like any builtin.
+#[test]
+fn registered_toy_policy_is_fully_wired() {
+    let mut registry = PolicyRegistry::builtin();
+    registry
+        .register(PolicyEntry::new(
+            "toy-lru",
+            "per-item caching registered from a test",
+            PolicyCaps::default(),
+            Box::new(|cfg: &AkpcConfig, _| -> Box<dyn CachePolicy> {
+                Box::new(NoPacking::new(cfg))
+            }),
+        ))
+        .unwrap();
+    assert!(registry.names().contains(&"toy-lru"));
+
+    // The exact rows `akpc policy list` prints (main.rs renders
+    // name/caps-summary/description per entry): the toy row must appear.
+    let rows: Vec<String> = registry
+        .iter()
+        .map(|e| format!("{:<20} {:<16} {}", e.name(), e.caps().summary(), e.description()))
+        .collect();
+    assert!(
+        rows.iter()
+            .any(|r| r.starts_with("toy-lru") && r.contains("online")),
+        "toy policy missing from list rows: {rows:?}"
+    );
+
+    // Unknown-policy errors enumerate it alongside the builtins.
+    let err = registry.resolve("nope").unwrap_err().to_string();
+    assert!(err.contains("toy-lru"), "{err}");
+    assert!(err.contains("akpc") && err.contains("bundle-opt"), "{err}");
+
+    // And it runs through the same facade as everything else.
+    let outcome = RunSpec::new()
+        .config(diff_cfg())
+        .engine(EngineChoice::Native)
+        .policy("toy-lru")
+        .inline_trace(netflix_like(24, 8, 500, 5))
+        .run(&registry, &mut NullObserver)
+        .unwrap();
+    assert_eq!(outcome.ledger.requests, 500);
+}
+
+/// Capability pins for the two new families: flags agree with the policy
+/// instances, and `run`'s sharded gating rejects them with the canonical
+/// error (enumerating the capable set).
+#[test]
+fn new_policy_capability_flags_gate_the_sharded_driver() {
+    let registry = PolicyRegistry::builtin();
+    for name in ["predictive", "bundle-opt"] {
+        let e = registry.resolve(name).unwrap();
+        assert!(!e.caps().supports_sharded, "`{name}` must be single-leader");
+        assert!(!e.caps().supports_elastic);
+        let p = e.build(&diff_cfg(), EngineChoice::Native);
+        assert_eq!(
+            e.caps().needs_offline_trace,
+            p.needs_offline_trace(),
+            "`{name}`: registry/instance offline flag disagrees"
+        );
+        let err = RunSpec::new()
+            .config(diff_cfg())
+            .engine(EngineChoice::Native)
+            .policy(name)
+            .inline_trace(netflix_like(24, 8, 200, 3))
+            .sharded(2, ReplayMode::Ordered)
+            .validate(&registry)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not support the sharded driver"), "{err}");
+        assert!(err.contains("akpc"), "capable set not enumerated: {err}");
+    }
+}
+
+/// Both new families resolve by name and produce working policies with
+/// the display names the tables use.
+#[test]
+fn new_policies_resolve_and_run_by_name() {
+    let registry = PolicyRegistry::builtin();
+    for (name, display) in [("predictive", "Predictive"), ("bundle-opt", "BundleOpt")] {
+        let outcome = RunSpec::new()
+            .config(diff_cfg())
+            .engine(EngineChoice::Native)
+            .policy(name)
+            .inline_trace(netflix_like(24, 8, 1_000, 9))
+            .run(&registry, &mut NullObserver)
+            .unwrap();
+        assert_eq!(outcome.policy, display);
+        assert_eq!(outcome.ledger.requests, 1_000);
+        assert!(outcome.total() > 0.0);
+    }
+}

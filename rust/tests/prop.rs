@@ -8,6 +8,7 @@ use akpc::cache::CacheState;
 use akpc::clique::CliqueSet;
 use akpc::config::AkpcConfig;
 use akpc::crm::{diff_windows, native::build_native, sessionize, top_k_keep_mask, CrmWindow};
+use akpc::policy::{predictive::DECAY, CoAccessPredictor};
 use akpc::trace::model::{Request, Trace};
 use akpc::util::{json, Rng};
 
@@ -625,6 +626,162 @@ fn prop_clique_pipeline_deterministic_under_relabeling() {
             rel, expected,
             "item relabeling changed the clique decisions"
         );
+    });
+}
+
+/// Absorb a sequence of request windows into a fresh predictor through
+/// the exact observation pipeline `Predictive::end_batch` uses
+/// (sessionize → native CRM → `absorb_crm`).
+fn absorb_windows(windows: &[Vec<Request>], n: u32) -> CoAccessPredictor {
+    let mut p = CoAccessPredictor::new();
+    for w in windows {
+        p.absorb_crm(&build_native(&sessionize(w, 1.0), n, 0.2, 1.0));
+    }
+    p
+}
+
+#[test]
+fn prop_predictor_invariant_under_monotone_relabeling() {
+    // The learned affinities are a function of co-access *structure*, not
+    // of item-id values: a monotone relabeling `d → 3d + 5` (which
+    // permutes every hash bucket while preserving the id order that
+    // legitimate tie-breaks use) must map scores and predicted-window
+    // edges exactly onto their relabeled counterparts.
+    forall("predictor_relabel", 100, |rng| {
+        let n = 16 + rng.below(24) as u32;
+        let w1 = random_window(rng, 120, n, 4, 0.0);
+        let w2 = random_window(rng, 120, n, 4, 80.0);
+
+        let relabel = |d: u32| d * 3 + 5;
+        let relabel_reqs = |rs: &[Request]| -> Vec<Request> {
+            rs.iter()
+                .map(|r| {
+                    Request::new(
+                        r.items.iter().map(|&d| relabel(d)).collect(),
+                        r.server,
+                        r.time,
+                    )
+                })
+                .collect()
+        };
+
+        let base = absorb_windows(&[w1.clone(), w2.clone()], n);
+        let n_rel = relabel(n - 1) + 1;
+        let rel = absorb_windows(&[relabel_reqs(&w1), relabel_reqs(&w2)], n_rel);
+
+        assert_eq!(base.len(), rel.len(), "live pair count changed");
+        for u in 0..n {
+            for v in (u + 1)..n {
+                assert_eq!(
+                    base.score(u, v),
+                    rel.score(relabel(u), relabel(v)),
+                    "score of ({u},{v}) drifted under relabeling"
+                );
+            }
+        }
+        // The forecast relabels edge-for-edge (relabel is monotone, so
+        // the sorted u<v edge list maps directly).
+        let expected: Vec<(u32, u32)> = base
+            .predicted_window(0.2)
+            .edges()
+            .iter()
+            .map(|&(u, v)| (relabel(u), relabel(v)))
+            .collect();
+        assert_eq!(rel.predicted_window(0.2).edges(), expected);
+    });
+}
+
+#[test]
+fn prop_predictor_deterministic_across_reruns() {
+    // policy/ sits in the akpc-lint L2 (no-hash-iter-decision) scope for
+    // a reason: the predictor must be a pure function of its observation
+    // sequence. Rebuilding the whole pipeline twice in one process gives
+    // every transient HashMap a fresh RandomState, so any surviving
+    // hash-order dependence shows up as a bit-level diff here.
+    forall("predictor_rerun", 100, |rng| {
+        let n = 16 + rng.below(24) as u32;
+        let windows: Vec<Vec<Request>> = (0..3)
+            .map(|k| random_window(rng, 100, n, 4, k as f64 * 60.0))
+            .collect();
+        let a = absorb_windows(&windows, n);
+        let b = absorb_windows(&windows, n);
+        assert_eq!(a.len(), b.len());
+        for u in 0..n {
+            for v in (u + 1)..n {
+                assert_eq!(
+                    a.score(u, v).to_bits(),
+                    b.score(u, v).to_bits(),
+                    "score of ({u},{v}) flaked across reruns"
+                );
+            }
+        }
+        let (pa, pb) = (a.predicted_window(0.2), b.predicted_window(0.2));
+        assert_eq!(pa.active, pb.active);
+        assert_eq!(pa.edges(), pb.edges());
+        for &(u, v) in &pa.edges() {
+            assert_eq!(pa.weight(u, v).to_bits(), pb.weight(u, v).to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_predictor_decay_is_monotone_and_old_never_outweighs_new() {
+    // Decay semantics (DESIGN.md §15.1): every boundary multiplies each
+    // affinity by DECAY and prunes dust, so (1) scores shrink
+    // geometrically and never rise without fresh signal, and (2) a window
+    // observed k boundaries ago can never outweigh the *same* window
+    // observed just now — older windows never beat newer at equal counts.
+    forall("predictor_decay", 100, |rng| {
+        let n = 12 + rng.below(20) as u32;
+        let w = random_window(rng, 120, n, 4, 0.0);
+        let crm = build_native(&sessionize(&w, 1.0), n, 0.2, 1.0);
+
+        let mut aged = CoAccessPredictor::new();
+        aged.absorb_crm(&crm);
+        let pairs: Vec<((u32, u32), f64)> = (0..n)
+            .flat_map(|u| ((u + 1)..n).map(move |v| (u, v)))
+            .map(|(u, v)| ((u, v), aged.score(u, v)))
+            .filter(|&(_, s)| s > 0.0)
+            .collect();
+
+        let mut prev: Vec<f64> = pairs.iter().map(|&(_, s)| s).collect();
+        for round in 1..=12i32 {
+            aged.decay();
+            for (i, &((u, v), s0)) in pairs.iter().enumerate() {
+                let s = aged.score(u, v);
+                assert!(
+                    s <= prev[i] + 1e-15,
+                    "score of ({u},{v}) rose under decay at round {round}"
+                );
+                let expected = s0 * DECAY.powi(round);
+                if s == 0.0 {
+                    // Pruned — only legal once the signal fell to dust.
+                    assert!(
+                        expected <= 0.05 + 1e-12,
+                        "({u},{v}) pruned early: would be {expected}"
+                    );
+                } else {
+                    assert!(
+                        (s - expected).abs() <= 1e-12 * expected.max(1.0),
+                        "({u},{v}) decayed off-geometric: {s} vs {expected}"
+                    );
+                }
+                prev[i] = s;
+            }
+        }
+
+        // Equal observation counts, different ages: the fresh predictor
+        // strictly dominates the aged one on every pair that had signal
+        // (the aged copy decayed 12 boundaries; DECAY < 1 guarantees
+        // strictness whether or not the pair was pruned).
+        let mut newer = CoAccessPredictor::new();
+        newer.absorb_crm(&crm);
+        for &((u, v), _) in &pairs {
+            assert!(
+                newer.score(u, v) > aged.score(u, v),
+                "aged ({u},{v}) outweighs the identical fresh observation"
+            );
+        }
     });
 }
 
